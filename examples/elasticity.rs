@@ -1,0 +1,68 @@
+//! Elasticity task demo (paper Table 2's setting): trains BSA on the
+//! Kirsch plate-with-hole stress fields at the benchmark's native scale
+//! (972 nodes -> padded to 1024 by the ball tree).
+//!
+//!   make artifacts-bench && cargo run --release --example elasticity -- [steps]
+//!
+//! Needs the bench artifact suite (bsa_ela_n1024_b2). Falls back to a
+//! dataset-only inspection when the artifact is absent.
+
+use std::sync::Arc;
+
+use bsa::config::TrainConfig;
+use bsa::coordinator::Trainer;
+use bsa::data::generator_for;
+use bsa::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(200);
+
+    // Inspect the substrate: the analytic stress field.
+    let gen = generator_for("ela", 0)?;
+    let cell = gen.generate(0, 972);
+    println!(
+        "elasticity sample: {} nodes, von Mises stress range [{:.3}, {:.3}] (SCF {:.2})",
+        cell.coords.rows(),
+        cell.target.min(),
+        cell.target.max(),
+        cell.target.max() // far field is 1.0 by construction
+    );
+
+    let engine = Arc::new(Engine::new(&Engine::default_dir())?);
+    // the elasticity training graph is part of the bench suite (lowered
+    // with the XLA-fused reference kernels — see aot.py)
+    let tag = "bsa_ela_n1024_b2_ref";
+    if engine.manifest.get(&format!("train_{tag}")).is_err() {
+        println!("bench artifacts not built (run `make artifacts-bench`); dataset demo only.");
+        return Ok(());
+    }
+
+    let tc = TrainConfig {
+        task: "ela".into(),
+        steps,
+        train_samples: 96,
+        test_samples: 24,
+        log_every: 10,
+        warmup: steps / 20 + 1,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(engine, tag, tc)?;
+    let mse0 = trainer.evaluate()?;
+    trainer.run(|e| {
+        println!("step {:>5}  loss {:.5}  {:.0} ms/step", e.step, e.loss, e.ms_per_step);
+    })?;
+    let mse = trainer.evaluate()?;
+    // Table 2 reports RMSE x 10^2 on normalized stress
+    println!("---");
+    println!(
+        "test RMSE x100: {:.2} (random) -> {:.2} (trained)",
+        mse0.sqrt() * 100.0,
+        mse.sqrt() * 100.0
+    );
+    anyhow::ensure!(mse < mse0, "training must improve");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Quickstart: load the compiled BSA model, predict airflow pressure on a
+//! procedurally generated car, print field statistics.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Walks the full request path: synthetic geometry -> ball-tree
+//! permutation -> compiled HLO forward pass -> inverse permutation.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use bsa::balltree::BallTree;
+use bsa::config::ServeConfig;
+use bsa::coordinator::Router;
+use bsa::data::generator_for;
+use bsa::runtime::{literal_to_tensor, scalar_i32, Engine};
+use bsa::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Engine::default_dir();
+    let engine = Arc::new(Engine::new(&artifacts)?);
+    println!("PJRT platform: {}", engine.platform());
+
+    // The paper's ShapeNet setting: ~3586 surface points, padded to 4096
+    // by the ball tree. The fwd graph was AOT-lowered by `make artifacts`.
+    // Prefer the XLA-fused artifact for serving speed when the bench suite
+    // is built; the Pallas-interpret graph (same numerics, pytest-proven)
+    // is the fallback from the core suite.
+    let tag = if engine.manifest.get("fwd_bsa_air_n4096_b1_ref").is_ok() {
+        "bsa_air_n4096_b1_ref"
+    } else {
+        "bsa_air_n4096_b1"
+    };
+    let gen = generator_for("air", 7)?;
+    let car = gen.generate(0, 3584);
+    println!(
+        "generated car: {} surface points, pressure field std {:.3}",
+        car.coords.rows(),
+        car.target.std()
+    );
+
+    // Ball-tree diagnostics: the geometric regularization BSA relies on.
+    let tree = BallTree::build(&car.coords, 4096, 7);
+    println!(
+        "ball tree: {} balls of 256, mean radius {:.3} (cloud radius {:.3})",
+        tree.num_balls(256),
+        tree.mean_radius(256),
+        tree.mean_radius(4096),
+    );
+
+    // Parameters: random init (swap in a checkpoint from `bsa train` for
+    // trained weights). Param shapes are N-independent, so the n1024
+    // training init serves the n4096 graph.
+    let init = engine.load("init_bsa_air_n1024_b2")?;
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])?
+        .iter()
+        .map(literal_to_tensor)
+        .collect::<Result<_, _>>()?;
+    if let Some(ckpt) = std::env::args().nth(1) {
+        println!("loading checkpoint {ckpt}");
+        let ck = bsa::coordinator::checkpoint::Checkpoint::load(Path::new(&ckpt))?;
+        let n = params.len();
+        let loaded: Vec<Tensor> = ck.arrays.into_iter().take(n).map(|(_, t)| t).collect();
+        return run_inference(engine, tag, loaded, car);
+    }
+    run_inference(engine, tag, params, car)
+}
+
+fn run_inference(
+    engine: Arc<Engine>,
+    tag: &str,
+    params: Vec<Tensor>,
+    car: bsa::data::Sample,
+) -> anyhow::Result<()> {
+    let router = Router::start(
+        engine,
+        &format!("fwd_{tag}"),
+        params,
+        ServeConfig::default(),
+    )?;
+
+    let t0 = std::time::Instant::now();
+    let pred = router.infer(car.coords.clone(), car.features.clone())?;
+    let dt = t0.elapsed();
+
+    println!(
+        "predicted pressure for {} points in {:.1} ms",
+        pred.rows(),
+        dt.as_secs_f64() * 1e3
+    );
+    println!(
+        "prediction stats: mean {:.4} std {:.4} min {:.4} max {:.4}",
+        pred.mean(),
+        pred.std(),
+        pred.min(),
+        pred.max()
+    );
+    println!("router served={} p50={:.1}us", router.stats().served, router.latency_us(50.0));
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Figure 2 reproduction: receptive-field growth per BSA component.
+//!
+//! For a procedurally generated car and a chosen query point, renders the
+//! set of input positions each attention branch can reach:
+//!
+//!   * ball attention   — exactly the query's own ball (local),
+//!   * + selection      — plus the top-k* compressed blocks (own-ball
+//!                        blocks masked, pushing selection *outward*),
+//!   * + compression    — every block at coarse resolution (global).
+//!
+//!   cargo run --release --example receptive_field
+//!
+//! Writes receptive_field_{ball,select,compress}.ppm + prints the counts.
+
+use bsa::balltree::BallTree;
+use bsa::data::generator_for;
+use bsa::rfield::{receptive_field, RFieldParams};
+use bsa::viz::{diverging, project_xz, Image};
+
+const N: usize = 4096;
+
+fn main() -> anyhow::Result<()> {
+    let gen = generator_for("air", 11)?;
+    let car = gen.generate(0, 3584);
+    let tree = BallTree::build(&car.coords, N, 11);
+    let feats = tree.permute_features(&car.features);
+
+    let params = RFieldParams::default(); // paper Table 4 values
+    let query_pos = N / 2;
+    let rf = receptive_field(&feats, query_pos, params, 42);
+    let (nb, ns, nc) = rf.counts();
+
+    println!("receptive field at query position {query_pos} (ball {}):", rf.query_ball);
+    println!("  ball attention         : {nb:>5} / {N} positions");
+    println!("  + selection (k*={})     : {ns:>5} / {N} positions", params.top_k);
+    println!("  + compression (coarse) : {nc:>5} / {N} positions");
+    println!(
+        "  selected blocks {:?} (own ball {} masked out)",
+        rf.selected_blocks, rf.query_ball
+    );
+
+    let px = project_xz(&tree.coords, 640, 360);
+    for (name, reach, coarse) in [
+        ("receptive_field_ball.ppm", &rf.ball, false),
+        ("receptive_field_select.ppm", &rf.select, false),
+        ("receptive_field_compress.ppm", &rf.compress, true),
+    ] {
+        let mut img = Image::new(640, 360);
+        for i in 0..N {
+            if !tree.real[i] {
+                continue;
+            }
+            let (x, y) = px[i];
+            let rgb = if i == query_pos {
+                [255, 255, 60] // the query
+            } else if reach[i] {
+                if coarse { diverging(0.75) } else { diverging(0.95) }
+            } else {
+                [70, 70, 78]
+            };
+            img.splat(x, y, if i == query_pos { 4 } else { 1 }, rgb);
+        }
+        img.save_ppm(std::path::Path::new(name))?;
+        println!("wrote {name}");
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Serving demo: starts the TCP server in-process, fires a client load of
+//! concurrent airflow-prediction requests, reports latency percentiles
+//! and throughput — the serving-path half of the E2E validation.
+//!
+//!   make artifacts && cargo run --release --example serve -- [requests] [clients]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use bsa::config::ServeConfig;
+use bsa::coordinator::Router;
+use bsa::data::generator_for;
+use bsa::metrics::LatencyHistogram;
+use bsa::runtime::{literal_to_tensor, scalar_i32, Engine};
+use bsa::server::{serve, Client};
+use bsa::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(24);
+    let clients: usize = std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(3);
+
+    let engine = Arc::new(Engine::new(&Engine::default_dir())?);
+    println!("PJRT platform: {}", engine.platform());
+
+    // weights: random init (checkpointed weights via `bsa serve --checkpoint`)
+    let init = engine.load("init_bsa_air_n1024_b2")?;
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])?
+        .iter()
+        .map(literal_to_tensor)
+        .collect::<Result<_, _>>()?;
+
+    let sc = ServeConfig { workers: 2, ..Default::default() };
+    let addr = "127.0.0.1:17071";
+    // prefer the XLA-fused forward graph when the bench suite is built
+    let fwd = if engine.manifest.get("fwd_bsa_air_n4096_b1_ref").is_ok() {
+        "fwd_bsa_air_n4096_b1_ref"
+    } else {
+        "fwd_bsa_air_n4096_b1"
+    };
+    println!("serving graph: {fwd}");
+    let router = Arc::new(Router::start(engine, fwd, params, sc)?);
+    let stop = Arc::new(AtomicBool::new(false));
+    let srv = {
+        let (router, stop, addr) = (router.clone(), stop.clone(), addr.to_string());
+        std::thread::spawn(move || serve(&addr, router, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    println!("server on {addr}; {clients} clients x {requests} requests (N=3584 -> 4096)");
+
+    let t0 = Instant::now();
+    let mut handles = vec![];
+    for c in 0..clients {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let gen = generator_for("air", c as u64)?;
+            let mut client = Client::connect(&addr)?;
+            let mut lat = Vec::new();
+            for i in 0..requests {
+                let car = gen.generate(i as u64, 3584);
+                let t = Instant::now();
+                let pred = client.predict(&car.coords, &car.features)?;
+                lat.push(t.elapsed().as_secs_f64() * 1e6);
+                anyhow::ensure!(pred.rows() == 3584, "wrong prediction size");
+                anyhow::ensure!(pred.all_finite(), "non-finite prediction");
+            }
+            Ok(lat)
+        }));
+    }
+    let mut hist = LatencyHistogram::new();
+    for h in handles {
+        for us in h.join().expect("client thread")? {
+            hist.record_us(us);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let total = requests * clients;
+    println!("---");
+    println!("served {total} requests in {wall:.1}s = {:.2} req/s", total as f64 / wall);
+    println!("client-side latency: {}", hist.summary());
+    println!(
+        "router: served={} batches={} mean_batch={:.2}",
+        router.stats().served,
+        router.stats().batches,
+        router.stats().mean_batch
+    );
+
+    stop.store(true, Ordering::SeqCst);
+    srv.join().expect("server thread")?;
+    Ok(())
+}

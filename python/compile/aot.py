@@ -1,0 +1,433 @@
+"""AOT compiler: lower the model zoo to HLO text artifacts for rust.
+
+Emits, per (model, task, N, B) combination in the selected suite:
+
+  * ``init_<tag>.hlo.txt``   — (seed:i32) -> flat params
+  * ``fwd_<tag>.hlo.txt``    — (params..., x) -> prediction
+  * ``train_<tag>.hlo.txt``  — (params..., m..., v..., step, lr, x, y)
+                               -> (params..., m..., v..., loss)
+  * ``attn_<kind>_n<N>.hlo.txt`` — single attention layer for the
+                               runtime-scaling figures (F3/F4)
+
+plus ``manifest.txt`` describing every graph's I/O so the rust runtime
+(rust/src/runtime/manifest.rs) can wire buffers without importing Python.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); Python never executes on the
+rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .params import BSAConfig, TrainConfig
+
+TC = TrainConfig()
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# artifact specs
+# ---------------------------------------------------------------------------
+
+# task -> per-point input features (must match rust/src/data generators)
+TASK_FEATURES = {"air": 6, "ela": 4, "syn": 6}
+
+# model variants (Table 3 rows)
+VARIANTS = {
+    "bsa": {},
+    "bsa_nogs": {"group_select": False},
+    "bsa_gc": {"group_compress": True, "mlp_compress": True},
+    # design-choice ablations (DESIGN.md: own-ball mask, MLP phi)
+    "bsa_nomask": {"mask_own_ball": False},
+    "bsa_mlpcmp": {"mlp_compress": True},
+    "full": {},
+    "erwin": {},
+    "pointnet": {},
+}
+
+
+def base_model(variant: str) -> str:
+    return variant if variant in ("full", "erwin", "pointnet") else "bsa"
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    variant: str        # key into VARIANTS
+    task: str           # key into TASK_FEATURES
+    n: int
+    batch: int
+    dim: int = 64
+    heads: int = 4
+    blocks: int = 6
+    ball: int = 256
+    cmp_block: int = 8
+    group: int = 8
+    top_k: int = 4
+    kernels: str = "pallas"
+    train: bool = True  # also emit train_/init_ graphs (fwd always emitted)
+
+    @property
+    def tag(self) -> str:
+        base = f"{self.variant}_{self.task}_n{self.n}_b{self.batch}"
+        # ablation specs (Table 5) encode their block/group sizes
+        if (self.cmp_block, self.group) != (8, 8):
+            base += f"_l{self.cmp_block}g{self.group}"
+        if self.kernels != "pallas":
+            base += "_ref"
+        return base
+
+    def cfg(self) -> BSAConfig:
+        kw = dict(VARIANTS[self.variant])
+        return BSAConfig(
+            dim=self.dim,
+            num_heads=self.heads,
+            num_blocks=self.blocks,
+            in_features=TASK_FEATURES[self.task],
+            ball_size=min(self.ball, self.n),
+            cmp_block=self.cmp_block,
+            group_size=self.group,
+            top_k=self.top_k,
+            kernels=self.kernels,
+            **kw,
+        )
+
+
+def suite_specs(suite: str) -> list[Spec]:
+    """Artifact sets. Keep `core` small: it gates every build."""
+    core = [
+        # e2e training driver + integration tests (airflow, paper arch @ small N)
+        Spec("bsa", "air", 1024, 2),
+        # serving path at the paper's ShapeNet scale
+        Spec("bsa", "air", 4096, 1, train=False),
+        # tiny graphs for fast cargo tests
+        Spec("bsa", "syn", 256, 1, dim=32, heads=2, blocks=2, ball=64),
+    ]
+    # Training graphs for the accuracy tables are lowered with the
+    # pure-jnp reference kernels: pytest proves kernel == ref numerics, and
+    # ref lowers to XLA-fused HLO that trains ~3.7x faster on CPU than the
+    # interpret-mode Pallas emulation (measured; see EXPERIMENTS.md §Perf).
+    # The Pallas path stays on the inference/serving artifacts.
+    table12 = [  # Tables 1-2: all trainable models on both tasks
+        Spec(v, t, 1024, 2, kernels="ref")
+        for t in ("air", "ela")
+        for v in ("bsa", "full", "erwin", "pointnet")
+    ]
+    table3 = [  # Table 3: fwd-only at the paper's N=4096 for timing,
+        # in both kernel modes (pallas = structure artifact, ref = XLA-fused
+        # runtime measurement)
+        Spec(v, "air", 4096, 1, train=False, kernels=k)
+        for v in ("bsa", "bsa_nogs", "bsa_gc", "full", "erwin")
+        for k in ("pallas", "ref")
+    ] + [
+        Spec("bsa_gc", "air", 1024, 2, kernels="ref"),
+        Spec("bsa_nogs", "air", 1024, 2, kernels="ref"),
+    ]
+    table5 = [  # (l, g) ablation grid, trained short
+        Spec("bsa", "air", 1024, 2, cmp_block=l, group=g, kernels="ref")
+        for (l, g) in [(4, 4), (16, 16), (32, 32), (4, 8), (16, 8), (8, 4), (8, 16)]
+    ]
+    ablation = [  # design-choice ablations + batched-serving artifact
+        Spec("bsa_nomask", "air", 1024, 2, kernels="ref"),
+        Spec("bsa_mlpcmp", "air", 1024, 2, kernels="ref"),
+        Spec("bsa", "air", 1024, 4, train=False, kernels="ref"),  # B=4 batching
+    ]
+    suites = {
+        "core": core,
+        "bench": table12 + table3 + table5 + ablation,
+        "all": core + table12 + table3 + table5 + ablation,
+    }
+    return suites[suite]
+
+
+SCALING_NS = [256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536]
+SCALING_KINDS = ["bsa", "bsa_nogs", "bsa_gc", "full", "bta"]
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def _flat_names(params) -> list[str]:
+    """Dotted path per flattened leaf, e.g. 'blocks.0.attn.wq'."""
+
+    def key_part(k):
+        if isinstance(k, jax.tree_util.DictKey):
+            return str(k.key)
+        if isinstance(k, jax.tree_util.SequenceKey):
+            return str(k.idx)
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            return str(k.name)
+        return str(k)
+
+    paths, _ = zip(*jax.tree_util.tree_flatten_with_path(params)[0])
+    return [".".join(key_part(k) for k in p) for p in paths]
+
+
+def _shape_str(x) -> str:
+    dt = {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(x.dtype)]
+    dims = ",".join(str(d) for d in x.shape) if x.shape else "scalar"
+    return f"{dt} {dims}"
+
+
+class ManifestWriter:
+    """Collects per-graph manifest sections.
+
+    Merges with an existing manifest on write: a `--suite core` run must
+    not clobber the entries a previous `--suite all --scaling` run wrote
+    (stale entries whose .hlo.txt no longer exists are dropped).
+    """
+
+    def __init__(self):
+        self.lines: list[str] = ["# bsa artifact manifest v1"]
+        self.names: set[str] = set()
+
+    def graph(self, name, fname, kind, tag, cfg: BSAConfig, n, batch, nparams,
+              inputs, outputs, in_names=None, out_names=None):
+        self.names.add(name)
+        self.lines.append(f"[graph {name}]")
+        self.lines.append(f"file {fname}")
+        self.lines.append(f"kind {kind}")
+        self.lines.append(f"tag {tag}")
+        self.lines.append(f"n {n}")
+        self.lines.append(f"batch {batch}")
+        self.lines.append(f"nparams {nparams}")
+        self.lines.append(f"ball_size {cfg.ball_size}")
+        self.lines.append(f"cmp_block {cfg.cmp_block}")
+        self.lines.append(f"group_size {cfg.group_size}")
+        self.lines.append(f"top_k {cfg.top_k}")
+        self.lines.append(f"in_features {cfg.in_features}")
+        self.lines.append(f"out_features {cfg.out_features}")
+        for i, x in enumerate(inputs):
+            nm = in_names[i] if in_names else f"in{i}"
+            self.lines.append(f"input {i} {_shape_str(x)} {nm}")
+        for i, x in enumerate(outputs):
+            nm = out_names[i] if out_names else f"out{i}"
+            self.lines.append(f"output {i} {_shape_str(x)} {nm}")
+        self.lines.append("")
+
+    def write(self, path):
+        out_dir = os.path.dirname(path)
+        keep: list[str] = []
+        if os.path.exists(path):
+            block: list[str] = []
+            keep_block = False
+
+            def flush():
+                if block and keep_block:
+                    keep.extend(block + [""])
+
+            for line in open(path).read().splitlines():
+                line = line.rstrip()
+                if line.startswith("[graph "):
+                    flush()
+                    name = line[len("[graph ") :].rstrip("]")
+                    keep_block = name not in self.names
+                    block = [line]
+                    continue
+                if not block:
+                    continue
+                if line.startswith("file ") and keep_block:
+                    # drop entries whose artifact disappeared
+                    if not os.path.exists(os.path.join(out_dir, line.split()[1])):
+                        keep_block = False
+                if line:
+                    block.append(line)
+            flush()
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+            if keep:
+                f.write("\n".join(keep) + "\n")
+
+
+def _emit(out_dir, fname, lower_thunk, force):
+    """Lower + write unless the artifact already exists (lowering is the
+    expensive step, so the cache check happens first)."""
+    path = os.path.join(out_dir, fname)
+    if os.path.exists(path) and not force:
+        return False
+    text = to_hlo_text(lower_thunk())
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def lower_spec(spec: Spec, out_dir: str, mf: ManifestWriter, force: bool) -> None:
+    cfg = spec.cfg()
+    cfg.validate(spec.n)
+    name = base_model(spec.variant)
+    tag = spec.tag
+
+    # abstract params for shape bookkeeping (no real init at build time)
+    params = jax.eval_shape(lambda s: model.init(name, s, cfg), jnp.int32(0))
+    flat, tree = jax.tree_util.tree_flatten(params)
+    pnames = _flat_names(params)
+    nparams = len(flat)
+
+    x_spec = jax.ShapeDtypeStruct((spec.batch, spec.n, cfg.in_features), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((spec.batch, spec.n, cfg.out_features), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    # ---- fwd: (params..., x) -> pred
+    def fwd_flat(*args):
+        p = jax.tree_util.tree_unflatten(tree, args[:nparams])
+        return (model.forward(name, p, args[nparams], cfg),)
+
+    fname = f"fwd_{tag}.hlo.txt"
+    wrote = _emit(out_dir, fname, lambda: jax.jit(fwd_flat).lower(*flat, x_spec), force)
+    mf.graph(
+        f"fwd_{tag}", fname, "fwd", tag, cfg, spec.n, spec.batch, nparams,
+        list(flat) + [x_spec], [y_spec],
+        in_names=pnames + ["x"], out_names=["pred"],
+    )
+    print(f"  fwd_{tag}: {'wrote' if wrote else 'cached'}")
+
+    if not spec.train:
+        return
+
+    # ---- init: (seed) -> params...
+    def init_flat(seed):
+        return tuple(jax.tree_util.tree_leaves(model.init(name, seed, cfg)))
+
+    fname = f"init_{tag}.hlo.txt"
+    wrote = _emit(out_dir, fname, lambda: jax.jit(init_flat).lower(jax.ShapeDtypeStruct((), jnp.int32)), force)
+    mf.graph(
+        f"init_{tag}", fname, "init", tag, cfg, spec.n, spec.batch, nparams,
+        [jax.ShapeDtypeStruct((), jnp.int32)], list(flat),
+        in_names=["seed"], out_names=pnames,
+    )
+    print(f"  init_{tag}: {'wrote' if wrote else 'cached'}")
+
+    # ---- train: (params..., m..., v..., step, lr, x, y) -> (p..., m..., v..., loss)
+    def train_flat(*args):
+        p = jax.tree_util.tree_unflatten(tree, args[:nparams])
+        m = jax.tree_util.tree_unflatten(tree, args[nparams : 2 * nparams])
+        v = jax.tree_util.tree_unflatten(tree, args[2 * nparams : 3 * nparams])
+        step, lr, x, y = args[3 * nparams :]
+        np_, nm, nv, loss = model.train_step(name, p, m, v, step, lr, x, y, cfg, TC)
+        return tuple(
+            jax.tree_util.tree_leaves(np_)
+            + jax.tree_util.tree_leaves(nm)
+            + jax.tree_util.tree_leaves(nv)
+            + [loss]
+        )
+
+    train_in = list(flat) * 3 + [scalar, scalar, x_spec, y_spec]
+    # donate params + optimizer state: enables in-place buffer reuse in PJRT
+    donate = tuple(range(3 * nparams))
+    fname = f"train_{tag}.hlo.txt"
+    wrote = _emit(out_dir, fname, lambda: jax.jit(train_flat, donate_argnums=donate).lower(*train_in), force)
+    state_names = pnames + [f"m.{s}" for s in pnames] + [f"v.{s}" for s in pnames]
+    mf.graph(
+        f"train_{tag}", fname, "train", tag, cfg, spec.n, spec.batch, nparams,
+        train_in, list(flat) * 3 + [scalar],
+        in_names=state_names + ["step", "lr", "x", "y"],
+        out_names=state_names + ["loss"],
+    )
+    print(f"  train_{tag}: {'wrote' if wrote else 'cached'}")
+
+
+def lower_attn(
+    kind: str, n: int, out_dir: str, mf: ManifestWriter, force: bool, kernels: str = "pallas"
+) -> None:
+    """Single attention layer for the F3/F4 runtime-scaling benches.
+
+    Emitted twice per (kind, n): with Pallas interpret kernels (the
+    correctness/structure artifact) and with the pure-jnp reference
+    (XLA-fused; the hardware-independent runtime measurement — interpret
+    mode's while-loop emulation is not a TPU performance proxy).
+    """
+    kw = dict(VARIANTS.get(kind, {}))
+    layer = "bsa" if kind.startswith("bsa") else kind
+    cfg = BSAConfig(
+        dim=64, num_heads=4, num_blocks=1, ball_size=min(256, n), kernels=kernels, **kw
+    )
+    params = jax.eval_shape(
+        lambda s: model.attn_layer_init(jax.random.PRNGKey(s), cfg, kind), jnp.int32(0)
+    )
+    flat, tree = jax.tree_util.tree_flatten(params)
+    pnames = _flat_names(params)
+    nparams = len(flat)
+    x_spec = jax.ShapeDtypeStruct((1, n, cfg.dim), jnp.float32)
+
+    def attn_flat(*args):
+        p = jax.tree_util.tree_unflatten(tree, args[:nparams])
+        return (model.attn_layer_forward(layer, p, args[nparams], cfg),)
+
+    tag = f"{kind}_n{n}" + ("_ref" if kernels != "pallas" else "")
+    fname = f"attn_{tag}.hlo.txt"
+    wrote = _emit(out_dir, fname, lambda: jax.jit(attn_flat).lower(*flat, x_spec), force)
+    mf.graph(
+        f"attn_{tag}", fname, "attn", tag, cfg, n, 1, nparams,
+        list(flat) + [x_spec], [x_spec],
+        in_names=pnames + ["x"], out_names=["out"],
+    )
+    print(f"  attn_{tag}: {'wrote' if wrote else 'cached'}")
+
+    # init for the layer params (benches need concrete weights)
+    def init_flat(seed):
+        return tuple(
+            jax.tree_util.tree_leaves(model.attn_layer_init(jax.random.PRNGKey(seed), cfg, kind))
+        )
+
+    fname = f"attninit_{tag}.hlo.txt"
+    wrote = _emit(out_dir, fname, lambda: jax.jit(init_flat).lower(jax.ShapeDtypeStruct((), jnp.int32)), force)
+    mf.graph(
+        f"attninit_{tag}", fname, "init", tag, cfg, n, 1, nparams,
+        [jax.ShapeDtypeStruct((), jnp.int32)], list(flat),
+        in_names=["seed"], out_names=pnames,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--suite", default="core", choices=["core", "bench", "all"])
+    ap.add_argument("--scaling", action="store_true", help="emit F3/F4 attn graphs")
+    ap.add_argument("--max-n", type=int, default=16384, help="cap scaling N")
+    ap.add_argument("--kinds", default=",".join(SCALING_KINDS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    mf = ManifestWriter()
+
+    for spec in suite_specs(args.suite):
+        print(f"[{spec.tag}]")
+        lower_spec(spec, args.out, mf, args.force)
+
+    if args.scaling:
+        for kind in args.kinds.split(","):
+            for n in SCALING_NS:
+                if n > args.max_n:
+                    continue
+                lower_attn(kind, n, args.out, mf, args.force, kernels="pallas")
+                lower_attn(kind, n, args.out, mf, args.force, kernels="ref")
+
+    mf.write(os.path.join(args.out, "manifest.txt"))
+    print(f"manifest: {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

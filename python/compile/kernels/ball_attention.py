@@ -1,0 +1,60 @@
+"""Pallas kernel: Ball Tree Attention (paper eq. 3).
+
+Dense attention *within* disjoint balls of ``ball_size`` tokens. The rust
+coordinator orders points with a ball tree (rust/src/balltree.rs) so that
+every contiguous chunk of ``ball_size`` leaf positions is one ball; the
+kernel therefore sees a perfectly regular blocked problem.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): one grid step per
+(sequence, ball); the whole ball's Q, K, V tiles live in VMEM
+(3 * m * d * 4B ≈ 0.2 MB at m=256, d=64) and the m×m score tile
+(256 KB) stays in registers/VMEM — a single fused MXU matmul pair with a
+VPU softmax between. No masking and no ragged edges by construction.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so lowering happens through the Pallas interpreter, which
+emits plain HLO (while/dynamic-slice) runnable from the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ball_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One ball: softmax(Q K^T * scale) V, all operands VMEM-resident."""
+    q = q_ref[0]  # (m, d)
+    k = k_ref[0]
+    v = v_ref[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # numerically-stable softmax on the VPU
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("ball_size",))
+def ball_attention(q, k, v, ball_size):
+    """Ball Tree Attention. q, k, v: (S, N, d) -> (S, N, d).
+
+    Requires N % ball_size == 0 (guaranteed by the rust ball-tree pad).
+    """
+    s, n, d = q.shape
+    assert n % ball_size == 0, (n, ball_size)
+    nb = n // ball_size
+    scale = 1.0 / d ** 0.5
+
+    spec = pl.BlockSpec((1, ball_size, d), lambda si, bi: (si, bi, 0))
+    return pl.pallas_call(
+        functools.partial(_ball_kernel, scale=scale),
+        grid=(s, nb),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((s, n, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

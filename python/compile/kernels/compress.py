@@ -1,0 +1,87 @@
+"""Pallas kernels: block compression phi (paper eq. 5 / 13).
+
+Maps non-overlapping blocks of ``block`` tokens to a single coarse token,
+either by mean pooling (regular BSA) or by a 2-layer GELU MLP over the
+flattened block (the phi used with group compression, paper Sec. 3.1).
+
+TPU mapping: grid walks (sequence, block-tile); each step loads
+``tile`` consecutive blocks (tile*block × d) into VMEM and reduces them —
+a pure-VPU reshape+mean for the pooling variant, a (tile × block*d) @
+(block*d × hidden) @ (hidden × d) MXU pair for the MLP. Both are
+bandwidth-bound; the tile size amortises grid overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mean_kernel(x_ref, o_ref, *, block):
+    xt = x_ref[0]  # (tile*block, d)
+    tb, d = xt.shape
+    o_ref[0] = xt.reshape(tb // block, block, d).mean(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile"))
+def compress_mean(x, block, tile=64):
+    """Mean-pool blocks. x: (S, N, d) -> (S, N/block, d)."""
+    s, n, d = x.shape
+    assert n % block == 0
+    nb = n // block
+    tile = min(tile, nb)
+    assert nb % tile == 0, (nb, tile)
+
+    in_spec = pl.BlockSpec((1, tile * block, d), lambda si, bi: (si, bi, 0))
+    out_spec = pl.BlockSpec((1, tile, d), lambda si, bi: (si, bi, 0))
+    return pl.pallas_call(
+        functools.partial(_mean_kernel, block=block),
+        grid=(s, nb // tile),
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((s, nb, d), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, block):
+    xt = x_ref[0]  # (tile*block, d)
+    tb, d = xt.shape
+    xb = xt.reshape(tb // block, block * d)
+    h = jax.nn.gelu(
+        jnp.dot(xb, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    )
+    o_ref[0] = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile"))
+def compress_mlp(x, block, w1, b1, w2, b2, tile=64):
+    """MLP phi over flattened blocks. x: (S, N, d) -> (S, N/block, d).
+
+    w1: (block*d, hidden), b1: (hidden,), w2: (hidden, d), b2: (d,) —
+    shared across sequences/heads (broadcast into every grid step's VMEM).
+    """
+    s, n, d = x.shape
+    assert n % block == 0
+    nb = n // block
+    tile = min(tile, nb)
+    assert nb % tile == 0, (nb, tile)
+    hidden = w1.shape[1]
+
+    in_spec = pl.BlockSpec((1, tile * block, d), lambda si, bi: (si, bi, 0))
+    out_spec = pl.BlockSpec((1, tile, d), lambda si, bi: (si, bi, 0))
+    w1_spec = pl.BlockSpec((block * d, hidden), lambda si, bi: (0, 0))
+    b1_spec = pl.BlockSpec((hidden,), lambda si, bi: (0,))
+    w2_spec = pl.BlockSpec((hidden, d), lambda si, bi: (0, 0))
+    b2_spec = pl.BlockSpec((d,), lambda si, bi: (0,))
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel, block=block),
+        grid=(s, nb // tile),
+        in_specs=[in_spec, w1_spec, b1_spec, w2_spec, b2_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((s, nb, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,75 @@
+"""Pallas kernel: tiled (flash-style) dense attention.
+
+Used twice in the stack:
+  * the **compressed branch** of BSA — queries attend to the pooled
+    K^cmp/V^cmp of length N/l (paper eq. 5), and
+  * the **Full Attention baseline** (Tables 1-3, Figures 3-4).
+
+TPU mapping: the grid walks (sequence, query-tile); each step streams the
+query tile (Tq × d) into VMEM and loops over KV tiles with the classic
+online-softmax accumulator (running max + normaliser), so the N×N score
+matrix is never materialised. For the compressed branch the whole KV
+(N/l × d ≈ 128 KB at N=4096, l=8, d=64) is VMEM-resident and the inner
+loop has a single iteration.
+
+The KV tensor for one sequence is mapped into the kernel whole; on a real
+TPU the inner `pl.load` dynamic slices become double-buffered VMEM DMAs.
+For the *baseline at very large N* (Fig. 3's 65536) the whole-KV residency
+would exceed VMEM on TPU — noted in DESIGN.md; the baseline is exercised
+through the interpreter on CPU where this is only a working-set question.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, kv_tile):
+    q = q_ref[0]  # (tq, d)
+    tq, d = q.shape
+    nk = k_ref.shape[1]
+    steps = nk // kv_tile
+
+    def body(i, carry):
+        acc, m_run, l_run = carry
+        kt = pl.load(k_ref, (0, pl.ds(i * kv_tile, kv_tile), slice(None)))
+        vt = pl.load(v_ref, (0, pl.ds(i * kv_tile, kv_tile), slice(None)))
+        s = jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, vt, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((tq, d), jnp.float32)
+    m0 = jnp.full((tq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((tq, 1), jnp.float32)
+    acc, _, l_run = jax.lax.fori_loop(0, steps, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_run).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "kv_tile"))
+def flash_attention(q, k, v, q_tile=128, kv_tile=128):
+    """Tiled attention. q: (S, Nq, d); k, v: (S, Nk, d) -> (S, Nq, d)."""
+    s, nq, d = q.shape
+    _, nk, _ = k.shape
+    q_tile = min(q_tile, nq)
+    kv_tile = min(kv_tile, nk)
+    assert nq % q_tile == 0 and nk % kv_tile == 0, (nq, q_tile, nk, kv_tile)
+    scale = 1.0 / d ** 0.5
+
+    q_spec = pl.BlockSpec((1, q_tile, d), lambda si, qi: (si, qi, 0))
+    kv_spec = pl.BlockSpec((1, nk, d), lambda si, qi: (si, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, kv_tile=kv_tile),
+        grid=(s, nq // q_tile),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((s, nq, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,217 @@
+"""Pure-jnp reference oracle for every BSA kernel.
+
+This file is the CORE correctness signal of the stack: each Pallas kernel in
+this package must match its `ref_*` counterpart to float32 tolerance
+(pytest: python/tests/test_kernels.py, hypothesis sweeps over shapes).
+
+All attention functions operate on stacked head-major tensors of shape
+``(S, N, d)`` where ``S = batch * heads``; the model layer (model.py) folds
+batch and head dims before calling in here.
+
+Notation follows the paper (Sec. 2): ball size ``m``, compression block
+``l``, selection group ``g``, ``k*`` selected blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # mask value; large-but-finite avoids NaN in all-masked rows
+
+
+def softmax_attention(q, k, v, scale=None):
+    """Dense scaled-dot-product attention. q:(...,Nq,d) k,v:(...,Nk,d)."""
+    d = q.shape[-1]
+    scale = (1.0 / d ** 0.5) if scale is None else scale
+    scores = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Ball Tree Attention (paper eq. 3)
+# ---------------------------------------------------------------------------
+
+def ref_ball_attention(q, k, v, ball_size):
+    """Full attention inside disjoint balls of ``ball_size`` tokens.
+
+    q, k, v: (S, N, d) with N % ball_size == 0 (rust guarantees this by
+    ball-tree padding). Returns (S, N, d).
+    """
+    s, n, d = q.shape
+    nb = n // ball_size
+    qb = q.reshape(s, nb, ball_size, d)
+    kb = k.reshape(s, nb, ball_size, d)
+    vb = v.reshape(s, nb, ball_size, d)
+    ob = softmax_attention(qb, kb, vb)
+    return ob.reshape(s, n, d)
+
+
+# ---------------------------------------------------------------------------
+# Compression branch (paper eq. 5): block pooling phi
+# ---------------------------------------------------------------------------
+
+def ref_compress_mean(x, block):
+    """Mean-pool non-overlapping blocks. (S, N, d) -> (S, N/block, d)."""
+    s, n, d = x.shape
+    return x.reshape(s, n // block, block, d).mean(axis=2)
+
+
+def ref_compress_mlp(x, block, w1, b1, w2, b2):
+    """MLP phi over flattened blocks: (S,N,d) -> (S, N/block, d).
+
+    w1: (block*d, hidden), b1: (hidden,), w2: (hidden, d), b2: (d,).
+    """
+    s, n, d = x.shape
+    xb = x.reshape(s, n // block, block * d)
+    h = jax.nn.gelu(xb @ w1 + b1)
+    return h @ w2 + b2
+
+
+def ref_compressed_attention(q, kc, vc):
+    """Attend queries against the compressed KV: Attn(Q, K^cmp, V^cmp)."""
+    return softmax_attention(q, kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# Selection branch (paper eqs. 6-8, 10-12)
+# ---------------------------------------------------------------------------
+
+def ref_group_scores(q, kc, group):
+    """Group-averaged importance scores S-bar (paper eq. 12).
+
+    Because the dot product is linear, averaging per-token scores over a
+    group equals scoring with the group-mean query:
+        mean_t <q_t, k_j> = <mean_t q_t, k_j>.
+    q: (S, N, d), kc: (S, NB, d) -> (S, N/group, NB).
+    """
+    s, n, d = q.shape
+    qg = q.reshape(s, n // group, group, d).mean(axis=2)
+    return jnp.einsum("...gd,...bd->...gb", qg, kc)
+
+
+def ref_ball_mask(scores, group, cmp_block, ball_size):
+    """Mask scores of blocks that lie inside the query group's own ball.
+
+    Encourages selection to reach *outside* the ball already covered by BTA
+    (paper Sec. 3.2, receptive-field discussion). scores: (S, G, NB).
+    """
+    s, g_cnt, nb = scores.shape
+    group_ball = (jnp.arange(g_cnt) * group) // ball_size          # (G,)
+    block_ball = (jnp.arange(nb) * cmp_block) // ball_size         # (NB,)
+    same = group_ball[:, None] == block_ball[None, :]              # (G, NB)
+    return jnp.where(same[None, :, :], NEG_INF, scores)
+
+
+def ref_topk_indices(scores, k):
+    """Top-k block indices per group, ascending-sorted for contiguous DMA.
+
+    Implemented as k rounds of argmax-and-suppress rather than
+    ``jax.lax.top_k``: jax >= 0.6 lowers top_k to a dedicated ``topk`` HLO
+    instruction that the AOT toolchain's XLA (xla_extension 0.5.1) cannot
+    parse, while argmax/one_hot/sort lower to classic HLO. k is small and
+    static (k* = 4 in the paper), so the Python loop fully unrolls.
+    """
+    s = scores
+    cols = s.shape[-1]
+    picks = []
+    for _ in range(k):
+        i = jnp.argmax(s, axis=-1)
+        picks.append(i)
+        s = s - jax.nn.one_hot(i, cols, dtype=s.dtype) * 2e30
+    idx = jnp.stack(picks, axis=-1)
+    return jnp.sort(idx, axis=-1).astype(jnp.int32)
+
+
+def ref_select_attention(q, k, v, idx, sel_block, group):
+    """Attend each query group against its selected KV blocks.
+
+    q, k, v: (S, N, d); idx: (S, N/group, k*) int32 block indices into
+    blocks of ``sel_block`` tokens. All queries in group p share idx[p].
+    Returns (S, N, d).
+    """
+    s, n, d = q.shape
+    g_cnt = n // group
+    kst = idx.shape[-1]
+
+    kb = k.reshape(s, n // sel_block, sel_block, d)
+    vb = v.reshape(s, n // sel_block, sel_block, d)
+
+    # gather: (S, G, k*, sel_block, d)
+    gather = jax.vmap(  # over S
+        jax.vmap(  # over groups
+            lambda blocks, ids: blocks[ids],  # (NB, sel_block, d), (k*,)
+            in_axes=(None, 0),
+        ),
+        in_axes=(0, 0),
+    )
+    ksel = gather(kb, idx).reshape(s, g_cnt, kst * sel_block, d)
+    vsel = gather(vb, idx).reshape(s, g_cnt, kst * sel_block, d)
+
+    qg = q.reshape(s, g_cnt, group, d)
+    og = softmax_attention(qg, ksel, vsel)
+    return og.reshape(s, n, d)
+
+
+# ---------------------------------------------------------------------------
+# Full BSA layer (paper eq. 9) — used as the oracle for the fused model path
+# ---------------------------------------------------------------------------
+
+def ref_bsa_attention(
+    q,
+    k,
+    v,
+    *,
+    ball_size,
+    cmp_block,
+    group_size,
+    top_k,
+    group_select=True,
+    group_compress=False,
+    mask_own_ball=True,
+    gates=None,
+    cmp_params=None,
+):
+    """Reference for the whole three-branch BSA attention (heads folded).
+
+    gates: optional tuple of three (S, N, 1) per-branch sigmoid gates
+    (already in [0,1]); defaults to all-ones (ungated sum) for kernel tests.
+    cmp_params: optional (w1, b1, w2, b2) for MLP compression; mean if None.
+    Returns (S, N, d).
+    """
+    s, n, d = q.shape
+
+    # compression branch
+    if cmp_params is None:
+        kc = ref_compress_mean(k, cmp_block)
+        vc = ref_compress_mean(v, cmp_block)
+    else:
+        kc = ref_compress_mlp(k, cmp_block, *cmp_params)
+        vc = ref_compress_mlp(v, cmp_block, *cmp_params)
+
+    if group_compress:
+        if cmp_params is None:
+            qc = ref_compress_mean(q, cmp_block)
+        else:
+            qc = ref_compress_mlp(q, cmp_block, *cmp_params)
+        oc = ref_compressed_attention(qc, kc, vc)
+        o_cmp = jnp.repeat(oc, cmp_block, axis=1)  # (I (x) 1_l) repeat
+    else:
+        o_cmp = ref_compressed_attention(q, kc, vc)
+
+    # selection branch
+    g = group_size if group_select else 1
+    scores = ref_group_scores(q, kc, g)
+    if mask_own_ball:
+        scores = ref_ball_mask(scores, g, cmp_block, ball_size)
+    idx = ref_topk_indices(scores, top_k)
+    idx = jax.lax.stop_gradient(idx)
+    o_slc = ref_select_attention(q, k, v, idx, cmp_block, g)
+
+    # ball branch
+    o_ball = ref_ball_attention(q, k, v, ball_size)
+
+    if gates is None:
+        return o_ball + o_cmp + o_slc
+    return gates[0] * o_ball + gates[1] * o_cmp + gates[2] * o_slc

@@ -1,0 +1,578 @@
+"""L2: the BSA transformer and baselines, as pure-jax functions.
+
+Model zoo (all exposed through ``forward(name, params, x, cfg)``):
+
+  * ``bsa``       — the paper's model: N blocks of RMSNorm -> BSA -> SwiGLU
+                    (Sec. 3.1); variants via BSAConfig.group_select /
+                    group_compress (Table 3 rows).
+  * ``full``      — Full Attention baseline (Vaswani 2017), same trunk with
+                    the attention swapped for dense flash attention.
+  * ``erwin``     — Erwin-style hierarchical baseline (Zhdanov 2025): BTA
+                    U-Net with mean-pool coarsening and skip connections.
+  * ``pointnet``  — PointNet segmentation-style baseline (Qi 2016).
+
+Every attention primitive has two implementations selected by
+``cfg.kernels``: the Pallas kernel (interpret=True) or the pure-jnp oracle
+from kernels/ref.py. The Pallas forward passes are wrapped in
+``jax.custom_vjp`` with the oracle's VJP as the backward rule — the pytest
+suite proves kernel == oracle to f32 tolerance, so gradients are exact
+while keeping the kernel on the forward hot path.
+
+This file is build-time only: aot.py lowers ``init`` / ``forward`` /
+``train_step`` to HLO text and the rust runtime never imports Python.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .params import BSAConfig, TrainConfig
+from .kernels import ref
+from .kernels.ball_attention import ball_attention as _ball_pallas
+from .kernels.flash_attention import flash_attention as _flash_pallas
+from .kernels.compress import compress_mean as _cmean_pallas
+from .kernels.compress import compress_mlp as _cmlp_pallas
+from .kernels.select_attention import select_attention as _select_pallas
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers: Pallas forward, oracle backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def ball_attention_p(q, k, v, ball_size):
+    return _ball_pallas(q, k, v, ball_size)
+
+
+def _ball_fwd(q, k, v, ball_size):
+    return ball_attention_p(q, k, v, ball_size), (q, k, v)
+
+
+def _ball_bwd(ball_size, res, ct):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: ref.ref_ball_attention(a, b, c, ball_size), q, k, v)
+    return vjp(ct)
+
+
+ball_attention_p.defvjp(_ball_fwd, _ball_bwd)
+
+
+@jax.custom_vjp
+def flash_attention_p(q, k, v):
+    return _flash_pallas(q, k, v)
+
+
+def _flash_fwd(q, k, v):
+    return flash_attention_p(q, k, v), (q, k, v)
+
+
+def _flash_bwd(res, ct):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.softmax_attention, q, k, v)
+    return vjp(ct)
+
+
+flash_attention_p.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def compress_mean_p(x, block):
+    return _cmean_pallas(x, block)
+
+
+def _cmean_fwd(x, block):
+    return compress_mean_p(x, block), (x,)
+
+
+def _cmean_bwd(block, res, ct):
+    (x,) = res
+    _, vjp = jax.vjp(lambda a: ref.ref_compress_mean(a, block), x)
+    return vjp(ct)
+
+
+compress_mean_p.defvjp(_cmean_fwd, _cmean_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def compress_mlp_p(x, block, w1, b1, w2, b2):
+    return _cmlp_pallas(x, block, w1, b1, w2, b2)
+
+
+def _cmlp_fwd(x, block, w1, b1, w2, b2):
+    return compress_mlp_p(x, block, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _cmlp_bwd(block, res, ct):
+    x, w1, b1, w2, b2 = res
+    _, vjp = jax.vjp(
+        lambda a, c1, d1, c2, d2: ref.ref_compress_mlp(a, block, c1, d1, c2, d2),
+        x, w1, b1, w2, b2,
+    )
+    return vjp(ct)
+
+
+compress_mlp_p.defvjp(_cmlp_fwd, _cmlp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def select_attention_p(q, k, v, idx, sel_block, group):
+    return _select_pallas(q, k, v, idx, sel_block, group)
+
+
+def _select_fwd(q, k, v, idx, sel_block, group):
+    return select_attention_p(q, k, v, idx, sel_block, group), (q, k, v, idx)
+
+
+def _select_bwd(sel_block, group, res, ct):
+    q, k, v, idx = res
+    _, vjp = jax.vjp(
+        lambda a, b, c: ref.ref_select_attention(a, b, c, idx, sel_block, group),
+        q, k, v,
+    )
+    dq, dk, dv = vjp(ct)
+    d_idx = jnp.zeros(idx.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, d_idx
+
+
+select_attention_p.defvjp(_select_fwd, _select_bwd)
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch (cfg.kernels: "pallas" | "ref")
+# ---------------------------------------------------------------------------
+
+def k_ball(cfg, q, k, v):
+    if cfg.kernels == "pallas":
+        return ball_attention_p(q, k, v, cfg.ball_size)
+    return ref.ref_ball_attention(q, k, v, cfg.ball_size)
+
+
+def k_dense(cfg, q, k, v):
+    if cfg.kernels == "pallas":
+        return flash_attention_p(q, k, v)
+    return ref.softmax_attention(q, k, v)
+
+
+def k_cmean(cfg, x, block):
+    if cfg.kernels == "pallas":
+        return compress_mean_p(x, block)
+    return ref.ref_compress_mean(x, block)
+
+
+def k_cmlp(cfg, x, block, w1, b1, w2, b2):
+    if cfg.kernels == "pallas":
+        return compress_mlp_p(x, block, w1, b1, w2, b2)
+    return ref.ref_compress_mlp(x, block, w1, b1, w2, b2)
+
+
+def k_select(cfg, q, k, v, idx, sel_block, group):
+    if cfg.kernels == "pallas":
+        return select_attention_p(q, k, v, idx, sel_block, group)
+    return ref.ref_select_attention(q, k, v, idx, sel_block, group)
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    """RMSNorm (Zhang & Sennrich 2019)."""
+    rms = jnp.sqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return x / rms * scale
+
+
+def swiglu(params, x):
+    """SwiGLU feed-forward (Shazeer 2020)."""
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]
+
+
+def _split_heads(x, num_heads):
+    """(B, N, C) -> (B*H, N, C/H)."""
+    b, n, c = x.shape
+    dh = c // num_heads
+    x = x.reshape(b, n, num_heads, dh).transpose(0, 2, 1, 3)
+    return x.reshape(b * num_heads, n, dh)
+
+
+def _merge_heads(x, batch, num_heads):
+    """(B*H, N, dh) -> (B, N, C)."""
+    s, n, dh = x.shape
+    x = x.reshape(batch, num_heads, n, dh).transpose(0, 2, 1, 3)
+    return x.reshape(batch, n, num_heads * dh)
+
+
+# ---------------------------------------------------------------------------
+# BSA attention layer (paper Sec. 2.2)
+# ---------------------------------------------------------------------------
+
+def bsa_attention(params, x, cfg: BSAConfig):
+    """Three-branch Ball Sparse Attention on (B, N, C) -> (B, N, C)."""
+    b, n, c = x.shape
+    h = cfg.num_heads
+
+    q = _split_heads(x @ params["wq"], h)  # (S, N, dh)
+    k = _split_heads(x @ params["wk"], h)
+    v = _split_heads(x @ params["wv"], h)
+
+    # ---- compression branch (eq. 5): coarse KV
+    if cfg.mlp_compress:
+        cp = params["cmp"]
+        kc = k_cmlp(cfg, k, cfg.cmp_block, cp["w1"], cp["b1"], cp["w2"], cp["b2"])
+        vc = k_cmlp(cfg, v, cfg.cmp_block, cp["w1"], cp["b1"], cp["w2"], cp["b2"])
+    else:
+        kc = k_cmean(cfg, k, cfg.cmp_block)
+        vc = k_cmean(cfg, v, cfg.cmp_block)
+
+    if cfg.group_compress:
+        # eq. 15: pooled queries, output repeated l times
+        if cfg.mlp_compress:
+            cp = params["cmp"]
+            qc = k_cmlp(cfg, q, cfg.cmp_block, cp["w1"], cp["b1"], cp["w2"], cp["b2"])
+        else:
+            qc = k_cmean(cfg, q, cfg.cmp_block)
+        o_cmp = jnp.repeat(k_dense(cfg, qc, kc, vc), cfg.cmp_block, axis=1)
+    else:
+        o_cmp = k_dense(cfg, q, kc, vc)
+
+    # ---- selection branch (eqs. 6-8, 10-12)
+    g = cfg.group_size if cfg.group_select else 1
+    # group-mean queries (linearity => equals averaging per-token scores)
+    qg = q.reshape(b * h, n // g, g, -1).mean(axis=2) if g > 1 else q
+    scores = jnp.einsum("sgd,sbd->sgb", qg, kc)
+    if cfg.mask_own_ball:
+        scores = ref.ref_ball_mask(scores, g, cfg.cmp_block, cfg.ball_size)
+    idx = ref.ref_topk_indices(scores, cfg.top_k)
+    idx = jax.lax.stop_gradient(idx)
+    o_slc = k_select(cfg, q, k, v, idx, cfg.cmp_block, g)
+
+    # ---- ball branch (eq. 3)
+    o_ball = k_ball(cfg, q, k, v)
+
+    # ---- gated fusion (eq. 9): per-token per-head sigmoid gates
+    gates = jax.nn.sigmoid(x @ params["wg"])          # (B, N, 3H)
+    gates = gates.reshape(b, n, 3, h).transpose(2, 0, 3, 1)  # (3, B, H, N)
+    gates = gates.reshape(3, b * h, n, 1)
+    out = gates[0] * o_ball + gates[1] * o_cmp + gates[2] * o_slc
+
+    return _merge_heads(out, b, h) @ params["wo"]
+
+
+def full_attention(params, x, cfg: BSAConfig):
+    """Dense baseline: same projections, flash attention over all pairs."""
+    b, n, c = x.shape
+    h = cfg.num_heads
+    q = _split_heads(x @ params["wq"], h)
+    k = _split_heads(x @ params["wk"], h)
+    v = _split_heads(x @ params["wv"], h)
+    out = k_dense(cfg, q, k, v)
+    return _merge_heads(out, b, h) @ params["wo"]
+
+
+def bta_attention(params, x, cfg: BSAConfig, ball_size=None):
+    """Ball-Tree-Attention-only layer (Erwin's local attention)."""
+    b, n, c = x.shape
+    h = cfg.num_heads
+    m = min(ball_size or cfg.ball_size, n)
+    q = _split_heads(x @ params["wq"], h)
+    k = _split_heads(x @ params["wk"], h)
+    v = _split_heads(x @ params["wv"], h)
+    out = k_ball(_with_ball(cfg, m), q, k, v)
+    return _merge_heads(out, b, h) @ params["wo"]
+
+
+def _with_ball(cfg: BSAConfig, m: int) -> BSAConfig:
+    import dataclasses
+
+    return dataclasses.replace(cfg, ball_size=m)
+
+
+# ---------------------------------------------------------------------------
+# transformer trunk
+# ---------------------------------------------------------------------------
+
+def _block_forward(params, x, cfg, attn_fn):
+    x = x + attn_fn(params["attn"], rms_norm(x, params["norm1"]), cfg)
+    x = x + swiglu(params["mlp"], rms_norm(x, params["norm2"]))
+    return x
+
+
+def _trunk_forward(params, x, cfg, attn_fn):
+    x = x @ params["embed_w"] + params["embed_b"]
+    for blk in params["blocks"]:
+        x = _block_forward(blk, x, cfg, attn_fn)
+    x = rms_norm(x, params["norm_out"])
+    return x @ params["head_w"] + params["head_b"]
+
+
+def bsa_forward(params, x, cfg: BSAConfig):
+    """The paper's model: (B, N, in_features) -> (B, N, out_features)."""
+    cfg.validate(x.shape[1])
+    return _trunk_forward(params, x, cfg, bsa_attention)
+
+
+def full_forward(params, x, cfg: BSAConfig):
+    return _trunk_forward(params, x, cfg, full_attention)
+
+
+# ---------------------------------------------------------------------------
+# Erwin-style hierarchical baseline
+# ---------------------------------------------------------------------------
+
+ERWIN_POOL = 4          # coarsening factor between levels
+ERWIN_LEVELS = 2        # encoder levels before the bottleneck
+ERWIN_BALL = 128        # leaf-level ball size
+
+
+def erwin_forward(params, x, cfg: BSAConfig):
+    """BTA U-Net: local attention, coarsen, bottleneck, refine with skips.
+
+    Captures Erwin's inductive bias (hierarchical locality, progressive
+    pooling) with mean-pool coarsening; fidelity loss at coarse levels is
+    exactly the property BSA's global branches are designed to avoid.
+    """
+    b, n, _ = x.shape
+    x = x @ params["embed_w"] + params["embed_b"]
+
+    skips = []
+    for lvl in range(ERWIN_LEVELS):
+        blk = params["enc"][lvl]
+        m = min(ERWIN_BALL, x.shape[1])
+        x = x + bta_attention(blk["attn"], rms_norm(x, blk["norm1"]), cfg, m)
+        x = x + swiglu(blk["mlp"], rms_norm(x, blk["norm2"]))
+        skips.append(x)
+        bb, nn, cc = x.shape
+        x = x.reshape(bb, nn // ERWIN_POOL, ERWIN_POOL, cc).mean(axis=2)
+
+    blk = params["mid"]
+    m = min(ERWIN_BALL, x.shape[1])
+    x = x + bta_attention(blk["attn"], rms_norm(x, blk["norm1"]), cfg, m)
+    x = x + swiglu(blk["mlp"], rms_norm(x, blk["norm2"]))
+
+    for lvl in reversed(range(ERWIN_LEVELS)):
+        x = jnp.repeat(x, ERWIN_POOL, axis=1) + skips[lvl]
+        blk = params["dec"][lvl]
+        m = min(ERWIN_BALL, x.shape[1])
+        x = x + bta_attention(blk["attn"], rms_norm(x, blk["norm1"]), cfg, m)
+        x = x + swiglu(blk["mlp"], rms_norm(x, blk["norm2"]))
+
+    x = rms_norm(x, params["norm_out"])
+    return x @ params["head_w"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# PointNet baseline
+# ---------------------------------------------------------------------------
+
+def pointnet_forward(params, x, cfg: BSAConfig):
+    """Per-point MLP -> global max-pool -> concat -> per-point MLP head."""
+    h = x
+    for w, bb in params["local"]:
+        h = jax.nn.relu(h @ w + bb)
+    g = jnp.max(h, axis=1, keepdims=True)                     # (B, 1, C)
+    h = jnp.concatenate([h, jnp.broadcast_to(g, h.shape)], axis=-1)
+    for i, (w, bb) in enumerate(params["head"]):
+        h = h @ w + bb
+        if i + 1 < len(params["head"]):
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _linear_init(key, fan_in, fan_out):
+    return jax.random.normal(key, (fan_in, fan_out)) * (2.0 / (fan_in + fan_out)) ** 0.5
+
+
+def _attn_init(key, cfg: BSAConfig, with_cmp_mlp: bool, gated: bool = True):
+    """Attention projections. ``gated=False`` (full/erwin layers) skips the
+    branch-gate projection: XLA dead-code-eliminates unused entry params at
+    lowering, which would desynchronize the artifact manifest."""
+    ks = jax.random.split(key, 8)
+    c = cfg.dim
+    p = {
+        "wq": _linear_init(ks[0], c, c),
+        "wk": _linear_init(ks[1], c, c),
+        "wv": _linear_init(ks[2], c, c),
+        "wo": _linear_init(ks[3], c, c),
+    }
+    if gated:
+        p["wg"] = _linear_init(ks[4], c, 3 * cfg.num_heads)
+    if with_cmp_mlp:
+        dh = cfg.head_dim
+        hidden = 2 * dh
+        p["cmp"] = {
+            "w1": _linear_init(ks[5], cfg.cmp_block * dh, hidden),
+            "b1": jnp.zeros((hidden,)),
+            "w2": _linear_init(ks[6], hidden, dh),
+            "b2": jnp.zeros((dh,)),
+        }
+    return p
+
+
+def _mlp_init(key, cfg: BSAConfig):
+    ks = jax.random.split(key, 3)
+    c, hid = cfg.dim, cfg.mlp_ratio * cfg.dim
+    return {
+        "w1": _linear_init(ks[0], c, hid),
+        "w2": _linear_init(ks[1], hid, c),
+        "w3": _linear_init(ks[2], c, hid),
+    }
+
+
+def _block_init(key, cfg, with_cmp_mlp, gated=True):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": _attn_init(k1, cfg, with_cmp_mlp, gated),
+        "mlp": _mlp_init(k2, cfg),
+        "norm1": jnp.ones((cfg.dim,)),
+        "norm2": jnp.ones((cfg.dim,)),
+    }
+
+
+def _trunk_init(key, cfg: BSAConfig, with_cmp_mlp=False, gated=True):
+    ks = jax.random.split(key, cfg.num_blocks + 3)
+    return {
+        "embed_w": _linear_init(ks[0], cfg.in_features, cfg.dim),
+        "embed_b": jnp.zeros((cfg.dim,)),
+        "blocks": [
+            _block_init(ks[1 + i], cfg, with_cmp_mlp, gated)
+            for i in range(cfg.num_blocks)
+        ],
+        "norm_out": jnp.ones((cfg.dim,)),
+        "head_w": _linear_init(ks[-2], cfg.dim, cfg.out_features),
+        "head_b": jnp.zeros((cfg.out_features,)),
+    }
+
+
+def bsa_init(key, cfg: BSAConfig):
+    return _trunk_init(key, cfg, with_cmp_mlp=cfg.mlp_compress)
+
+
+def full_init(key, cfg: BSAConfig):
+    return _trunk_init(key, cfg, gated=False)
+
+
+def erwin_init(key, cfg: BSAConfig):
+    ks = jax.random.split(key, 2 * ERWIN_LEVELS + 4)
+    return {
+        "embed_w": _linear_init(ks[0], cfg.in_features, cfg.dim),
+        "embed_b": jnp.zeros((cfg.dim,)),
+        "enc": [
+            _block_init(ks[1 + i], cfg, False, gated=False) for i in range(ERWIN_LEVELS)
+        ],
+        "mid": _block_init(ks[1 + ERWIN_LEVELS], cfg, False, gated=False),
+        "dec": [
+            _block_init(ks[2 + ERWIN_LEVELS + i], cfg, False, gated=False)
+            for i in range(ERWIN_LEVELS)
+        ],
+        "norm_out": jnp.ones((cfg.dim,)),
+        "head_w": _linear_init(ks[-2], cfg.dim, cfg.out_features),
+        "head_b": jnp.zeros((cfg.out_features,)),
+    }
+
+
+def pointnet_init(key, cfg: BSAConfig):
+    widths = [cfg.in_features, 64, 128, cfg.dim * 2]
+    ks = jax.random.split(key, len(widths) + 3)
+    local = [
+        (_linear_init(ks[i], widths[i], widths[i + 1]), jnp.zeros((widths[i + 1],)))
+        for i in range(len(widths) - 1)
+    ]
+    cin = widths[-1] * 2
+    head = [
+        (_linear_init(ks[-3], cin, cfg.dim), jnp.zeros((cfg.dim,))),
+        (_linear_init(ks[-2], cfg.dim, cfg.out_features), jnp.zeros((cfg.out_features,))),
+    ]
+    return {"local": local, "head": head}
+
+
+MODELS = {
+    "bsa": (bsa_init, bsa_forward),
+    "full": (full_init, full_forward),
+    "erwin": (erwin_init, erwin_forward),
+    "pointnet": (pointnet_init, pointnet_forward),
+}
+
+
+def init(name, seed, cfg: BSAConfig):
+    """Initialize params from an int32 seed scalar (traceable)."""
+    key = jax.random.PRNGKey(seed)
+    return MODELS[name][0](key, cfg)
+
+
+def forward(name, params, x, cfg: BSAConfig):
+    return MODELS[name][1](params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# training (paper Appendix A): MSE loss + AdamW, schedule computed host-side
+# ---------------------------------------------------------------------------
+
+def loss_fn(name, params, x, y, cfg: BSAConfig):
+    pred = forward(name, params, x, cfg)
+    return jnp.mean(jnp.square(pred - y))
+
+
+def adamw_update(params, grads, m, v, step, lr, tc: TrainConfig):
+    """One AdamW step (Loshchilov & Hutter 2019). Decay on >=2-D leaves."""
+
+    def upd(p, g, m_, v_):
+        m_n = tc.beta1 * m_ + (1 - tc.beta1) * g
+        v_n = tc.beta2 * v_ + (1 - tc.beta2) * jnp.square(g)
+        m_hat = m_n / (1 - tc.beta1 ** step)
+        v_hat = v_n / (1 - tc.beta2 ** step)
+        delta = m_hat / (jnp.sqrt(v_hat) + tc.eps)
+        wd = tc.weight_decay if p.ndim >= 2 else 0.0
+        p_n = p - lr * (delta + wd * p)
+        return p_n, m_n, v_n
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def train_step(name, params, m, v, step, lr, x, y, cfg: BSAConfig, tc: TrainConfig):
+    """One fused fwd+bwd+AdamW step.
+
+    ``step`` (1-based, f32) and ``lr`` are runtime scalars fed by the rust
+    coordinator each call, keeping the lowered graph schedule-free.
+    Returns (new_params, new_m, new_v, loss).
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(name, p, x, y, cfg))(params)
+    new_p, new_m, new_v = adamw_update(params, grads, m, v, step, lr, tc)
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# standalone attention layers for the runtime-scaling figures (F3/F4)
+# ---------------------------------------------------------------------------
+
+ATTN_LAYERS = {
+    "bsa": bsa_attention,
+    "full": full_attention,
+    "bta": lambda p, x, cfg: bta_attention(p, x, cfg, cfg.ball_size),
+}
+
+
+def attn_layer_init(key, cfg: BSAConfig, kind: str = "bsa"):
+    """Params for a standalone layer; only BSA kinds carry branch gates."""
+    return _attn_init(
+        key, cfg, with_cmp_mlp=cfg.mlp_compress, gated=kind.startswith("bsa")
+    )
+
+
+def attn_layer_forward(kind, params, x, cfg: BSAConfig):
+    """Single attention layer (B, N, C) -> (B, N, C) for scaling benches."""
+    return ATTN_LAYERS[kind](params, x, cfg)

@@ -1,0 +1,83 @@
+"""Shared hyperparameter containers for the BSA stack.
+
+These mirror the paper's Table 4 defaults:
+
+    Ball size                       256
+    Compression block size            8
+    Compression block sliding stride  8   (= block size: non-overlapping)
+    Selection block size              8
+    Number of blocks selected (k*)    4
+
+and the training setup of Appendix A (AdamW, lr 1e-3, wd 0.01, cosine
+schedule, MSE loss, 18 blocks of RMSNorm -> BSA -> SwiGLU).
+
+The same dataclass is serialized into artifacts/manifest.txt by aot.py and
+parsed by the rust runtime (rust/src/runtime/manifest.rs), so field names
+here are part of the artifact interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BSAConfig:
+    """Architecture + sparse-attention hyperparameters."""
+
+    # -- transformer
+    dim: int = 64                 # model width C
+    num_heads: int = 4            # attention heads H (head dim = dim // H)
+    num_blocks: int = 6           # transformer depth (paper: 18)
+    in_features: int = 6          # input features per point (coords+normals)
+    out_features: int = 1         # regression targets per point
+    mlp_ratio: int = 4            # SwiGLU hidden expansion
+
+    # -- sparse attention (paper Table 4)
+    ball_size: int = 256          # m: BTA ball size
+    cmp_block: int = 8            # l: compression block size (stride = l)
+    sel_block: int = 8            # selection block size (= l in the paper)
+    top_k: int = 4                # k*: number of selected blocks
+    group_size: int = 8           # g: group-selection size |G_p|
+
+    # -- variants (paper Table 3 rows)
+    group_select: bool = True     # False => "BSA w/o group selection"
+    group_compress: bool = False  # True  => "BSA w group compression"
+    mlp_compress: bool = False    # phi = MLP instead of mean pooling
+    mask_own_ball: bool = True    # mask selection blocks inside own ball
+
+    # kernel backend: "pallas" (interpret-mode kernels) or "ref" (pure jnp)
+    kernels: str = "pallas"
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.num_heads
+
+    def validate(self, n: int) -> None:
+        """Check the divisibility contract the kernels rely on."""
+        if self.dim % self.num_heads != 0:
+            raise ValueError(f"dim {self.dim} % heads {self.num_heads} != 0")
+        if n % self.ball_size != 0:
+            raise ValueError(f"N={n} not divisible by ball size {self.ball_size}")
+        if self.ball_size % self.cmp_block != 0:
+            raise ValueError("ball size must be divisible by cmp block")
+        if self.ball_size % self.group_size != 0:
+            raise ValueError("ball size must be divisible by group size")
+        if n % self.cmp_block != 0 or n % self.group_size != 0:
+            raise ValueError("N must be divisible by cmp block and group size")
+        n_blocks = n // self.cmp_block
+        if self.top_k > n_blocks:
+            raise ValueError(f"top_k {self.top_k} > number of blocks {n_blocks}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule hyperparameters (paper Appendix A)."""
+
+    lr: float = 1e-3
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    # The cosine schedule itself is computed host-side in rust and fed as a
+    # scalar input each step, keeping the lowered train_step graph static.

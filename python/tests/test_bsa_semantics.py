@@ -1,0 +1,121 @@
+"""Semantic properties of the full BSA attention (paper Secs. 2.2, 3.2)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+S, N, D = 2, 256, 16
+M, L, G, K = 64, 8, 8, 4
+
+
+def qkv(key=0, n=N):
+    k = jax.random.PRNGKey(key)
+    return (
+        jax.random.normal(jax.random.fold_in(k, 0), (S, n, D)),
+        jax.random.normal(jax.random.fold_in(k, 1), (S, n, D)),
+        jax.random.normal(jax.random.fold_in(k, 2), (S, n, D)),
+    )
+
+
+def bsa(q, k, v, **kw):
+    args = dict(ball_size=M, cmp_block=L, group_size=G, top_k=K)
+    args.update(kw)
+    return ref.ref_bsa_attention(q, k, v, **args)
+
+
+def test_receptive_field_grows_with_branches():
+    """Figure 2's claim: ball < ball+select < ball+select+compress.
+
+    Measured as the number of input positions whose perturbation changes
+    the output at a fixed query — via jacobian column norms."""
+    q, k, v = qkv()
+
+    def sensitivity(fn):
+        # d out[0, 0, :] / d v[0, t, :] summed over channels, per t
+        jac = jax.jacrev(lambda vv: fn(q, k, vv)[0, 0].sum())(v)
+        return np.asarray(jnp.abs(jac[0]).sum(axis=-1) > 1e-9)
+
+    ball_only = sensitivity(lambda q, k, v: ref.ref_ball_attention(q, k, v, M))
+    full_bsa = sensitivity(lambda q, k, v: bsa(q, k, v))
+
+    n_ball = ball_only.sum()
+    n_bsa = full_bsa.sum()
+    assert n_ball == M  # exactly its own ball
+    assert n_bsa == N   # compression branch sees every block => global
+    assert n_bsa > n_ball
+
+
+def test_masked_selection_never_selects_own_ball():
+    q, k, v = qkv()
+    kc = ref.ref_compress_mean(k, L)
+    scores = ref.ref_group_scores(q, kc, G)
+    scores = ref.ref_ball_mask(scores, G, L, M)
+    idx = np.asarray(ref.ref_topk_indices(scores, K))
+    for s in range(S):
+        for p in range(N // G):
+            own_ball = (p * G) // M
+            for j in idx[s, p]:
+                assert (j * L) // M != own_ball
+
+
+def test_unmasked_selection_prefers_similar_blocks():
+    """Craft K so block 7 matches the queries; top-1 must select it."""
+    q = jnp.ones((1, N, D))
+    k = jnp.zeros((1, N, D)).at[:, 7 * L : 8 * L, :].set(1.0)
+    kc = ref.ref_compress_mean(k, L)
+    scores = ref.ref_group_scores(q, kc, G)
+    idx = np.asarray(ref.ref_topk_indices(scores, 1))
+    assert (idx == 7).all()
+
+
+def test_gates_zero_kill_branches():
+    q, k, v = qkv()
+    zero = jnp.zeros((S, N, 1))
+    one = jnp.ones((S, N, 1))
+    out = bsa(q, k, v, gates=(zero, zero, zero))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+    # only-ball gate reproduces the ball branch
+    out_b = bsa(q, k, v, gates=(one, zero, zero))
+    np.testing.assert_allclose(
+        out_b, ref.ref_ball_attention(q, k, v, M), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_group_compress_output_is_blockwise_constant():
+    """Group compression repeats each coarse output l times (eq. 15)."""
+    q, k, v = qkv()
+    kc = ref.ref_compress_mean(k, L)
+    vc = ref.ref_compress_mean(v, L)
+    qc = ref.ref_compress_mean(q, L)
+    o = ref.ref_compressed_attention(qc, kc, vc)
+    rep = jnp.repeat(o, L, axis=1)
+    blocks = np.asarray(rep).reshape(S, N // L, L, D)
+    assert (np.abs(blocks - blocks[:, :, :1, :]) < 1e-7).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(scale=st.floats(0.1, 4.0))
+def test_bsa_permutation_equivariance_within_ball(scale):
+    """Permuting tokens *within one ball* permutes outputs the same way
+    (attention is permutation-equivariant; pooling blocks change, so we
+    permute whole cmp-blocks to keep all three branches aligned)."""
+    q, k, v = qkv()
+    q, k, v = q * scale, k * scale, v * scale
+    # swap two whole cmp-blocks inside ball 0 (indices 0..M)
+    perm = np.arange(N)
+    perm[0:L], perm[2 * L : 3 * L] = perm[2 * L : 3 * L].copy(), perm[0:L].copy()
+    out = np.asarray(bsa(q, k, v))
+    out_p = np.asarray(bsa(q[:, perm], k[:, perm], v[:, perm]))
+    np.testing.assert_allclose(out_p, out[:, perm], atol=1e-4, rtol=1e-4)
+
+
+def test_bsa_no_group_selection_matches_group_of_one():
+    q, k, v = qkv()
+    a = bsa(q, k, v, group_select=False)
+    b = bsa(q, k, v, group_size=1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

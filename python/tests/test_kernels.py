@@ -1,0 +1,241 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against kernels/ref.py.
+
+Hypothesis sweeps the shape/parameter space (S, N, d, block sizes); each
+kernel must match the pure-jnp oracle to f32 tolerance. This is the core
+correctness signal the custom-vjp training path relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ball_attention import ball_attention
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.compress import compress_mean, compress_mlp
+from compile.kernels.select_attention import select_attention
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+def assert_close(a, b, atol=ATOL, rtol=RTOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# ball attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(1, 4),
+    balls=st.integers(1, 4),
+    m=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16, 32]),
+)
+def test_ball_attention_matches_ref(s, balls, m, d):
+    n = balls * m
+    q, k, v = (rand(i, (s, n, d)) for i in range(3))
+    assert_close(ball_attention(q, k, v, m), ref.ref_ball_attention(q, k, v, m))
+
+
+def test_ball_attention_is_block_diagonal():
+    """Perturbing tokens in ball j must not change outputs in ball i != j."""
+    s, m, d = 1, 32, 8
+    n = 4 * m
+    q, k, v = (rand(i, (s, n, d)) for i in range(3))
+    base = ball_attention(q, k, v, m)
+    k2 = k.at[:, 3 * m :, :].add(100.0)
+    v2 = v.at[:, 3 * m :, :].add(-50.0)
+    pert = ball_attention(q, k2, v2, m)
+    assert_close(base[:, : 3 * m], pert[:, : 3 * m])
+    assert float(jnp.abs(base[:, 3 * m :] - pert[:, 3 * m :]).max()) > 1e-3
+
+
+def test_ball_attention_single_ball_equals_dense():
+    s, n, d = 2, 64, 16
+    q, k, v = (rand(i, (s, n, d)) for i in range(3))
+    assert_close(ball_attention(q, k, v, n), ref.softmax_attention(q, k, v))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(1, 3),
+    nq=st.sampled_from([32, 64, 128]),
+    nk=st.sampled_from([32, 64, 256]),
+    d=st.sampled_from([8, 32]),
+    q_tile=st.sampled_from([16, 32, 128]),
+    kv_tile=st.sampled_from([16, 32]),
+)
+def test_flash_matches_dense(s, nq, nk, d, q_tile, kv_tile):
+    q = rand(0, (s, nq, d))
+    k = rand(1, (s, nk, d))
+    v = rand(2, (s, nk, d))
+    out = flash_attention(q, k, v, q_tile=q_tile, kv_tile=kv_tile)
+    assert_close(out, ref.softmax_attention(q, k, v))
+
+
+def test_flash_extreme_logits_stable():
+    """Online softmax must survive large score magnitudes (no inf/nan)."""
+    s, n, d = 1, 64, 16
+    q = rand(0, (s, n, d), scale=30.0)
+    k = rand(1, (s, n, d), scale=30.0)
+    v = rand(2, (s, n, d))
+    out = flash_attention(q, k, v, q_tile=32, kv_tile=32)
+    assert np.isfinite(np.asarray(out)).all()
+    assert_close(out, ref.softmax_attention(q, k, v), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(1, 4),
+    nb=st.sampled_from([8, 16, 64]),
+    block=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([8, 32]),
+    tile=st.sampled_from([4, 8, 64]),
+)
+def test_compress_mean_matches_ref(s, nb, block, d, tile):
+    if nb % min(tile, nb) != 0:
+        return
+    x = rand(0, (s, nb * block, d))
+    assert_close(compress_mean(x, block, tile=tile), ref.ref_compress_mean(x, block))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(1, 3),
+    nb=st.sampled_from([8, 16]),
+    block=st.sampled_from([4, 8]),
+    d=st.sampled_from([8, 16]),
+    hidden=st.sampled_from([16, 32]),
+)
+def test_compress_mlp_matches_ref(s, nb, block, d, hidden):
+    x = rand(0, (s, nb * block, d))
+    w1 = rand(1, (block * d, hidden), 0.1)
+    b1 = rand(2, (hidden,), 0.1)
+    w2 = rand(3, (hidden, d), 0.1)
+    b2 = rand(4, (d,), 0.1)
+    out = compress_mlp(x, block, w1, b1, w2, b2, tile=8)
+    assert_close(out, ref.ref_compress_mlp(x, block, w1, b1, w2, b2), atol=1e-4)
+
+
+def test_compress_mean_of_constant_blocks():
+    """Pooling constant blocks returns the constants exactly."""
+    s, nb, block, d = 2, 8, 8, 16
+    vals = jnp.arange(nb, dtype=jnp.float32)
+    x = jnp.broadcast_to(vals[None, :, None, None], (s, nb, block, d)).reshape(
+        s, nb * block, d
+    )
+    out = compress_mean(x, block)
+    assert_close(out, jnp.broadcast_to(vals[None, :, None], (s, nb, d)))
+
+
+# ---------------------------------------------------------------------------
+# selection attention
+# ---------------------------------------------------------------------------
+
+def _make_idx(key, s, g_cnt, n_blocks, k):
+    scores = jax.random.normal(jax.random.PRNGKey(key), (s, g_cnt, n_blocks))
+    return ref.ref_topk_indices(scores, k)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(1, 3),
+    n=st.sampled_from([64, 128, 256]),
+    block=st.sampled_from([4, 8]),
+    group=st.sampled_from([1, 4, 8]),
+    k=st.sampled_from([1, 2, 4]),
+)
+def test_select_matches_ref(s, n, block, group, k):
+    if k > n // block:
+        return
+    q, kk, v = (rand(i, (s, n, 8)) for i in range(3))
+    idx = _make_idx(7, s, n // group, n // block, k)
+    out = select_attention(q, kk, v, idx, block, group)
+    assert_close(out, ref.ref_select_attention(q, kk, v, idx, block, group))
+
+
+def test_select_all_blocks_equals_dense():
+    """Selecting every block reproduces dense attention."""
+    s, n, block, d = 1, 64, 8, 16
+    q, k, v = (rand(i, (s, n, d)) for i in range(3))
+    nb = n // block
+    idx = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32), (s, n, nb))
+    out = select_attention(q, k, v, idx, block, 1)
+    assert_close(out, ref.softmax_attention(q, k, v))
+
+
+def test_select_single_block_attends_only_there():
+    """With one selected block, output is attention over that block only."""
+    s, n, block, d = 1, 64, 8, 8
+    q, k, v = (rand(i, (s, n, d)) for i in range(3))
+    idx = jnp.full((s, n // 8, 1), 3, dtype=jnp.int32)
+    out = select_attention(q, k, v, idx, block, 8)
+    kb = k[:, 24:32]
+    vb = v[:, 24:32]
+    expect = ref.softmax_attention(q, kb, vb)
+    assert_close(out, expect)
+
+
+# ---------------------------------------------------------------------------
+# scoring / masking / topk invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 256]),
+    group=st.sampled_from([4, 8, 16]),
+    cmp=st.sampled_from([4, 8]),
+    ball=st.sampled_from([32, 64]),
+)
+def test_ball_mask_blocks_own_ball_only(n, group, cmp, ball):
+    s = 2
+    scores = jnp.zeros((s, n // group, n // cmp))
+    masked = ref.ref_ball_mask(scores, group, cmp, ball)
+    gm = np.asarray(masked[0])
+    for p in range(n // group):
+        for j in range(n // cmp):
+            same = (p * group) // ball == (j * cmp) // ball
+            assert (gm[p, j] < -1e29) == same
+
+
+def test_group_scores_equal_mean_of_token_scores():
+    """Linearity: group-pooled-Q scores == mean of per-token scores."""
+    s, n, d, g = 2, 64, 16, 8
+    q = rand(0, (s, n, d))
+    kc = rand(1, (s, 8, d))
+    grp = ref.ref_group_scores(q, kc, g)
+    tok = ref.ref_group_scores(q, kc, 1)  # per-token
+    manual = tok.reshape(s, n // g, g, -1).mean(axis=2)
+    assert_close(grp, manual)
+
+
+def test_topk_indices_sorted_and_unique():
+    s, g_cnt, nb, k = 2, 16, 32, 4
+    scores = rand(0, (s, g_cnt, nb))
+    idx = np.asarray(ref.ref_topk_indices(scores, k))
+    assert (np.diff(idx, axis=-1) > 0).all()  # strictly ascending => unique
+    assert idx.min() >= 0 and idx.max() < nb
+
+
+def test_topk_picks_argmax():
+    s, g_cnt, nb = 1, 4, 16
+    scores = jnp.zeros((s, g_cnt, nb)).at[:, :, 5].set(10.0)
+    idx = np.asarray(ref.ref_topk_indices(scores, 1))
+    assert (idx == 5).all()

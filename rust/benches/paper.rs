@@ -1,0 +1,618 @@
+//! Benchmark harness: regenerates every table and figure of the paper.
+//!
+//!   cargo bench -- <target> [flags]
+//!
+//! targets: table1 table2 table3 table4 table5 fig2 fig3 fig4 serve all
+//! flags:   --steps N (training budget per model, default 120)
+//!          --reps N  (timing repetitions, default 5)
+//!          --max-n N (largest sequence length for fig3/fig4)
+//!          --out DIR (results directory, default bench_results)
+//!
+//! Requires `make artifacts-bench`. Results are written both to stdout
+//! (markdown tables mirroring the paper's) and to `bench_results/*.md`;
+//! EXPERIMENTS.md records the committed runs. Paper-reported values are
+//! printed alongside for comparison — our substrate is a CPU testbed with
+//! procedural data, so *shape* (ordering, ratios, crossovers), not
+//! absolute values, is the reproduction target (DESIGN.md Sec. 6).
+//!
+//! criterion is not vendored offline; this is an explicit harness binary
+//! (Cargo `[[bench]]` with `harness = false`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use bsa::config::{ModelConfig, TrainConfig};
+use bsa::coordinator::Trainer;
+use bsa::data::generator_for;
+use bsa::flops::{attn_layer_flops, model_flops};
+use bsa::metrics::{Accumulator, Table};
+use bsa::runtime::{literal_to_tensor, scalar_i32, Engine, Executable};
+use bsa::tensor::Tensor;
+
+struct Opts {
+    target: String,
+    steps: usize,
+    reps: usize,
+    max_n: usize,
+    out: PathBuf,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // Defaults size a bare `cargo bench` to ~15 min on the 1-core CPU
+    // testbed; the committed EXPERIMENTS.md runs use --steps 100 --reps 5
+    // --max-n 16384 explicitly.
+    let mut o = Opts {
+        target: "all".into(),
+        steps: 60,
+        reps: 3,
+        max_n: 8192,
+        out: PathBuf::from("bench_results"),
+    };
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--steps" => o.steps = it.next().and_then(|v| v.parse().ok()).unwrap_or(o.steps),
+            "--reps" => o.reps = it.next().and_then(|v| v.parse().ok()).unwrap_or(o.reps),
+            "--max-n" => o.max_n = it.next().and_then(|v| v.parse().ok()).unwrap_or(o.max_n),
+            "--out" => {
+                if let Some(v) = it.next() {
+                    o.out = PathBuf::from(v);
+                }
+            }
+            "--bench" | "--test" => {} // flags cargo bench may pass through
+            t if !t.starts_with('-') => o.target = t.to_string(),
+            _ => {}
+        }
+    }
+    o
+}
+
+fn main() -> anyhow::Result<()> {
+    let o = parse_opts();
+    std::fs::create_dir_all(&o.out)?;
+    let engine = Arc::new(Engine::new(&Engine::default_dir())?);
+    println!("# BSA paper-reproduction benches (platform: {})\n", engine.platform());
+
+    let all = o.target == "all";
+    if all || o.target == "table1" {
+        table_accuracy(&engine, &o, "air", "table1", "Table 1 (ShapeNet MSE x100)")?;
+    }
+    if all || o.target == "table2" {
+        table_accuracy(&engine, &o, "ela", "table2", "Table 2 (Elasticity RMSE x100)")?;
+    }
+    if all || o.target == "table3" {
+        table3(&engine, &o)?;
+    }
+    if all || o.target == "table4" {
+        table4_bench(&o)?;
+    }
+    if all || o.target == "table5" {
+        table5(&engine, &o)?;
+    }
+    if all || o.target == "fig2" {
+        fig2(&o)?;
+    }
+    if all || o.target == "fig3" {
+        fig_scaling(&engine, &o, &["full", "bsa"], "fig3", "Figure 3 (runtime vs N)")?;
+    }
+    if all || o.target == "fig4" {
+        fig_scaling(
+            &engine,
+            &o,
+            &["bsa", "bsa_nogs", "bsa_gc", "bta"],
+            "fig4",
+            "Figure 4 (BSA variants runtime vs N)",
+        )?;
+    }
+    if all || o.target == "ablation" {
+        ablation(&engine, &o)?;
+    }
+    if all || o.target == "batching" {
+        batching(&engine, &o)?;
+    }
+    if all || o.target == "serve" {
+        serve_bench(&engine, &o)?;
+    }
+    Ok(())
+}
+
+fn emit(out: &Path, name: &str, content: &str) -> anyhow::Result<()> {
+    println!("{content}");
+    std::fs::write(out.join(format!("{name}.md")), content)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables 1 & 2: accuracy vs baselines (train each model, short schedule)
+// ---------------------------------------------------------------------------
+
+/// Paper-reported values for context rows.
+fn paper_values(task: &str) -> Vec<(&'static str, f64)> {
+    match task {
+        "air" => vec![
+            ("PointNet (paper)", 43.36),
+            ("Erwin (paper)", 15.85),
+            ("BSA (paper)", 14.31),
+            ("Full Attention (paper)", 13.29),
+        ],
+        _ => vec![
+            ("Erwin (paper)", 0.34),
+            ("BSA (paper)", 0.38),
+            ("Full Attention (paper)", 0.30),
+        ],
+    }
+}
+
+fn table_accuracy(
+    engine: &Arc<Engine>,
+    o: &Opts,
+    task: &str,
+    name: &str,
+    title: &str,
+) -> anyhow::Result<()> {
+    let variants = ["pointnet", "erwin", "bsa", "full"];
+    let mut results: Vec<(String, f64)> = vec![];
+    let mut csv = String::from("model,metric\n");
+    for v in variants {
+        let tag = format!("{v}_{task}_n1024_b2_ref");
+        if engine.manifest.get(&format!("train_{tag}")).is_err() {
+            println!("  (skipping {v}: artifact train_{tag} missing — run make artifacts-bench)");
+            continue;
+        }
+        let tc = TrainConfig {
+            task: task.into(),
+            steps: o.steps,
+            warmup: o.steps / 10 + 1,
+            train_samples: 96,
+            test_samples: 24,
+            log_every: o.steps.max(1),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let mut trainer = Trainer::new(engine.clone(), &tag, tc)?;
+        trainer.run(|_| {})?;
+        let mse = trainer.evaluate()?;
+        let metric = if task == "ela" { mse.sqrt() * 100.0 } else { mse * 100.0 };
+        println!("  {v}: {metric:.3} ({} steps, {:.0}s)", o.steps, t0.elapsed().as_secs_f64());
+        results.push((v.to_string(), metric));
+        csv.push_str(&format!("{v},{metric}\n"));
+        trainer.save_checkpoint(&o.out.join(format!("{v}_{task}.bsackpt")))?;
+    }
+    std::fs::write(o.out.join(format!("{name}.csv")), csv)?;
+
+    let metric_name = if task == "ela" { "RMSE x100" } else { "MSE x100" };
+    let mut t = Table::new(&["Model", metric_name]);
+    for (v, m) in &results {
+        t.row(&[v.clone(), format!("{m:.3}")]);
+    }
+    for (v, m) in paper_values(task) {
+        t.row(&[v.to_string(), format!("{m:.2}")]);
+    }
+    let mut content = format!("## {title} — measured ({} steps) vs paper-reported\n\n", o.steps);
+    content.push_str(&t.render());
+    content.push_str("\nreproduction target: Full <= BSA < Erwin < PointNet (error ordering)\n");
+    emit(&o.out, name, &content)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: MSE / runtime / GFLOPS at N=4096
+// ---------------------------------------------------------------------------
+
+fn time_fwd(exe: &Arc<Executable>, reps: usize) -> anyhow::Result<Accumulator> {
+    // zero params: runtime is shape-, not value-, dependent for these graphs
+    let mut state: Vec<xla::Literal> = Vec::with_capacity(exe.info.nparams);
+    for spec in exe.info.inputs.iter().take(exe.info.nparams) {
+        state.push(bsa::runtime::tensor_to_literal(&Tensor::zeros(spec.dims.clone()))?);
+    }
+    let n = exe.info.n;
+    let f = exe.info.in_features;
+    let mut rng = bsa::prng::Rng::new(n as u64);
+    let x = Tensor::new(vec![exe.info.batch, n, f], rng.normals(exe.info.batch * n * f));
+    let _ = exe.run_with_tensors(&state, &[&x])?; // warmup
+    let mut acc = Accumulator::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = exe.run_with_tensors(&state, &[&x])?;
+        std::hint::black_box(&out);
+        acc.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(acc)
+}
+
+fn table3(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
+    // paper rows: (display, variant key, paper ms, paper GFLOPS)
+    let rows = [
+        ("Erwin", "erwin", 19.35, 14.60),
+        ("Full Attention", "full", 37.82, 87.08),
+        ("BSA", "bsa", 36.53, 27.91),
+        ("BSA w/o group selection", "bsa_nogs", 66.92, 32.67),
+        ("BSA w/ group compression", "bsa_gc", 23.42, 20.82),
+    ];
+    // measured MSE from the table1 run if present
+    let t1_csv = o.out.join("table1.csv");
+    let mut mse: BTreeMap<String, f64> = BTreeMap::new();
+    if let Ok(text) = std::fs::read_to_string(&t1_csv) {
+        for line in text.lines().skip(1) {
+            if let Some((k, v)) = line.split_once(',') {
+                if let Ok(x) = v.parse() {
+                    mse.insert(k.to_string(), x);
+                }
+            }
+        }
+    }
+
+    let cfg = ModelConfig { num_blocks: 18, seq_len: 4096, ..Default::default() };
+    let mut t = Table::new(&[
+        "Attention type",
+        "runtime ms (XLA)",
+        "runtime ms (pallas-interp)",
+        "GFLOPS (analytic, paper arch)",
+        "paper ms",
+        "paper GFLOPS",
+    ]);
+    for (disp, v, pms, pgf) in rows {
+        let mut xla_ms = String::from("-");
+        let mut pal_ms = String::from("-");
+        for (kern, slot) in [("_ref", &mut xla_ms), ("", &mut pal_ms)] {
+            let name = format!("fwd_{v}_air_n4096_b1{kern}");
+            match engine.load(&name) {
+                Ok(exe) => {
+                    let acc = time_fwd(&exe, o.reps)?;
+                    *slot = format!("{:.1} +- {:.1}", acc.mean(), acc.std());
+                }
+                Err(_) => {
+                    *slot = "missing".into();
+                }
+            }
+        }
+        let gf = model_flops(v, &cfg).gflops();
+        t.row(&[
+            disp.to_string(),
+            xla_ms,
+            pal_ms,
+            format!("{gf:.2}"),
+            format!("{pms:.2}"),
+            format!("{pgf:.2}"),
+        ]);
+    }
+    let mut content = String::from(
+        "## Table 3 (N=4096 forward): measured runtime + analytic GFLOPs vs paper\n\n",
+    );
+    content.push_str(&t.render());
+    if !mse.is_empty() {
+        content.push_str("\nmeasured MSE x100 (from table1 run): ");
+        for (k, v) in &mse {
+            content.push_str(&format!("{k}={v:.2} "));
+        }
+        content.push('\n');
+    }
+    content.push_str(
+        "\nreproduction targets: GFLOPs ordering Erwin < BSA+gc < BSA < BSA-nogs << Full;\n\
+         BSA w/o group selection is the slowest BSA variant (paper: no fused selection kernel).\n",
+    );
+    emit(&o.out, "table3", &content)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: hyperparameters (configuration reproduction)
+// ---------------------------------------------------------------------------
+
+fn table4_bench(o: &Opts) -> anyhow::Result<()> {
+    let cfg = ModelConfig::paper_scale();
+    cfg.validate()?;
+    let content = format!("## Table 4 (configuration defaults)\n\n{}", bsa::config::table4(&cfg));
+    emit(&o.out, "table4", &content)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: (l, g) ablation grid
+// ---------------------------------------------------------------------------
+
+fn table5(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
+    let grid: [(usize, usize, f64); 8] = [
+        (4, 4, 15.43),
+        (8, 8, 14.31),
+        (16, 16, 14.97),
+        (32, 32, 132.14),
+        (4, 8, 14.81),
+        (16, 8, 14.88),
+        (8, 4, 14.88),
+        (8, 16, 14.84),
+    ];
+    let mut t = Table::new(&["Compr. block", "Group sel.", "measured MSE x100", "paper MSE"]);
+    for (l, g, paper) in grid {
+        let suffix = if (l, g) == (8, 8) { String::new() } else { format!("_l{l}g{g}") };
+        let tag = format!("bsa_air_n1024_b2{suffix}_ref");
+        let cell = if engine.manifest.get(&format!("train_{tag}")).is_ok() {
+            let tc = TrainConfig {
+                task: "air".into(),
+                steps: o.steps,
+                warmup: o.steps / 10 + 1,
+                train_samples: 96,
+                test_samples: 24,
+                log_every: o.steps.max(1),
+                ..Default::default()
+            };
+            let mut trainer = Trainer::new(engine.clone(), &tag, tc)?;
+            trainer.run(|_| {})?;
+            let m = trainer.evaluate()? * 100.0;
+            println!("  l={l} g={g}: {m:.3}");
+            format!("{m:.3}")
+        } else {
+            "missing".into()
+        };
+        t.row(&[l.to_string(), g.to_string(), cell, format!("{paper:.2}")]);
+    }
+    let mut content = format!("## Table 5 (block-size ablation, {} steps)\n\n", o.steps);
+    content.push_str(&t.render());
+    content.push_str("\nreproduction target: l=g=8 among the best; l=g=32 degrades sharply.\n");
+    emit(&o.out, "table5", &content)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2: receptive field growth
+// ---------------------------------------------------------------------------
+
+fn fig2(o: &Opts) -> anyhow::Result<()> {
+    use bsa::rfield::{receptive_field, RFieldParams};
+    let gen = generator_for("air", 11)?;
+    let car = gen.generate(0, 3584);
+    let tree = bsa::balltree::BallTree::build(&car.coords, 4096, 11);
+    let feats = tree.permute_features(&car.features);
+    let p = RFieldParams::default();
+
+    let mut t = Table::new(&["query pos", "ball", "+selection", "+compression"]);
+    for q in [100, 1024, 2048, 3500] {
+        let rf = receptive_field(&feats, q, p, 42);
+        let (b, s, c) = rf.counts();
+        t.row(&[q.to_string(), b.to_string(), s.to_string(), c.to_string()]);
+    }
+    let mut content =
+        String::from("## Figure 2 (receptive field size per component, N=4096)\n\n");
+    content.push_str(&t.render());
+    content.push_str(
+        "\nreproduction target: monotone growth ball -> +selection -> global;\n\
+         selected blocks always outside the query's own ball (mask).\n\
+         renders: cargo run --release --example receptive_field\n",
+    );
+    emit(&o.out, "fig2", &content)
+}
+
+// ---------------------------------------------------------------------------
+// Figures 3 & 4: runtime scaling with sequence length
+// ---------------------------------------------------------------------------
+
+fn fig_scaling(
+    engine: &Arc<Engine>,
+    o: &Opts,
+    kinds: &[&str],
+    name: &str,
+    title: &str,
+) -> anyhow::Result<()> {
+    let ns = [256usize, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536];
+    let mut header: Vec<String> = vec!["N".into()];
+    for k in kinds {
+        header.push(format!("{k} ms"));
+        header.push(format!("{k} GFLOP"));
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    let cfg = ModelConfig::default();
+
+    let mut csv = format!("n,{}\n", kinds.join(","));
+    for n in ns {
+        if n > o.max_n {
+            continue;
+        }
+        let mut row = vec![n.to_string()];
+        let mut csv_row = vec![n.to_string()];
+        for kind in kinds {
+            let gname = format!("attn_{kind}_n{n}_ref");
+            let cell = match engine.load(&gname) {
+                Ok(exe) => {
+                    let init = engine.load(&format!("attninit_{kind}_n{n}_ref"))?;
+                    let params = init.run(&[scalar_i32(0)])?;
+                    let x = {
+                        let mut rng = bsa::prng::Rng::new(n as u64);
+                        Tensor::new(vec![1, n, 64], rng.normals(n * 64))
+                    };
+                    let _ = exe.run_with_tensors(&params, &[&x])?; // warmup
+                    let mut acc = Accumulator::new();
+                    for _ in 0..o.reps {
+                        let t0 = Instant::now();
+                        let out = exe.run_with_tensors(&params, &[&x])?;
+                        std::hint::black_box(&out);
+                        acc.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    format!("{:.2}", acc.mean())
+                }
+                Err(_) => "missing".into(),
+            };
+            csv_row.push(cell.clone());
+            row.push(cell);
+            row.push(format!("{:.2}", attn_layer_flops(kind, n, &cfg) / 1e9));
+        }
+        t.row(&row);
+        csv.push_str(&csv_row.join(","));
+        csv.push('\n');
+    }
+    std::fs::write(o.out.join(format!("{name}.csv")), csv)?;
+    let mut content = format!(
+        "## {title} — single attention layer, XLA-fused artifacts, {} reps\n\n",
+        o.reps
+    );
+    content.push_str(&t.render());
+    content.push_str(
+        "\nreproduction target: Full faster at small N, crossover, BSA ~5x faster at 65536\n\
+         (CPU testbed: crossover point shifts vs the paper's GPU; shape must hold).\n",
+    );
+    emit(&o.out, name, &content)
+}
+
+// ---------------------------------------------------------------------------
+// design-choice ablations (DESIGN.md: own-ball mask, MLP phi)
+// ---------------------------------------------------------------------------
+
+fn ablation(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
+    let rows = [
+        ("BSA (baseline)", "bsa_air_n1024_b2_ref"),
+        ("- own-ball selection mask", "bsa_nomask_air_n1024_b2_ref"),
+        ("+ MLP compression phi", "bsa_mlpcmp_air_n1024_b2_ref"),
+    ];
+    let mut t = Table::new(&["Variant", "MSE x100"]);
+    for (disp, tag) in rows {
+        if engine.manifest.get(&format!("train_{tag}")).is_err() {
+            t.row(&[disp.to_string(), "missing (make artifacts-bench)".into()]);
+            continue;
+        }
+        let tc = TrainConfig {
+            task: "air".into(),
+            steps: o.steps,
+            warmup: o.steps / 10 + 1,
+            train_samples: 96,
+            test_samples: 24,
+            log_every: o.steps.max(1),
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(engine.clone(), tag, tc)?;
+        trainer.run(|_| {})?;
+        let m = trainer.evaluate()? * 100.0;
+        println!("  {disp}: {m:.3}");
+        t.row(&[disp.to_string(), format!("{m:.3}")]);
+    }
+    let mut content = format!(
+        "## Design-choice ablations ({} steps) — own-ball mask & MLP phi\n\n",
+        o.steps
+    );
+    content.push_str(&t.render());
+    content.push_str(
+        "\nthe paper argues the own-ball mask prevents selection from\n\
+         duplicating BTA coverage (Sec. 3.2); removing it should not help.\n",
+    );
+    emit(&o.out, "ablation", &content)
+}
+
+// ---------------------------------------------------------------------------
+// dynamic batcher behaviour (B=4 artifact): does batching amortize?
+// ---------------------------------------------------------------------------
+
+fn batching(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
+    use bsa::config::ServeConfig;
+    use bsa::coordinator::Router;
+    let graph = "fwd_bsa_air_n1024_b4_ref";
+    if engine.manifest.get(graph).is_err() {
+        println!("  (skipping batching: {graph} missing — run make artifacts-bench)");
+        return Ok(());
+    }
+    let init = engine.load("init_bsa_air_n1024_b2_ref")
+        .or_else(|_| engine.load("init_bsa_air_n1024_b2"))?;
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])?
+        .iter()
+        .map(literal_to_tensor)
+        .collect::<Result<_, _>>()?;
+    let gen = generator_for("air", 9)?;
+    let total = 16usize;
+
+    let mut content = String::from("## dynamic batcher (B=4 compiled batch, N=1024)\n\n");
+    for (label, workers, concurrent) in [("sequential", 1usize, false), ("concurrent", 1usize, true)] {
+        let sc = ServeConfig { workers, flush_us: 30_000, ..Default::default() };
+        let router = Arc::new(Router::start(engine.clone(), graph, params.clone(), sc)?);
+        let t0 = Instant::now();
+        if concurrent {
+            // fire all requests before collecting: lets the batcher fill
+            let mut rxs = vec![];
+            for i in 0..total {
+                let s = gen.generate(i as u64, 900);
+                rxs.push(router.submit(s.coords, s.features)?);
+            }
+            for rx in rxs {
+                let resp = rx.recv().expect("response");
+                resp.result?;
+            }
+        } else {
+            for i in 0..total {
+                let s = gen.generate(i as u64, 900);
+                router.infer(s.coords, s.features)?;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let st = router.stats();
+        let line = format!(
+            "{label}: {total} reqs in {wall:.2}s ({:.2} req/s), batches={} mean_batch={:.2}\n",
+            total as f64 / wall,
+            st.batches,
+            st.mean_batch
+        );
+        print!("  {line}");
+        content.push_str(&line);
+    }
+    content.push_str(
+        "\nexpectation: concurrent submission fills the compiled batch\n\
+         (mean_batch -> 4) and beats sequential per-request dispatch.\n",
+    );
+    emit(&o.out, "batching", &content)
+}
+
+// ---------------------------------------------------------------------------
+// serving-path microbench (coordinator hot path; used by the Perf section)
+// ---------------------------------------------------------------------------
+
+fn serve_bench(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
+    use bsa::config::ServeConfig;
+    use bsa::coordinator::Router;
+    let init = engine.load("init_bsa_air_n1024_b2")?;
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])?
+        .iter()
+        .map(literal_to_tensor)
+        .collect::<Result<_, _>>()?;
+    let fwd = if engine.manifest.get("fwd_bsa_air_n4096_b1_ref").is_ok() {
+        "fwd_bsa_air_n4096_b1_ref"
+    } else {
+        "fwd_bsa_air_n4096_b1"
+    };
+    let sc = ServeConfig { workers: 2, ..Default::default() };
+    let router = Arc::new(Router::start(engine.clone(), fwd, params, sc)?);
+
+    let gen = generator_for("air", 3)?;
+    let reqs = 4 * o.reps.max(2);
+    // time the pre/post stages standalone
+    let sample = gen.generate(0, 3584);
+    let mut pre = Accumulator::new();
+    for i in 0..reqs {
+        let t0 = Instant::now();
+        let tree = bsa::balltree::BallTree::build(&sample.coords, 4096, i as u64);
+        let f = tree.permute_features(&sample.features);
+        std::hint::black_box(&f);
+        pre.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    let t0 = Instant::now();
+    for i in 0..reqs {
+        let s = gen.generate(i as u64, 3584);
+        let p = router.infer(s.coords, s.features)?;
+        std::hint::black_box(&p);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut content = format!("## serving-path microbench ({fwd})\n\n");
+    content.push_str(&format!(
+        "requests: {reqs} sequential; end-to-end {:.1} ms/req ({:.2} req/s)\n",
+        wall * 1e3 / reqs as f64,
+        reqs as f64 / wall
+    ));
+    content.push_str(&format!(
+        "preprocessing (ball tree + permute): {:.2} ms mean\n",
+        pre.mean()
+    ));
+    content.push_str(&format!(
+        "router p50={:.0}us p95={:.0}us\n",
+        router.latency_us(50.0),
+        router.latency_us(95.0)
+    ));
+    emit(&o.out, "serve", &content)
+}

@@ -1,0 +1,342 @@
+//! Ball tree construction — the geometric substrate of BSA.
+//!
+//! The Erwin transformer (Zhdanov et al. 2025) imposes regularity on an
+//! unordered point set by organising it into a balanced binary *ball
+//! tree*: points are recursively split at the median along the axis of
+//! largest spread. Reading the leaves in tree order yields a permutation
+//! under which **every contiguous chunk of 2^k positions is a ball** — a
+//! spatially compact neighbourhood. BSA inherits this: the rust
+//! coordinator permutes each input cloud with this module before invoking
+//! the compiled HLO, so the kernels see ball-local chunks (ball
+//! attention), block-local chunks (compression/selection), and groups, all
+//! as plain contiguous slices.
+//!
+//! Points are padded *by duplicating real points* up to the model's
+//! sequence length (a power-of-two multiple of the ball size); the `real`
+//! mask lets metrics ignore pad positions. Duplicated points are harmless
+//! for attention semantics (they attend like their originals) and keep the
+//! compiled graph shape static.
+
+use crate::prng::Rng;
+use crate::tensor::Tensor;
+
+/// A built ball tree over a (possibly padded) point cloud.
+#[derive(Debug, Clone)]
+pub struct BallTree {
+    /// Permutation: position `i` in ball order holds original point
+    /// `perm[i]` (an index into the *original, unpadded* cloud).
+    pub perm: Vec<usize>,
+    /// `real[i]` is false for pad duplicates.
+    pub real: Vec<bool>,
+    /// Number of original points.
+    pub n_points: usize,
+    /// Padded length (== perm.len()), a power-of-two multiple of 1.
+    pub n_padded: usize,
+    /// Dimensionality of the points.
+    pub dim: usize,
+    /// Permuted coordinates, shape (n_padded, dim).
+    pub coords: Tensor,
+}
+
+/// Geometric summary of one ball at a given granularity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ball {
+    pub center: Vec<f32>,
+    pub radius: f32,
+    /// Range [start, start+size) in ball order.
+    pub start: usize,
+    pub size: usize,
+}
+
+impl BallTree {
+    /// Build a ball tree over `points` (N, D), padding to `target_len`.
+    ///
+    /// `target_len` must be >= N and a power of two (the compiled model's
+    /// sequence length). Pads duplicate points chosen deterministically
+    /// from `seed` so padded balls stay spatially coherent.
+    pub fn build(points: &Tensor, target_len: usize, seed: u64) -> BallTree {
+        let n = points.rows();
+        let d = points.cols();
+        assert!(n > 0, "empty point cloud");
+        assert!(target_len >= n, "target_len {target_len} < n {n}");
+        assert!(target_len.is_power_of_two(), "target_len must be 2^k");
+
+        // Pad by sampling random existing points; duplicates sit next to
+        // their originals after the median splits, keeping balls compact.
+        let mut rng = Rng::new(seed);
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut is_real = vec![true; n];
+        while idx.len() < target_len {
+            idx.push(rng.below(n));
+            is_real.push(false);
+        }
+
+        // Recursive median split over (index, realness) pairs.
+        let mut pairs: Vec<(usize, bool)> = idx.into_iter().zip(is_real).collect();
+        split_recursive(points, &mut pairs);
+
+        let perm: Vec<usize> = pairs.iter().map(|p| p.0).collect();
+        let real: Vec<bool> = pairs.iter().map(|p| p.1).collect();
+        let mut coords = Vec::with_capacity(target_len * d);
+        for &p in &perm {
+            coords.extend_from_slice(points.row(p));
+        }
+        BallTree {
+            perm,
+            real,
+            n_points: n,
+            n_padded: target_len,
+            dim: d,
+            coords: Tensor::new(vec![target_len, d], coords),
+        }
+    }
+
+    /// Permute per-point features (N, F) into ball order (n_padded, F).
+    /// Pad rows replicate their source point's features.
+    pub fn permute_features(&self, features: &Tensor) -> Tensor {
+        assert_eq!(features.rows(), self.n_points, "feature rows");
+        let f = features.cols();
+        let mut out = Vec::with_capacity(self.n_padded * f);
+        for &p in &self.perm {
+            out.extend_from_slice(features.row(p));
+        }
+        Tensor::new(vec![self.n_padded, f], out)
+    }
+
+    /// Scatter per-position predictions (n_padded, F) back to original
+    /// point order (n_points, F). Pad positions are dropped; if a point
+    /// was duplicated, the *real* occurrence wins.
+    pub fn unpermute_predictions(&self, preds: &Tensor) -> Tensor {
+        assert_eq!(preds.rows(), self.n_padded, "pred rows");
+        let f = preds.cols();
+        let mut out = vec![0.0f32; self.n_points * f];
+        let mut seen = vec![false; self.n_points];
+        for (i, (&p, &r)) in self.perm.iter().zip(&self.real).enumerate() {
+            if r {
+                out[p * f..(p + 1) * f].copy_from_slice(preds.row(i));
+                seen[p] = true;
+            }
+        }
+        // Defensive: every real point appears exactly once by construction.
+        debug_assert!(seen.iter().all(|&s| s));
+        Tensor::new(vec![self.n_points, f], out)
+    }
+
+    /// Number of balls at granularity `ball_size` (must divide n_padded).
+    pub fn num_balls(&self, ball_size: usize) -> usize {
+        assert_eq!(self.n_padded % ball_size, 0, "ball size must divide N");
+        self.n_padded / ball_size
+    }
+
+    /// Ball id of a position at a granularity.
+    pub fn ball_of(&self, pos: usize, ball_size: usize) -> usize {
+        pos / ball_size
+    }
+
+    /// Geometric center/radius of each ball at `ball_size` granularity.
+    pub fn balls(&self, ball_size: usize) -> Vec<Ball> {
+        let nb = self.num_balls(ball_size);
+        let d = self.dim;
+        let mut out = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let start = b * ball_size;
+            let mut center = vec![0.0f32; d];
+            for i in start..start + ball_size {
+                for (c, &x) in center.iter_mut().zip(self.coords.row(i)) {
+                    *c += x;
+                }
+            }
+            for c in center.iter_mut() {
+                *c /= ball_size as f32;
+            }
+            let mut radius: f32 = 0.0;
+            for i in start..start + ball_size {
+                let dist: f32 = self
+                    .coords
+                    .row(i)
+                    .iter()
+                    .zip(&center)
+                    .map(|(x, c)| (x - c).powi(2))
+                    .sum::<f32>()
+                    .sqrt();
+                radius = radius.max(dist);
+            }
+            out.push(Ball { center, radius, start, size: ball_size });
+        }
+        out
+    }
+
+    /// Mean ball radius at a granularity — a compactness diagnostic used
+    /// by tests and the receptive-field example.
+    pub fn mean_radius(&self, ball_size: usize) -> f32 {
+        let balls = self.balls(ball_size);
+        balls.iter().map(|b| b.radius).sum::<f32>() / balls.len() as f32
+    }
+}
+
+/// Recursive in-place median split: after the call, every aligned
+/// power-of-two segment of `pairs` is a subtree (ball).
+fn split_recursive(points: &Tensor, pairs: &mut [(usize, bool)]) {
+    if pairs.len() <= 1 {
+        return;
+    }
+    let d = points.cols();
+
+    // Axis of largest spread across the segment.
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for &(p, _) in pairs.iter() {
+        for (a, &x) in points.row(p).iter().enumerate() {
+            lo[a] = lo[a].min(x);
+            hi[a] = hi[a].max(x);
+        }
+    }
+    let axis = (0..d)
+        .max_by(|&i, &j| {
+            (hi[i] - lo[i])
+                .partial_cmp(&(hi[j] - lo[j]))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap_or(0);
+
+    let mid = pairs.len() / 2;
+    pairs.select_nth_unstable_by(mid, |a, b| {
+        points.row(a.0)[axis]
+            .partial_cmp(&points.row(b.0)[axis])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let (left, right) = pairs.split_at_mut(mid);
+    split_recursive(points, left);
+    split_recursive(points, right);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn cloud(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(vec![n, d], rng.normals(n * d))
+    }
+
+    #[test]
+    fn perm_is_valid_permutation_when_unpadded() {
+        let pts = cloud(256, 3, 0);
+        let t = BallTree::build(&pts, 256, 0);
+        let mut seen = vec![false; 256];
+        for &p in &t.perm {
+            assert!(!seen[p], "duplicate without padding");
+            seen[p] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert!(t.real.iter().all(|&r| r));
+    }
+
+    #[test]
+    fn padding_duplicates_and_masks() {
+        let pts = cloud(100, 3, 1);
+        let t = BallTree::build(&pts, 128, 1);
+        assert_eq!(t.n_padded, 128);
+        assert_eq!(t.real.iter().filter(|&&r| r).count(), 100);
+        // every real point appears exactly once among real slots
+        let mut count = vec![0usize; 100];
+        for (&p, &r) in t.perm.iter().zip(&t.real) {
+            if r {
+                count[p] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn balls_are_spatially_compact() {
+        // Ball-ordered chunks must be far tighter than random chunks.
+        let pts = cloud(1024, 3, 2);
+        let t = BallTree::build(&pts, 1024, 2);
+        let tree_r = t.mean_radius(64);
+
+        // random ordering baseline
+        let mut rng = Rng::new(3);
+        let mut perm: Vec<usize> = (0..1024).collect();
+        rng.shuffle(&mut perm);
+        let shuffled = pts.permute_rows(&perm);
+        let t_rand = BallTree {
+            perm: (0..1024).collect(),
+            real: vec![true; 1024],
+            n_points: 1024,
+            n_padded: 1024,
+            dim: 3,
+            coords: shuffled,
+        };
+        let rand_r = t_rand.mean_radius(64);
+        assert!(
+            tree_r < 0.7 * rand_r,
+            "tree radius {tree_r} not much tighter than random {rand_r}"
+        );
+    }
+
+    #[test]
+    fn hierarchy_nested() {
+        // Each ball at size 2m is the union of two adjacent balls at m —
+        // so its radius must be >= either child's distance structure.
+        let pts = cloud(512, 3, 4);
+        let t = BallTree::build(&pts, 512, 4);
+        let fine = t.balls(32);
+        let coarse = t.balls(64);
+        for (b, cb) in coarse.iter().enumerate() {
+            let l = &fine[2 * b];
+            let r = &fine[2 * b + 1];
+            assert_eq!(cb.start, l.start);
+            assert_eq!(cb.start + cb.size, r.start + r.size);
+        }
+    }
+
+    #[test]
+    fn feature_roundtrip() {
+        let pts = cloud(200, 3, 5);
+        let feats = cloud(200, 6, 6);
+        let t = BallTree::build(&pts, 256, 5);
+        let pf = t.permute_features(&feats);
+        assert_eq!(pf.shape(), &[256, 6]);
+        // unpermute identity: treat features as "predictions"
+        let back = t.unpermute_predictions(&pf);
+        assert_eq!(back, feats);
+    }
+
+    #[test]
+    fn split_axis_separates_space() {
+        // Two well-separated clusters must land in different halves.
+        let mut data = Vec::new();
+        for i in 0..64 {
+            let off = if i < 32 { -10.0 } else { 10.0 };
+            data.extend_from_slice(&[off + (i % 7) as f32 * 0.01, 0.0, 0.0]);
+        }
+        let pts = Tensor::new(vec![64, 3], data);
+        let t = BallTree::build(&pts, 64, 0);
+        let first_half: Vec<f32> = (0..32).map(|i| t.coords.row(i)[0]).collect();
+        let second_half: Vec<f32> = (32..64).map(|i| t.coords.row(i)[0]).collect();
+        assert!(first_half.iter().all(|&x| x < 0.0) != first_half.iter().all(|&x| x > 0.0) || true);
+        // halves are homogeneous in sign
+        assert!(
+            first_half.iter().all(|&x| x < 0.0) && second_half.iter().all(|&x| x > 0.0)
+                || first_half.iter().all(|&x| x > 0.0) && second_half.iter().all(|&x| x < 0.0)
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_target_panics() {
+        let pts = cloud(10, 3, 0);
+        BallTree::build(&pts, 24, 0);
+    }
+
+    #[test]
+    fn ball_of_granularity() {
+        let pts = cloud(128, 3, 9);
+        let t = BallTree::build(&pts, 128, 9);
+        assert_eq!(t.ball_of(0, 32), 0);
+        assert_eq!(t.ball_of(127, 32), 3);
+        assert_eq!(t.num_balls(32), 4);
+    }
+}

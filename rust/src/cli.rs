@@ -1,0 +1,207 @@
+//! Hand-rolled CLI parser (clap is not vendored offline).
+//!
+//! Supports `bsa <subcommand> [--flag value] [--switch] [positional...]`
+//! with typed accessors, defaults, and generated help text.
+
+use std::collections::BTreeMap;
+
+/// Declarative flag spec for help text + validation.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+impl Args {
+    /// Parse argv (excluding program name) against a flag spec table.
+    pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --flag=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    let spec = find(specs, k).ok_or_else(|| CliError::UnknownFlag(k.into()))?;
+                    if !spec.takes_value {
+                        return Err(CliError::BadValue(k.into(), v.into()));
+                    }
+                    out.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                let spec =
+                    find(specs, name).ok_or_else(|| CliError::UnknownFlag(name.into()))?;
+                if spec.takes_value {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError::MissingValue(name.into()))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        // fill defaults
+        for s in specs {
+            if s.takes_value && !out.flags.contains_key(s.name) {
+                if let Some(d) = s.default {
+                    out.flags.insert(s.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+}
+
+fn find<'a>(specs: &'a [FlagSpec], name: &str) -> Option<&'a FlagSpec> {
+    specs.iter().find(|s| s.name == name)
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(command: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("bsa {command} — {about}\n\nflags:\n");
+    for s in specs {
+        let v = if s.takes_value { " <value>" } else { "" };
+        let d = s
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{}{v}\n      {}{d}\n", s.name, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "steps", help: "train steps", takes_value: true, default: Some("100") },
+            FlagSpec { name: "task", help: "dataset", takes_value: true, default: Some("air") },
+            FlagSpec { name: "verbose", help: "log more", takes_value: false, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let a = Args::parse(&sv(&["train", "--steps", "500", "--verbose", "extra"]), &specs())
+            .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 500);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&sv(&["x", "--steps=7"]), &specs()).unwrap();
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["t"]), &specs()).unwrap();
+        assert_eq!(a.str_flag("task", ""), "air");
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(matches!(
+            Args::parse(&sv(&["t", "--nope"]), &specs()),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            Args::parse(&sv(&["t", "--steps"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = Args::parse(&sv(&["t", "--steps", "abc"]), &specs()).unwrap();
+        assert!(matches!(a.usize_flag("steps", 0), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = render_help("train", "train a model", &specs());
+        assert!(h.contains("--steps"));
+        assert!(h.contains("default: 100"));
+    }
+}

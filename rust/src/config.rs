@@ -1,0 +1,554 @@
+//! Configuration system: a TOML-subset parser and the typed configs.
+//!
+//! No serde/toml crates are vendored offline, so this module implements
+//! the subset of TOML the project needs — `[section]` headers, `key =
+//! value` with string / integer / float / boolean / homogeneous-array
+//! values, `#` comments — plus typed views (`ModelConfig`, `TrainConfig`,
+//! `ServeConfig`, `BenchConfig`) whose defaults reproduce the paper's
+//! Table 4 and Appendix A.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse error with line context.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Flat section -> key -> value document.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    /// Parse a TOML-subset string.
+    pub fn parse(text: &str) -> Result<Document, ParseError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = lineno + 1;
+            let s = strip_comment(raw).trim();
+            if s.is_empty() {
+                continue;
+            }
+            if let Some(name) = s.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| ParseError { line, msg: "unterminated [section]".into() })?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ParseError { line, msg: "empty section name".into() });
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = s
+                .find('=')
+                .ok_or_else(|| ParseError { line, msg: format!("expected key = value, got {s:?}") })?;
+            let key = s[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError { line, msg: "empty key".into() });
+            }
+            let val = parse_value(s[eq + 1..].trim(), line)?;
+            doc.sections
+                .get_mut(&section)
+                .expect("section exists")
+                .insert(key.to_string(), val);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> anyhow::Result<Document> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    // typed getters with defaults ------------------------------------
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        match self.get(section, key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(x)) => *x as i64,
+            _ => default,
+        }
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        match self.get(section, key) {
+            Some(Value::Float(x)) => *x,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+}
+
+fn strip_comment(s: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(ParseError { line, msg: "empty value".into() });
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| ParseError { line, msg: "unterminated string".into() })?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| ParseError { line, msg: "unterminated array".into() })?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(ParseError { line, msg: format!("cannot parse value {s:?}") })
+}
+
+/// Split a flat array body on commas (no nested arrays-of-arrays needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// typed configs (defaults = paper Table 4 / Appendix A)
+// ---------------------------------------------------------------------------
+
+/// Model architecture + sparse-attention parameters (paper Table 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub variant: String, // bsa | bsa_nogs | bsa_gc | full | erwin | pointnet
+    pub dim: usize,
+    pub num_heads: usize,
+    pub num_blocks: usize,
+    pub ball_size: usize,
+    pub cmp_block: usize,
+    pub sel_block: usize,
+    pub top_k: usize,
+    pub group_size: usize,
+    pub seq_len: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            variant: "bsa".into(),
+            dim: 64,
+            num_heads: 4,
+            num_blocks: 6,
+            ball_size: 256, // paper Table 4
+            cmp_block: 8,
+            sel_block: 8,
+            top_k: 4,
+            group_size: 8,
+            seq_len: 1024,
+        }
+    }
+}
+
+/// Paper-scale configuration (18 blocks, N=4096): Appendix A.
+impl ModelConfig {
+    pub fn paper_scale() -> Self {
+        ModelConfig { num_blocks: 18, seq_len: 4096, ..Default::default() }
+    }
+
+    pub fn from_doc(doc: &Document) -> Self {
+        let d = ModelConfig::default();
+        ModelConfig {
+            variant: doc.str_or("model", "variant", &d.variant),
+            dim: doc.int_or("model", "dim", d.dim as i64) as usize,
+            num_heads: doc.int_or("model", "num_heads", d.num_heads as i64) as usize,
+            num_blocks: doc.int_or("model", "num_blocks", d.num_blocks as i64) as usize,
+            ball_size: doc.int_or("model", "ball_size", d.ball_size as i64) as usize,
+            cmp_block: doc.int_or("model", "cmp_block", d.cmp_block as i64) as usize,
+            sel_block: doc.int_or("model", "sel_block", d.sel_block as i64) as usize,
+            top_k: doc.int_or("model", "top_k", d.top_k as i64) as usize,
+            group_size: doc.int_or("model", "group_size", d.group_size as i64) as usize,
+            seq_len: doc.int_or("model", "seq_len", d.seq_len as i64) as usize,
+        }
+    }
+
+    /// The divisibility contract shared with python/compile/params.py.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let err = |m: String| Err(anyhow::anyhow!(m));
+        if self.dim % self.num_heads != 0 {
+            return err(format!("dim {} % heads {} != 0", self.dim, self.num_heads));
+        }
+        if self.seq_len % self.ball_size != 0 {
+            return err(format!("seq_len {} % ball {} != 0", self.seq_len, self.ball_size));
+        }
+        if self.ball_size % self.cmp_block != 0 || self.ball_size % self.group_size != 0 {
+            return err("ball size must be divisible by cmp block and group".into());
+        }
+        if self.top_k > self.seq_len / self.cmp_block {
+            return err(format!("top_k {} exceeds block count", self.top_k));
+        }
+        Ok(())
+    }
+}
+
+/// Training hyperparameters (paper Appendix A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub task: String, // air | ela | syn
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub warmup: usize,
+    pub seed: u64,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub checkpoint_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            task: "air".into(),
+            steps: 400,
+            batch: 2,
+            lr: 1e-3,          // paper
+            weight_decay: 0.01, // paper
+            warmup: 20,
+            seed: 0,
+            train_samples: 96,
+            test_samples: 24,
+            log_every: 10,
+            eval_every: 100,
+            checkpoint_dir: "checkpoints".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_doc(doc: &Document) -> Self {
+        let d = TrainConfig::default();
+        TrainConfig {
+            task: doc.str_or("train", "task", &d.task),
+            steps: doc.int_or("train", "steps", d.steps as i64) as usize,
+            batch: doc.int_or("train", "batch", d.batch as i64) as usize,
+            lr: doc.float_or("train", "lr", d.lr),
+            weight_decay: doc.float_or("train", "weight_decay", d.weight_decay),
+            warmup: doc.int_or("train", "warmup", d.warmup as i64) as usize,
+            seed: doc.int_or("train", "seed", d.seed as i64) as u64,
+            train_samples: doc.int_or("train", "train_samples", d.train_samples as i64) as usize,
+            test_samples: doc.int_or("train", "test_samples", d.test_samples as i64) as usize,
+            log_every: doc.int_or("train", "log_every", d.log_every as i64) as usize,
+            eval_every: doc.int_or("train", "eval_every", d.eval_every as i64) as usize,
+            checkpoint_dir: doc.str_or("train", "checkpoint_dir", &d.checkpoint_dir),
+        }
+    }
+
+    /// Cosine schedule with linear warmup (paper: cosine, lr 1e-3).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if step < self.warmup {
+            return self.lr * (step as f64 + 1.0) / self.warmup as f64;
+        }
+        let t = (step - self.warmup) as f64 / (self.steps - self.warmup).max(1) as f64;
+        let t = t.min(1.0);
+        0.5 * self.lr * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+/// Serving configuration for the router/batcher.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub max_batch: usize,
+    /// Maximum time a request may wait for batchmates.
+    pub flush_us: u64,
+    pub queue_cap: usize,
+    pub seq_len: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7077".into(),
+            workers: 2,
+            max_batch: 1, // fwd artifacts are lowered per (B, N); core suite has B=1
+            flush_us: 2000,
+            queue_cap: 1024,
+            seq_len: 4096,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_doc(doc: &Document) -> Self {
+        let d = ServeConfig::default();
+        ServeConfig {
+            addr: doc.str_or("serve", "addr", &d.addr),
+            workers: doc.int_or("serve", "workers", d.workers as i64) as usize,
+            max_batch: doc.int_or("serve", "max_batch", d.max_batch as i64) as usize,
+            flush_us: doc.int_or("serve", "flush_us", d.flush_us as i64) as u64,
+            queue_cap: doc.int_or("serve", "queue_cap", d.queue_cap as i64) as usize,
+            seq_len: doc.int_or("serve", "seq_len", d.seq_len as i64) as usize,
+        }
+    }
+}
+
+/// Benchmark harness configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchConfig {
+    pub reps: usize,
+    pub warmup: usize,
+    pub max_n: usize,
+    pub artifacts: String,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { reps: 5, warmup: 2, max_n: 16384, artifacts: "artifacts".into() }
+    }
+}
+
+/// Render the paper's Table 4 from a ModelConfig (used by `bsa config`).
+pub fn table4(cfg: &ModelConfig) -> String {
+    format!(
+        "Table 4. Sparse attention parameters\n\
+         | Parameter                        | Value |\n\
+         |----------------------------------|-------|\n\
+         | Ball size                        | {} |\n\
+         | Compression block size           | {} |\n\
+         | Compression block sliding stride | {} |\n\
+         | Selection block size             | {} |\n\
+         | Number of blocks selected        | {} |\n",
+        cfg.ball_size, cfg.cmp_block, cfg.cmp_block, cfg.sel_block, cfg.top_k
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# bsa config
+[model]
+variant = "bsa"   # the paper's model
+dim = 128
+num_blocks = 18
+ball_size = 256
+
+[train]
+lr = 0.001
+steps = 1000
+task = "air"
+
+[serve]
+addr = "0.0.0.0:9000"
+flush_us = 500
+
+[misc]
+flag = true
+xs = [1, 2, 3]
+names = ["a", "b"]
+empty = []
+"#;
+
+    #[test]
+    fn parse_sections_and_values() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("model", "dim"), Some(&Value::Int(128)));
+        assert_eq!(doc.get("train", "lr"), Some(&Value::Float(0.001)));
+        assert_eq!(doc.get("misc", "flag"), Some(&Value::Bool(true)));
+        assert_eq!(
+            doc.get("misc", "xs"),
+            Some(&Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+        assert_eq!(doc.str_or("serve", "addr", ""), "0.0.0.0:9000");
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = Document::parse("a = \"x # not a comment\" # comment\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Str("x # not a comment".into())));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = Document::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Document::parse("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = Document::parse("x = \"open\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn typed_model_config() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let mc = ModelConfig::from_doc(&doc);
+        assert_eq!(mc.dim, 128);
+        assert_eq!(mc.num_blocks, 18);
+        assert_eq!(mc.ball_size, 256); // explicit
+        assert_eq!(mc.top_k, 4); // default
+    }
+
+    #[test]
+    fn defaults_match_paper_table4() {
+        let d = ModelConfig::default();
+        assert_eq!(d.ball_size, 256);
+        assert_eq!(d.cmp_block, 8);
+        assert_eq!(d.sel_block, 8);
+        assert_eq!(d.top_k, 4);
+        let t = table4(&d);
+        assert!(t.contains("| 256 |"));
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = ModelConfig::default();
+        c.validate().unwrap();
+        c.dim = 65;
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig { seq_len: 1000, ..Default::default() };
+        assert!(c.validate().is_err());
+        c = ModelConfig { top_k: 10_000, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let tc = TrainConfig { steps: 100, warmup: 10, lr: 1.0, ..Default::default() };
+        assert!(tc.lr_at(0) < 0.2); // warmup starts low
+        assert!((tc.lr_at(9) - 1.0).abs() < 0.11); // end of warmup ~ peak
+        assert!(tc.lr_at(50) < tc.lr_at(10)); // decays
+        assert!(tc.lr_at(99) < 0.01); // ~0 at the end
+    }
+
+    #[test]
+    fn value_display_roundtrips_through_parse() {
+        let vals = vec![
+            Value::Int(42),
+            Value::Float(2.5),
+            Value::Bool(false),
+            Value::Str("hi".into()),
+            Value::Array(vec![Value::Int(1), Value::Int(2)]),
+        ];
+        for v in vals {
+            let text = format!("k = {v}\n");
+            let doc = Document::parse(&text).unwrap();
+            assert_eq!(doc.get("", "k"), Some(&v));
+        }
+    }
+}

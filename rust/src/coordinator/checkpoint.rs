@@ -1,0 +1,131 @@
+//! Checkpoint format (`.bsackpt`): named f32 arrays + training step.
+//!
+//! Layout (little-endian):
+//!   magic "BSAC" | version u32 | step u64 | count u32
+//!   per array: name_len u32 | name bytes | ndims u32 | dims u32... | f32 data
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"BSAC";
+const VERSION: u32 = 1;
+
+/// A named tensor collection with a step counter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub arrays: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.arrays.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.arrays {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let mut buf = Vec::with_capacity(t.len() * 4);
+            for x in t.data() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a .bsackpt file: {}", path.display());
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let mut step_b = [0u8; 8];
+        r.read_exact(&mut step_b)?;
+        let step = u64::from_le_bytes(step_b);
+        let count = read_u32(&mut r)? as usize;
+        anyhow::ensure!(count < 100_000, "corrupt checkpoint: {count} arrays");
+        let mut arrays = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = read_u32(&mut r)? as usize;
+            anyhow::ensure!(nlen < 4096, "corrupt name length");
+            let mut nb = vec![0u8; nlen];
+            r.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let ndims = read_u32(&mut r)? as usize;
+            anyhow::ensure!(ndims <= 8, "corrupt rank {ndims}");
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            anyhow::ensure!(n < (1 << 28), "corrupt dims {dims:?}");
+            let mut buf = vec![0u8; n * 4];
+            r.read_exact(&mut buf)?;
+            let data = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            arrays.push((name, Tensor::new(dims, data)));
+        }
+        Ok(Checkpoint { step, arrays })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            step: 1234,
+            arrays: vec![
+                ("blocks.0.attn.wq".into(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.])),
+                ("scalar".into(), Tensor::new(vec![], vec![7.0])),
+            ],
+        };
+        let path = std::env::temp_dir().join("bsa_ckpt_test.bsackpt");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ck);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("bsa_ckpt_bad.bsackpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("bsa_ckpt_nested/x/y");
+        let path = dir.join("c.bsackpt");
+        let ck = Checkpoint { step: 0, arrays: vec![] };
+        ck.save(&path).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(std::env::temp_dir().join("bsa_ckpt_nested")).ok();
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the runtime systems around the compiled BSA model.
+//!
+//! * [`train`] — training orchestrator: data loading, ball-tree
+//!   permutation, cosine LR schedule (host-side), fused train-step
+//!   execution, eval, checkpointing.
+//! * [`serve`] — serving router: bounded request queue, deadline-based
+//!   dynamic batcher, worker pool over compiled forward graphs.
+//! * [`checkpoint`] — parameter/optimizer-state persistence (`.bsackpt`).
+//!
+//! The BSA paper's contribution is the attention mechanism (L1/L2);
+//! this layer is the production harness a deployment needs, plus the
+//! glue that makes the geometry regular (ball-tree permutation) before
+//! the static-shape compiled graphs see it.
+
+pub mod checkpoint;
+pub mod serve;
+pub mod train;
+
+pub use serve::{Router, ServeRequest, ServeResponse};
+pub use train::Trainer;

@@ -1,0 +1,290 @@
+//! Training orchestrator: drives the fused `train_<tag>` HLO graph.
+//!
+//! The compiled step is `(params…, m…, v…, step, lr, x, y) -> (params…,
+//! m…, v…, loss)` (AdamW fused in by aot.py). Host responsibilities:
+//!
+//! * materialize the synthetic dataset and build one **ball tree per
+//!   sample** (cached) — the geometric regularization BSA requires;
+//! * assemble shuffled mini-batches of permuted features/targets;
+//! * compute the cosine-with-warmup LR schedule (paper Appendix A) and
+//!   feed it as a scalar, keeping the compiled graph schedule-free;
+//! * run eval over the held-out split with the matching `fwd_<tag>` graph;
+//! * persist checkpoints.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::balltree::BallTree;
+use crate::config::TrainConfig;
+use crate::data::{Dataset, SplitSpec};
+use crate::metrics::{Accumulator, ErrorStats};
+use crate::prng::Rng;
+use crate::runtime::{
+    literal_scalar_f32, literal_to_tensor, scalar_f32, tensor_to_literal, Engine, Executable,
+    GraphKind,
+};
+use crate::tensor::Tensor;
+
+use super::checkpoint::Checkpoint;
+
+/// One logged training event.
+#[derive(Debug, Clone)]
+pub struct LogEntry {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f64,
+    pub ms_per_step: f64,
+}
+
+/// Training driver bound to one artifact tag (model × task × N × B).
+pub struct Trainer {
+    engine: Arc<Engine>,
+    train_exe: Arc<Executable>,
+    fwd_exe: Arc<Executable>,
+    tc: TrainConfig,
+    /// params ++ m ++ v as literals, in manifest flatten order.
+    state: Vec<xla::Literal>,
+    pub step: usize,
+    dataset: Dataset,
+    split: SplitSpec,
+    trees: Vec<BallTree>,
+    rng: Rng,
+    pub history: Vec<LogEntry>,
+    n: usize,
+    batch: usize,
+    feat_dim: usize,
+}
+
+impl Trainer {
+    /// Build a trainer for artifact `tag`, generating `train_samples +
+    /// test_samples` synthetic samples and initializing parameters via the
+    /// `init_<tag>` graph with `tc.seed`.
+    pub fn new(engine: Arc<Engine>, tag: &str, tc: TrainConfig) -> anyhow::Result<Trainer> {
+        let train_exe = engine.load(&format!("train_{tag}"))?;
+        let fwd_exe = engine.load(&format!("fwd_{tag}"))?;
+        let init_exe = engine.load(&format!("init_{tag}"))?;
+        anyhow::ensure!(train_exe.info.kind == GraphKind::Train, "not a train graph");
+
+        let info = &train_exe.info;
+        let n = info.n;
+        let batch = info.batch;
+        let feat_dim = info.in_features;
+
+        // dataset + ball trees
+        let gen = crate::data::generator_for(&tc.task, tc.seed)?;
+        anyhow::ensure!(
+            gen.feature_dim() == feat_dim,
+            "task {} has {} features but artifact {tag} expects {feat_dim}",
+            tc.task,
+            gen.feature_dim()
+        );
+        let total = tc.train_samples + tc.test_samples;
+        let split = SplitSpec { train: tc.train_samples, test: tc.test_samples };
+        // generate ~7/8 of N points per sample so the ball-tree pad path
+        // (duplicate points up to the static graph length) is exercised,
+        // like ShapeNet's 3586 -> 4096
+        let n_points = n - n / 8;
+        let dataset = Dataset::materialize(gen.as_ref(), total, n_points, split);
+        let trees: Vec<BallTree> = dataset
+            .samples
+            .iter()
+            .enumerate()
+            .map(|(i, s)| BallTree::build(&s.coords, n, tc.seed ^ i as u64))
+            .collect();
+
+        // init params; zeros for optimizer moments
+        let nparams = info.nparams;
+        let out = init_exe.run(&[crate::runtime::scalar_i32(tc.seed as i32)])?;
+        anyhow::ensure!(out.len() == nparams, "init returned {} arrays", out.len());
+        let mut state = out;
+        for i in 0..2 * nparams {
+            let spec = &train_exe.info.inputs[nparams + i];
+            state.push(tensor_to_literal(&Tensor::zeros(spec.dims.clone()))?);
+        }
+
+        let rng = Rng::new(tc.seed ^ 0x7221);
+        Ok(Trainer {
+            engine,
+            train_exe,
+            fwd_exe,
+            tc,
+            state,
+            step: 0,
+            dataset,
+            split,
+            trees,
+            rng,
+            history: vec![],
+            n,
+            batch,
+            feat_dim,
+        })
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Assemble a batch (x, y) from sample indices (ball-order permuted,
+    /// targets normalized by the train-split stats).
+    fn assemble(&self, idxs: &[usize]) -> anyhow::Result<(Tensor, Tensor)> {
+        let b = idxs.len();
+        let mut x = Vec::with_capacity(b * self.n * self.feat_dim);
+        let mut y = Vec::with_capacity(b * self.n);
+        for &i in idxs {
+            let s = &self.dataset.samples[i];
+            let t = &self.trees[i];
+            let feats = t.permute_features(&s.features);
+            let targ = t.permute_features(&self.dataset.norm.normalize(&s.target));
+            x.extend_from_slice(feats.data());
+            y.extend_from_slice(targ.data());
+        }
+        Ok((
+            Tensor::new(vec![b, self.n, self.feat_dim], x),
+            Tensor::new(vec![b, self.n, 1], y),
+        ))
+    }
+
+    /// Run one optimization step on a random train batch; returns the loss.
+    pub fn step_once(&mut self) -> anyhow::Result<f32> {
+        let idxs: Vec<usize> = (0..self.batch)
+            .map(|_| self.rng.below(self.split.train))
+            .collect();
+        let (x, y) = self.assemble(&idxs)?;
+        let started = Instant::now();
+
+        let lr = self.tc.lr_at(self.step) as f32;
+        let nparams = self.train_exe.info.nparams;
+        let mut inputs = std::mem::take(&mut self.state);
+        inputs.push(scalar_f32((self.step + 1) as f32));
+        inputs.push(scalar_f32(lr));
+        inputs.push(tensor_to_literal(&x)?);
+        inputs.push(tensor_to_literal(&y)?);
+
+        let mut out = self.train_exe.run(&inputs)?;
+        let loss = literal_scalar_f32(&out[3 * nparams])?;
+        out.truncate(3 * nparams);
+        self.state = out;
+        self.step += 1;
+
+        let ms = started.elapsed().as_secs_f64() * 1e3;
+        if self.step % self.tc.log_every == 0 || self.step == 1 {
+            self.history.push(LogEntry { step: self.step, loss, lr: lr as f64, ms_per_step: ms });
+        }
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {}: {loss}", self.step);
+        Ok(loss)
+    }
+
+    /// Train for `tc.steps` steps with periodic logging/eval callbacks.
+    pub fn run<F: FnMut(&LogEntry)>(&mut self, mut on_log: F) -> anyhow::Result<f32> {
+        let mut last = f32::NAN;
+        for _ in self.step..self.tc.steps {
+            last = self.step_once()?;
+            if let Some(entry) = self.history.last() {
+                if entry.step == self.step {
+                    on_log(entry);
+                }
+            }
+        }
+        Ok(last)
+    }
+
+    /// Mean test MSE (normalized target units) over the held-out split.
+    pub fn evaluate(&self) -> anyhow::Result<f64> {
+        let nparams = self.fwd_exe.info.nparams;
+        let fwd_batch = self.fwd_exe.info.batch;
+        let mut err = ErrorStats::default();
+        let test_range: Vec<usize> =
+            (self.split.train..self.split.train + self.split.test).collect();
+        for chunk in test_range.chunks(fwd_batch) {
+            // pad the final chunk by repeating its last sample
+            let mut idxs = chunk.to_vec();
+            while idxs.len() < fwd_batch {
+                idxs.push(*chunk.last().unwrap());
+            }
+            let (x, y) = self.assemble(&idxs)?;
+            let params = &self.state[..nparams];
+            let out = self.fwd_exe.run_with_tensors(params, &[&x])?;
+            let pred = literal_to_tensor(&out[0])?;
+            // only score the non-padded chunk entries and real points
+            for (bi, &si) in chunk.iter().enumerate() {
+                let tree = &self.trees[si];
+                let stride = self.n;
+                for p in 0..self.n {
+                    if tree.real[p] {
+                        let off = bi * stride + p;
+                        err.push_pair(pred.data()[off], y.data()[off]);
+                    }
+                }
+            }
+        }
+        Ok(err.mse())
+    }
+
+    /// Per-step wall-clock statistics from the log history.
+    pub fn step_time_stats(&self) -> Accumulator {
+        let mut acc = Accumulator::new();
+        for e in &self.history {
+            acc.push(e.ms_per_step);
+        }
+        acc
+    }
+
+    /// Save params (+ optimizer state + step) to a checkpoint file.
+    pub fn save_checkpoint(&self, path: &Path) -> anyhow::Result<()> {
+        let names: Vec<&str> = self
+            .train_exe
+            .info
+            .inputs
+            .iter()
+            .take(3 * self.train_exe.info.nparams)
+            .map(|s| s.name.as_str())
+            .collect();
+        let mut arrays = Vec::with_capacity(self.state.len());
+        for (lit, name) in self.state.iter().zip(names) {
+            arrays.push((name.to_string(), literal_to_tensor(lit)?));
+        }
+        Checkpoint { step: self.step as u64, arrays }.save(path)
+    }
+
+    /// Restore params/optimizer state/step from a checkpoint.
+    pub fn load_checkpoint(&mut self, path: &Path) -> anyhow::Result<()> {
+        let ck = Checkpoint::load(path)?;
+        let expect = 3 * self.train_exe.info.nparams;
+        anyhow::ensure!(
+            ck.arrays.len() == expect,
+            "checkpoint has {} arrays, graph needs {expect}",
+            ck.arrays.len()
+        );
+        let mut state = Vec::with_capacity(expect);
+        for ((name, t), spec) in ck.arrays.iter().zip(&self.train_exe.info.inputs) {
+            anyhow::ensure!(
+                t.shape() == spec.dims.as_slice(),
+                "checkpoint array {name} shape {:?} != graph {:?}",
+                t.shape(),
+                spec.dims
+            );
+            state.push(tensor_to_literal(t)?);
+        }
+        self.state = state;
+        self.step = ck.step as usize;
+        Ok(())
+    }
+
+    /// Borrow the current parameter literals (first `nparams` of state).
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.state[..self.train_exe.info.nparams]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Trainer integration tests live in rust/tests/integration.rs — they
+    // need compiled artifacts. Unit-testable pieces (schedule, batching
+    // math) are covered in config::tests and data::tests.
+}

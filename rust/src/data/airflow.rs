@@ -1,0 +1,270 @@
+//! Procedural ShapeNet-Car surrogate: car-like surfaces + airflow pressure.
+//!
+//! Replaces the paper's ShapeNet-Car dataset (889 car bodies, 3586 surface
+//! points, RANS pressure at Re = 5e6). Each sample is:
+//!
+//! * **Geometry** — a closed car-like surface assembled from a
+//!   superellipsoid body, a cabin superellipsoid, and four wheel arches;
+//!   proportions, exponents and cabin placement vary per seed, giving a
+//!   family of shapes with the diversity role of the 889 cars.
+//! * **Pressure** — a potential-flow-inspired surrogate of the surface
+//!   pressure coefficient for freestream flow along +x:
+//!     - stagnation term `cp ≈ s²` on windward surfaces (s = n̂·v̂ < 0),
+//!     - sphere-like suction `cp ≈ 1 − 2.25·(1−s²)` on the sides,
+//!     - a *wake plateau* behind the widest section whose level depends on
+//!       the car's global slenderness — a genuinely **nonlocal** term: the
+//!       pressure at a rear point depends on geometry metres upstream,
+//!       which is exactly the long-range dependence BSA's global branches
+//!       are supposed to capture (and ball-local attention alone cannot),
+//!     - cabin interference suction and smooth per-seed harmonic noise.
+//!
+//! Absolute values are not RANS; the *learning problem shape* (smooth
+//! field, local + global geometry dependence, stagnation/wake asymmetry)
+//! is preserved. See DESIGN.md §Substitutions.
+
+use crate::prng::Rng;
+use crate::tensor::Tensor;
+
+use super::dataset::Sample;
+use super::Generator;
+
+/// Car-shape parameters drawn per sample.
+#[derive(Debug, Clone)]
+pub struct CarShape {
+    /// Body half-extents (length, width, height).
+    pub half: [f32; 3],
+    /// Superellipsoid exponent (2 = ellipsoid, larger = boxier).
+    pub power: f32,
+    /// Cabin half-extents and x/z offset.
+    pub cabin_half: [f32; 3],
+    pub cabin_off: [f32; 2],
+    /// Harmonic noise phases/amps for the pressure field.
+    pub phases: [f32; 6],
+}
+
+impl CarShape {
+    fn sample(rng: &mut Rng) -> CarShape {
+        CarShape {
+            half: [
+                rng.range(1.6, 2.4),  // length
+                rng.range(0.7, 1.0),  // width
+                rng.range(0.45, 0.65), // height
+            ],
+            power: rng.range(2.2, 3.5),
+            cabin_half: [rng.range(0.6, 1.0), rng.range(0.5, 0.75), rng.range(0.25, 0.4)],
+            cabin_off: [rng.range(-0.5, 0.2), 0.0],
+            phases: [
+                rng.range(0.0, std::f32::consts::TAU),
+                rng.range(0.0, std::f32::consts::TAU),
+                rng.range(0.0, std::f32::consts::TAU),
+                rng.range(1.0, 3.0),
+                rng.range(1.0, 3.0),
+                rng.range(0.02, 0.08), // noise amplitude
+            ],
+        }
+    }
+}
+
+/// Airflow pressure dataset generator ("air" task; 6 features/point).
+pub struct AirflowGenerator {
+    seed: u64,
+}
+
+impl AirflowGenerator {
+    pub fn new(seed: u64) -> Self {
+        AirflowGenerator { seed }
+    }
+}
+
+/// Superellipsoid surface point + outward normal for direction (u, v).
+fn superellipsoid_point(half: &[f32; 3], p: f32, theta: f32, phi: f32) -> ([f32; 3], [f32; 3]) {
+    // |x/a|^p + |y/b|^p + |z/c|^p = 1, parametrised by spherical angles.
+    let sgn_pow = |x: f32, e: f32| x.signum() * x.abs().powf(e);
+    let e = 2.0 / p;
+    let (st, ct) = theta.sin_cos();
+    let (sp, cp) = phi.sin_cos();
+    let x = half[0] * sgn_pow(ct * cp, e);
+    let y = half[1] * sgn_pow(ct * sp, e);
+    let z = half[2] * sgn_pow(st, e);
+    // gradient of the implicit function gives the normal direction
+    let g = [
+        p / half[0] * sgn_pow(x / half[0], p - 1.0),
+        p / half[1] * sgn_pow(y / half[1], p - 1.0),
+        p / half[2] * sgn_pow(z / half[2], p - 1.0),
+    ];
+    let norm = (g[0] * g[0] + g[1] * g[1] + g[2] * g[2]).sqrt().max(1e-6);
+    ([x, y, z], [g[0] / norm, g[1] / norm, g[2] / norm])
+}
+
+/// Surrogate pressure coefficient at a surface point.
+fn pressure_cp(shape: &CarShape, pos: &[f32; 3], normal: &[f32; 3], on_cabin: bool) -> f32 {
+    // freestream along +x; windward normals face -x
+    let s = -normal[0]; // n̂ · (−v̂): 1 at stagnation, -1 at base
+    let lateral = 1.0 - normal[0] * normal[0];
+
+    let mut cp = if s > 0.0 {
+        // windward: stagnation rise minus side suction
+        s * s - 1.25 * lateral * (1.0 - s)
+    } else {
+        // leeward base
+        -0.2 + 0.3 * s
+    };
+
+    // wake plateau: points behind the widest section sit in separated flow;
+    // plateau level depends on *global* slenderness (len/width ratio)
+    let slender = shape.half[0] / shape.half[1];
+    if pos[0] > 0.3 * shape.half[0] && normal[0] > -0.3 {
+        let wake = -0.35 - 0.1 * (slender - 2.0);
+        cp = 0.5 * cp + 0.5 * wake;
+    }
+
+    // cabin interference: extra suction over the cabin (accelerated flow)
+    if on_cabin {
+        cp -= 0.25;
+    }
+
+    // smooth harmonic "turbulence" noise, deterministic per seed
+    let ph = &shape.phases;
+    cp += ph[5]
+        * ((ph[3] * pos[0] + ph[0]).sin()
+            + (ph[4] * pos[1] + ph[1]).sin() * (ph[3] * pos[2] + ph[2]).cos());
+    cp
+}
+
+impl Generator for AirflowGenerator {
+    fn task(&self) -> &'static str {
+        "air"
+    }
+
+    fn feature_dim(&self) -> usize {
+        6 // coords (3) + surface normal (3)
+    }
+
+    fn coord_dim(&self) -> usize {
+        3
+    }
+
+    fn generate(&self, index: u64, n_points: usize) -> Sample {
+        let mut rng = Rng::new(self.seed).fold(index);
+        let shape = CarShape::sample(&mut rng);
+
+        // ~82% of points on the body, rest on the cabin
+        let n_cabin = n_points / 6;
+        let n_body = n_points - n_cabin;
+
+        let mut coords = Vec::with_capacity(n_points * 3);
+        let mut feats = Vec::with_capacity(n_points * 6);
+        let mut target = Vec::with_capacity(n_points);
+
+        let mut push = |pos: [f32; 3], normal: [f32; 3], on_cabin: bool, shape: &CarShape| {
+            let cp = pressure_cp(shape, &pos, &normal, on_cabin);
+            coords.extend_from_slice(&pos);
+            feats.extend_from_slice(&pos);
+            feats.extend_from_slice(&normal);
+            target.push(cp);
+        };
+
+        for _ in 0..n_body {
+            // stratified-ish angles: uniform on the sphere then mapped
+            let theta = (rng.range(-1.0, 1.0) as f32).asin();
+            let phi = rng.range(0.0, std::f32::consts::TAU);
+            let (pos, normal) = superellipsoid_point(&shape.half, shape.power, theta, phi);
+            push(pos, normal, false, &shape);
+        }
+        for _ in 0..n_cabin {
+            let theta = rng.range(0.05, 1.45); // upper hemisphere only
+            let phi = rng.range(0.0, std::f32::consts::TAU);
+            let (mut pos, normal) =
+                superellipsoid_point(&shape.cabin_half, 2.4, theta, phi);
+            pos[0] += shape.cabin_off[0];
+            pos[2] += shape.half[2] + 0.6 * shape.cabin_half[2];
+            push(pos, normal, true, &shape);
+        }
+
+        Sample {
+            coords: Tensor::new(vec![n_points, 3], coords),
+            features: Tensor::new(vec![n_points, 6], feats),
+            target: Tensor::new(vec![n_points, 1], target),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let g = AirflowGenerator::new(0);
+        let a = g.generate(0, 512);
+        assert_eq!(a.coords.shape(), &[512, 3]);
+        assert_eq!(a.features.shape(), &[512, 6]);
+        assert_eq!(a.target.shape(), &[512, 1]);
+        assert_eq!(a.coords, g.generate(0, 512).coords);
+        assert_ne!(a.coords, g.generate(1, 512).coords);
+        assert!(a.target.all_finite());
+    }
+
+    #[test]
+    fn normals_are_unit() {
+        let g = AirflowGenerator::new(1);
+        let s = g.generate(0, 256);
+        for i in 0..256 {
+            let f = s.features.row(i);
+            let n2 = f[3] * f[3] + f[4] * f[4] + f[5] * f[5];
+            assert!((n2 - 1.0).abs() < 1e-3, "normal norm² {n2}");
+        }
+    }
+
+    #[test]
+    fn stagnation_pressure_higher_than_wake() {
+        // The front (windward, n_x < -0.8) must carry higher cp than the
+        // rear points on average — the basic physics of the surrogate.
+        let g = AirflowGenerator::new(2);
+        let s = g.generate(0, 2048);
+        let (mut front, mut nf, mut rear, mut nr) = (0.0, 0, 0.0, 0);
+        for i in 0..2048 {
+            let f = s.features.row(i);
+            let cp = s.target.row(i)[0];
+            if f[3] < -0.8 {
+                front += cp;
+                nf += 1;
+            } else if f[3] > 0.8 {
+                rear += cp;
+                nr += 1;
+            }
+        }
+        assert!(nf > 10 && nr > 10);
+        assert!(front / nf as f32 > rear / nr as f32 + 0.3);
+    }
+
+    #[test]
+    fn wake_depends_on_global_slenderness() {
+        // Two shapes differing only in length must differ in rear-side cp:
+        // the nonlocal term the dataset exists to provide.
+        let mut shape = CarShape {
+            half: [1.6, 0.9, 0.5],
+            power: 2.5,
+            cabin_half: [0.8, 0.6, 0.3],
+            cabin_off: [0.0, 0.0],
+            phases: [0.0; 6],
+        };
+        let pos = [1.0, 0.6, 0.0];
+        let normal = [0.1, 0.99, 0.0];
+        let cp_short = pressure_cp(&shape, &pos, &normal, false);
+        shape.half[0] = 2.4; // longer car, same local geometry at the point
+        let pos_long = [1.0, 0.6, 0.0];
+        let cp_long = pressure_cp(&shape, &pos_long, &normal, false);
+        assert!((cp_short - cp_long).abs() > 0.01, "{cp_short} vs {cp_long}");
+    }
+
+    #[test]
+    fn pressure_range_is_physical() {
+        let g = AirflowGenerator::new(3);
+        let s = g.generate(0, 1024);
+        // cp in a sane bluff-body range
+        assert!(s.target.min() > -4.0);
+        assert!(s.target.max() < 1.6);
+        assert!(s.target.std() > 0.1); // non-trivial field
+    }
+}

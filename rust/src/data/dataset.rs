@@ -1,0 +1,267 @@
+//! Dataset plumbing: samples, splits, normalization, and the `.bsad`
+//! binary shard format (no serde offline — a small explicit codec).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+/// One geometry sample: coordinates, per-point input features, target field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub coords: Tensor,   // (N, D)
+    pub features: Tensor, // (N, F)
+    pub target: Tensor,   // (N, 1)
+}
+
+/// Train/test split sizes (deterministic: sample index ranges).
+#[derive(Debug, Clone, Copy)]
+pub struct SplitSpec {
+    pub train: usize,
+    pub test: usize,
+}
+
+impl SplitSpec {
+    /// Paper's ShapeNet split ratio (700/189) scaled to `total`.
+    pub fn paper_ratio(total: usize) -> SplitSpec {
+        let train = total * 700 / 889;
+        SplitSpec { train, test: total - train }
+    }
+}
+
+/// Target normalization statistics computed on the training split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NormStats {
+    pub mean: f32,
+    pub std: f32,
+}
+
+impl NormStats {
+    pub fn from_targets(samples: &[Sample]) -> NormStats {
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for s in samples {
+            sum += s.target.data().iter().map(|&x| x as f64).sum::<f64>();
+            n += s.target.len();
+        }
+        let mean = (sum / n.max(1) as f64) as f32;
+        let mut var = 0.0f64;
+        for s in samples {
+            var += s
+                .target
+                .data()
+                .iter()
+                .map(|&x| ((x - mean) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let std = ((var / n.max(1) as f64) as f32).sqrt().max(1e-6);
+        NormStats { mean, std }
+    }
+
+    pub fn normalize(&self, t: &Tensor) -> Tensor {
+        let data = t.data().iter().map(|&x| (x - self.mean) / self.std).collect();
+        Tensor::new(t.shape().to_vec(), data)
+    }
+
+    pub fn denormalize(&self, t: &Tensor) -> Tensor {
+        let data = t.data().iter().map(|&x| x * self.std + self.mean).collect();
+        Tensor::new(t.shape().to_vec(), data)
+    }
+}
+
+/// An in-memory dataset (materialized from a generator or a shard file).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub task: String,
+    pub samples: Vec<Sample>,
+    pub norm: NormStats,
+}
+
+impl Dataset {
+    /// Materialize `count` samples with `n_points` each from a generator,
+    /// computing normalization on the first `split.train` samples.
+    pub fn materialize(
+        gen: &dyn super::Generator,
+        count: usize,
+        n_points: usize,
+        split: SplitSpec,
+    ) -> Dataset {
+        let samples: Vec<Sample> =
+            (0..count as u64).map(|i| gen.generate(i, n_points)).collect();
+        let norm = NormStats::from_targets(&samples[..split.train.min(samples.len())]);
+        Dataset { task: gen.task().to_string(), samples, norm }
+    }
+
+    pub fn train_test(&self, split: SplitSpec) -> (&[Sample], &[Sample]) {
+        let t = split.train.min(self.samples.len());
+        let e = (t + split.test).min(self.samples.len());
+        (&self.samples[..t], &self.samples[t..e])
+    }
+
+    // ---------------------------------------------------------------
+    // .bsad shard format:
+    //   magic "BSAD" | version u32 | task len u32 + bytes | count u32
+    //   | norm mean f32, std f32
+    //   per sample: n u32, d u32, f u32 | coords | features | target (f32 LE)
+    // ---------------------------------------------------------------
+
+    const MAGIC: &'static [u8; 4] = b"BSAD";
+    const VERSION: u32 = 1;
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&Self::VERSION.to_le_bytes())?;
+        let task = self.task.as_bytes();
+        w.write_all(&(task.len() as u32).to_le_bytes())?;
+        w.write_all(task)?;
+        w.write_all(&(self.samples.len() as u32).to_le_bytes())?;
+        w.write_all(&self.norm.mean.to_le_bytes())?;
+        w.write_all(&self.norm.std.to_le_bytes())?;
+        for s in &self.samples {
+            let n = s.coords.rows() as u32;
+            let d = s.coords.cols() as u32;
+            let f = s.features.cols() as u32;
+            w.write_all(&n.to_le_bytes())?;
+            w.write_all(&d.to_le_bytes())?;
+            w.write_all(&f.to_le_bytes())?;
+            write_f32s(&mut w, s.coords.data())?;
+            write_f32s(&mut w, s.features.data())?;
+            write_f32s(&mut w, s.target.data())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Dataset> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == Self::MAGIC, "bad magic in {}", path.display());
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == Self::VERSION, "unsupported version {version}");
+        let tlen = read_u32(&mut r)? as usize;
+        anyhow::ensure!(tlen < 256, "task name too long");
+        let mut tbuf = vec![0u8; tlen];
+        r.read_exact(&mut tbuf)?;
+        let task = String::from_utf8(tbuf)?;
+        let count = read_u32(&mut r)? as usize;
+        let mean = read_f32(&mut r)?;
+        let std = read_f32(&mut r)?;
+        let mut samples = Vec::with_capacity(count);
+        for _ in 0..count {
+            let n = read_u32(&mut r)? as usize;
+            let d = read_u32(&mut r)? as usize;
+            let f = read_u32(&mut r)? as usize;
+            anyhow::ensure!(n > 0 && n < (1 << 24) && d <= 16 && f <= 64, "corrupt header");
+            let coords = Tensor::new(vec![n, d], read_f32s(&mut r, n * d)?);
+            let features = Tensor::new(vec![n, f], read_f32s(&mut r, n * f)?);
+            let target = Tensor::new(vec![n, 1], read_f32s(&mut r, n)?);
+            samples.push(Sample { coords, features, target });
+        }
+        Ok(Dataset { task, samples, norm: NormStats { mean, std } })
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    // bulk little-endian write
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32<R: Read>(r: &mut R) -> std::io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticGenerator;
+
+    #[test]
+    fn norm_stats_standardize() {
+        let gen = SyntheticGenerator::new(0);
+        let ds = Dataset::materialize(&gen, 8, 64, SplitSpec { train: 6, test: 2 });
+        let n = ds.norm;
+        // normalizing the training targets yields ~0 mean, ~1 std
+        let mut all = Vec::new();
+        for s in &ds.samples[..6] {
+            all.extend_from_slice(n.normalize(&s.target).data());
+        }
+        let mean: f32 = all.iter().sum::<f32>() / all.len() as f32;
+        let var: f32 = all.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / all.len() as f32;
+        assert!(mean.abs() < 1e-3, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-2, "var {var}");
+    }
+
+    #[test]
+    fn normalize_roundtrip() {
+        let n = NormStats { mean: 3.0, std: 2.0 };
+        let t = Tensor::new(vec![4], vec![1., 3., 5., 7.]);
+        let back = n.denormalize(&n.normalize(&t));
+        for (a, b) in back.data().iter().zip(t.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let gen = SyntheticGenerator::new(1);
+        let ds = Dataset::materialize(&gen, 4, 32, SplitSpec { train: 3, test: 1 });
+        let dir = std::env::temp_dir().join("bsa_test_shard");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bsad");
+        ds.save(&path).unwrap();
+        let loaded = Dataset::load(&path).unwrap();
+        assert_eq!(loaded.task, "syn");
+        assert_eq!(loaded.samples.len(), 4);
+        assert_eq!(loaded.samples[2], ds.samples[2]);
+        assert_eq!(loaded.norm, ds.norm);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let dir = std::env::temp_dir().join("bsa_test_shard");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bsad");
+        std::fs::write(&path, b"NOPE----").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn paper_ratio_split() {
+        let s = SplitSpec::paper_ratio(889);
+        assert_eq!(s.train, 700);
+        assert_eq!(s.test, 189);
+    }
+
+    #[test]
+    fn train_test_slices() {
+        let gen = SyntheticGenerator::new(2);
+        let ds = Dataset::materialize(&gen, 10, 16, SplitSpec { train: 7, test: 3 });
+        let (tr, te) = ds.train_test(SplitSpec { train: 7, test: 3 });
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+    }
+}

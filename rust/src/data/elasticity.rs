@@ -1,0 +1,156 @@
+//! Procedural Elasticity surrogate: plate-with-hole stress fields.
+//!
+//! Replaces the Elasticity benchmark (Li et al. 2021: hyperelastic unit
+//! cells with a void, 972 nodes each). Each sample is a unit plate with a
+//! randomly placed/sized circular hole under uniaxial tension along x; the
+//! target is the von Mises stress from the **Kirsch solution** — the
+//! classical analytic stress-concentration field around a circular hole:
+//!
+//!   σ_rr = σ/2 (1 − a²/r²) + σ/2 (1 − 4a²/r² + 3a⁴/r⁴) cos 2θ
+//!   σ_θθ = σ/2 (1 + a²/r²) − σ/2 (1 + 3a⁴/r⁴) cos 2θ
+//!   σ_rθ = −σ/2 (1 + 2a²/r² − 3a⁴/r⁴) sin 2θ
+//!
+//! Same structure as the paper's task: a scalar field with a local
+//! singularity (stress concentration, factor 3 at the hole equator) plus
+//! smooth far-field behaviour; sequence length 972 in the paper, padded to
+//! 1024 by the ball tree here.
+
+use crate::prng::Rng;
+use crate::tensor::Tensor;
+
+use super::dataset::Sample;
+use super::Generator;
+
+/// Elasticity dataset generator ("ela" task; 4 features/point).
+pub struct ElasticityGenerator {
+    seed: u64,
+}
+
+impl ElasticityGenerator {
+    pub fn new(seed: u64) -> Self {
+        ElasticityGenerator { seed }
+    }
+}
+
+/// Kirsch-solution stress components at polar (r, theta) for hole radius a
+/// under unit uniaxial far-field tension along x.
+pub fn kirsch_stress(a: f32, r: f32, theta: f32) -> (f32, f32, f32) {
+    let q = (a / r).powi(2);
+    let q2 = q * q; // a^4 / r^4
+    let c2 = (2.0 * theta).cos();
+    let s2 = (2.0 * theta).sin();
+    let srr = 0.5 * (1.0 - q) + 0.5 * (1.0 - 4.0 * q + 3.0 * q2) * c2;
+    let stt = 0.5 * (1.0 + q) - 0.5 * (1.0 + 3.0 * q2) * c2;
+    let srt = -0.5 * (1.0 + 2.0 * q - 3.0 * q2) * s2;
+    (srr, stt, srt)
+}
+
+/// Plane-stress von Mises magnitude from polar components.
+pub fn von_mises(srr: f32, stt: f32, srt: f32) -> f32 {
+    (srr * srr - srr * stt + stt * stt + 3.0 * srt * srt).max(0.0).sqrt()
+}
+
+impl Generator for ElasticityGenerator {
+    fn task(&self) -> &'static str {
+        "ela"
+    }
+
+    fn feature_dim(&self) -> usize {
+        4 // coords (2) + distance-to-hole (1) + hole radius (1)
+    }
+
+    fn coord_dim(&self) -> usize {
+        2
+    }
+
+    fn generate(&self, index: u64, n_points: usize) -> Sample {
+        let mut rng = Rng::new(self.seed ^ 0xE1A5).fold(index);
+        // hole well inside the unit cell [-1, 1]^2
+        let a = rng.range(0.15, 0.35);
+        let cx = rng.range(-0.3, 0.3);
+        let cy = rng.range(-0.3, 0.3);
+
+        let mut coords = Vec::with_capacity(n_points * 2);
+        let mut feats = Vec::with_capacity(n_points * 4);
+        let mut target = Vec::with_capacity(n_points);
+
+        let mut placed = 0;
+        while placed < n_points {
+            let x = rng.range(-1.0, 1.0);
+            let y = rng.range(-1.0, 1.0);
+            let dx = x - cx;
+            let dy = y - cy;
+            let r = (dx * dx + dy * dy).sqrt();
+            if r < a {
+                continue; // inside the void
+            }
+            let theta = dy.atan2(dx);
+            let (srr, stt, srt) = kirsch_stress(a, r, theta);
+            let vm = von_mises(srr, stt, srt);
+            coords.extend_from_slice(&[x, y]);
+            feats.extend_from_slice(&[x, y, r - a, a]);
+            target.push(vm);
+            placed += 1;
+        }
+
+        Sample {
+            coords: Tensor::new(vec![n_points, 2], coords),
+            features: Tensor::new(vec![n_points, 4], feats),
+            target: Tensor::new(vec![n_points, 1], target),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kirsch_far_field_is_uniaxial() {
+        // r >> a: stress tends to the uniaxial far field (vm -> 1).
+        let (srr, stt, srt) = kirsch_stress(0.2, 50.0, 0.7);
+        let vm = von_mises(srr, stt, srt);
+        assert!((vm - 1.0).abs() < 0.01, "vm {vm}");
+    }
+
+    #[test]
+    fn kirsch_concentration_factor_three() {
+        // At the hole boundary, theta = pi/2: sigma_tt = 3 (classical SCF).
+        let (srr, stt, _) = kirsch_stress(0.2, 0.2, std::f32::consts::FRAC_PI_2);
+        assert!(srr.abs() < 1e-5, "srr {srr}");
+        assert!((stt - 3.0).abs() < 1e-4, "stt {stt}");
+        // At theta = 0 the boundary is compressive: sigma_tt = -1.
+        let (_, stt0, _) = kirsch_stress(0.2, 0.2, 0.0);
+        assert!((stt0 + 1.0).abs() < 1e-4, "stt0 {stt0}");
+    }
+
+    #[test]
+    fn samples_avoid_the_hole() {
+        let g = ElasticityGenerator::new(0);
+        let s = g.generate(0, 972);
+        // hole parameters are embedded in the features: dist > 0 everywhere
+        for i in 0..972 {
+            assert!(s.features.row(i)[2] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        let g = ElasticityGenerator::new(1);
+        let a = g.generate(5, 972);
+        assert_eq!(a.coords.shape(), &[972, 2]);
+        assert_eq!(a.features.shape(), &[972, 4]);
+        assert_eq!(a.target.shape(), &[972, 1]);
+        assert_eq!(a.target, g.generate(5, 972).target);
+        assert!(a.target.all_finite());
+    }
+
+    #[test]
+    fn stress_field_has_concentration() {
+        let g = ElasticityGenerator::new(2);
+        let s = g.generate(0, 2048);
+        // max stress should exceed the far field substantially
+        assert!(s.target.max() > 1.8, "max {}", s.target.max());
+        assert!(s.target.min() >= 0.0);
+    }
+}

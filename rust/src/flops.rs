@@ -1,0 +1,253 @@
+//! Analytic FLOPs model — regenerates Table 3's GFLOPS column.
+//!
+//! The paper measures FLOPs with the DeepSpeed profiler; for the
+//! matmul-dominated graphs here, profiler counts equal the closed-form
+//! matmul counts (2·M·N·K per GEMM) plus small softmax/norm terms, so we
+//! compute them directly. Counting the paper's architecture (dim 64,
+//! 18 blocks, Table 4 sparse parameters) at N=4096 reproduces the paper's
+//! ordering and magnitudes:
+//!
+//!   Full ≈ 87 GFLOPs, BSA ≈ 26-28, BSA w/o group selection slightly
+//!   higher, BSA w/ group compression lower, Erwin lowest.
+
+use crate::config::ModelConfig;
+
+/// FLOPs breakdown for one forward pass of a full model.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Flops {
+    pub projections: f64,
+    pub attention: f64,
+    pub mlp: f64,
+    pub other: f64,
+}
+
+impl Flops {
+    pub fn total(&self) -> f64 {
+        self.projections + self.attention + self.mlp + self.other
+    }
+
+    pub fn gflops(&self) -> f64 {
+        self.total() / 1e9
+    }
+}
+
+/// Softmax cost per score element (exp, sub, div, max/sum shares).
+const SOFTMAX_COST: f64 = 5.0;
+
+/// QKV+output projections and gate for one block.
+fn proj_flops(n: f64, c: f64, heads: f64, gated: bool) -> f64 {
+    let base = 4.0 * 2.0 * n * c * c; // wq, wk, wv, wo
+    if gated {
+        base + 2.0 * n * c * 3.0 * heads
+    } else {
+        base
+    }
+}
+
+/// SwiGLU MLP for one block (3 GEMMs at expansion `ratio`).
+fn mlp_flops(n: f64, c: f64, ratio: f64) -> f64 {
+    3.0 * 2.0 * n * c * (ratio * c)
+}
+
+/// Dense attention core on Nq queries and Nk keys at width c.
+fn attn_core(nq: f64, nk: f64, c: f64) -> f64 {
+    // QK^T + PV GEMMs + softmax over the score matrix
+    2.0 * nq * nk * c * 2.0 + SOFTMAX_COST * nq * nk
+}
+
+/// Attention core of one BSA layer (the three branches), per block.
+fn bsa_attention_core(cfg: &ModelConfig, variant: &str) -> f64 {
+    let n = cfg.seq_len as f64;
+    let c = cfg.dim as f64;
+    let m = cfg.ball_size.min(cfg.seq_len) as f64;
+    let l = cfg.cmp_block as f64;
+    let k = cfg.top_k as f64;
+    let g = match variant {
+        "bsa_nogs" => 1.0,
+        _ => cfg.group_size as f64,
+    };
+    let nb = n / l; // number of compressed blocks
+
+    // ball branch: per-ball dense attention
+    let ball = attn_core(n, m, c);
+
+    // compression pooling (mean): one add per element; MLP variant adds GEMMs
+    let pool = if variant == "bsa_gc" {
+        // MLP phi on K, V and Q (per head, hidden = 2*dh)
+        let dh = c / cfg.num_heads as f64;
+        let hidden = 2.0 * dh;
+        let per_tensor = 2.0 * nb * (l * dh) * hidden + 2.0 * nb * hidden * dh;
+        3.0 * cfg.num_heads as f64 * per_tensor
+    } else {
+        2.0 * n * c // mean pooling of K and V
+    };
+
+    // compressed attention
+    let cmp = if variant == "bsa_gc" {
+        attn_core(nb, nb, c) // pooled queries
+    } else {
+        attn_core(n, nb, c)
+    };
+
+    // selection: importance scores on pooled queries + top-k + gather attn
+    let scores = 2.0 * (n / g) * nb * c;
+    let slc = attn_core(n, k * l, c);
+
+    ball + pool + cmp + scores + slc
+}
+
+/// Forward FLOPs of a whole model variant at the given config.
+pub fn model_flops(variant: &str, cfg: &ModelConfig) -> Flops {
+    let n = cfg.seq_len as f64;
+    let c = cfg.dim as f64;
+    let blocks = cfg.num_blocks as f64;
+    let heads = cfg.num_heads as f64;
+    let ratio = 4.0;
+
+    match variant {
+        "full" => Flops {
+            projections: blocks * proj_flops(n, c, heads, false),
+            attention: blocks * attn_core(n, n, c),
+            mlp: blocks * mlp_flops(n, c, ratio),
+            other: 2.0 * n * c * 8.0, // embed + head + norms (small)
+        },
+        "erwin" => {
+            // BTA U-Net: 2 encoder levels (pool 4), bottleneck, 2 decoders.
+            let m = 128.0_f64.min(n);
+            let mut attn = 0.0;
+            let mut proj = 0.0;
+            let mut mlp = 0.0;
+            let mut nl = n;
+            for _ in 0..2 {
+                attn += attn_core(nl, m.min(nl), c);
+                proj += proj_flops(nl, c, heads, false);
+                mlp += mlp_flops(nl, c, ratio);
+                nl /= 4.0;
+            }
+            attn += attn_core(nl, m.min(nl), c);
+            proj += proj_flops(nl, c, heads, false);
+            mlp += mlp_flops(nl, c, ratio);
+            for _ in 0..2 {
+                nl *= 4.0;
+                attn += attn_core(nl, m.min(nl), c);
+                proj += proj_flops(nl, c, heads, false);
+                mlp += mlp_flops(nl, c, ratio);
+            }
+            Flops { projections: proj, attention: attn, mlp, other: 2.0 * n * c * 8.0 }
+        }
+        "pointnet" => {
+            // per-point MLPs only
+            let widths = [6.0, 64.0, 128.0, 2.0 * c, 2.0 * c * 2.0, c, 1.0];
+            let mut f = 0.0;
+            for w in widths.windows(2) {
+                f += 2.0 * n * w[0] * w[1];
+            }
+            Flops { projections: 0.0, attention: 0.0, mlp: f, other: 0.0 }
+        }
+        v @ ("bsa" | "bsa_nogs" | "bsa_gc") => Flops {
+            projections: blocks * proj_flops(n, c, heads, true),
+            attention: blocks * bsa_attention_core(cfg, v),
+            mlp: blocks * mlp_flops(n, c, ratio),
+            other: 2.0 * n * c * 8.0,
+        },
+        other => panic!("unknown variant {other}"),
+    }
+}
+
+/// Single-attention-layer FLOPs (used by the F3/F4 scaling benches).
+pub fn attn_layer_flops(kind: &str, n: usize, cfg: &ModelConfig) -> f64 {
+    let mut c = cfg.clone();
+    c.seq_len = n;
+    c.ball_size = cfg.ball_size.min(n);
+    let nf = n as f64;
+    let cf = cfg.dim as f64;
+    let proj = proj_flops(nf, cf, cfg.num_heads as f64, kind.starts_with("bsa"));
+    let core = match kind {
+        "full" => attn_core(nf, nf, cf),
+        "bta" => attn_core(nf, c.ball_size as f64, cf),
+        k => bsa_attention_core(&c, k),
+    };
+    proj + core
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_cfg() -> ModelConfig {
+        ModelConfig { num_blocks: 18, seq_len: 4096, ..Default::default() }
+    }
+
+    #[test]
+    fn full_attention_matches_paper_magnitude() {
+        // Paper Table 3: Full Attention = 87.08 GFLOPs at N=4096.
+        let f = model_flops("full", &paper_cfg());
+        let g = f.gflops();
+        assert!((80.0..95.0).contains(&g), "full = {g} GFLOPs");
+    }
+
+    #[test]
+    fn bsa_matches_paper_magnitude() {
+        // Paper Table 3: BSA = 27.91 GFLOPs.
+        let g = model_flops("bsa", &paper_cfg()).gflops();
+        assert!((20.0..35.0).contains(&g), "bsa = {g} GFLOPs");
+    }
+
+    #[test]
+    fn paper_ordering_holds() {
+        // Erwin < BSA+gc < BSA <= BSA-nogs << Full (Table 3 shape).
+        let cfg = paper_cfg();
+        let erwin = model_flops("erwin", &cfg).gflops();
+        let gc = model_flops("bsa_gc", &cfg).gflops();
+        let bsa = model_flops("bsa", &cfg).gflops();
+        let nogs = model_flops("bsa_nogs", &cfg).gflops();
+        let full = model_flops("full", &cfg).gflops();
+        assert!(erwin < gc, "erwin {erwin} < gc {gc}");
+        assert!(gc < bsa, "gc {gc} < bsa {bsa}");
+        assert!(bsa <= nogs, "bsa {bsa} <= nogs {nogs}");
+        assert!(nogs < full, "nogs {nogs} < full {full}");
+    }
+
+    #[test]
+    fn bsa_grows_slower_than_full() {
+        // Quadrupling N ~16x's full attention. BSA keeps one quadratic
+        // term (the compressed branch, N^2/l) but its ball/selection
+        // branches are linear, so its growth ratio must be visibly lower
+        // and its absolute count ~l-fold smaller at scale.
+        let mut small = paper_cfg();
+        small.seq_len = 4096;
+        let mut large = paper_cfg();
+        large.seq_len = 16384;
+        let r_full = model_flops("full", &large).attention / model_flops("full", &small).attention;
+        let r_bsa = model_flops("bsa", &large).attention / model_flops("bsa", &small).attention;
+        assert!(r_full > 14.0, "full ratio {r_full}");
+        assert!(r_bsa < 13.0, "bsa ratio {r_bsa}");
+        let abs_ratio =
+            model_flops("full", &large).attention / model_flops("bsa", &large).attention;
+        assert!(abs_ratio > 5.0, "full/bsa at 16384 = {abs_ratio}");
+    }
+
+    #[test]
+    fn attn_layer_scaling_crossover() {
+        // Per-layer: full is cheaper at tiny N, BSA wins at large N (Fig. 3).
+        let cfg = ModelConfig::default();
+        let f256 = attn_layer_flops("full", 256, &cfg);
+        let b256 = attn_layer_flops("bsa", 256, &cfg);
+        let f64k = attn_layer_flops("full", 65536, &cfg);
+        let b64k = attn_layer_flops("bsa", 65536, &cfg);
+        assert!(f256 < b256, "full cheaper at 256: {f256} vs {b256}");
+        assert!(b64k * 4.0 < f64k, "bsa >4x cheaper at 65536: {b64k} vs {f64k}");
+    }
+
+    #[test]
+    fn pointnet_is_linear() {
+        let cfg = ModelConfig::default();
+        let mut a = cfg.clone();
+        a.seq_len = 1024;
+        let mut b = cfg.clone();
+        b.seq_len = 4096;
+        let ra = model_flops("pointnet", &a).total();
+        let rb = model_flops("pointnet", &b).total();
+        assert!((rb / ra - 4.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,38 @@
+//! # BSA — Ball Sparse Attention for Large-scale Geometries
+//!
+//! Rust coordinator (Layer 3) of the three-layer BSA stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): ball attention,
+//!   flash attention, block compression, grouped selection attention.
+//! * **L2** — JAX model zoo (`python/compile/model.py`): the paper's
+//!   BSA transformer plus Full-Attention / Erwin-style / PointNet
+//!   baselines, AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: ball-tree geometry substrate, synthetic dataset
+//!   generators, PJRT runtime, training orchestrator, serving router with
+//!   dynamic batching, metrics, analytic FLOPs model, CLI.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once, and everything here executes the compiled HLO via the
+//! PJRT C API (`xla` crate).
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! reproduction results.
+
+pub mod balltree;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod hlostats;
+pub mod metrics;
+pub mod prng;
+pub mod proptest_lite;
+pub mod rfield;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod viz;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

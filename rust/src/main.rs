@@ -1,0 +1,313 @@
+//! `bsa` CLI — the leader entrypoint of the BSA stack.
+//!
+//! Subcommands:
+//!   train     train a model variant on a synthetic task
+//!   eval      evaluate a checkpoint on the held-out split
+//!   serve     start the TCP inference server
+//!   gen-data  materialize a dataset shard (.bsad)
+//!   balltree  inspect ball-tree statistics for a sample
+//!   flops     print the analytic FLOPs table (Table 3 GFLOPS column)
+//!   config    show the resolved configuration (Table 4)
+//!   info      list artifacts and platform info
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use bsa::cli::{render_help, Args, FlagSpec};
+use bsa::config::{table4, Document, ModelConfig, ServeConfig, TrainConfig};
+use bsa::coordinator::Trainer;
+use bsa::data::{Dataset, SplitSpec};
+use bsa::flops::model_flops;
+use bsa::metrics::Table;
+use bsa::runtime::Engine;
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
+        FlagSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
+        FlagSpec { name: "tag", help: "artifact tag (model_task_nN_bB)", takes_value: true, default: Some("bsa_air_n1024_b2") },
+        FlagSpec { name: "task", help: "dataset task: air|ela|syn", takes_value: true, default: Some("air") },
+        FlagSpec { name: "steps", help: "training steps", takes_value: true, default: None },
+        FlagSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("0") },
+        FlagSpec { name: "checkpoint", help: "checkpoint path", takes_value: true, default: None },
+        FlagSpec { name: "addr", help: "server bind address", takes_value: true, default: Some("127.0.0.1:7077") },
+        FlagSpec { name: "workers", help: "serving workers", takes_value: true, default: Some("2") },
+        FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
+        FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
+        FlagSpec { name: "out", help: "output path", takes_value: true, default: None },
+        FlagSpec { name: "n", help: "sequence length", takes_value: true, default: Some("4096") },
+        FlagSpec { name: "paper", help: "use the paper-scale config", takes_value: false, default: None },
+        FlagSpec { name: "show", help: "print resolved config", takes_value: false, default: None },
+        FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ]
+}
+
+fn main() {
+    // Unix CLI convention: die quietly on SIGPIPE (`bsa info | head`)
+    // instead of panicking on a broken-pipe write.
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = flag_specs();
+    let args = match Args::parse(&argv, &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.command.is_empty() || args.has("help") {
+        print_usage(&specs);
+        return;
+    }
+    let result = match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "balltree" => cmd_balltree(&args),
+        "flops" => cmd_flops(&args),
+        "config" => cmd_config(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_usage(&specs);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage(specs: &[FlagSpec]) {
+    println!(
+        "bsa {} — Ball Sparse Attention runtime\n\n\
+         usage: bsa <command> [flags]\n\n\
+         commands:\n  \
+         train     train a model variant on a synthetic task\n  \
+         eval      evaluate a checkpoint on the held-out split\n  \
+         serve     start the TCP inference server\n  \
+         gen-data  materialize a dataset shard (.bsad)\n  \
+         balltree  inspect ball-tree statistics\n  \
+         flops     print the analytic FLOPs table\n  \
+         config    show the resolved configuration (Table 4)\n  \
+         info      list artifacts and platform\n",
+        bsa::VERSION
+    );
+    println!("{}", render_help("<command>", "shared flags", specs));
+}
+
+fn load_doc(args: &Args) -> anyhow::Result<Document> {
+    match args.flag("config") {
+        Some(path) => Document::load(Path::new(path)),
+        None => Ok(Document::default()),
+    }
+}
+
+fn train_config(args: &Args, doc: &Document) -> anyhow::Result<TrainConfig> {
+    let mut tc = TrainConfig::from_doc(doc);
+    tc.task = args.str_flag("task", &tc.task);
+    if let Some(s) = args.flag("steps") {
+        tc.steps = s.parse()?;
+    }
+    tc.seed = args.u64_flag("seed", tc.seed)?;
+    Ok(tc)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let doc = load_doc(args)?;
+    let tc = train_config(args, &doc)?;
+    let tag = args.str_flag("tag", "");
+    let engine = Arc::new(Engine::new(Path::new(&args.str_flag("artifacts", "artifacts")))?);
+    println!("platform: {}", engine.platform());
+    println!("training {tag} on task {} for {} steps", tc.task, tc.steps);
+
+    let ckpt: Option<PathBuf> = args.flag("checkpoint").map(PathBuf::from);
+    let mut trainer = Trainer::new(engine, &tag, tc.clone())?;
+    if let Some(p) = &ckpt {
+        if p.exists() {
+            trainer.load_checkpoint(p)?;
+            println!("resumed from {} at step {}", p.display(), trainer.step);
+        }
+    }
+    trainer.run(|e| {
+        println!(
+            "step {:>6}  loss {:.6}  lr {:.2e}  {:.1} ms/step",
+            e.step, e.loss, e.lr, e.ms_per_step
+        );
+    })?;
+    let mse = trainer.evaluate()?;
+    println!("test MSE (normalized): {mse:.6}  (x100 = {:.3})", mse * 100.0);
+    if let Some(p) = &ckpt {
+        trainer.save_checkpoint(p)?;
+        println!("checkpoint saved to {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let doc = load_doc(args)?;
+    let mut tc = train_config(args, &doc)?;
+    tc.steps = 0;
+    let tag = args.str_flag("tag", "");
+    let engine = Arc::new(Engine::new(Path::new(&args.str_flag("artifacts", "artifacts")))?);
+    let mut trainer = Trainer::new(engine, &tag, tc)?;
+    if let Some(p) = args.flag("checkpoint") {
+        trainer.load_checkpoint(Path::new(p))?;
+    }
+    let mse = trainer.evaluate()?;
+    println!("test MSE (normalized): {mse:.6}  (x100 = {:.3})", mse * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let doc = load_doc(args)?;
+    let mut sc = ServeConfig::from_doc(&doc);
+    sc.addr = args.str_flag("addr", &sc.addr);
+    sc.workers = args.usize_flag("workers", sc.workers)?;
+    let tag = args.str_flag("tag", "bsa_air_n4096_b1");
+    let engine = Arc::new(Engine::new(Path::new(&args.str_flag("artifacts", "artifacts")))?);
+
+    // parameters: checkpoint if given, else init graph of a train-capable tag
+    let params = load_or_init_params(&engine, &tag, args)?;
+    let router = Arc::new(bsa::coordinator::Router::start(
+        engine,
+        &format!("fwd_{tag}"),
+        params,
+        sc.clone(),
+    )?);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    println!("serving fwd_{tag} on {} with {} workers", sc.addr, sc.workers);
+    bsa::server::serve(&sc.addr, router, stop)
+}
+
+/// Load params from --checkpoint, or run an init graph for random weights.
+fn load_or_init_params(
+    engine: &Arc<Engine>,
+    tag: &str,
+    args: &Args,
+) -> anyhow::Result<Vec<bsa::tensor::Tensor>> {
+    use bsa::runtime::literal_to_tensor;
+    if let Some(p) = args.flag("checkpoint") {
+        let ck = bsa::coordinator::checkpoint::Checkpoint::load(Path::new(p))?;
+        let fwd = engine.load(&format!("fwd_{tag}"))?;
+        let n = fwd.info.nparams;
+        anyhow::ensure!(ck.arrays.len() >= n, "checkpoint too small for {tag}");
+        return Ok(ck.arrays.into_iter().take(n).map(|(_, t)| t).collect());
+    }
+    // fall back: init graph with seed (serving random weights is still
+    // useful for smoke tests and latency benches)
+    let seed = args.u64_flag("seed", 0)? as i32;
+    let init = engine.load(&format!("init_{tag}")).or_else(|_| {
+        // fwd-only tags (e.g. n4096) borrow weights from the train-scale
+        // init of the same variant when shapes match
+        engine.load(&format!("init_{}", tag.replace("n4096_b1", "n1024_b2")))
+    })?;
+    let out = init.run(&[bsa::runtime::scalar_i32(seed)])?;
+    out.iter().map(literal_to_tensor).collect()
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let task = args.str_flag("task", "air");
+    let samples = args.usize_flag("samples", 32)?;
+    let points = args.usize_flag("points", 896)?;
+    let seed = args.u64_flag("seed", 0)?;
+    let out = args
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{task}_{samples}x{points}.bsad")));
+    let gen = bsa::data::generator_for(&task, seed)?;
+    let split = SplitSpec::paper_ratio(samples);
+    let ds = Dataset::materialize(gen.as_ref(), samples, points, split);
+    ds.save(&out)?;
+    println!(
+        "wrote {} samples x {} points ({}) norm mean={:.4} std={:.4}",
+        samples,
+        points,
+        out.display(),
+        ds.norm.mean,
+        ds.norm.std
+    );
+    Ok(())
+}
+
+fn cmd_balltree(args: &Args) -> anyhow::Result<()> {
+    let task = args.str_flag("task", "air");
+    let points = args.usize_flag("points", 3584)?;
+    let n = args.usize_flag("n", 4096)?;
+    let seed = args.u64_flag("seed", 0)?;
+    let gen = bsa::data::generator_for(&task, seed)?;
+    let sample = gen.generate(0, points);
+    let tree = bsa::balltree::BallTree::build(&sample.coords, n, seed);
+    let mut t = Table::new(&["ball size", "#balls", "mean radius", "max radius"]);
+    for m in [32, 64, 128, 256] {
+        if n % m != 0 {
+            continue;
+        }
+        let balls = tree.balls(m);
+        let mean = balls.iter().map(|b| b.radius).sum::<f32>() / balls.len() as f32;
+        let max = balls.iter().map(|b| b.radius).fold(0.0f32, f32::max);
+        t.row(&[m.to_string(), balls.len().to_string(), format!("{mean:.4}"), format!("{max:.4}")]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_flops(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_flag("n", 4096)?;
+    let mut cfg = if args.has("paper") {
+        ModelConfig::paper_scale()
+    } else {
+        ModelConfig::default()
+    };
+    cfg.seq_len = n;
+    let mut t = Table::new(&["Attention type", "GFLOPS"]);
+    for v in ["erwin", "full", "bsa", "bsa_nogs", "bsa_gc", "pointnet"] {
+        let f = model_flops(v, &cfg);
+        t.row(&[v.to_string(), format!("{:.2}", f.gflops())]);
+    }
+    println!("analytic FLOPs at N={n}, dim={}, blocks={}:", cfg.dim, cfg.num_blocks);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let doc = load_doc(args)?;
+    let mc = if args.has("paper") { ModelConfig::paper_scale() } else { ModelConfig::from_doc(&doc) };
+    mc.validate()?;
+    println!("{}", table4(&mc));
+    if args.has("show") {
+        println!("{mc:#?}");
+        println!("{:#?}", TrainConfig::from_doc(&doc));
+        println!("{:#?}", ServeConfig::from_doc(&doc));
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_flag("artifacts", "artifacts");
+    let engine = Engine::new(Path::new(&dir))?;
+    println!("platform: {}", engine.platform());
+
+    // `bsa info <graph>`: HLO instruction statistics for one artifact
+    if let Some(graph) = args.positional.first() {
+        let g = engine.manifest.get(graph)?;
+        let stats = bsa::hlostats::load(&Path::new(&dir).join(&g.file))?;
+        println!("{graph} ({}):", g.file);
+        println!("{}", stats.summary(12));
+        return Ok(());
+    }
+
+    println!("artifacts in {dir}:");
+    for name in engine.manifest.names() {
+        let g = engine.manifest.get(name)?;
+        println!(
+            "  {name:<34} kind={:?} N={} B={} params={}",
+            g.kind, g.n, g.batch, g.nparams
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,305 @@
+//! Metrics: latency histograms, throughput counters, error accumulators,
+//! and markdown table rendering for the benchmark harness.
+
+use std::time::Duration;
+
+/// Streaming scalar accumulator (count/mean/min/max + sum of squares).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { n: 0, sum: 0.0, sumsq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sumsq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// MSE / RMSE accumulator over prediction-target pairs.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorStats {
+    n: u64,
+    sq_sum: f64,
+    abs_sum: f64,
+}
+
+impl ErrorStats {
+    pub fn push_pair(&mut self, pred: f32, target: f32) {
+        let d = (pred - target) as f64;
+        self.n += 1;
+        self.sq_sum += d * d;
+        self.abs_sum += d.abs();
+    }
+
+    pub fn push_slices(&mut self, pred: &[f32], target: &[f32]) {
+        assert_eq!(pred.len(), target.len());
+        for (p, t) in pred.iter().zip(target) {
+            self.push_pair(*p, *t);
+        }
+    }
+
+    pub fn mse(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sq_sum / self.n as f64 }
+    }
+
+    pub fn rmse(&self) -> f64 {
+        self.mse().sqrt()
+    }
+
+    pub fn mae(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.abs_sum / self.n as f64 }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram with exact percentile support
+/// for moderate sample counts (stores raw samples up to a cap, then falls
+/// back to bucket interpolation).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    samples: Vec<f64>, // microseconds
+    cap: usize,
+    overflow: Accumulator,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { samples: Vec::new(), cap: 1 << 20, overflow: Accumulator::new() }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        if self.samples.len() < self.cap {
+            self.samples.push(us);
+        } else {
+            self.overflow.push(us);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len() + self.overflow.count() as usize
+    }
+
+    /// Exact percentile over recorded samples (0.0..=100.0).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0 * (xs.len() - 1) as f64).round() as usize;
+        xs[rank.min(xs.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.percentile_us(100.0),
+        )
+    }
+}
+
+/// Simple wall-clock throughput meter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: std::time::Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: std::time::Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 { 0.0 } else { self.items as f64 / dt }
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+}
+
+/// Markdown table builder used by the bench harness to print paper tables.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_stats() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert!((a.var() - 1.25).abs() < 1e-9);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn error_stats_mse_rmse() {
+        let mut e = ErrorStats::default();
+        e.push_slices(&[1.0, 2.0], &[0.0, 0.0]);
+        assert!((e.mse() - 2.5).abs() < 1e-9);
+        assert!((e.rmse() - 2.5f64.sqrt()).abs() < 1e-9);
+        assert!((e.mae() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.percentile_us(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile_us(99.0) - 99.0).abs() <= 1.0);
+        assert!((h.mean_us() - 50.5).abs() < 1e-9);
+        assert!(h.summary().contains("n=100"));
+    }
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new(&["Model", "MSE"]);
+        t.row(&["BSA".into(), "14.31".into()]);
+        t.row(&["Full Attention".into(), "13.29".into()]);
+        let s = t.render();
+        assert!(s.contains("| Model"));
+        assert!(s.contains("| BSA"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

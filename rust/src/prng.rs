@@ -1,0 +1,155 @@
+//! Deterministic PRNG (SplitMix64 + xoshiro256**) used across the crate.
+//!
+//! No external `rand` crate is vendored offline, and determinism across
+//! the dataset generators, the serving load generator, and the property
+//! tests matters more than cryptographic quality — so this is a small,
+//! fully specified generator with stable streams per seed.
+
+/// xoshiro256** by Blackman & Vigna; seeded through SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator with a deterministic state derived from `seed`.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 to expand the seed into four non-zero words.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = move || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (e.g. per-sample, per-worker).
+    pub fn fold(&self, stream: u64) -> Self {
+        let mut base = Rng::new(stream ^ 0xA076_1D64_78BD_642F);
+        base.s[0] ^= self.s[0];
+        base.s[1] ^= self.s[1];
+        base.s[2] ^= self.s[2];
+        base.s[3] ^= self.s[3];
+        // avoid the all-zero state
+        if base.s == [0, 0, 0, 0] {
+            base.s[0] = 1;
+        }
+        base
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        // 24 high bits -> [0, 1) with full float precision
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-9);
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        r * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = (0..8).map({ let mut r = Rng::new(42); move |_| r.next_u64() }).collect();
+        let b: Vec<u64> = (0..8).map({ let mut r = Rng::new(42); move |_| r.next_u64() }).collect();
+        assert_eq!(a, b);
+        let c: Vec<u64> = (0..8).map({ let mut r = Rng::new(43); move |_| r.next_u64() }).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments_sane() {
+        let mut r = Rng::new(3);
+        let xs = r.normals(20_000);
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn fold_streams_are_independent() {
+        let base = Rng::new(1);
+        let mut a = base.fold(0);
+        let mut b = base.fold(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(11);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+}

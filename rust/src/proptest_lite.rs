@@ -1,0 +1,128 @@
+//! Minimal property-testing harness (proptest is not vendored offline).
+//!
+//! Provides deterministic random case generation on top of
+//! [`Rng`](crate::prng::Rng) plus a `forall` runner that reports the
+//! failing case's seed so it can be replayed:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla_extension rpath)
+//! use bsa::proptest_lite::{forall, Gen};
+//! forall(100, |g| {
+//!     let xs = g.vec_f32(1..50, -10.0..10.0);
+//!     let sum: f32 = xs.iter().sum();
+//!     assert!(sum.is_finite());
+//! });
+//! ```
+
+use crate::prng::Rng;
+use std::ops::Range;
+
+/// Per-case generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end, "empty range");
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    /// Power of two in [lo, hi] (inclusive), both powers of two.
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_exp = lo.trailing_zeros();
+        let hi_exp = hi.trailing_zeros();
+        1 << (lo_exp + self.rng.below((hi_exp - lo_exp + 1) as usize) as u32)
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    pub fn normals(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normals(n)
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases; panics with the failing case id on error.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u64, body: F) {
+    forall_seeded(0xB5A_5EED, cases, body)
+}
+
+/// `forall` with an explicit base seed (use to replay a failure).
+pub fn forall_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    seed: u64,
+    cases: u64,
+    body: F,
+) {
+    for case in 0..cases {
+        let mut g = Gen { rng: Rng::new(seed).fold(case), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        forall(50, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let result = std::panic::catch_unwind(|| {
+            forall(100, |g| {
+                let x = g.usize_in(0..100);
+                assert!(x != 42 || g.case < 3, "boom");
+            });
+        });
+        // may or may not hit 42 in 100 cases; just ensure no false panic fmt
+        let _ = result;
+    }
+
+    #[test]
+    fn pow2_bounds() {
+        forall(100, |g| {
+            let p = g.pow2_in(4, 64);
+            assert!(p.is_power_of_two());
+            assert!((4..=64).contains(&p));
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut a = Gen { rng: Rng::new(1).fold(5), case: 5 };
+        let mut b = Gen { rng: Rng::new(1).fold(5), case: 5 };
+        assert_eq!(a.usize_in(0..1000), b.usize_in(0..1000));
+    }
+}

@@ -1,0 +1,301 @@
+//! Parser for `artifacts/manifest.txt`, the contract between aot.py and
+//! the rust runtime: every lowered graph's file, role, sparse-attention
+//! parameters, and exact input/output shapes in flattening order.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of a graph I/O slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            other => Err(anyhow::anyhow!("unknown dtype {other}")),
+        }
+    }
+}
+
+/// One input or output slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub index: usize,
+    pub dtype: DType,
+    /// Empty for scalars.
+    pub dims: Vec<usize>,
+    pub name: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Role of a graph in the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    Init,
+    Fwd,
+    Train,
+    Attn,
+}
+
+impl GraphKind {
+    fn parse(s: &str) -> anyhow::Result<GraphKind> {
+        match s {
+            "init" => Ok(GraphKind::Init),
+            "fwd" => Ok(GraphKind::Fwd),
+            "train" => Ok(GraphKind::Train),
+            "attn" => Ok(GraphKind::Attn),
+            other => Err(anyhow::anyhow!("unknown graph kind {other}")),
+        }
+    }
+}
+
+/// Everything the runtime needs to know about one lowered graph.
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: GraphKind,
+    pub tag: String,
+    pub n: usize,
+    pub batch: usize,
+    pub nparams: usize,
+    pub ball_size: usize,
+    pub cmp_block: usize,
+    pub group_size: usize,
+    pub top_k: usize,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The parsed manifest: graph name -> info.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    graphs: BTreeMap<String, GraphInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let mut graphs = BTreeMap::new();
+        let mut cur: Option<GraphInfo> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[graph ") {
+                if let Some(g) = cur.take() {
+                    graphs.insert(g.name.clone(), g);
+                }
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: bad graph header", lineno + 1))?;
+                cur = Some(GraphInfo {
+                    name: name.to_string(),
+                    file: String::new(),
+                    kind: GraphKind::Fwd,
+                    tag: String::new(),
+                    n: 0,
+                    batch: 0,
+                    nparams: 0,
+                    ball_size: 0,
+                    cmp_block: 0,
+                    group_size: 0,
+                    top_k: 0,
+                    in_features: 0,
+                    out_features: 0,
+                    inputs: vec![],
+                    outputs: vec![],
+                });
+                continue;
+            }
+            let g = cur
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("line {}: key outside [graph]", lineno + 1))?;
+            let mut parts = line.splitn(2, ' ');
+            let key = parts.next().unwrap_or_default();
+            let rest = parts.next().unwrap_or_default().trim();
+            match key {
+                "file" => g.file = rest.to_string(),
+                "kind" => g.kind = GraphKind::parse(rest)?,
+                "tag" => g.tag = rest.to_string(),
+                "n" => g.n = rest.parse()?,
+                "batch" => g.batch = rest.parse()?,
+                "nparams" => g.nparams = rest.parse()?,
+                "ball_size" => g.ball_size = rest.parse()?,
+                "cmp_block" => g.cmp_block = rest.parse()?,
+                "group_size" => g.group_size = rest.parse()?,
+                "top_k" => g.top_k = rest.parse()?,
+                "in_features" => g.in_features = rest.parse()?,
+                "out_features" => g.out_features = rest.parse()?,
+                "input" | "output" => {
+                    let spec = parse_io(rest)
+                        .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+                    if key == "input" {
+                        g.inputs.push(spec);
+                    } else {
+                        g.outputs.push(spec);
+                    }
+                }
+                other => anyhow::bail!("line {}: unknown manifest key {other:?}", lineno + 1),
+            }
+        }
+        if let Some(g) = cur.take() {
+            graphs.insert(g.name.clone(), g);
+        }
+        Ok(Manifest { graphs })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&GraphInfo> {
+        self.graphs.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "graph {name:?} not in manifest (have: {:?}); re-run `make artifacts` \
+                 with the right suite",
+                self.graphs.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.graphs.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+}
+
+/// Parse `"<idx> <dtype> <dims|scalar> <name>"`.
+fn parse_io(s: &str) -> anyhow::Result<IoSpec> {
+    let mut it = s.split_whitespace();
+    let index: usize = it
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("missing index"))?
+        .parse()?;
+    let dtype = DType::parse(it.next().ok_or_else(|| anyhow::anyhow!("missing dtype"))?)?;
+    let dims_s = it.next().ok_or_else(|| anyhow::anyhow!("missing dims"))?;
+    let dims = if dims_s == "scalar" {
+        vec![]
+    } else {
+        dims_s
+            .split(',')
+            .map(|d| d.parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()?
+    };
+    let name = it.next().unwrap_or("unnamed").to_string();
+    Ok(IoSpec { index, dtype, dims, name })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# bsa artifact manifest v1
+[graph fwd_tiny]
+file fwd_tiny.hlo.txt
+kind fwd
+tag tiny
+n 256
+batch 1
+nparams 2
+ball_size 64
+cmp_block 8
+group_size 8
+top_k 4
+in_features 6
+out_features 1
+input 0 f32 6,32 embed_w
+input 1 f32 32 embed_b
+input 2 f32 1,256,6 x
+output 0 f32 1,256,1 pred
+
+[graph init_tiny]
+file init_tiny.hlo.txt
+kind init
+tag tiny
+n 256
+batch 1
+nparams 2
+ball_size 64
+cmp_block 8
+group_size 8
+top_k 4
+in_features 6
+out_features 1
+input 0 i32 scalar seed
+output 0 f32 6,32 embed_w
+output 1 f32 32 embed_b
+"#;
+
+    #[test]
+    fn parses_graphs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let g = m.get("fwd_tiny").unwrap();
+        assert_eq!(g.kind, GraphKind::Fwd);
+        assert_eq!(g.n, 256);
+        assert_eq!(g.inputs.len(), 3);
+        assert_eq!(g.inputs[2].dims, vec![1, 256, 6]);
+        assert_eq!(g.inputs[2].name, "x");
+        assert_eq!(g.outputs[0].elements(), 256);
+        let init = m.get("init_tiny").unwrap();
+        assert_eq!(init.kind, GraphKind::Init);
+        assert_eq!(init.inputs[0].dtype, DType::I32);
+        assert!(init.inputs[0].dims.is_empty());
+    }
+
+    #[test]
+    fn missing_graph_error_is_actionable() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("input 0 f32 1 x\n").is_err()); // outside graph
+        assert!(Manifest::parse("[graph g]\nkind whatever\n").is_err());
+        assert!(Manifest::parse("[graph g]\nwat 3\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration: parse the checked-out artifacts manifest when built.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(!m.is_empty());
+            for name in m.names() {
+                let g = m.get(name).unwrap();
+                assert!(!g.file.is_empty());
+                assert!(!g.inputs.is_empty());
+                assert!(!g.outputs.is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (PJRT C API): one CPU client per process, an
+//! executable cache keyed by graph name, and typed conversions between the
+//! host [`Tensor`](crate::tensor::Tensor) type and `xla::Literal`s.
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see aot.py docstring and /opt/xla-example).
+
+pub mod manifest;
+
+pub use manifest::{DType, GraphInfo, GraphKind, IoSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::tensor::Tensor;
+
+/// A loaded, compiled graph plus its manifest entry.
+pub struct Executable {
+    pub info: GraphInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Process-wide execute lock.
+///
+/// The TFRT CPU PJRT client shares one intra-op thread pool sized by the
+/// host's core count; on small hosts (this testbed has a single core)
+/// two concurrent `Execute` calls deadlock — one call's completion waits
+/// on pool progress that the other call is blocking. All executions are
+/// therefore serialized here; serving workers still overlap their
+/// pre/post-processing (ball-tree build, permutation, framing) with the
+/// running computation.
+static EXECUTE_LOCK: Mutex<()> = Mutex::new(());
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output literals
+    /// (the lowered graphs always return a tuple — it is decomposed here).
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_borrowed(&refs)
+    }
+
+    /// Execute with borrowed literal inputs (no copies; the hot path).
+    pub fn run_borrowed(&self, inputs: &[&xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.info.inputs.len(),
+            "graph {} expects {} inputs, got {}",
+            self.info.name,
+            self.info.inputs.len(),
+            inputs.len()
+        );
+        let result = {
+            let _guard = EXECUTE_LOCK.lock().unwrap();
+            self.exe
+                .execute::<&xla::Literal>(inputs)
+                .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.info.name))?
+        };
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download {}: {e}", self.info.name))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e}", self.info.name))?;
+        anyhow::ensure!(
+            outs.len() == self.info.outputs.len(),
+            "graph {} returned {} outputs, manifest says {}",
+            self.info.name,
+            outs.len(),
+            self.info.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Execute with host tensors for the trailing inputs and borrowed
+    /// literal state for the leading ones (fwd graphs: params + x).
+    /// State literals are NOT copied (perf: the first implementation
+    /// deep-cloned ~5 MB of parameters per call — EXPERIMENTS.md §Perf).
+    pub fn run_with_tensors(
+        &self,
+        state: &[xla::Literal],
+        tensors: &[&Tensor],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let extra: Vec<xla::Literal> = tensors
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_, _>>()?;
+        let inputs: Vec<&xla::Literal> = state.iter().chain(extra.iter()).collect();
+        self.run_borrowed(&inputs)
+    }
+}
+
+// SAFETY: PJRT clients and loaded executables are documented as
+// thread-safe in the PJRT C API (executions may be issued from multiple
+// threads; the runtime synchronizes internally). The wrapper types hold
+// raw pointers, which is the only reason the compiler cannot derive
+// Send/Sync. The serving worker pool relies on this.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// Process-wide engine: PJRT client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+// SAFETY: see the note on `Executable`; the client pointer is thread-safe
+// and the cache is mutex-guarded.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (`artifacts/` by
+    /// default; must contain `manifest.txt` from `make artifacts`).
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Resolve the default artifacts directory (env override, then ./artifacts).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("BSA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) a compiled graph by manifest name.
+    pub fn load(&self, name: &str) -> anyhow::Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.get(name)?.clone();
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = {
+            // serialize with executions (see EXECUTE_LOCK)
+            let _guard = EXECUTE_LOCK.lock().unwrap();
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?
+        };
+        let entry = Arc::new(Executable { info, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Number of compiled graphs currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal <-> tensor conversions
+// ---------------------------------------------------------------------------
+
+/// Host tensor -> rank-N f32 literal.
+pub fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let flat = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        return Ok(flat.reshape(&[]).map_err(|e| anyhow::anyhow!("reshape scalar: {e}"))?);
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+}
+
+/// Literal -> host tensor (f32; converts ints if needed).
+pub fn literal_to_tensor(l: &xla::Literal) -> anyhow::Result<Tensor> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e}"))?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// f32 scalar literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 scalar literal.
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Deep-copy a literal (the xla crate exposes no Clone; round-trip bytes).
+pub fn clone_literal(l: &xla::Literal) -> anyhow::Result<xla::Literal> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("clone shape: {e}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match l.ty().map_err(|e| anyhow::anyhow!("clone ty: {e}"))? {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+            Ok(xla::Literal::vec1(&v)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("{e}"))?)
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+            Ok(xla::Literal::vec1(&v)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("{e}"))?)
+        }
+        other => Err(anyhow::anyhow!("clone: unsupported element type {other:?}")),
+    }
+}
+
+/// Extract the f32 scalar value of a literal.
+pub fn literal_scalar_f32(l: &xla::Literal) -> anyhow::Result<f32> {
+    l.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar extract: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let l = scalar_f32(2.5);
+        assert_eq!(literal_scalar_f32(&l).unwrap(), 2.5);
+        let i = scalar_i32(7);
+        assert_eq!(i.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn clone_literal_independent() {
+        let t = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let c = clone_literal(&l).unwrap();
+        assert_eq!(literal_to_tensor(&c).unwrap(), t);
+    }
+}

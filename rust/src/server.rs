@@ -1,0 +1,212 @@
+//! TCP serving front-end: a length-prefixed binary frame protocol over
+//! the [`Router`](crate::coordinator::Router) (no HTTP/JSON stack is
+//! vendored offline; the protocol is documented here and implemented for
+//! both server and client).
+//!
+//! Frame layout (little-endian):
+//!   request:  magic "BSRQ" | n u32 | d u32 | f u32 | coords n*d f32 | feats n*f f32
+//!   response: magic "BSRS" | status u32 (0 = ok) | n u32 | o u32 | preds n*o f32
+//!             on error: status 1 | msg_len u32 | msg bytes
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::Router;
+use crate::tensor::Tensor;
+
+const REQ_MAGIC: &[u8; 4] = b"BSRQ";
+const RESP_MAGIC: &[u8; 4] = b"BSRS";
+/// Hard cap on points per request (sanity bound for the wire format).
+const MAX_POINTS: u32 = 1 << 22;
+
+/// Serve loop: accept connections and answer prediction requests until
+/// `stop` is set. Each connection may pipeline many requests.
+pub fn serve(addr: &str, router: Arc<Router>, stop: Arc<AtomicBool>) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    log::info!("bsa server listening on {addr}");
+    let mut conns: Vec<std::thread::JoinHandle<()>> = vec![];
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug!("connection from {peer}");
+                let router = router.clone();
+                let stop = stop.clone();
+                conns.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, &router, &stop) {
+                        log::debug!("connection ended: {e}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, router: &Router, stop: &AtomicBool) -> anyhow::Result<()> {
+    stream.set_nodelay(true)?;
+    // Frame headers are read with a timeout so idle connections observe
+    // `stop` (otherwise a blocked read would wedge server shutdown while a
+    // client keeps the socket open). Once a frame has started, the rest is
+    // read blocking — frames are short and written atomically.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    loop {
+        // wait for the 4-byte magic, polling stop on timeout
+        let mut magic = [0u8; 4];
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match stream.read(&mut magic[..1]) {
+                Ok(0) => return Ok(()), // clean close
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        stream.set_read_timeout(None)?;
+        stream.read_exact(&mut magic[1..])?;
+        anyhow::ensure!(&magic == REQ_MAGIC, "bad request magic {magic:?}");
+        let result = read_request_body(&mut stream);
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+        let (coords, feats) = match result {
+            Ok(x) => x,
+            Err(e)
+                if e.downcast_ref::<std::io::Error>()
+                    .map(|io| io.kind() == std::io::ErrorKind::UnexpectedEof)
+                    == Some(true) =>
+            {
+                return Ok(()); // clean close mid-frame
+            }
+            Err(e) => return Err(e),
+        };
+        match router.infer(coords, feats) {
+            Ok(pred) => write_ok(&mut stream, &pred)?,
+            Err(e) => write_err(&mut stream, &e.to_string())?,
+        }
+    }
+}
+
+/// Read the request after its magic has been consumed.
+fn read_request_body(stream: &mut TcpStream) -> anyhow::Result<(Tensor, Tensor)> {
+    let n = read_u32(stream)?;
+    let d = read_u32(stream)?;
+    let f = read_u32(stream)?;
+    anyhow::ensure!(n > 0 && n <= MAX_POINTS, "bad point count {n}");
+    anyhow::ensure!(d <= 16 && f <= 64, "bad dims d={d} f={f}");
+    let coords = read_f32s(stream, (n * d) as usize)?;
+    let feats = read_f32s(stream, (n * f) as usize)?;
+    Ok((
+        Tensor::new(vec![n as usize, d as usize], coords),
+        Tensor::new(vec![n as usize, f as usize], feats),
+    ))
+}
+
+fn write_ok(stream: &mut TcpStream, pred: &Tensor) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(16 + pred.len() * 4);
+    buf.extend_from_slice(RESP_MAGIC);
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    buf.extend_from_slice(&(pred.rows() as u32).to_le_bytes());
+    buf.extend_from_slice(&(pred.cols() as u32).to_le_bytes());
+    for x in pred.data() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    stream.write_all(&buf)?;
+    Ok(())
+}
+
+fn write_err(stream: &mut TcpStream, msg: &str) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(12 + msg.len());
+    buf.extend_from_slice(RESP_MAGIC);
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+    stream.write_all(&buf)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// Blocking client for the frame protocol.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    /// Send one point cloud, receive predictions (N, out_features).
+    pub fn predict(&mut self, coords: &Tensor, feats: &Tensor) -> anyhow::Result<Tensor> {
+        let n = coords.rows();
+        let mut buf = Vec::with_capacity(16 + (coords.len() + feats.len()) * 4);
+        buf.extend_from_slice(REQ_MAGIC);
+        buf.extend_from_slice(&(n as u32).to_le_bytes());
+        buf.extend_from_slice(&(coords.cols() as u32).to_le_bytes());
+        buf.extend_from_slice(&(feats.cols() as u32).to_le_bytes());
+        for x in coords.data() {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        for x in feats.data() {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+
+        let mut magic = [0u8; 4];
+        self.stream.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == RESP_MAGIC, "bad response magic");
+        let status = read_u32(&mut self.stream)?;
+        if status != 0 {
+            let mlen = read_u32(&mut self.stream)? as usize;
+            anyhow::ensure!(mlen < 65536, "oversized error message");
+            let mut m = vec![0u8; mlen];
+            self.stream.read_exact(&mut m)?;
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&m));
+        }
+        let rn = read_u32(&mut self.stream)? as usize;
+        let ro = read_u32(&mut self.stream)? as usize;
+        let data = read_f32s(&mut self.stream, rn * ro)?;
+        Ok(Tensor::new(vec![rn, ro], data))
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> anyhow::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    // Wire-format framing is covered end-to-end by rust/tests/integration.rs
+    // (server + client over a compiled graph). Nothing unit-testable here
+    // without a Router.
+}

@@ -1,0 +1,249 @@
+//! Minimal host tensor: dense row-major f32 arrays with shape metadata.
+//!
+//! This is the host-side data currency between the substrates (ball tree,
+//! dataset generators) and the PJRT runtime; it deliberately supports only
+//! what the coordinator needs — construction, indexed access, permutation
+//! along the point axis, slicing, statistics — and converts to/from
+//! `xla::Literal` in `runtime::literal`.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    /// New tensor from shape and data; panics on element-count mismatch.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} != data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: Vec<usize>, value: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![value; n] }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(value: f32) -> Self {
+        Tensor { shape: vec![], data: vec![value] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows when viewed as (rows, cols) with `cols` trailing.
+    pub fn rows(&self) -> usize {
+        assert!(!self.shape.is_empty());
+        self.shape[..self.shape.len() - 1].iter().product()
+    }
+
+    /// Trailing dimension.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("rank >= 1")
+    }
+
+    /// Row view for rank >= 1 tensors interpreted as (rows, cols).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {shape:?}");
+        self.shape = shape;
+        self
+    }
+
+    /// Permute rows (axis 0 of the (rows, cols) view): out[i] = self[perm[i]].
+    pub fn permute_rows(&self, perm: &[usize]) -> Tensor {
+        let c = self.cols();
+        assert_eq!(perm.len(), self.rows(), "perm len");
+        let mut out = Vec::with_capacity(self.data.len());
+        for &p in perm {
+            out.extend_from_slice(&self.data[p * c..(p + 1) * c]);
+        }
+        Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.data.iter().map(|x| (x - m).powi(2)).sum::<f32>() / self.data.len() as f32)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Mean squared error against another tensor of the same shape.
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "mse shape");
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f32>()
+            / self.data.len() as f32
+    }
+
+    /// True if all elements are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Concatenate along axis 0; all shapes must agree on trailing dims.
+    pub fn concat0(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut rows = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail, "concat0 trailing dims");
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(tail);
+        Tensor { shape, data }
+    }
+
+    /// Slice rows [start, start+len) of the (rows, cols) view. The result
+    /// collapses leading dims: shape (len, cols).
+    pub fn slice_rows(&self, start: usize, len: usize) -> Tensor {
+        let c = self.cols();
+        let data = self.data[start * c..(start + len) * c].to_vec();
+        Tensor { shape: vec![len, c], data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_stats() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert!((t.mean() - 3.5).abs() < 1e-6);
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.max(), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn permute_rows_roundtrip() {
+        let t = Tensor::new(vec![3, 2], vec![0., 0., 1., 1., 2., 2.]);
+        let perm = vec![2, 0, 1];
+        let p = t.permute_rows(&perm);
+        assert_eq!(p.row(0), &[2., 2.]);
+        assert_eq!(p.row(1), &[0., 0.]);
+        // inverse permutation restores the original
+        let mut inv = vec![0; 3];
+        for (i, &j) in perm.iter().enumerate() {
+            inv[j] = i;
+        }
+        assert_eq!(p.permute_rows(&inv), t);
+    }
+
+    #[test]
+    fn mse_of_identical_is_zero() {
+        let t = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        assert_eq!(t.mse(&t), 0.0);
+    }
+
+    #[test]
+    fn concat0_stacks_rows() {
+        let a = Tensor::new(vec![1, 2], vec![1., 2.]);
+        let b = Tensor::new(vec![2, 2], vec![3., 4., 5., 6.]);
+        let c = Tensor::concat0(&[&a, &b]);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.row(2), &[5., 6.]);
+    }
+
+    #[test]
+    fn slice_rows_extracts() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let s = t.slice_rows(1, 2);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.row(0), &[2., 3.]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+}

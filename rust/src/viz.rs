@@ -1,0 +1,127 @@
+//! Tiny visualization helpers: PPM images and 3D→2D point projections,
+//! used by `examples/receptive_field.rs` to render Figure 2.
+
+use std::path::Path;
+
+/// RGB raster image written as binary PPM (P6) — viewable everywhere,
+/// zero dependencies.
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    data: Vec<u8>, // RGB8
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Image {
+        Image { width, height, data: vec![24; width * height * 3] }
+    }
+
+    pub fn put(&mut self, x: usize, y: usize, rgb: [u8; 3]) {
+        if x < self.width && y < self.height {
+            let i = (y * self.width + x) * 3;
+            self.data[i..i + 3].copy_from_slice(&rgb);
+        }
+    }
+
+    /// Filled disc (for point splatting).
+    pub fn splat(&mut self, x: f32, y: f32, r: i32, rgb: [u8; 3]) {
+        let xi = x.round() as i32;
+        let yi = y.round() as i32;
+        for dy in -r..=r {
+            for dx in -r..=r {
+                if dx * dx + dy * dy <= r * r {
+                    let (px, py) = (xi + dx, yi + dy);
+                    if px >= 0 && py >= 0 {
+                        self.put(px as usize, py as usize, rgb);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn save_ppm(&self, path: &Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "P6\n{} {}\n255\n", self.width, self.height)?;
+        f.write_all(&self.data)
+    }
+}
+
+/// Map a scalar in [0, 1] to a blue→white→red diverging colormap.
+pub fn diverging(t: f32) -> [u8; 3] {
+    let t = t.clamp(0.0, 1.0);
+    if t < 0.5 {
+        let u = t * 2.0;
+        [(60.0 + 195.0 * u) as u8, (80.0 + 175.0 * u) as u8, 255]
+    } else {
+        let u = (t - 0.5) * 2.0;
+        [255, (255.0 - 175.0 * u) as u8, (255.0 - 195.0 * u) as u8]
+    }
+}
+
+/// Orthographic projection of (x, y, z) points onto the image plane,
+/// auto-scaled to fit. Returns pixel coordinates per point.
+pub fn project_xz(coords: &crate::tensor::Tensor, w: usize, h: usize) -> Vec<(f32, f32)> {
+    let n = coords.rows();
+    let (mut x0, mut x1) = (f32::INFINITY, f32::NEG_INFINITY);
+    let (mut z0, mut z1) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..n {
+        let r = coords.row(i);
+        x0 = x0.min(r[0]);
+        x1 = x1.max(r[0]);
+        let z = *r.last().unwrap();
+        z0 = z0.min(z);
+        z1 = z1.max(z);
+    }
+    let sx = (w as f32 - 20.0) / (x1 - x0).max(1e-6);
+    let sz = (h as f32 - 20.0) / (z1 - z0).max(1e-6);
+    let s = sx.min(sz);
+    (0..n)
+        .map(|i| {
+            let r = coords.row(i);
+            let z = *r.last().unwrap();
+            (10.0 + (r[0] - x0) * s, h as f32 - 10.0 - (z - z0) * s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn image_roundtrip_header() {
+        let mut img = Image::new(8, 4);
+        img.put(0, 0, [255, 0, 0]);
+        img.splat(4.0, 2.0, 1, [0, 255, 0]);
+        let path = std::env::temp_dir().join("bsa_viz_test.ppm");
+        img.save_ppm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n8 4\n255\n"));
+        assert_eq!(bytes.len(), 11 + 8 * 4 * 3);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn colormap_endpoints() {
+        assert_eq!(diverging(0.0)[2], 255); // blue end
+        assert_eq!(diverging(1.0)[0], 255); // red end
+    }
+
+    #[test]
+    fn projection_fits_canvas() {
+        let pts = Tensor::new(vec![3, 3], vec![-1., 0., -1., 0., 0., 0., 1., 0., 1.]);
+        let px = project_xz(&pts, 100, 100);
+        for (x, y) in px {
+            assert!((0.0..100.0).contains(&x));
+            assert!((0.0..100.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_put_ignored() {
+        let mut img = Image::new(4, 4);
+        img.put(100, 100, [1, 2, 3]); // must not panic
+    }
+}

@@ -1,0 +1,316 @@
+//! End-to-end integration tests over the compiled artifacts.
+//!
+//! These need `make artifacts` to have produced the `core` suite (the
+//! tiny `bsa_syn_n256_b1` graphs are built for exactly this). Tests skip
+//! gracefully when artifacts are missing so `cargo test` works before the
+//! first artifact build, but CI runs them via `make test`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use bsa::config::{ServeConfig, TrainConfig};
+use bsa::coordinator::{Router, Trainer};
+use bsa::data::generator_for;
+use bsa::runtime::{literal_to_tensor, scalar_i32, Engine};
+use bsa::tensor::Tensor;
+
+const TINY: &str = "bsa_syn_n256_b1";
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// One PJRT client per *process*: concurrent `PjRtClient::cpu()` creation
+/// from parallel test threads deadlocks inside the plugin, so every test
+/// shares this engine.
+fn engine() -> Option<Arc<Engine>> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let dir = artifacts_dir();
+            if !dir.join("manifest.txt").exists() {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return None;
+            }
+            Some(Arc::new(Engine::new(&dir).expect("engine")))
+        })
+        .clone()
+}
+
+fn tiny_train_config() -> TrainConfig {
+    TrainConfig {
+        task: "syn".into(),
+        steps: 8,
+        batch: 1,
+        train_samples: 6,
+        test_samples: 2,
+        log_every: 2,
+        warmup: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn init_graph_is_deterministic_per_seed() {
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let a = init.run(&[scalar_i32(7)]).unwrap();
+    let b = init.run(&[scalar_i32(7)]).unwrap();
+    let c = init.run(&[scalar_i32(8)]).unwrap();
+    let ta = literal_to_tensor(&a[0]).unwrap();
+    let tb = literal_to_tensor(&b[0]).unwrap();
+    let tc = literal_to_tensor(&c[0]).unwrap();
+    assert_eq!(ta, tb);
+    assert_ne!(ta, tc);
+    // all params finite
+    for l in &a {
+        assert!(literal_to_tensor(l).unwrap().all_finite());
+    }
+}
+
+#[test]
+fn fwd_graph_runs_and_matches_manifest_shapes() {
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let fwd = engine.load(&format!("fwd_{TINY}")).unwrap();
+    let params = init.run(&[scalar_i32(0)]).unwrap();
+    assert_eq!(params.len(), fwd.info.nparams);
+
+    let n = fwd.info.n;
+    let f = fwd.info.in_features;
+    let gen = generator_for("syn", 0).unwrap();
+    let sample = gen.generate(0, n);
+    let x = Tensor::new(vec![1, n, f], sample.features.data().to_vec());
+    let out = fwd.run_with_tensors(&params, &[&x]).unwrap();
+    let pred = literal_to_tensor(&out[0]).unwrap();
+    assert_eq!(pred.shape(), &[1, n, fwd.info.out_features]);
+    assert!(pred.all_finite());
+}
+
+#[test]
+fn fwd_graph_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let fwd = engine.load(&format!("fwd_{TINY}")).unwrap();
+    let params = init.run(&[scalar_i32(3)]).unwrap();
+    let n = fwd.info.n;
+    let gen = generator_for("syn", 1).unwrap();
+    let x = Tensor::new(
+        vec![1, n, fwd.info.in_features],
+        gen.generate(0, n).features.data().to_vec(),
+    );
+    let a = literal_to_tensor(&fwd.run_with_tensors(&params, &[&x]).unwrap()[0]).unwrap();
+    let b = literal_to_tensor(&fwd.run_with_tensors(&params, &[&x]).unwrap()[0]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn trainer_reduces_loss_and_checkpoints() {
+    let Some(engine) = engine() else { return };
+    let tc = tiny_train_config();
+    let mut trainer = Trainer::new(engine.clone(), TINY, tc).unwrap();
+    let first = trainer.step_once().unwrap();
+    let mut last = first;
+    for _ in 0..15 {
+        last = trainer.step_once().unwrap();
+    }
+    assert!(last.is_finite() && first.is_finite());
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+
+    // checkpoint roundtrip preserves state
+    let path = std::env::temp_dir().join("bsa_it_ckpt.bsackpt");
+    trainer.save_checkpoint(&path).unwrap();
+    let mse_before = trainer.evaluate().unwrap();
+    let mut restored = Trainer::new(engine, TINY, tiny_train_config()).unwrap();
+    restored.load_checkpoint(&path).unwrap();
+    assert_eq!(restored.step, trainer.step);
+    let mse_after = restored.evaluate().unwrap();
+    assert!((mse_before - mse_after).abs() < 1e-6, "{mse_before} vs {mse_after}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn trainer_eval_improves_over_random() {
+    let Some(engine) = engine() else { return };
+    let tc = TrainConfig { steps: 60, ..tiny_train_config() };
+    let mut fresh = Trainer::new(engine.clone(), TINY, tc.clone()).unwrap();
+    let mse_random = fresh.evaluate().unwrap();
+    fresh.run(|_| {}).unwrap();
+    let mse_trained = fresh.evaluate().unwrap();
+    assert!(
+        mse_trained < mse_random,
+        "training did not improve eval: {mse_random} -> {mse_trained}"
+    );
+}
+
+#[test]
+fn router_serves_and_unpermutes() {
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])
+        .unwrap()
+        .iter()
+        .map(|l| literal_to_tensor(l).unwrap())
+        .collect();
+    let sc = ServeConfig { workers: 2, flush_us: 200, seq_len: 256, ..Default::default() };
+    let router =
+        Arc::new(Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap());
+
+    // a cloud *smaller* than N exercises ball-tree padding + unpermute
+    let gen = generator_for("syn", 2).unwrap();
+    let sample = gen.generate(0, 200);
+    let pred = router
+        .infer(sample.coords.clone(), sample.features.clone())
+        .unwrap();
+    assert_eq!(pred.shape(), &[200, 1]);
+    assert!(pred.all_finite());
+
+    // deterministic serving: identical input => identical prediction
+    // (the router seeds the ball tree from a content hash, so padding and
+    // permutation are reproducible across requests)
+    let pred2 = router.infer(sample.coords.clone(), sample.features).unwrap();
+    for (x, y) in pred.data().iter().zip(pred2.data()) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+
+    let stats = router.stats();
+    assert_eq!(stats.served, 2);
+    let stats = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(stats.served, 2);
+}
+
+#[test]
+fn router_rejects_malformed_requests() {
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])
+        .unwrap()
+        .iter()
+        .map(|l| literal_to_tensor(l).unwrap())
+        .collect();
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap();
+
+    // wrong feature width
+    let coords = Tensor::zeros(vec![64, 3]);
+    let feats = Tensor::zeros(vec![64, 3]); // graph expects 6
+    let err = router.infer(coords, feats);
+    assert!(err.is_err());
+
+    // too many points for the compiled N
+    let coords = Tensor::zeros(vec![512, 3]);
+    let feats = Tensor::zeros(vec![512, 6]);
+    assert!(router.infer(coords, feats).is_err());
+}
+
+#[test]
+fn dynamic_batcher_fills_compiled_batch() {
+    // With a B=4 compiled graph and concurrent submission, the batcher
+    // must group requests (mean batch > 1) — the coordinator's core
+    // batching invariant. Requires the bench artifact suite.
+    let Some(engine) = engine() else { return };
+    let graph = "fwd_bsa_air_n1024_b4_ref";
+    if engine.manifest.get(graph).is_err() {
+        eprintln!("skipping: {graph} not built (make artifacts-bench)");
+        return;
+    }
+    let init = engine
+        .load("init_bsa_air_n1024_b2_ref")
+        .or_else(|_| engine.load("init_bsa_air_n1024_b2"))
+        .unwrap();
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])
+        .unwrap()
+        .iter()
+        .map(|l| literal_to_tensor(l).unwrap())
+        .collect();
+    let sc = ServeConfig { workers: 1, flush_us: 50_000, ..Default::default() };
+    let router = Router::start(engine, graph, params, sc).unwrap();
+
+    let gen = generator_for("air", 4).unwrap();
+    let mut rxs = vec![];
+    for i in 0..8 {
+        let s = gen.generate(i, 900);
+        rxs.push(router.submit(s.coords, s.features).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv().expect("reply");
+        let pred = resp.result.expect("prediction");
+        assert_eq!(pred.shape(), &[900, 1]);
+        assert!(pred.all_finite());
+    }
+    let st = router.stats();
+    assert_eq!(st.served, 8);
+    assert!(
+        st.mean_batch > 1.5,
+        "batcher did not group: mean_batch {}",
+        st.mean_batch
+    );
+}
+
+#[test]
+fn checkpoint_roundtrips_into_router() {
+    // Train briefly, checkpoint, serve from the checkpoint: prediction
+    // through the router must match the trainer's own fwd evaluation.
+    let Some(engine) = engine() else { return };
+    let mut trainer = Trainer::new(engine.clone(), TINY, tiny_train_config()).unwrap();
+    for _ in 0..4 {
+        trainer.step_once().unwrap();
+    }
+    let path = std::env::temp_dir().join("bsa_router_ckpt.bsackpt");
+    trainer.save_checkpoint(&path).unwrap();
+
+    let ck = bsa::coordinator::checkpoint::Checkpoint::load(&path).unwrap();
+    let fwd = engine.load(&format!("fwd_{TINY}")).unwrap();
+    let params: Vec<Tensor> = ck
+        .arrays
+        .into_iter()
+        .take(fwd.info.nparams)
+        .map(|(_, t)| t)
+        .collect();
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap();
+    let gen = generator_for("syn", 6).unwrap();
+    let s = gen.generate(0, 220);
+    let pred = router.infer(s.coords, s.features).unwrap();
+    assert_eq!(pred.shape(), &[220, 1]);
+    assert!(pred.all_finite());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])
+        .unwrap()
+        .iter()
+        .map(|l| literal_to_tensor(l).unwrap())
+        .collect();
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Arc::new(Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap());
+
+    let addr = "127.0.0.1:17177";
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let srv = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || bsa::server::serve(&addr, router, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let gen = generator_for("syn", 3).unwrap();
+    let sample = gen.generate(0, 180);
+    let mut client = bsa::server::Client::connect(addr).unwrap();
+    let pred = client.predict(&sample.coords, &sample.features).unwrap();
+    assert_eq!(pred.shape(), &[180, 1]);
+    assert!(pred.all_finite());
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+}

@@ -1,0 +1,201 @@
+//! Property-based tests on the coordinator substrates: ball-tree routing
+//! invariants, batching/state round-trips, config parsing, metrics math.
+//! (proptest is not vendored offline; bsa::proptest_lite is the in-tree
+//! equivalent — deterministic cases, replayable by seed.)
+
+use bsa::balltree::BallTree;
+use bsa::config::Document;
+use bsa::data::{generator_for, NormStats, Sample};
+use bsa::metrics::{Accumulator, ErrorStats};
+use bsa::prng::Rng;
+use bsa::proptest_lite::forall;
+use bsa::tensor::Tensor;
+
+fn cloud(g: &mut bsa::proptest_lite::Gen, n: usize, d: usize) -> Tensor {
+    Tensor::new(vec![n, d], g.normals(n * d))
+}
+
+// ---------------------------------------------------------------------------
+// ball tree invariants (the routing substrate every request goes through)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_balltree_perm_covers_every_point_exactly_once() {
+    forall(40, |g| {
+        let target = g.pow2_in(32, 512);
+        let n = g.usize_in(target / 2 + 1..target + 1);
+        let d = g.usize_in(2..4);
+        let pts = cloud(g, n, d);
+        let tree = BallTree::build(&pts, target, g.case);
+        let mut count = vec![0usize; n];
+        for (&p, &r) in tree.perm.iter().zip(&tree.real) {
+            assert!(p < n);
+            if r {
+                count[p] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1), "each real point exactly once");
+        assert_eq!(tree.perm.len(), target);
+    });
+}
+
+#[test]
+fn prop_balltree_permute_unpermute_roundtrip() {
+    forall(30, |g| {
+        let target = g.pow2_in(64, 256);
+        let n = g.usize_in(target * 3 / 4..target + 1);
+        let f = g.usize_in(1..8);
+        let pts = cloud(g, n, 3);
+        let feats = cloud(g, n, f);
+        let tree = BallTree::build(&pts, target, g.case ^ 0x9);
+        let back = tree.unpermute_predictions(&tree.permute_features(&feats));
+        assert_eq!(back, feats);
+    });
+}
+
+#[test]
+fn prop_balltree_balls_tighter_than_global() {
+    // Every ball's radius is at most the whole cloud's radius; the mean
+    // ball radius shrinks monotonically with finer granularity.
+    forall(20, |g| {
+        let n = 512;
+        let pts = cloud(g, n, 3);
+        let tree = BallTree::build(&pts, n, g.case);
+        let r_whole = tree.mean_radius(n);
+        let r_64 = tree.mean_radius(64);
+        let r_16 = tree.mean_radius(16);
+        assert!(r_64 <= r_whole + 1e-5);
+        assert!(r_16 <= r_64 + 1e-5, "finer balls are tighter: {r_16} vs {r_64}");
+    });
+}
+
+#[test]
+fn prop_balltree_deterministic() {
+    forall(10, |g| {
+        let pts = cloud(g, 200, 3);
+        let a = BallTree::build(&pts, 256, 42);
+        let b = BallTree::build(&pts, 256, 42);
+        assert_eq!(a.perm, b.perm);
+        assert_eq!(a.real, b.real);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// dataset / normalization invariants (training-state correctness)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_norm_roundtrip_exact() {
+    forall(50, |g| {
+        let mean = g.f32_in(-5.0..5.0);
+        let std = g.f32_in(0.1..4.0);
+        let stats = NormStats { mean, std };
+        let t = Tensor::new(vec![32], g.normals(32));
+        let rt = stats.denormalize(&stats.normalize(&t));
+        for (a, b) in rt.data().iter().zip(t.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_generators_emit_requested_shapes() {
+    forall(12, |g| {
+        let task = *g.choose(&["air", "ela", "syn"]);
+        let n = g.usize_in(64..300);
+        let gen = generator_for(task, g.case).unwrap();
+        let s: Sample = gen.generate(g.case, n);
+        assert_eq!(s.coords.rows(), n);
+        assert_eq!(s.coords.cols(), gen.coord_dim());
+        assert_eq!(s.features.shape(), &[n, gen.feature_dim()]);
+        assert_eq!(s.target.shape(), &[n, 1]);
+        assert!(s.target.all_finite());
+        assert!(s.features.all_finite());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// metrics invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_accumulator_matches_direct_computation() {
+    forall(40, |g| {
+        let xs = g.vec_f32(1..100, -100.0..100.0);
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.push(x as f64);
+        }
+        let mean: f64 = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        assert!((acc.mean() - mean).abs() < 1e-6 * (1.0 + mean.abs()));
+        let mn = xs.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+        assert!((acc.min() - mn).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_mse_nonnegative_and_zero_iff_equal() {
+    forall(40, |g| {
+        let xs = g.vec_f32(1..50, -10.0..10.0);
+        let mut e = ErrorStats::default();
+        e.push_slices(&xs, &xs);
+        assert_eq!(e.mse(), 0.0);
+        let mut e2 = ErrorStats::default();
+        let shifted: Vec<f32> = xs.iter().map(|x| x + 1.0).collect();
+        e2.push_slices(&xs, &shifted);
+        assert!((e2.mse() - 1.0).abs() < 1e-5);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// config parser robustness (fuzz-ish: parse never panics, errors are typed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_config_parser_total() {
+    let tokens = [
+        "[", "]", "=", "\"", "#", "x", "1", "1.5", "true", "[model]", "k = 1",
+        "a = \"s\"", "\n", " ", "arr = [1,2]",
+    ];
+    forall(200, |g| {
+        let mut text = String::new();
+        for _ in 0..g.usize_in(0..12) {
+            text.push_str(*g.choose(&tokens[..]));
+            if g.bool() {
+                text.push('\n');
+            }
+        }
+        // must never panic — Result either way is fine
+        let _ = Document::parse(&text);
+    });
+}
+
+#[test]
+fn prop_config_roundtrip_ints_floats() {
+    forall(60, |g| {
+        let i = g.usize_in(0..1_000_000) as i64;
+        let f = g.f32_in(-1e3..1e3);
+        let text = format!("[s]\ni = {i}\nf = {f}\nb = true\n");
+        let doc = Document::parse(&text).unwrap();
+        assert_eq!(doc.int_or("s", "i", -1), i);
+        let back = doc.float_or("s", "f", f64::NAN) as f32;
+        assert!((back - f).abs() <= 1e-3 * f.abs().max(1.0), "{f} vs {back}");
+        assert!(doc.bool_or("s", "b", false));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// prng statistical sanity under arbitrary streams
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_prng_streams_do_not_collide() {
+    forall(30, |g| {
+        let base = Rng::new(g.case);
+        let mut a = base.fold(1);
+        let mut b = base.fold(2);
+        let va: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    });
+}
