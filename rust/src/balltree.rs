@@ -17,6 +17,10 @@
 //! for attention semantics (they attend like their originals) and keep the
 //! compiled graph shape static.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use crate::prng::Rng;
 use crate::tensor::Tensor;
 
@@ -71,16 +75,14 @@ impl BallTree {
             is_real.push(false);
         }
 
-        // Recursive median split over (index, realness) pairs.
+        // Median split over (index, realness) pairs.
         let mut pairs: Vec<(usize, bool)> = idx.into_iter().zip(is_real).collect();
-        split_recursive(points, &mut pairs);
+        split_balanced(points, &mut pairs);
 
         let perm: Vec<usize> = pairs.iter().map(|p| p.0).collect();
         let real: Vec<bool> = pairs.iter().map(|p| p.1).collect();
-        let mut coords = Vec::with_capacity(target_len * d);
-        for &p in &perm {
-            coords.extend_from_slice(points.row(p));
-        }
+        let mut coords = vec![0.0f32; target_len * d];
+        points.permute_rows_into(&perm, &mut coords);
         BallTree {
             perm,
             real,
@@ -94,13 +96,19 @@ impl BallTree {
     /// Permute per-point features (N, F) into ball order (n_padded, F).
     /// Pad rows replicate their source point's features.
     pub fn permute_features(&self, features: &Tensor) -> Tensor {
-        assert_eq!(features.rows(), self.n_points, "feature rows");
         let f = features.cols();
-        let mut out = Vec::with_capacity(self.n_padded * f);
-        for &p in &self.perm {
-            out.extend_from_slice(features.row(p));
-        }
+        let mut out = vec![0.0f32; self.n_padded * f];
+        self.permute_features_into(features, &mut out);
         Tensor::new(vec![self.n_padded, f], out)
+    }
+
+    /// Allocation-free variant of [`permute_features`](Self::permute_features):
+    /// gathers rows directly into `out` (length `n_padded * F`). The
+    /// serving batch assembler uses this to write each request's permuted
+    /// features straight into its slot of the shared `(B, N, F)` buffer.
+    pub fn permute_features_into(&self, features: &Tensor, out: &mut [f32]) {
+        assert_eq!(features.rows(), self.n_points, "feature rows");
+        features.permute_rows_into(&self.perm, out);
     }
 
     /// Scatter per-position predictions (n_padded, F) back to original
@@ -108,12 +116,21 @@ impl BallTree {
     /// was duplicated, the *real* occurrence wins.
     pub fn unpermute_predictions(&self, preds: &Tensor) -> Tensor {
         assert_eq!(preds.rows(), self.n_padded, "pred rows");
-        let f = preds.cols();
+        self.unpermute_predictions_view(preds.data(), preds.cols())
+    }
+
+    /// Borrowed-slice variant of
+    /// [`unpermute_predictions`](Self::unpermute_predictions): reads a flat
+    /// `(n_padded * f)` row-major view, so a per-request window of a
+    /// batched prediction tensor can be un-permuted without an
+    /// intermediate `slice_rows` copy.
+    pub fn unpermute_predictions_view(&self, preds: &[f32], f: usize) -> Tensor {
+        assert_eq!(preds.len(), self.n_padded * f, "pred view len");
         let mut out = vec![0.0f32; self.n_points * f];
         let mut seen = vec![false; self.n_points];
         for (i, (&p, &r)) in self.perm.iter().zip(&self.real).enumerate() {
             if r {
-                out[p * f..(p + 1) * f].copy_from_slice(preds.row(i));
+                out[p * f..(p + 1) * f].copy_from_slice(&preds[i * f..(i + 1) * f]);
                 seen[p] = true;
             }
         }
@@ -174,40 +191,230 @@ impl BallTree {
     }
 }
 
-/// Recursive in-place median split: after the call, every aligned
-/// power-of-two segment of `pairs` is a subtree (ball).
-fn split_recursive(points: &Tensor, pairs: &mut [(usize, bool)]) {
+/// In-place median split: after the call, every aligned power-of-two
+/// segment of `pairs` is a subtree (ball).
+///
+/// Implemented as an explicit work-stack rather than recursion so the
+/// per-segment `lo`/`hi` spread buffers are allocated once and reused —
+/// the recursive version allocated two `Vec<f32>` per tree node, which
+/// dominated small-D construction profiles. The tree shape is identical:
+/// segment order of the splits does not affect the result.
+fn split_balanced(points: &Tensor, pairs: &mut [(usize, bool)]) {
     if pairs.len() <= 1 {
         return;
     }
     let d = points.cols();
+    let mut lo = vec![0.0f32; d];
+    let mut hi = vec![0.0f32; d];
+    // Each stack entry is a [start, end) segment still to be split. A
+    // balanced binary split of L leaves pushes at most ceil(log2 L) + 1
+    // live entries, but Vec growth is cheap either way.
+    let mut stack: Vec<(usize, usize)> = vec![(0, pairs.len())];
+    while let Some((start, end)) = stack.pop() {
+        if end - start <= 1 {
+            continue;
+        }
+        let seg = &pairs[start..end];
 
-    // Axis of largest spread across the segment.
-    let mut lo = vec![f32::INFINITY; d];
-    let mut hi = vec![f32::NEG_INFINITY; d];
-    for &(p, _) in pairs.iter() {
-        for (a, &x) in points.row(p).iter().enumerate() {
-            lo[a] = lo[a].min(x);
-            hi[a] = hi[a].max(x);
+        // Axis of largest spread across the segment (scratch reused).
+        lo.fill(f32::INFINITY);
+        hi.fill(f32::NEG_INFINITY);
+        for &(p, _) in seg {
+            for (a, &x) in points.row(p).iter().enumerate() {
+                lo[a] = lo[a].min(x);
+                hi[a] = hi[a].max(x);
+            }
+        }
+        let axis = (0..d)
+            .max_by(|&i, &j| {
+                (hi[i] - lo[i])
+                    .partial_cmp(&(hi[j] - lo[j]))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(0);
+
+        let mid = (end - start) / 2;
+        pairs[start..end].select_nth_unstable_by(mid, |a, b| {
+            points.row(a.0)[axis]
+                .partial_cmp(&points.row(b.0)[axis])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        stack.push((start, start + mid));
+        stack.push((start + mid, end));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// content hashing + ball-tree cache (the serving hot path's fast lane)
+// ---------------------------------------------------------------------------
+
+/// Content hash of a tensor's raw f32 payload, 8 bytes at a time.
+///
+/// FNV-1a-style multiply-xor over 64-bit words (two f32 bit patterns per
+/// step) with a splitmix64 finalizer for avalanche — ~8x fewer hash steps
+/// than the original byte-at-a-time FNV on the same data. Used both as
+/// the deterministic pad-point seed (identical clouds must pad
+/// identically) and as the [`BallTreeCache`] key.
+pub fn content_hash(t: &Tensor) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    // Seed with the length so clouds that differ only by trailing zeros
+    // (or by an element landing in the odd remainder) still separate.
+    let mut h: u64 = 0xcbf29ce484222325 ^ (t.len() as u64).wrapping_mul(0x9e3779b97f4a7c15);
+    let mut chunks = t.data().chunks_exact(2);
+    for pair in &mut chunks {
+        let word = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+        h = (h ^ word).wrapping_mul(PRIME);
+    }
+    if let [last] = chunks.remainder() {
+        h = (h ^ last.to_bits() as u64).wrapping_mul(PRIME);
+    }
+    // splitmix64 finalizer
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^ (h >> 31)
+}
+
+/// Cache key: content hash plus the cheap-to-check dimensions, so a
+/// 64-bit collision additionally has to match shape and padded length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct CacheKey {
+    hash: u64,
+    rows: usize,
+    cols: usize,
+    target: usize,
+}
+
+struct CacheSlot {
+    tree: Arc<BallTree>,
+    /// Logical timestamp of the last hit (LRU ordering).
+    tick: u64,
+}
+
+/// Content-addressed LRU cache of built ball trees.
+///
+/// Erwin-style ball orderings depend only on the *geometry* — not on the
+/// feature fields — so the dominant CFD serving pattern (one mesh, many
+/// feature fields) pays `BallTree::build` once and then hits here. Keys
+/// are [`content_hash`] of the coordinates plus (rows, cols, target_len);
+/// trees are shared out as `Arc` so hits are a hash + clone.
+///
+/// A capacity of 0 disables caching (every lookup builds and is counted
+/// as a miss). Eviction is least-recently-used.
+pub struct BallTreeCache {
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+struct CacheInner {
+    cap: usize,
+    tick: u64,
+    map: HashMap<CacheKey, CacheSlot>,
+}
+
+impl BallTreeCache {
+    /// New cache holding up to `cap` trees (0 disables caching).
+    pub fn new(cap: usize) -> BallTreeCache {
+        BallTreeCache {
+            inner: Mutex::new(CacheInner { cap, tick: 0, map: HashMap::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
     }
-    let axis = (0..d)
-        .max_by(|&i, &j| {
-            (hi[i] - lo[i])
-                .partial_cmp(&(hi[j] - lo[j]))
-                .unwrap_or(std::cmp::Ordering::Equal)
-        })
-        .unwrap_or(0);
 
-    let mid = pairs.len() / 2;
-    pairs.select_nth_unstable_by(mid, |a, b| {
-        points.row(a.0)[axis]
-            .partial_cmp(&points.row(b.0)[axis])
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
-    let (left, right) = pairs.split_at_mut(mid);
-    split_recursive(points, left);
-    split_recursive(points, right);
+    /// Try a pure lookup: `Ok(tree)` on a hit (LRU position refreshed),
+    /// `Err(content_hash)` on a miss so the caller can decide *where* to
+    /// build — the serving router satisfies hits inline and only sends
+    /// misses (the expensive step) to worker threads, then completes them
+    /// with [`build_insert`](Self::build_insert).
+    pub fn try_get(&self, coords: &Tensor, target_len: usize) -> Result<Arc<BallTree>, u64> {
+        let hash = content_hash(coords);
+        let key = CacheKey {
+            hash,
+            rows: coords.rows(),
+            cols: coords.cols(),
+            target: target_len,
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.cap > 0 {
+                inner.tick += 1;
+                let tick = inner.tick;
+                if let Some(slot) = inner.map.get_mut(&key) {
+                    slot.tick = tick;
+                    let tree = slot.tree.clone();
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(tree);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Err(hash)
+    }
+
+    /// Build the tree for a miss reported by [`try_get`](Self::try_get)
+    /// and insert it (evicting the LRU entry at capacity). `hash` must be
+    /// the value `try_get` returned for these coords: it seeds the pad
+    /// points, keeping cached and rebuilt trees bit-identical. The build
+    /// runs outside the cache lock so concurrent misses on different
+    /// geometries don't serialize.
+    pub fn build_insert(&self, coords: &Tensor, target_len: usize, hash: u64) -> Arc<BallTree> {
+        let key = CacheKey {
+            hash,
+            rows: coords.rows(),
+            cols: coords.cols(),
+            target: target_len,
+        };
+        let tree = Arc::new(BallTree::build(coords, target_len, hash));
+        let mut inner = self.inner.lock().unwrap();
+        if inner.cap > 0 {
+            if inner.map.len() >= inner.cap && !inner.map.contains_key(&key) {
+                if let Some(oldest) = inner
+                    .map
+                    .iter()
+                    .min_by_key(|(_, slot)| slot.tick)
+                    .map(|(k, _)| *k)
+                {
+                    inner.map.remove(&oldest);
+                }
+            }
+            inner.tick += 1;
+            let tick = inner.tick;
+            inner.map.insert(key, CacheSlot { tree: tree.clone(), tick });
+        }
+        tree
+    }
+
+    /// Look up the tree for `coords` padded to `target_len`, building (and
+    /// inserting) it on a miss.
+    pub fn get_or_build(&self, coords: &Tensor, target_len: usize) -> Arc<BallTree> {
+        match self.try_get(coords, target_len) {
+            Ok(tree) => tree,
+            Err(hash) => self.build_insert(coords, target_len, hash),
+        }
+    }
+
+    /// Number of cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of cache misses (i.e. tree builds) so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of trees currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when no trees are resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 #[cfg(test)]
@@ -338,5 +545,130 @@ mod tests {
         assert_eq!(t.ball_of(0, 32), 0);
         assert_eq!(t.ball_of(127, 32), 3);
         assert_eq!(t.num_balls(32), 4);
+    }
+
+    #[test]
+    fn permute_features_into_matches_allocating() {
+        let pts = cloud(100, 3, 12);
+        let feats = cloud(100, 5, 13);
+        let t = BallTree::build(&pts, 128, 12);
+        let alloc = t.permute_features(&feats);
+        let mut buf = vec![f32::NAN; 128 * 5];
+        t.permute_features_into(&feats, &mut buf);
+        assert_eq!(buf.as_slice(), alloc.data());
+    }
+
+    #[test]
+    fn unpermute_view_matches_tensor_path() {
+        let pts = cloud(90, 3, 14);
+        let feats = cloud(90, 4, 15);
+        let t = BallTree::build(&pts, 128, 14);
+        let permuted = t.permute_features(&feats);
+        let via_tensor = t.unpermute_predictions(&permuted);
+        let via_view = t.unpermute_predictions_view(permuted.data(), 4);
+        assert_eq!(via_tensor, via_view);
+        assert_eq!(via_view, feats);
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_sensitive() {
+        let a = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let c = Tensor::new(vec![4], vec![1., 2., 3., 5.]);
+        assert_eq!(content_hash(&a), content_hash(&b));
+        assert_ne!(content_hash(&a), content_hash(&c));
+        // odd lengths exercise the chunk remainder
+        let d = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let e = Tensor::new(vec![3], vec![1., 2., 4.]);
+        assert_ne!(content_hash(&d), content_hash(&e));
+        // trailing zeros vs shorter payload must differ (length is mixed in)
+        let f = Tensor::new(vec![2], vec![1., 0.]);
+        let g = Tensor::new(vec![1], vec![1.]);
+        assert_ne!(content_hash(&f), content_hash(&g));
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let cache = BallTreeCache::new(8);
+        let a = cloud(64, 3, 20);
+        let b = cloud(64, 3, 21);
+        let t1 = cache.get_or_build(&a, 64);
+        let t2 = cache.get_or_build(&b, 64);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        let t1_again = cache.get_or_build(&a, 64);
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        assert!(Arc::ptr_eq(&t1, &t1_again));
+        assert!(!Arc::ptr_eq(&t1, &t2));
+        // same coords at a different padded length is a distinct entry
+        cache.get_or_build(&a, 128);
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let cache = BallTreeCache::new(2);
+        let a = cloud(32, 3, 30);
+        let b = cloud(32, 3, 31);
+        let c = cloud(32, 3, 32);
+        cache.get_or_build(&a, 32);
+        cache.get_or_build(&b, 32);
+        cache.get_or_build(&a, 32); // touch a: b becomes LRU
+        cache.get_or_build(&c, 32); // evicts b
+        assert_eq!(cache.len(), 2);
+        let misses_before = cache.misses();
+        cache.get_or_build(&a, 32); // still resident
+        assert_eq!(cache.misses(), misses_before);
+        cache.get_or_build(&b, 32); // was evicted: rebuild
+        assert_eq!(cache.misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn try_get_then_build_insert_roundtrip() {
+        let cache = BallTreeCache::new(2);
+        let a = cloud(48, 3, 50);
+        let hash = match cache.try_get(&a, 64) {
+            Err(h) => h,
+            Ok(_) => panic!("hit on an empty cache"),
+        };
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        assert_eq!(hash, content_hash(&a));
+        let built = cache.build_insert(&a, 64, hash);
+        let hit = cache.try_get(&a, 64).expect("resident after insert");
+        assert!(Arc::ptr_eq(&built, &hit));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // the hash seeds padding, so the cached tree matches a fresh build
+        let fresh = BallTree::build(&a, 64, content_hash(&a));
+        assert_eq!(hit.perm, fresh.perm);
+    }
+
+    #[test]
+    fn cache_capacity_zero_disables() {
+        let cache = BallTreeCache::new(0);
+        let a = cloud(32, 3, 33);
+        cache.get_or_build(&a, 32);
+        cache.get_or_build(&a, 32);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn cached_tree_is_bit_identical_to_fresh_build() {
+        // The cache must be semantically invisible: a hit returns a tree
+        // whose permutation, padding, and feature routing are bit-identical
+        // to building from scratch with the content-hash seed.
+        let pts = cloud(120, 3, 40);
+        let feats = cloud(120, 6, 41);
+        let cache = BallTreeCache::new(4);
+        cache.get_or_build(&pts, 128); // prime
+        let cached = cache.get_or_build(&pts, 128);
+        assert!(cache.hits() >= 1);
+        let fresh = BallTree::build(&pts, 128, content_hash(&pts));
+        assert_eq!(cached.perm, fresh.perm);
+        assert_eq!(cached.real, fresh.real);
+        assert_eq!(cached.coords, fresh.coords);
+        let a = cached.unpermute_predictions(&cached.permute_features(&feats));
+        let b = fresh.unpermute_predictions(&fresh.permute_features(&feats));
+        assert_eq!(a, b);
     }
 }

@@ -378,6 +378,10 @@ pub struct ServeConfig {
     pub flush_us: u64,
     pub queue_cap: usize,
     pub seq_len: usize,
+    /// Capacity of the content-addressed ball-tree cache (trees held;
+    /// 0 disables). Repeated geometries — one mesh, many feature fields —
+    /// skip `BallTree::build` entirely on a hit.
+    pub tree_cache: usize,
 }
 
 impl Default for ServeConfig {
@@ -389,6 +393,7 @@ impl Default for ServeConfig {
             flush_us: 2000,
             queue_cap: 1024,
             seq_len: 4096,
+            tree_cache: 64,
         }
     }
 }
@@ -403,6 +408,7 @@ impl ServeConfig {
             flush_us: doc.int_or("serve", "flush_us", d.flush_us as i64) as u64,
             queue_cap: doc.int_or("serve", "queue_cap", d.queue_cap as i64) as usize,
             seq_len: doc.int_or("serve", "seq_len", d.seq_len as i64) as usize,
+            tree_cache: doc.int_or("serve", "tree_cache", d.tree_cache as i64) as usize,
         }
     }
 }
@@ -525,6 +531,16 @@ empty = []
         assert!(c.validate().is_err());
         c = ModelConfig { top_k: 10_000, ..Default::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn serve_config_tree_cache_knob() {
+        assert_eq!(ServeConfig::default().tree_cache, 64);
+        let doc = Document::parse("[serve]\ntree_cache = 8\n").unwrap();
+        let sc = ServeConfig::from_doc(&doc);
+        assert_eq!(sc.tree_cache, 8);
+        let off = Document::parse("[serve]\ntree_cache = 0\n").unwrap();
+        assert_eq!(ServeConfig::from_doc(&off).tree_cache, 0);
     }
 
     #[test]

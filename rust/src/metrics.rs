@@ -161,6 +161,21 @@ impl LatencyHistogram {
             self.percentile_us(100.0),
         )
     }
+
+    /// Machine-readable JSON object of the same summary — the unit the
+    /// `BENCH_*.json` perf-trajectory artifacts are built from, so
+    /// successive PRs can regress against recorded numbers.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"n\": {}, \"mean_us\": {:.2}, \"p50_us\": {:.2}, \"p95_us\": {:.2}, \"p99_us\": {:.2}, \"max_us\": {:.2}}}",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.percentile_us(100.0),
+        )
+    }
 }
 
 /// Simple wall-clock throughput meter.
@@ -283,6 +298,20 @@ mod tests {
         assert!((h.percentile_us(99.0) - 99.0).abs() <= 1.0);
         assert!((h.mean_us() - 50.5).abs() < 1e-9);
         assert!(h.summary().contains("n=100"));
+    }
+
+    #[test]
+    fn histogram_json_is_well_formed() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10 {
+            h.record_us(i as f64 * 100.0);
+        }
+        let j = h.json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        for key in ["\"n\"", "\"mean_us\"", "\"p50_us\"", "\"p95_us\"", "\"p99_us\"", "\"max_us\""] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert!(j.contains("\"n\": 10"));
     }
 
     #[test]

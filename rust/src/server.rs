@@ -7,6 +7,9 @@
 //!   request:  magic "BSRQ" | n u32 | d u32 | f u32 | coords n*d f32 | feats n*f f32
 //!   response: magic "BSRS" | status u32 (0 = ok) | n u32 | o u32 | preds n*o f32
 //!             on error: status 1 | msg_len u32 | msg bytes
+//!   stats:    magic "BSST" (no body) → "BSRS" | status 2 | len u32 | json bytes
+//!             (router counters incl. ball-tree cache hits/misses — the
+//!             serving hot path's observability surface)
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,6 +21,7 @@ use crate::tensor::Tensor;
 
 const REQ_MAGIC: &[u8; 4] = b"BSRQ";
 const RESP_MAGIC: &[u8; 4] = b"BSRS";
+const STATS_MAGIC: &[u8; 4] = b"BSST";
 /// Hard cap on points per request (sanity bound for the wire format).
 const MAX_POINTS: u32 = 1 << 22;
 
@@ -80,6 +84,11 @@ fn handle_conn(mut stream: TcpStream, router: &Router, stop: &AtomicBool) -> any
         }
         stream.set_read_timeout(None)?;
         stream.read_exact(&mut magic[1..])?;
+        if &magic == STATS_MAGIC {
+            write_stats(&mut stream, router)?;
+            stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+            continue;
+        }
         anyhow::ensure!(&magic == REQ_MAGIC, "bad request magic {magic:?}");
         let result = read_request_body(&mut stream);
         stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
@@ -125,6 +134,23 @@ fn write_ok(stream: &mut TcpStream, pred: &Tensor) -> anyhow::Result<()> {
     for x in pred.data() {
         buf.extend_from_slice(&x.to_le_bytes());
     }
+    stream.write_all(&buf)?;
+    Ok(())
+}
+
+fn write_stats(stream: &mut TcpStream, router: &Router) -> anyhow::Result<()> {
+    let st = router.stats();
+    let json = format!(
+        "{{\"served\": {}, \"rejected\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
+         \"tree_hits\": {}, \"tree_misses\": {}, \"latency\": \"{}\"}}",
+        st.served, st.rejected, st.batches, st.mean_batch, st.tree_hits, st.tree_misses,
+        st.latency_summary,
+    );
+    let mut buf = Vec::with_capacity(12 + json.len());
+    buf.extend_from_slice(RESP_MAGIC);
+    buf.extend_from_slice(&2u32.to_le_bytes());
+    buf.extend_from_slice(&(json.len() as u32).to_le_bytes());
+    buf.extend_from_slice(json.as_bytes());
     stream.write_all(&buf)?;
     Ok(())
 }
@@ -186,6 +212,21 @@ impl Client {
         let ro = read_u32(&mut self.stream)? as usize;
         let data = read_f32s(&mut self.stream, rn * ro)?;
         Ok(Tensor::new(vec![rn, ro], data))
+    }
+
+    /// Query router statistics (JSON string; see the frame docs above).
+    pub fn stats(&mut self) -> anyhow::Result<String> {
+        self.stream.write_all(STATS_MAGIC)?;
+        let mut magic = [0u8; 4];
+        self.stream.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == RESP_MAGIC, "bad response magic");
+        let status = read_u32(&mut self.stream)?;
+        anyhow::ensure!(status == 2, "expected stats frame, got status {status}");
+        let len = read_u32(&mut self.stream)? as usize;
+        anyhow::ensure!(len < 65536, "oversized stats payload");
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf)?;
+        Ok(String::from_utf8(buf)?)
     }
 }
 

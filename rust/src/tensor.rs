@@ -102,13 +102,30 @@ impl Tensor {
 
     /// Permute rows (axis 0 of the (rows, cols) view): out[i] = self[perm[i]].
     pub fn permute_rows(&self, perm: &[usize]) -> Tensor {
-        let c = self.cols();
         assert_eq!(perm.len(), self.rows(), "perm len");
-        let mut out = Vec::with_capacity(self.data.len());
-        for &p in perm {
-            out.extend_from_slice(&self.data[p * c..(p + 1) * c]);
-        }
+        let mut out = vec![0.0f32; self.data.len()];
+        self.permute_rows_into(perm, &mut out);
         Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// Gather rows into a caller-owned buffer: out row i = self[perm[i]].
+    ///
+    /// Unlike [`permute_rows`](Self::permute_rows), `perm` need not be a
+    /// permutation — indices may repeat or cover a subset (this is what
+    /// ball-tree padding produces) — and no allocation is performed, which
+    /// is why the serving batch assembler uses it. `out` must hold exactly
+    /// `perm.len() * cols` elements.
+    pub fn permute_rows_into(&self, perm: &[usize], out: &mut [f32]) {
+        let c = self.cols();
+        assert_eq!(out.len(), perm.len() * c, "permute_rows_into out len");
+        for (dst, &p) in out.chunks_exact_mut(c).zip(perm) {
+            self.copy_row_into(p, dst);
+        }
+    }
+
+    /// Copy one row into a caller-owned buffer of length `cols`.
+    pub fn copy_row_into(&self, i: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row(i));
     }
 
     /// Mean of all elements.
@@ -176,8 +193,16 @@ impl Tensor {
     /// collapses leading dims: shape (len, cols).
     pub fn slice_rows(&self, start: usize, len: usize) -> Tensor {
         let c = self.cols();
-        let data = self.data[start * c..(start + len) * c].to_vec();
-        Tensor { shape: vec![len, c], data }
+        Tensor { shape: vec![len, c], data: self.slice_rows_view(start, len).to_vec() }
+    }
+
+    /// Borrowed view of rows [start, start+len) as a flat `(len * cols)`
+    /// slice — the zero-copy counterpart of [`slice_rows`](Self::slice_rows)
+    /// for consumers that only read (e.g. per-request prediction
+    /// un-permutation in the serving hot path).
+    pub fn slice_rows_view(&self, start: usize, len: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[start * c..(start + len) * c]
     }
 }
 
@@ -214,6 +239,44 @@ mod tests {
             inv[j] = i;
         }
         assert_eq!(p.permute_rows(&inv), t);
+    }
+
+    #[test]
+    fn permute_rows_into_matches_allocating_and_gathers() {
+        let t = Tensor::new(vec![3, 2], vec![0., 0., 1., 1., 2., 2.]);
+        let perm = vec![2, 0, 1];
+        let mut out = vec![0.0f32; 6];
+        t.permute_rows_into(&perm, &mut out);
+        assert_eq!(out.as_slice(), t.permute_rows(&perm).data());
+        // gather semantics: repeats and subsets are allowed
+        let gather = vec![1, 1, 2, 0, 1];
+        let mut g = vec![0.0f32; 10];
+        t.permute_rows_into(&gather, &mut g);
+        assert_eq!(&g[0..2], &[1., 1.]);
+        assert_eq!(&g[8..10], &[1., 1.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn permute_rows_into_rejects_wrong_out_len() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let mut out = vec![0.0f32; 3];
+        t.permute_rows_into(&[0, 1], &mut out);
+    }
+
+    #[test]
+    fn slice_rows_view_borrows_same_data() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.slice_rows_view(1, 2), t.slice_rows(1, 2).data());
+        assert_eq!(t.slice_rows_view(0, 4), t.data());
+    }
+
+    #[test]
+    fn copy_row_into_extracts() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let mut row = [0.0f32; 3];
+        t.copy_row_into(1, &mut row);
+        assert_eq!(row, [3., 4., 5.]);
     }
 
     #[test]

@@ -182,6 +182,44 @@ fn router_serves_and_unpermutes() {
 }
 
 #[test]
+fn router_tree_cache_is_semantically_invisible() {
+    // Serving the same geometry with the ball-tree cache off, cold (first
+    // touch with cache on), and hot (cache hit) must produce bit-identical
+    // predictions — the cache only skips work, never changes it.
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let params: Vec<Tensor> = init
+        .run(&[scalar_i32(0)])
+        .unwrap()
+        .iter()
+        .map(|l| literal_to_tensor(l).unwrap())
+        .collect();
+    let gen = generator_for("syn", 8).unwrap();
+    let sample = gen.generate(0, 190);
+
+    let sc_off = ServeConfig { workers: 1, flush_us: 100, tree_cache: 0, ..Default::default() };
+    let r_off =
+        Router::start(engine.clone(), &format!("fwd_{TINY}"), params.clone(), sc_off).unwrap();
+    let p_off = r_off
+        .infer(sample.coords.clone(), sample.features.clone())
+        .unwrap();
+    let st_off = r_off.shutdown();
+    assert_eq!((st_off.tree_hits, st_off.tree_misses), (0, 1));
+
+    let sc_on = ServeConfig { workers: 1, flush_us: 100, tree_cache: 8, ..Default::default() };
+    let r_on = Router::start(engine, &format!("fwd_{TINY}"), params, sc_on).unwrap();
+    let p_cold = r_on
+        .infer(sample.coords.clone(), sample.features.clone())
+        .unwrap();
+    let p_hot = r_on.infer(sample.coords, sample.features).unwrap();
+    let st_on = r_on.shutdown();
+    assert_eq!(st_on.tree_misses, 1, "one build for the repeated geometry");
+    assert!(st_on.tree_hits >= 1, "second request must hit the cache");
+    assert_eq!(p_cold.data(), p_off.data(), "cache-enabled cold != cache-off");
+    assert_eq!(p_hot.data(), p_cold.data(), "cache hit changed the prediction");
+}
+
+#[test]
 fn router_rejects_malformed_requests() {
     let Some(engine) = engine() else { return };
     let init = engine.load(&format!("init_{TINY}")).unwrap();
@@ -204,6 +242,17 @@ fn router_rejects_malformed_requests() {
     let coords = Tensor::zeros(vec![512, 3]);
     let feats = Tensor::zeros(vec![512, 6]);
     assert!(router.infer(coords, feats).is_err());
+
+    // empty point cloud errors cleanly (must not panic the worker)
+    let coords = Tensor::zeros(vec![0, 3]);
+    let feats = Tensor::zeros(vec![0, 6]);
+    assert!(router.infer(coords, feats).is_err());
+
+    // the (sole) worker survived all of the above and still serves
+    let gen = generator_for("syn", 5).unwrap();
+    let s = gen.generate(0, 200);
+    let pred = router.infer(s.coords, s.features).unwrap();
+    assert_eq!(pred.shape(), &[200, 1]);
 }
 
 #[test]
@@ -310,6 +359,13 @@ fn tcp_server_roundtrip() {
     let pred = client.predict(&sample.coords, &sample.features).unwrap();
     assert_eq!(pred.shape(), &[180, 1]);
     assert!(pred.all_finite());
+
+    // stats frame interleaves with predictions on the same connection
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("\"served\""), "stats json: {stats}");
+    assert!(stats.contains("\"tree_misses\""), "stats json: {stats}");
+    let pred2 = client.predict(&sample.coords, &sample.features).unwrap();
+    assert_eq!(pred2.shape(), &[180, 1]);
 
     stop.store(true, std::sync::atomic::Ordering::SeqCst);
     srv.join().unwrap().unwrap();

@@ -81,6 +81,74 @@ fn prop_balltree_deterministic() {
 }
 
 // ---------------------------------------------------------------------------
+// tensor gather invariants (the serving batch assembler's zero-copy path)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_permute_rows_into_roundtrips_and_matches_allocating() {
+    forall(40, |g| {
+        let rows = g.usize_in(1..40);
+        let cols = g.usize_in(1..8);
+        let t = cloud(g, rows, cols);
+        let mut perm: Vec<usize> = (0..rows).collect();
+        let mut rng = Rng::new(g.case ^ 0x5a5a);
+        rng.shuffle(&mut perm);
+
+        // `_into` agrees with the allocating permute_rows
+        let mut out = vec![f32::NAN; rows * cols];
+        t.permute_rows_into(&perm, &mut out);
+        assert_eq!(out.as_slice(), t.permute_rows(&perm).data());
+
+        // inverse permutation restores the original exactly
+        let mut inv = vec![0usize; rows];
+        for (i, &p) in perm.iter().enumerate() {
+            inv[p] = i;
+        }
+        let permuted = Tensor::new(vec![rows, cols], out);
+        let mut back = vec![f32::NAN; rows * cols];
+        permuted.permute_rows_into(&inv, &mut back);
+        assert_eq!(back.as_slice(), t.data());
+
+        // gather semantics: arbitrary index lists (repeats, subsets) —
+        // exactly what ball-tree padding produces — copy the right rows
+        let glen = g.usize_in(1..2 * rows + 1);
+        let gather: Vec<usize> = (0..glen).map(|_| rng.below(rows)).collect();
+        let mut gout = vec![f32::NAN; glen * cols];
+        t.permute_rows_into(&gather, &mut gout);
+        for (i, &p) in gather.iter().enumerate() {
+            assert_eq!(&gout[i * cols..(i + 1) * cols], t.row(p));
+        }
+    });
+}
+
+#[test]
+fn prop_balltree_cache_transparent_for_preprocessing() {
+    // A cache hit must be indistinguishable from a fresh build: same
+    // permutation, and bit-identical permuted features via the `_into`
+    // gather used by the serving batch assembler.
+    use bsa::balltree::{content_hash, BallTreeCache};
+    let cache = BallTreeCache::new(8);
+    forall(15, |g| {
+        let target = g.pow2_in(64, 256);
+        let n = g.usize_in(target / 2 + 1..target + 1);
+        let f = g.usize_in(1..6);
+        let pts = cloud(g, n, 3);
+        let feats = cloud(g, n, f);
+        let first = cache.get_or_build(&pts, target);
+        let second = cache.get_or_build(&pts, target);
+        let fresh = BallTree::build(&pts, target, content_hash(&pts));
+        assert_eq!(first.perm, fresh.perm);
+        assert_eq!(second.perm, fresh.perm);
+        let mut a = vec![0.0f32; target * f];
+        let mut b = vec![0.0f32; target * f];
+        second.permute_features_into(&feats, &mut a);
+        fresh.permute_features_into(&feats, &mut b);
+        assert_eq!(a, b);
+    });
+    assert!(cache.hits() >= 15, "every second lookup must hit");
+}
+
+// ---------------------------------------------------------------------------
 // dataset / normalization invariants (training-state correctness)
 // ---------------------------------------------------------------------------
 

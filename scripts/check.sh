@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# One-command gate: tier-1 build+tests, lints, and the serving perf
+# artifact (BENCH_serve.json) in smoke mode. CI and pre-PR runs use this
+# so the correctness gate and the perf trajectory can't drift apart.
+#
+#   scripts/check.sh            # full gate
+#   BENCH_REPS=5 scripts/check.sh   # heavier perf sampling
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REPS="${BENCH_REPS:-1}"
+
+(
+  cd rust
+  echo "== cargo build --release"
+  cargo build --release
+  echo "== cargo test -q"
+  cargo test -q
+  echo "== cargo clippy --all-targets -- -D warnings"
+  cargo clippy --all-targets -- -D warnings
+  echo "== serve_hot_path bench (smoke, --reps ${REPS})"
+  cargo bench --bench paper -- serve_hot_path --reps "${REPS}"
+)
+
+echo "check.sh: all gates passed; BENCH_serve.json refreshed"
