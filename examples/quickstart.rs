@@ -73,7 +73,7 @@ fn run_inference(
     params: Vec<Tensor>,
     car: bsa::data::Sample,
 ) -> anyhow::Result<()> {
-    let router = Router::start(
+    let router = Router::start_pjrt(
         engine,
         &format!("fwd_{tag}"),
         params,

@@ -3,12 +3,22 @@
 //! and throughput — the serving-path half of the E2E validation.
 //!
 //!   make artifacts && cargo run --release --example serve -- [requests] [clients]
+//!
+//! Backend selection mirrors `bsa serve --backend`: with compiled
+//! artifacts present the demo serves the PJRT `fwd_bsa_air_n4096_b1`
+//! graph; on an artifact-free host it falls back to the pure-Rust
+//! [`NativeBackend`](bsa::backend::NativeBackend) at demo scale (dim 32,
+//! 2 blocks, N=1024), so the example runs anywhere. Native weights come
+//! from a seeded init here; for trained weights pass a `.bsackpt` param
+//! file to `bsa serve --backend native --params <file>` (the flat-binary
+//! named-array format documented in `bsa::backend`).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use bsa::config::ServeConfig;
+use bsa::backend::NativeBackend;
+use bsa::config::{ModelConfig, ServeConfig};
 use bsa::coordinator::Router;
 use bsa::data::generator_for;
 use bsa::metrics::LatencyHistogram;
@@ -20,34 +30,58 @@ fn main() -> anyhow::Result<()> {
     let requests: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(24);
     let clients: usize = std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(3);
 
-    let engine = Arc::new(Engine::new(&Engine::default_dir())?);
-    println!("PJRT platform: {}", engine.platform());
-
-    // weights: random init (checkpointed weights via `bsa serve --checkpoint`)
-    let init = engine.load("init_bsa_air_n1024_b2")?;
-    let params: Vec<Tensor> = init
-        .run(&[scalar_i32(0)])?
-        .iter()
-        .map(literal_to_tensor)
-        .collect::<Result<_, _>>()?;
-
     let sc = ServeConfig { workers: 2, ..Default::default() };
-    let addr = "127.0.0.1:17071";
-    // prefer the XLA-fused forward graph when the bench suite is built
-    let fwd = if engine.manifest.get("fwd_bsa_air_n4096_b1_ref").is_ok() {
-        "fwd_bsa_air_n4096_b1_ref"
-    } else {
-        "fwd_bsa_air_n4096_b1"
+    // PJRT needs the engine *and* the demo graphs; a host with only a
+    // partial artifact suite must fall back too, so the whole setup is
+    // one fallible step.
+    let pjrt = (|| -> anyhow::Result<Arc<Router>> {
+        let engine = Arc::new(Engine::new(&Engine::default_dir())?);
+        println!("PJRT platform: {}", engine.platform());
+
+        // weights: random init (checkpointed weights via `bsa serve --checkpoint`)
+        let init = engine.load("init_bsa_air_n1024_b2")?;
+        let params: Vec<Tensor> = init
+            .run(&[scalar_i32(0)])?
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<_, _>>()?;
+
+        // prefer the XLA-fused forward graph when the bench suite is built
+        let fwd = if engine.manifest.get("fwd_bsa_air_n4096_b1_ref").is_ok() {
+            "fwd_bsa_air_n4096_b1_ref"
+        } else {
+            "fwd_bsa_air_n4096_b1"
+        };
+        println!("serving graph: {fwd} (pjrt)");
+        Ok(Arc::new(Router::start_pjrt(engine, fwd, params, sc.clone())?))
+    })();
+    // `n_points` stays below the backend's N so the ball-tree pad path is
+    // exercised, like ShapeNet's 3586 -> 4096.
+    let (router, n_points) = match pjrt {
+        Ok(router) => (router, 3584usize),
+        Err(e) => {
+            println!("pjrt path unavailable ({e}); serving the pure-Rust native backend");
+            let mc = ModelConfig {
+                dim: 32,
+                num_heads: 2,
+                num_blocks: 2,
+                ball_size: 64,
+                seq_len: 1024,
+                ..Default::default()
+            };
+            let backend = Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?);
+            (Arc::new(Router::start(backend, sc.clone())?), 896usize)
+        }
     };
-    println!("serving graph: {fwd}");
-    let router = Arc::new(Router::start(engine, fwd, params, sc)?);
+
+    let addr = "127.0.0.1:17071";
     let stop = Arc::new(AtomicBool::new(false));
     let srv = {
         let (router, stop, addr) = (router.clone(), stop.clone(), addr.to_string());
         std::thread::spawn(move || serve(&addr, router, stop))
     };
     std::thread::sleep(std::time::Duration::from_millis(150));
-    println!("server on {addr}; {clients} clients x {requests} requests (N=3584 -> 4096)");
+    println!("server on {addr}; {clients} clients x {requests} requests (N={n_points})");
 
     let t0 = Instant::now();
     let mut handles = vec![];
@@ -58,11 +92,11 @@ fn main() -> anyhow::Result<()> {
             let mut client = Client::connect(&addr)?;
             let mut lat = Vec::new();
             for i in 0..requests {
-                let car = gen.generate(i as u64, 3584);
+                let car = gen.generate(i as u64, n_points);
                 let t = Instant::now();
                 let pred = client.predict(&car.coords, &car.features)?;
                 lat.push(t.elapsed().as_secs_f64() * 1e6);
-                anyhow::ensure!(pred.rows() == 3584, "wrong prediction size");
+                anyhow::ensure!(pred.rows() == n_points, "wrong prediction size");
                 anyhow::ensure!(pred.all_finite(), "non-finite prediction");
             }
             Ok(lat)

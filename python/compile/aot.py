@@ -273,6 +273,36 @@ def _emit(out_dir, fname, lower_thunk, force):
     return True
 
 
+def write_param_file(path, names, arrays, step=0):
+    """Write named f32 arrays in the `.bsackpt` flat-binary container.
+
+    Layout (little-endian, mirrors rust/src/coordinator/checkpoint.rs):
+      magic "BSAC" | version u32 | step u64 | count u32
+      per array: name_len u32 | name bytes | ndims u32 | dims u32... | f32 data
+
+    This is the native rust backend's parameter interchange
+    (rust/src/backend/params.rs): emitting it next to the HLO artifacts
+    lets `bsa serve --backend native --params artifacts/params_<tag>.bsackpt`
+    serve the exact weights the compiled init graph would produce.
+    """
+    import struct
+
+    import numpy as np
+
+    with open(path, "wb") as f:
+        f.write(b"BSAC")
+        f.write(struct.pack("<IQI", 1, step, len(arrays)))
+        for name, arr in zip(names, arrays):
+            a = np.asarray(arr, dtype="<f4")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes())
+
+
 def lower_spec(spec: Spec, out_dir: str, mf: ManifestWriter, force: bool) -> None:
     cfg = spec.cfg()
     cfg.validate(spec.n)
@@ -302,6 +332,19 @@ def lower_spec(spec: Spec, out_dir: str, mf: ManifestWriter, force: bool) -> Non
         in_names=pnames + ["x"], out_names=["pred"],
     )
     print(f"  fwd_{tag}: {'wrote' if wrote else 'cached'}")
+
+    # native-backend param file: concrete init(seed=0) weights alongside
+    # the HLO so artifact-free rust hosts can still serve this tag's
+    # exact initialization (BSA variants only — the native backend
+    # implements the paper's bsa forward).
+    if name == "bsa":
+        pfile = os.path.join(out_dir, f"params_{tag}.bsackpt")
+        if force or not os.path.exists(pfile):
+            concrete = jax.jit(
+                lambda s: tuple(jax.tree_util.tree_leaves(model.init(name, s, cfg)))
+            )(jnp.int32(0))
+            write_param_file(pfile, pnames, concrete)
+            print(f"  params_{tag}.bsackpt: wrote")
 
     if not spec.train:
         return

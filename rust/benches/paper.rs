@@ -3,7 +3,7 @@
 //!   cargo bench -- <target> [flags]
 //!
 //! targets: table1 table2 table3 table4 table5 fig2 fig3 fig4 serve
-//!          serve_hot_path all
+//!          serve_hot_path bsa_native all
 //! flags:   --steps N (training budget per model, default 120)
 //!          --reps N  (timing repetitions, default 5; --reps 1 is the
 //!                     smoke mode scripts/check.sh uses)
@@ -13,9 +13,13 @@
 //! `serve_hot_path` measures the host-side serving hot path (cold
 //! ball-tree build vs BallTreeCache hit, plus end-to-end router latency
 //! when artifacts are present) and writes the machine-readable
-//! `BENCH_serve.json` perf-trajectory artifact. Host-side targets run
-//! even when no compiled artifacts exist; engine-dependent targets are
-//! skipped with a note.
+//! `BENCH_serve.json` perf-trajectory artifact. `bsa_native` measures
+//! the pure-Rust BSA forward pass (p50/p95 vs N, native vs pjrt at the
+//! tiny config when artifacts exist, end-to-end native router) and
+//! writes `BENCH_native.json` — it needs no artifacts at all, so the
+//! perf gate runs end-to-end on artifact-free hosts. Host-side targets
+//! run even when no compiled artifacts exist; engine-dependent targets
+//! are skipped with a note.
 //!
 //! Requires `make artifacts-bench`. Results are written both to stdout
 //! (markdown tables mirroring the paper's) and to `bench_results/*.md`;
@@ -165,6 +169,9 @@ fn main() -> anyhow::Result<()> {
     }
     if all || o.target == "serve_hot_path" {
         serve_hot_path(engine.as_ref(), &o)?;
+    }
+    if all || o.target == "bsa_native" {
+        bsa_native(engine.as_ref(), &o)?;
     }
     Ok(())
 }
@@ -318,7 +325,7 @@ fn table3(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
                 }
             }
         }
-        let gf = model_flops(v, &cfg).gflops();
+        let gf = model_flops(v, &cfg)?.gflops();
         t.row(&[
             disp.to_string(),
             xla_ms,
@@ -570,7 +577,7 @@ fn batching(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
     let mut content = String::from("## dynamic batcher (B=4 compiled batch, N=1024)\n\n");
     for (label, workers, concurrent) in [("sequential", 1usize, false), ("concurrent", 1usize, true)] {
         let sc = ServeConfig { workers, flush_us: 30_000, ..Default::default() };
-        let router = Arc::new(Router::start(engine.clone(), graph, params.clone(), sc)?);
+        let router = Arc::new(Router::start_pjrt(engine.clone(), graph, params.clone(), sc)?);
         let t0 = Instant::now();
         if concurrent {
             // fire all requests before collecting: lets the batcher fill
@@ -626,7 +633,7 @@ fn serve_bench(engine: &Arc<Engine>, o: &Opts) -> anyhow::Result<()> {
         "fwd_bsa_air_n4096_b1"
     };
     let sc = ServeConfig { workers: 2, ..Default::default() };
-    let router = Arc::new(Router::start(engine.clone(), fwd, params, sc)?);
+    let router = Arc::new(Router::start_pjrt(engine.clone(), fwd, params, sc)?);
 
     let gen = generator_for("air", 3)?;
     let reqs = 4 * o.reps.max(2);
@@ -765,14 +772,14 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
             // routers share the compiled executable via the engine cache).
             {
                 let sc = ServeConfig { workers: 1, tree_cache: 0, ..Default::default() };
-                let warm = Router::start(engine.clone(), fwd, params.clone(), sc)?;
+                let warm = Router::start_pjrt(engine.clone(), fwd, params.clone(), sc)?;
                 warm.infer(samples[0].coords.clone(), samples[0].features.clone())?;
                 warm.shutdown();
             }
             let mut parts = Vec::new();
             for (label, cap) in [("cold", 0usize), ("cached", 64usize)] {
                 let sc = ServeConfig { workers: 2, tree_cache: cap, ..Default::default() };
-                let router = Router::start(engine.clone(), fwd, params.clone(), sc)?;
+                let router = Router::start_pjrt(engine.clone(), fwd, params.clone(), sc)?;
                 let t0 = Instant::now();
                 for i in 0..total {
                     let s = &samples[i % samples.len()];
@@ -852,4 +859,169 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
         dest.display()
     ));
     emit(&o.out, "serve_hot_path", &content)
+}
+
+// ---------------------------------------------------------------------------
+// bsa_native: pure-Rust forward latency + native-vs-pjrt + BENCH_native.json
+// ---------------------------------------------------------------------------
+
+/// Measure the native BSA forward pass the way `serve_hot_path` measures
+/// preprocessing: machine-readable p50/p95 so the next PR can regress
+/// against it, on *any* host. Three levels:
+///
+/// 1. forward p50/p95 vs N for the demo-scale architecture (dim 32,
+///    2 blocks — the native twin of the tiny core artifact);
+/// 2. native vs pjrt on the same architecture at N=256 when the compiled
+///    `fwd_bsa_syn_n256_b1` graph is present;
+/// 3. end-to-end through the native `Router` (batching + ball-tree
+///    cache + forward) — proof the serving stack runs artifact-free.
+fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
+    use bsa::backend::{Backend, NativeBackend};
+    use bsa::config::ServeConfig;
+    use bsa::coordinator::Router;
+    use bsa::metrics::LatencyHistogram;
+
+    let reps = o.reps.max(1);
+    let arch = |n: usize| ModelConfig {
+        dim: 32,
+        num_heads: 2,
+        num_blocks: 2,
+        ball_size: 64,
+        seq_len: n,
+        ..Default::default()
+    };
+
+    // --- level 1: forward p50/p95 vs N ----------------------------------
+    let mut t = Table::new(&["N", "p50 ms", "p95 ms", "analytic GFLOP"]);
+    let mut fwd_json = Vec::new();
+    for n in [256usize, 512, 1024, 2048, 4096] {
+        if n > o.max_n {
+            continue;
+        }
+        let mc = arch(n);
+        let be = NativeBackend::init(0, &mc, 6, 1, 1)?;
+        let x = {
+            let mut rng = bsa::prng::Rng::new(n as u64);
+            Tensor::new(vec![1, n, 6], rng.normals(n * 6))
+        };
+        let _ = be.forward(&x)?; // warmup
+        let mut hist = LatencyHistogram::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let out = be.forward(&x)?;
+            std::hint::black_box(&out);
+            hist.record_us(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let (p50, p95) = (hist.percentile_us(50.0), hist.percentile_us(95.0));
+        let gf = model_flops("bsa", &mc)?.gflops();
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", p50 / 1e3),
+            format!("{:.2}", p95 / 1e3),
+            format!("{gf:.3}"),
+        ]);
+        fwd_json.push(format!(
+            "{{\"n\": {n}, \"p50_us\": {p50:.1}, \"p95_us\": {p95:.1}}}"
+        ));
+    }
+
+    // --- level 2: native vs pjrt at the tiny config ----------------------
+    let mut pjrt_json = String::from("{\"available\": false}");
+    let mut pjrt_line = String::from(
+        "pjrt comparison: artifacts unavailable (native-only run)\n",
+    );
+    if let Some(engine) = engine {
+        let run = (|| -> anyhow::Result<(String, String)> {
+            let init = engine.load("init_bsa_syn_n256_b1")?;
+            let fwd = engine.load("fwd_bsa_syn_n256_b1")?;
+            let params = init.run(&[scalar_i32(0)])?;
+            let x = {
+                let mut rng = bsa::prng::Rng::new(256);
+                Tensor::new(vec![1, 256, 6], rng.normals(256 * 6))
+            };
+            let _ = fwd.run_with_tensors(&params, &[&x])?; // warmup
+            let mut hist = LatencyHistogram::new();
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                let out = fwd.run_with_tensors(&params, &[&x])?;
+                std::hint::black_box(&out);
+                hist.record_us(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            let (p50, p95) = (hist.percentile_us(50.0), hist.percentile_us(95.0));
+            Ok((
+                format!(
+                    "{{\"available\": true, \"graph\": \"fwd_bsa_syn_n256_b1\", \
+                     \"p50_us\": {p50:.1}, \"p95_us\": {p95:.1}}}"
+                ),
+                format!("pjrt fwd_bsa_syn_n256_b1: p50={p50:.0}us p95={p95:.0}us\n"),
+            ))
+        })();
+        match run {
+            Ok((j, l)) => {
+                pjrt_json = j;
+                pjrt_line = l;
+            }
+            Err(e) => println!("  (pjrt comparison skipped: {e})"),
+        }
+    }
+
+    // --- level 3: end-to-end native router (artifact-free serving) ------
+    let mc = arch(256);
+    let backend = Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?);
+    let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
+    let router = Router::start(backend, sc)?;
+    let gen = generator_for("syn", 13)?;
+    let total = (4 * reps).max(8);
+    let t0 = Instant::now();
+    for i in 0..total {
+        let s = gen.generate((i % 4) as u64, 224);
+        let p = router.infer(s.coords, s.features)?;
+        std::hint::black_box(&p);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (rp50, rp95) = (router.latency_us(50.0), router.latency_us(95.0));
+    let st = router.shutdown();
+    let router_json = format!(
+        "{{\"requests\": {total}, \"req_per_s\": {:.3}, \"p50_us\": {rp50:.1}, \
+         \"p95_us\": {rp95:.1}, \"tree_hits\": {}, \"tree_misses\": {}}}",
+        total as f64 / wall,
+        st.tree_hits,
+        st.tree_misses
+    );
+
+    // --- artifact assembly ------------------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"bsa_native\",\n  \"reps\": {reps},\n  \
+         \"arch\": {{\"dim\": 32, \"heads\": 2, \"blocks\": 2, \"ball\": 64}},\n  \
+         \"forward\": [{}],\n  \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
+        fwd_json.join(", ")
+    );
+    // BENCH_native.json lives next to ROADMAP.md (the per-PR perf
+    // trajectory); cargo runs benches from rust/, so look one level up.
+    let dest = if Path::new("../ROADMAP.md").exists() {
+        PathBuf::from("../BENCH_native.json")
+    } else {
+        PathBuf::from("BENCH_native.json")
+    };
+    std::fs::write(&dest, &json)?;
+    std::fs::write(o.out.join("bsa_native.json"), &json)?;
+
+    let mut content = format!(
+        "## bsa_native — pure-Rust BSA forward (dim 32, 2 blocks, {reps} reps)\n\n"
+    );
+    content.push_str(&t.render());
+    content.push('\n');
+    content.push_str(&pjrt_line);
+    content.push_str(&format!(
+        "native router e2e: {total} reqs, {:.2} req/s, p50={rp50:.0}us p95={rp95:.0}us, \
+         tree hits/misses {}/{}\n",
+        total as f64 / wall,
+        st.tree_hits,
+        st.tree_misses
+    ));
+    content.push_str(&format!(
+        "machine-readable trajectory written to {}\n",
+        dest.display()
+    ));
+    emit(&o.out, "bsa_native", &content)
 }

@@ -1,0 +1,322 @@
+//! Native CPU ports of the BSA attention kernels.
+//!
+//! Each function mirrors its pure-jnp oracle in
+//! `python/compile/kernels/ref.py` — same shapes, same masking constants,
+//! same top-k tie-breaking — so the [`NativeBackend`](super::NativeBackend)
+//! can serve as a semantic parity check for the compiled graphs. All
+//! operands are flat row-major `(N, d)` slices for one attention head;
+//! the model layer folds batch and heads before calling in here, exactly
+//! like the jax side folds `(B, N, C)` to `(B*H, N, dh)`.
+//!
+//! Notation follows the paper (Sec. 2): ball size `m`, compression block
+//! `l`, selection group `g`, `k*` selected blocks.
+
+use super::linalg::{matmul, matmul_nt, softmax_rows};
+
+/// Mask value matching `ref.py::NEG_INF`: large but finite so an
+/// all-masked row softmaxes to uniform instead of NaN.
+pub const NEG_INF: f32 = -1e30;
+
+/// Dense scaled-dot-product attention: `out = softmax(q k^T * scale) v`.
+///
+/// `q` is `(nq, d)`, `k`/`v` are `(nk, d)`, `out` is `(nq, d)`.
+/// `scores` is caller-owned scratch, resized to `nq * nk`.
+#[allow(clippy::too_many_arguments)]
+pub fn attend(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    scores.resize(nq * nk, 0.0);
+    matmul_nt(q, k, nq, d, nk, scores);
+    for s in scores.iter_mut() {
+        *s *= scale;
+    }
+    softmax_rows(scores, nq, nk);
+    matmul(scores, v, nq, nk, d, out);
+}
+
+/// Ball attention (paper eq. 3): full attention inside disjoint balls of
+/// `ball_size` tokens. `q`/`k`/`v`/`out` are `(n, d)` with
+/// `n % ball_size == 0` (the ball tree guarantees this by padding).
+#[allow(clippy::too_many_arguments)]
+pub fn ball_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    ball_size: usize,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    assert_eq!(n % ball_size, 0, "n must be divisible by ball size");
+    let scale = 1.0 / (d as f32).sqrt();
+    let chunk = ball_size * d;
+    for b in 0..n / ball_size {
+        let r = b * chunk..(b + 1) * chunk;
+        attend(
+            &q[r.clone()],
+            &k[r.clone()],
+            &v[r.clone()],
+            ball_size,
+            ball_size,
+            d,
+            scale,
+            &mut out[r],
+            scores,
+        );
+    }
+}
+
+/// Compression pooling phi = mean (paper eq. 5): mean-pool
+/// non-overlapping blocks of `block` tokens, `(n, d) -> (n/block, d)`.
+pub fn compress_mean(x: &[f32], n: usize, d: usize, block: usize, out: &mut [f32]) {
+    assert_eq!(n % block, 0, "n must be divisible by block");
+    let nb = n / block;
+    assert_eq!(out.len(), nb * d, "compress out len");
+    let inv = 1.0 / block as f32;
+    for b in 0..nb {
+        let orow = &mut out[b * d..(b + 1) * d];
+        orow.fill(0.0);
+        for t in 0..block {
+            let xrow = &x[(b * block + t) * d..(b * block + t + 1) * d];
+            for (o, &v) in orow.iter_mut().zip(xrow) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Group-averaged importance scores S-bar (paper eq. 12): scores of the
+/// group-mean query against each compressed key, **unscaled** (they only
+/// rank blocks, matching `ref_group_scores`). `q` is `(n, d)`, `kc` is
+/// `(nb, d)`, `out` is `(n/group, nb)`; `qg` is `(n/group) * d` scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn group_scores(
+    q: &[f32],
+    kc: &[f32],
+    n: usize,
+    d: usize,
+    group: usize,
+    nb: usize,
+    qg: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(n % group, 0, "n must be divisible by group");
+    let groups = n / group;
+    qg.resize(groups * d, 0.0);
+    compress_mean(q, n, d, group, qg);
+    matmul_nt(qg, kc, groups, d, nb, out);
+}
+
+/// Mask scores of compressed blocks inside the query group's own ball
+/// (paper Sec. 3.2): selection should reach *outside* the coverage ball
+/// attention already provides. `scores` is `(groups, nb)`.
+pub fn mask_own_ball(scores: &mut [f32], groups: usize, nb: usize, group: usize, cmp_block: usize, ball_size: usize) {
+    assert_eq!(scores.len(), groups * nb, "mask scores len");
+    for gi in 0..groups {
+        let gball = gi * group / ball_size;
+        let row = &mut scores[gi * nb..(gi + 1) * nb];
+        for (bi, s) in row.iter_mut().enumerate() {
+            if bi * cmp_block / ball_size == gball {
+                *s = NEG_INF;
+            }
+        }
+    }
+}
+
+/// Top-k block indices per score row, ascending-sorted (contiguous
+/// gathers downstream). Implemented as k rounds of first-max
+/// argmax-and-suppress, bit-matching `ref_topk_indices` (which avoids
+/// `lax.top_k` for AOT-toolchain reasons; k* is 4 in the paper, so the
+/// loop is tiny either way).
+pub fn topk_indices(scores: &[f32], groups: usize, nb: usize, k: usize, out: &mut Vec<usize>) {
+    assert_eq!(scores.len(), groups * nb, "topk scores len");
+    assert!(k <= nb, "top_k {k} exceeds block count {nb}");
+    out.clear();
+    out.reserve(groups * k);
+    let mut row = vec![0.0f32; nb];
+    for gi in 0..groups {
+        row.copy_from_slice(&scores[gi * nb..(gi + 1) * nb]);
+        let base = out.len();
+        for _ in 0..k {
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for (i, &v) in row.iter().enumerate() {
+                // strict > keeps the first occurrence on ties (jnp.argmax)
+                if v > bv {
+                    bv = v;
+                    best = i;
+                }
+            }
+            out.push(best);
+            row[best] -= 2e30;
+        }
+        out[base..base + k].sort_unstable();
+    }
+}
+
+/// Grouped selection attention (paper eqs. 6-8, 10-12): every query in
+/// group `p` attends the `k*` selected blocks of `sel_block` tokens given
+/// by `idx[p]`. `q`/`k`/`v`/`out` are `(n, d)`; `idx` is `groups * k`
+/// flat; `ksel`/`vsel` are `k * sel_block * d` scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn select_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    idx: &[usize],
+    n: usize,
+    d: usize,
+    sel_block: usize,
+    group: usize,
+    top_k: usize,
+    out: &mut [f32],
+    ksel: &mut Vec<f32>,
+    vsel: &mut Vec<f32>,
+    scores: &mut Vec<f32>,
+) {
+    assert_eq!(n % group, 0, "n must be divisible by group");
+    let groups = n / group;
+    assert_eq!(idx.len(), groups * top_k, "idx len");
+    let scale = 1.0 / (d as f32).sqrt();
+    let blk = sel_block * d;
+    ksel.resize(top_k * blk, 0.0);
+    vsel.resize(top_k * blk, 0.0);
+    for p in 0..groups {
+        for (j, &bi) in idx[p * top_k..(p + 1) * top_k].iter().enumerate() {
+            debug_assert!((bi + 1) * blk <= k.len(), "block index {bi} out of range");
+            ksel[j * blk..(j + 1) * blk].copy_from_slice(&k[bi * blk..(bi + 1) * blk]);
+            vsel[j * blk..(j + 1) * blk].copy_from_slice(&v[bi * blk..(bi + 1) * blk]);
+        }
+        let qr = p * group * d..(p + 1) * group * d;
+        attend(
+            &q[qr.clone()],
+            ksel,
+            vsel,
+            group,
+            top_k * sel_block,
+            d,
+            scale,
+            &mut out[qr],
+            scores,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normals(n)
+    }
+
+    #[test]
+    fn attend_uniform_when_keys_identical() {
+        // identical keys => uniform weights => output = mean of values
+        let d = 4;
+        let q = rand(d, 0);
+        let k = [vec![1.0f32; d], vec![1.0f32; d]].concat();
+        let v = [vec![2.0f32; d], vec![4.0f32; d]].concat();
+        let mut out = vec![0.0f32; d];
+        let mut s = Vec::new();
+        attend(&q, &k, &v, 1, 2, d, 0.5, &mut out, &mut s);
+        for &o in &out {
+            assert!((o - 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ball_attention_is_blockwise_dense() {
+        // one ball spanning everything == plain dense attention
+        let (n, d) = (8, 4);
+        let q = rand(n * d, 1);
+        let k = rand(n * d, 2);
+        let v = rand(n * d, 3);
+        let mut whole = vec![0.0f32; n * d];
+        let mut dense = vec![0.0f32; n * d];
+        let mut s = Vec::new();
+        ball_attention(&q, &k, &v, n, d, n, &mut whole, &mut s);
+        attend(&q, &k, &v, n, n, d, 1.0 / (d as f32).sqrt(), &mut dense, &mut s);
+        assert_eq!(whole, dense);
+
+        // two balls: each half ignores the other (change the far half's
+        // values, near half's output must not move)
+        let mut halves = vec![0.0f32; n * d];
+        ball_attention(&q, &k, &v, n, d, n / 2, &mut halves, &mut s);
+        let mut v2 = v.clone();
+        for x in &mut v2[n / 2 * d..] {
+            *x += 100.0;
+        }
+        let mut halves2 = vec![0.0f32; n * d];
+        ball_attention(&q, &k, &v2, n, d, n / 2, &mut halves2, &mut s);
+        assert_eq!(halves[..n / 2 * d], halves2[..n / 2 * d]);
+        assert_ne!(halves[n / 2 * d..], halves2[n / 2 * d..]);
+    }
+
+    #[test]
+    fn compress_mean_pools_blocks() {
+        // rows 0..3 constant per row, block 2 => means of row pairs
+        let x = [0.0f32, 0.0, 1.0, 1.0, 2.0, 2.0, 4.0, 4.0];
+        let mut out = vec![0.0f32; 4];
+        compress_mean(&x, 4, 2, 2, &mut out);
+        assert_eq!(out, [0.5, 0.5, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn own_ball_mask_hits_exactly_own_blocks() {
+        // n=16, group 4, cmp 2, ball 8: groups 0-1 in ball 0, blocks 0-3
+        let groups = 4;
+        let nb = 8;
+        let mut scores = vec![1.0f32; groups * nb];
+        mask_own_ball(&mut scores, groups, nb, 4, 2, 8);
+        for gi in 0..groups {
+            for bi in 0..nb {
+                let masked = scores[gi * nb + bi] == NEG_INF;
+                let same_ball = (gi * 4) / 8 == (bi * 2) / 8;
+                assert_eq!(masked, same_ball, "gi {gi} bi {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_picks_largest_sorted_and_first_on_ties() {
+        let scores = [0.1f32, 5.0, 3.0, 5.0, -1.0, 4.0];
+        let mut out = Vec::new();
+        topk_indices(&scores, 1, 6, 3, &mut out);
+        // picks: 1 (first 5.0), 3 (second 5.0), 5 (4.0) -> sorted
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn select_attention_equals_dense_when_selection_covers_all() {
+        // top_k * sel_block == n and idx = all blocks => dense attention
+        // per group of queries over the whole sequence.
+        let (n, d, l, g) = (8usize, 4usize, 2usize, 4usize);
+        let q = rand(n * d, 7);
+        let k = rand(n * d, 8);
+        let v = rand(n * d, 9);
+        let top_k = n / l;
+        let idx: Vec<usize> = (0..n / g).flat_map(|_| 0..top_k).collect();
+        let mut sel = vec![0.0f32; n * d];
+        let (mut ks, mut vs, mut sc) = (Vec::new(), Vec::new(), Vec::new());
+        select_attention(&q, &k, &v, &idx, n, d, l, g, top_k, &mut sel, &mut ks, &mut vs, &mut sc);
+        let mut dense = vec![0.0f32; n * d];
+        attend(&q, &k, &v, n, n, d, 1.0 / (d as f32).sqrt(), &mut dense, &mut sc);
+        for (a, b) in sel.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Dense f32 primitives for the native backend: GEMM, stable softmax,
+//! RMSNorm, activations.
+//!
+//! All functions operate on flat row-major slices with explicit
+//! dimensions (no `Tensor` overhead on the per-head hot loops) and are
+//! allocation-free — callers own every buffer, matching the zero-copy
+//! discipline of the serving batch assembler. The GEMM uses i-k-j loop
+//! order so the inner loop streams both the output row and the B row
+//! sequentially (the classic cache-friendly ordering for row-major
+//! operands); at the model widths involved (<= a few hundred columns)
+//! this is within a small factor of a blocked kernel and keeps the code
+//! dependency-free.
+
+/// `out = a @ b` where `a` is `(m, k)`, `b` is `(k, n)`, `out` is `(m, n)`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul a len");
+    assert_eq!(b.len(), k * n, "matmul b len");
+    assert_eq!(out.len(), m * n, "matmul out len");
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = a @ b^T` where `a` is `(m, k)`, `b` is `(n, k)`, `out` is
+/// `(m, n)` — the attention-score shape (queries against keys), where
+/// both operands are row-major and the dot products run over contiguous
+/// rows.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_nt a len");
+    assert_eq!(b.len(), n * k, "matmul_nt b len");
+    assert_eq!(out.len(), m * n, "matmul_nt out len");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            *o = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+        }
+    }
+}
+
+/// In-place row-wise softmax over a `(rows, cols)` matrix, with the
+/// standard max-subtraction so large-magnitude logits stay finite.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols, "softmax len");
+    for row in x.chunks_exact_mut(cols) {
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        // All-(-inf) rows cannot occur here (the own-ball mask uses a
+        // large finite value), but guard the division anyway.
+        if sum > 0.0 {
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+}
+
+/// Row-wise RMSNorm (Zhang & Sennrich 2019): `out = x / rms(x) * scale`
+/// with `rms = sqrt(mean(x^2) + eps)`, matching the jax reference
+/// (`model.rms_norm`, eps 1e-6).
+pub fn rms_norm(x: &[f32], scale: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), rows * cols, "rms_norm x len");
+    assert_eq!(scale.len(), cols, "rms_norm scale len");
+    assert_eq!(out.len(), rows * cols, "rms_norm out len");
+    const EPS: f32 = 1e-6;
+    for (xr, or) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for ((o, &v), &s) in or.iter_mut().zip(xr).zip(scale) {
+            *o = v * inv * s;
+        }
+    }
+}
+
+/// Add a length-`cols` bias to every row of a `(rows, cols)` matrix.
+pub fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols, "add_bias x len");
+    assert_eq!(bias.len(), cols, "add_bias bias len");
+    for row in x.chunks_exact_mut(cols) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// SiLU / swish activation: `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1., 2., 3., 4.];
+        let b = [5., 6., 7., 8.];
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul_of_transpose() {
+        let a = [1., 2., 3., 4., 5., 6.]; // (2, 3)
+        let b = [1., 0., 1., 2., 1., 0., 0., 1., 1., 1., 1., 1.]; // (4, 3)
+        let mut bt = vec![0.0f32; 12]; // (3, 4)
+        for i in 0..4 {
+            for j in 0..3 {
+                bt[j * 4 + i] = b[i * 3 + j];
+            }
+        }
+        let mut x = vec![0.0f32; 8];
+        let mut y = vec![0.0f32; 8];
+        matmul_nt(&a, &b, 2, 3, 4, &mut x);
+        matmul(&a, &bt, 2, 3, 4, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_order_preserved() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 2, 3);
+        for row in x.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row sums to {s}");
+            assert!(row[0] < row[1] && row[1] < row[2]);
+        }
+    }
+
+    #[test]
+    fn softmax_stable_under_huge_logits() {
+        let mut x = vec![1e30f32, 1e30, -1e30, 3e4, -3e4, 0.0];
+        softmax_rows(&mut x, 2, 3);
+        assert!(x.iter().all(|v| v.is_finite()));
+        let s0: f32 = x[..3].iter().sum();
+        let s1: f32 = x[3..].iter().sum();
+        assert!((s0 - 1.0).abs() < 1e-6 && (s1 - 1.0).abs() < 1e-6);
+        assert!((x[0] - 0.5).abs() < 1e-6 && (x[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rms_norm_unit_scale_normalizes() {
+        let x = vec![3.0f32, 4.0];
+        let mut out = vec![0.0f32; 2];
+        rms_norm(&x, &[1.0, 1.0], 1, 2, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-5);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bias_and_activations() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        add_bias(&mut x, &[10.0, 20.0], 2, 2);
+        assert_eq!(x, [11.0, 22.0, 13.0, 24.0]);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(silu(0.0).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3); // saturates to identity
+    }
+}

@@ -1,0 +1,111 @@
+//! Inference backends: one trait, two engines.
+//!
+//! Everything above this module — the serving [`Router`](crate::coordinator::Router),
+//! the TCP front-end, the benches — speaks to the model through the
+//! [`Backend`] trait: *"here is a permuted `(B, N, F)` feature tensor,
+//! give me `(B, N, O)` predictions"*. Two implementations exist:
+//!
+//! * [`PjrtBackend`] — wraps a compiled HLO artifact executed through the
+//!   PJRT runtime ([`runtime::Engine`](crate::runtime::Engine)). Fastest
+//!   when `make artifacts` has run; requires the artifact directory.
+//! * [`NativeBackend`] — the full BSA forward pass (ball-windowed
+//!   attention, strided block compression, top-k grouped selection,
+//!   gated merge, RMSNorm + SwiGLU trunk) in pure Rust over the crate's
+//!   [`Tensor`](crate::tensor::Tensor) substrate. Needs no artifacts, no
+//!   Python toolchain, no PJRT — the whole serving hot path (router,
+//!   ball-tree cache, zero-copy batching) runs on any host. It doubles
+//!   as the semantic parity oracle for the compiled graphs (see
+//!   `rust/tests/integration.rs::native_backend_matches_pjrt_forward`).
+//!
+//! # Parameter file format
+//!
+//! `NativeBackend` loads weights from the same flat-binary named-array
+//! container the trainer already checkpoints (`.bsackpt`, see
+//! [`checkpoint`](crate::coordinator::checkpoint)): `magic "BSAC" |
+//! version | step | count | (name, dims, f32 data)*`. Array names are the
+//! dotted pytree paths the AOT manifest uses (`blocks.0.attn.wq`,
+//! `embed_w`, …); optimizer-moment arrays (`m.*` / `v.*`) in a full
+//! training checkpoint are ignored, so a trainer checkpoint *is* a valid
+//! native param file. `python/compile/aot.py` emits `params_<tag>.bsackpt`
+//! alongside the HLO artifacts for the same purpose.
+//!
+//! Select the backend on the CLI with `bsa serve --backend native|pjrt`.
+
+pub mod kernels;
+pub mod linalg;
+pub mod native;
+pub mod params;
+pub mod pjrt;
+
+pub use native::NativeBackend;
+pub use params::NativeParams;
+pub use pjrt::PjrtBackend;
+
+use crate::tensor::Tensor;
+
+/// Static shape/identity contract a backend exposes to the router: the
+/// batcher preallocates its `(B, N, F)` input from these and validates
+/// requests against them before any tree or buffer work happens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendSpec {
+    /// Human-readable identity for logs ("pjrt:fwd_bsa_air_n4096_b1",
+    /// "native:bsa").
+    pub name: String,
+    /// Sequence length (points per sample after ball-tree padding).
+    pub n: usize,
+    /// Batch dimension the backend consumes per forward call.
+    pub batch: usize,
+    /// Per-point input features.
+    pub in_features: usize,
+    /// Per-point prediction features.
+    pub out_features: usize,
+}
+
+/// A model engine the serving stack can drive.
+///
+/// Implementations must be shareable across the worker pool
+/// (`Send + Sync`); `forward` may be called concurrently.
+pub trait Backend: Send + Sync {
+    /// Shape contract (see [`BackendSpec`]).
+    fn spec(&self) -> &BackendSpec;
+
+    /// Run the model on a ball-order-permuted `(batch, n, in_features)`
+    /// tensor; returns `(batch, n, out_features)` predictions.
+    fn forward(&self, x: &Tensor) -> anyhow::Result<Tensor>;
+}
+
+/// Which backend implementation to construct (CLI `--backend` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Compiled HLO artifacts through the PJRT runtime.
+    Pjrt,
+    /// Pure-Rust BSA forward pass (artifact-free).
+    Native,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "native" => Ok(BackendKind::Native),
+            other => Err(anyhow::anyhow!(
+                "unknown backend {other:?} (expected \"pjrt\" or \"native\")"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        let err = "xla".parse::<BackendKind>().unwrap_err().to_string();
+        assert!(err.contains("xla"), "error names the bad value: {err}");
+    }
+}

@@ -1,0 +1,428 @@
+//! Pure-Rust BSA inference: the paper's forward pass with no PJRT, no
+//! artifacts, no Python anywhere.
+//!
+//! The model is the trunk of `python/compile/model.py::bsa_forward` for
+//! the paper-default variant (mean-pooling compression, group selection,
+//! own-ball mask): `num_blocks` blocks of RMSNorm -> three-branch BSA
+//! attention -> RMSNorm -> SwiGLU, between a linear embed and a linear
+//! head. Batch and head dimensions are folded exactly like the jax side
+//! (`_split_heads`), so every kernel in [`super::kernels`] sees the same
+//! `(N, dh)` head-major operands the Pallas/ref kernels see — which is
+//! what makes this backend a usable parity oracle for the compiled HLO.
+//!
+//! Scratch buffers are allocated once per `forward` call and reused
+//! across blocks and heads; per-call cost is a handful of `Vec`s, far
+//! below the matmul work itself.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+
+use super::kernels;
+use super::linalg;
+use super::params::{BlockParams, NativeParams};
+use super::{Backend, BackendSpec};
+
+/// Sparse-attention hyperparameters the forward pass needs at run time
+/// (the *architecture* dims — width, heads, depth — live in the params).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnHyper {
+    /// Ball size m (clamped to N at construction, like aot.py).
+    pub ball_size: usize,
+    /// Compression block l (= selection block and stride, Table 4).
+    pub cmp_block: usize,
+    /// Selection group size g.
+    pub group_size: usize,
+    /// Number of selected blocks k*.
+    pub top_k: usize,
+}
+
+impl AttnHyper {
+    /// From the shared typed config (paper Table 4 defaults).
+    pub fn from_model(mc: &ModelConfig) -> AttnHyper {
+        AttnHyper {
+            ball_size: mc.ball_size,
+            cmp_block: mc.cmp_block,
+            group_size: mc.group_size,
+            top_k: mc.top_k,
+        }
+    }
+
+    /// From a compiled graph's manifest entry (parity testing).
+    pub fn from_graph(info: &crate::runtime::GraphInfo) -> AttnHyper {
+        AttnHyper {
+            ball_size: info.ball_size,
+            cmp_block: info.cmp_block,
+            group_size: info.group_size,
+            top_k: info.top_k,
+        }
+    }
+}
+
+/// The native CPU backend: BSA parameters + sparse hyperparameters +
+/// the static `(batch, n)` serving shape.
+pub struct NativeBackend {
+    params: NativeParams,
+    hyper: AttnHyper,
+    spec: BackendSpec,
+}
+
+impl NativeBackend {
+    /// Build from explicit parameters. `n` is the serving sequence
+    /// length (requests are ball-tree padded to it), `batch` the batch
+    /// size a single `forward` consumes. The ball size is clamped to
+    /// `n` exactly like aot.py clamps it at lowering.
+    pub fn new(
+        params: NativeParams,
+        mut hyper: AttnHyper,
+        n: usize,
+        batch: usize,
+    ) -> anyhow::Result<NativeBackend> {
+        params.validate()?;
+        hyper.ball_size = hyper.ball_size.min(n);
+        anyhow::ensure!(batch > 0 && n > 0, "batch and n must be positive");
+        anyhow::ensure!(n % hyper.ball_size == 0, "N {n} % ball {} != 0", hyper.ball_size);
+        anyhow::ensure!(
+            hyper.ball_size % hyper.cmp_block == 0 && hyper.ball_size % hyper.group_size == 0,
+            "ball size {} must be divisible by cmp block {} and group {}",
+            hyper.ball_size,
+            hyper.cmp_block,
+            hyper.group_size
+        );
+        anyhow::ensure!(
+            hyper.top_k <= n / hyper.cmp_block,
+            "top_k {} exceeds block count {}",
+            hyper.top_k,
+            n / hyper.cmp_block
+        );
+        let spec = BackendSpec {
+            name: format!("native:bsa_n{n}_b{batch}"),
+            n,
+            batch,
+            in_features: params.in_features(),
+            out_features: params.out_features(),
+        };
+        Ok(NativeBackend { params, hyper, spec })
+    }
+
+    /// Deterministic random-weight backend (smoke tests, latency benches,
+    /// artifact-free serving — mirrors serving a `init_<tag>` graph).
+    pub fn init(
+        seed: u64,
+        mc: &ModelConfig,
+        in_features: usize,
+        out_features: usize,
+        batch: usize,
+    ) -> anyhow::Result<NativeBackend> {
+        let params = NativeParams::init(
+            seed,
+            in_features,
+            out_features,
+            mc.dim,
+            mc.num_heads,
+            mc.num_blocks,
+            4, // SwiGLU expansion (model.py mlp_ratio default)
+        );
+        Self::new(params, AttnHyper::from_model(mc), mc.seq_len, batch)
+    }
+
+    /// Load weights from a `.bsackpt` param file or training checkpoint
+    /// (see the module docs in [`super`] for the format).
+    pub fn load(
+        path: &std::path::Path,
+        hyper: AttnHyper,
+        n: usize,
+        batch: usize,
+    ) -> anyhow::Result<NativeBackend> {
+        Self::new(NativeParams::load(path)?, hyper, n, batch)
+    }
+
+    /// Build from the flat parameter list + manifest input names of a
+    /// compiled graph (the parity-oracle path: identical weights on both
+    /// backends).
+    pub fn from_flat(
+        params: Vec<Tensor>,
+        names: &[String],
+        hyper: AttnHyper,
+        n: usize,
+        batch: usize,
+    ) -> anyhow::Result<NativeBackend> {
+        anyhow::ensure!(
+            params.len() == names.len(),
+            "{} params but {} names",
+            params.len(),
+            names.len()
+        );
+        let named = names.iter().cloned().zip(params).collect();
+        Self::new(NativeParams::from_named(named)?, hyper, n, batch)
+    }
+
+    /// The loaded parameters (read-only).
+    pub fn params(&self) -> &NativeParams {
+        &self.params
+    }
+
+    /// Sparse hyperparameters in effect (ball size already clamped).
+    pub fn hyper(&self) -> &AttnHyper {
+        &self.hyper
+    }
+
+    /// Three-branch BSA attention for one block (paper Sec. 2.2), heads
+    /// folded. `a` is the RMS-normed input `(B*N, C)` flat; the gated
+    /// merged result (pre-`wo`) is accumulated per head into `merged`,
+    /// then projected into `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn attention(&self, blk: &BlockParams, a: &[f32], out: &mut [f32], s: &mut Scratch) {
+        let (b, n) = (self.spec.batch, self.spec.n);
+        let c = self.params.dim();
+        let h_cnt = self.params.num_heads();
+        let dh = c / h_cnt;
+        let m = self.hyper.ball_size;
+        let l = self.hyper.cmp_block;
+        let g = self.hyper.group_size;
+        let top_k = self.hyper.top_k;
+        let nb = n / l;
+        let groups = n / g;
+        let rows = b * n;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        linalg::matmul(a, blk.attn.wq.data(), rows, c, c, &mut s.q);
+        linalg::matmul(a, blk.attn.wk.data(), rows, c, c, &mut s.k);
+        linalg::matmul(a, blk.attn.wv.data(), rows, c, c, &mut s.v);
+        linalg::matmul(a, blk.attn.wg.data(), rows, c, 3 * h_cnt, &mut s.gates);
+
+        for bi in 0..b {
+            for hd in 0..h_cnt {
+                // split heads: column slice hd*dh.. of this batch item
+                let col0 = hd * dh;
+                for t in 0..n {
+                    let src = (bi * n + t) * c + col0;
+                    s.qs[t * dh..(t + 1) * dh].copy_from_slice(&s.q[src..src + dh]);
+                    s.ks[t * dh..(t + 1) * dh].copy_from_slice(&s.k[src..src + dh]);
+                    s.vs[t * dh..(t + 1) * dh].copy_from_slice(&s.v[src..src + dh]);
+                }
+
+                // ball branch (eq. 3)
+                kernels::ball_attention(&s.qs, &s.ks, &s.vs, n, dh, m, &mut s.o_ball, &mut s.scores);
+
+                // compression branch (eq. 5): mean phi + dense attention
+                kernels::compress_mean(&s.ks, n, dh, l, &mut s.kc);
+                kernels::compress_mean(&s.vs, n, dh, l, &mut s.vc);
+                kernels::attend(&s.qs, &s.kc, &s.vc, n, nb, dh, scale, &mut s.o_cmp, &mut s.scores);
+
+                // selection branch (eqs. 6-8, 10-12): grouped top-k over
+                // compressed keys, own-ball blocks masked out
+                kernels::group_scores(&s.qs, &s.kc, n, dh, g, nb, &mut s.qg, &mut s.gscores);
+                kernels::mask_own_ball(&mut s.gscores, groups, nb, g, l, m);
+                kernels::topk_indices(&s.gscores, groups, nb, top_k, &mut s.idx);
+                kernels::select_attention(
+                    &s.qs, &s.ks, &s.vs, &s.idx, n, dh, l, g, top_k,
+                    &mut s.o_slc, &mut s.ksel, &mut s.vsel, &mut s.scores,
+                );
+
+                // gated fusion (eq. 9): per-token per-head sigmoid gates,
+                // written into this head's column slice of `merged`
+                for t in 0..n {
+                    let row = bi * n + t;
+                    let grow = row * 3 * h_cnt;
+                    let gb = linalg::sigmoid(s.gates[grow + hd]);
+                    let gc = linalg::sigmoid(s.gates[grow + h_cnt + hd]);
+                    let gs = linalg::sigmoid(s.gates[grow + 2 * h_cnt + hd]);
+                    let dst = row * c + col0;
+                    for d0 in 0..dh {
+                        s.merged[dst + d0] = gb * s.o_ball[t * dh + d0]
+                            + gc * s.o_cmp[t * dh + d0]
+                            + gs * s.o_slc[t * dh + d0];
+                    }
+                }
+            }
+        }
+        linalg::matmul(&s.merged, blk.attn.wo.data(), rows, c, c, out);
+    }
+}
+
+/// Per-forward scratch buffers (sized once, reused across blocks/heads).
+struct Scratch {
+    // (B*N, C) projections
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    gates: Vec<f32>,
+    merged: Vec<f32>,
+    // per-head (N, dh) operands and branch outputs
+    qs: Vec<f32>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    o_ball: Vec<f32>,
+    o_cmp: Vec<f32>,
+    o_slc: Vec<f32>,
+    // compression / selection intermediates
+    kc: Vec<f32>,
+    vc: Vec<f32>,
+    qg: Vec<f32>,
+    gscores: Vec<f32>,
+    idx: Vec<usize>,
+    ksel: Vec<f32>,
+    vsel: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(rows: usize, c: usize, n: usize, dh: usize, nb: usize, groups: usize, h_cnt: usize) -> Scratch {
+        Scratch {
+            q: vec![0.0; rows * c],
+            k: vec![0.0; rows * c],
+            v: vec![0.0; rows * c],
+            gates: vec![0.0; rows * 3 * h_cnt],
+            merged: vec![0.0; rows * c],
+            qs: vec![0.0; n * dh],
+            ks: vec![0.0; n * dh],
+            vs: vec![0.0; n * dh],
+            o_ball: vec![0.0; n * dh],
+            o_cmp: vec![0.0; n * dh],
+            o_slc: vec![0.0; n * dh],
+            kc: vec![0.0; nb * dh],
+            vc: vec![0.0; nb * dh],
+            qg: Vec::new(),
+            gscores: vec![0.0; groups * nb],
+            idx: Vec::new(),
+            ksel: Vec::new(),
+            vsel: Vec::new(),
+            scores: Vec::new(),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn forward(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let spec = &self.spec;
+        anyhow::ensure!(
+            x.shape() == [spec.batch, spec.n, spec.in_features],
+            "input shape {:?} != backend ({}, {}, {})",
+            x.shape(),
+            spec.batch,
+            spec.n,
+            spec.in_features
+        );
+        let (b, n) = (spec.batch, spec.n);
+        let c = self.params.dim();
+        let h_cnt = self.params.num_heads();
+        let dh = c / h_cnt;
+        let rows = b * n;
+        let nb = n / self.hyper.cmp_block;
+        let groups = n / self.hyper.group_size;
+        let mut s = Scratch::new(rows, c, n, dh, nb, groups, h_cnt);
+
+        // embed
+        let mut h = vec![0.0f32; rows * c];
+        linalg::matmul(x.data(), self.params.embed_w.data(), rows, spec.in_features, c, &mut h);
+        linalg::add_bias(&mut h, self.params.embed_b.data(), rows, c);
+
+        // trunk
+        let hid = self.params.blocks[0].mlp.w1.cols();
+        let mut norm = vec![0.0f32; rows * c];
+        let mut branch = vec![0.0f32; rows * c];
+        let mut h1 = vec![0.0f32; rows * hid];
+        let mut h3 = vec![0.0f32; rows * hid];
+        for blk in &self.params.blocks {
+            // x = x + attn(rms_norm(x))
+            linalg::rms_norm(&h, blk.norm1.data(), rows, c, &mut norm);
+            self.attention(blk, &norm, &mut branch, &mut s);
+            for (hv, &av) in h.iter_mut().zip(&branch) {
+                *hv += av;
+            }
+            // x = x + swiglu(rms_norm(x))
+            linalg::rms_norm(&h, blk.norm2.data(), rows, c, &mut norm);
+            linalg::matmul(&norm, blk.mlp.w1.data(), rows, c, hid, &mut h1);
+            linalg::matmul(&norm, blk.mlp.w3.data(), rows, c, hid, &mut h3);
+            for (a, &g) in h1.iter_mut().zip(&h3) {
+                *a = linalg::silu(*a) * g;
+            }
+            linalg::matmul(&h1, blk.mlp.w2.data(), rows, hid, c, &mut branch);
+            for (hv, &mv) in h.iter_mut().zip(&branch) {
+                *hv += mv;
+            }
+        }
+
+        // head
+        linalg::rms_norm(&h, self.params.norm_out.data(), rows, c, &mut norm);
+        let of = spec.out_features;
+        let mut out = vec![0.0f32; rows * of];
+        linalg::matmul(&norm, self.params.head_w.data(), rows, c, of, &mut out);
+        linalg::add_bias(&mut out, self.params.head_b.data(), rows, of);
+        Ok(Tensor::new(vec![b, n, of], out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn tiny_backend(seed: u64) -> NativeBackend {
+        let mc = ModelConfig {
+            dim: 32,
+            num_heads: 2,
+            num_blocks: 2,
+            ball_size: 64,
+            seq_len: 256,
+            ..Default::default()
+        };
+        NativeBackend::init(seed, &mc, 6, 1, 1).unwrap()
+    }
+
+    fn input(n: usize, f: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(vec![1, n, f], rng.normals(n * f))
+    }
+
+    #[test]
+    fn forward_shape_and_finiteness() {
+        let be = tiny_backend(0);
+        assert_eq!(be.spec().n, 256);
+        assert_eq!(be.spec().in_features, 6);
+        let out = be.forward(&input(256, 6, 1)).unwrap();
+        assert_eq!(out.shape(), &[1, 256, 1]);
+        assert!(out.all_finite());
+        assert!(out.std() > 0.0, "degenerate constant output");
+    }
+
+    #[test]
+    fn forward_rejects_wrong_shape() {
+        let be = tiny_backend(0);
+        assert!(be.forward(&Tensor::zeros(vec![1, 128, 6])).is_err());
+        assert!(be.forward(&Tensor::zeros(vec![1, 256, 5])).is_err());
+        assert!(be.forward(&Tensor::zeros(vec![2, 256, 6])).is_err());
+    }
+
+    #[test]
+    fn forward_deterministic_and_seed_sensitive() {
+        let x = input(256, 6, 2);
+        let a = tiny_backend(7).forward(&x).unwrap();
+        let b = tiny_backend(7).forward(&x).unwrap();
+        assert_eq!(a, b, "same seed, same input => bit-identical output");
+        let c = tiny_backend(8).forward(&x).unwrap();
+        assert_ne!(a, c, "different seed must change the function");
+    }
+
+    #[test]
+    fn ball_size_clamped_to_n() {
+        // paper config at small N: ball 256 > N 64 clamps like aot.py
+        let mc = ModelConfig { seq_len: 64, num_blocks: 1, ..Default::default() };
+        let be = NativeBackend::init(0, &mc, 6, 1, 1).unwrap();
+        assert_eq!(be.hyper().ball_size, 64);
+        let out = be.forward(&input(64, 6, 3)).unwrap();
+        assert!(out.all_finite());
+    }
+
+    #[test]
+    fn rejects_invalid_hyper() {
+        let params = NativeParams::init(0, 6, 1, 32, 2, 1, 4);
+        // group 12 does not divide ball 64
+        let hyper = AttnHyper { ball_size: 64, cmp_block: 8, group_size: 12, top_k: 4 };
+        assert!(NativeBackend::new(params, hyper, 256, 1).is_err());
+    }
+}

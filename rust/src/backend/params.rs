@@ -1,0 +1,363 @@
+//! Native BSA parameters: named-array loading, shape validation, and
+//! deterministic host-side initialization.
+//!
+//! Array names are the dotted pytree paths shared by the AOT manifest,
+//! the trainer's checkpoints, and the `params_<tag>.bsackpt` files
+//! aot.py emits next to the HLO artifacts (`blocks.0.attn.wq`,
+//! `embed_w`, `norm_out`, ...). A full training checkpoint is accepted
+//! too: its optimizer-moment arrays (`m.*`, `v.*`) are skipped.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::prng::Rng;
+use crate::tensor::Tensor;
+
+/// Projections of one BSA attention layer.
+#[derive(Debug, Clone)]
+pub struct AttnParams {
+    pub wq: Tensor, // (C, C)
+    pub wk: Tensor, // (C, C)
+    pub wv: Tensor, // (C, C)
+    pub wo: Tensor, // (C, C)
+    /// Branch-gate projection, (C, 3H): sigmoid gates for the ball /
+    /// compression / selection branches per token per head (eq. 9).
+    pub wg: Tensor,
+}
+
+/// SwiGLU feed-forward weights.
+#[derive(Debug, Clone)]
+pub struct MlpParams {
+    pub w1: Tensor, // (C, hidden)
+    pub w2: Tensor, // (hidden, C)
+    pub w3: Tensor, // (C, hidden)
+}
+
+/// One transformer block: RMSNorm -> BSA attention -> RMSNorm -> SwiGLU.
+#[derive(Debug, Clone)]
+pub struct BlockParams {
+    pub attn: AttnParams,
+    pub mlp: MlpParams,
+    pub norm1: Tensor, // (C,)
+    pub norm2: Tensor, // (C,)
+}
+
+/// Full parameter set of the BSA trunk (paper Sec. 3.1).
+#[derive(Debug, Clone)]
+pub struct NativeParams {
+    pub embed_w: Tensor, // (in_features, C)
+    pub embed_b: Tensor, // (C,)
+    pub blocks: Vec<BlockParams>,
+    pub norm_out: Tensor, // (C,)
+    pub head_w: Tensor,   // (C, out_features)
+    pub head_b: Tensor,   // (out_features,)
+}
+
+impl NativeParams {
+    /// Assemble from named arrays (manifest / checkpoint / param-file
+    /// naming). Optimizer-moment arrays (`m.*`, `v.*`) are ignored;
+    /// unknown or missing model arrays are hard errors so a wrong file
+    /// fails loudly instead of serving garbage.
+    pub fn from_named(arrays: Vec<(String, Tensor)>) -> anyhow::Result<NativeParams> {
+        let mut map: BTreeMap<String, Tensor> = BTreeMap::new();
+        for (name, t) in arrays {
+            if name.starts_with("m.") || name.starts_with("v.") {
+                continue; // optimizer state in a full training checkpoint
+            }
+            anyhow::ensure!(
+                map.insert(name.clone(), t).is_none(),
+                "duplicate param array {name:?}"
+            );
+        }
+        anyhow::ensure!(
+            !map.keys().any(|k| k.contains(".attn.cmp.")),
+            "param set uses MLP compression (cmp.*); the native backend \
+             implements the paper-default mean-pooling phi only"
+        );
+        fn take(map: &mut BTreeMap<String, Tensor>, key: &str) -> anyhow::Result<Tensor> {
+            map.remove(key)
+                .ok_or_else(|| anyhow::anyhow!("param file missing array {key:?}"))
+        }
+
+        let mut blocks = Vec::new();
+        loop {
+            let i = blocks.len();
+            if !map.contains_key(&format!("blocks.{i}.attn.wq")) {
+                break;
+            }
+            blocks.push(BlockParams {
+                attn: AttnParams {
+                    wq: take(&mut map, &format!("blocks.{i}.attn.wq"))?,
+                    wk: take(&mut map, &format!("blocks.{i}.attn.wk"))?,
+                    wv: take(&mut map, &format!("blocks.{i}.attn.wv"))?,
+                    wo: take(&mut map, &format!("blocks.{i}.attn.wo"))?,
+                    wg: take(&mut map, &format!("blocks.{i}.attn.wg"))?,
+                },
+                mlp: MlpParams {
+                    w1: take(&mut map, &format!("blocks.{i}.mlp.w1"))?,
+                    w2: take(&mut map, &format!("blocks.{i}.mlp.w2"))?,
+                    w3: take(&mut map, &format!("blocks.{i}.mlp.w3"))?,
+                },
+                norm1: take(&mut map, &format!("blocks.{i}.norm1"))?,
+                norm2: take(&mut map, &format!("blocks.{i}.norm2"))?,
+            });
+        }
+        anyhow::ensure!(!blocks.is_empty(), "param set has no blocks.*.attn.wq arrays \
+             (is this a BSA model? full/erwin/pointnet params have no native backend)");
+        let params = NativeParams {
+            embed_w: take(&mut map, "embed_w")?,
+            embed_b: take(&mut map, "embed_b")?,
+            blocks,
+            norm_out: take(&mut map, "norm_out")?,
+            head_w: take(&mut map, "head_w")?,
+            head_b: take(&mut map, "head_b")?,
+        };
+        anyhow::ensure!(
+            map.is_empty(),
+            "param file has unexpected arrays: {:?}",
+            map.keys().take(6).collect::<Vec<_>>()
+        );
+        params.validate()?;
+        Ok(params)
+    }
+
+    /// Load from a `.bsackpt` file (pure param file or full training
+    /// checkpoint — see the module docs for the format).
+    pub fn load(path: &Path) -> anyhow::Result<NativeParams> {
+        let ck = crate::coordinator::checkpoint::Checkpoint::load(path)?;
+        Self::from_named(ck.arrays)
+            .map_err(|e| anyhow::anyhow!("loading native params from {}: {e}", path.display()))
+    }
+
+    /// Save as a `.bsackpt` param file (round-trips through
+    /// [`load`](Self::load)).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let arrays = self
+            .named_arrays()
+            .into_iter()
+            .map(|(n, t)| (n, t.clone()))
+            .collect();
+        crate::coordinator::checkpoint::Checkpoint { step: 0, arrays }.save(path)
+    }
+
+    /// Deterministic random initialization matching the jax init's
+    /// *statistics* (Glorot-scaled normals for matrices, zeros for
+    /// biases, ones for norms) — not its bit patterns; per-tensor PRNG
+    /// streams keep the result independent of construction order.
+    pub fn init(
+        seed: u64,
+        in_features: usize,
+        out_features: usize,
+        dim: usize,
+        num_heads: usize,
+        num_blocks: usize,
+        mlp_ratio: usize,
+    ) -> NativeParams {
+        let base = Rng::new(seed ^ 0xB5A_BACE);
+        let mut stream = 0u64;
+        let mut linear = |fan_in: usize, fan_out: usize| -> Tensor {
+            stream += 1;
+            let mut rng = base.fold(stream);
+            let s = (2.0 / (fan_in + fan_out) as f32).sqrt();
+            let data = rng.normals(fan_in * fan_out).iter().map(|x| x * s).collect();
+            Tensor::new(vec![fan_in, fan_out], data)
+        };
+        let hid = mlp_ratio * dim;
+        let blocks = (0..num_blocks)
+            .map(|_| BlockParams {
+                attn: AttnParams {
+                    wq: linear(dim, dim),
+                    wk: linear(dim, dim),
+                    wv: linear(dim, dim),
+                    wo: linear(dim, dim),
+                    wg: linear(dim, 3 * num_heads),
+                },
+                mlp: MlpParams {
+                    w1: linear(dim, hid),
+                    w2: linear(hid, dim),
+                    w3: linear(dim, hid),
+                },
+                norm1: Tensor::full(vec![dim], 1.0),
+                norm2: Tensor::full(vec![dim], 1.0),
+            })
+            .collect();
+        NativeParams {
+            embed_w: linear(in_features, dim),
+            embed_b: Tensor::zeros(vec![dim]),
+            blocks,
+            norm_out: Tensor::full(vec![dim], 1.0),
+            head_w: linear(dim, out_features),
+            head_b: Tensor::zeros(vec![out_features]),
+        }
+    }
+
+    /// Model width C (embedding columns).
+    pub fn dim(&self) -> usize {
+        self.embed_w.cols()
+    }
+
+    /// Attention heads, recovered from the gate projection `(C, 3H)`.
+    pub fn num_heads(&self) -> usize {
+        self.blocks[0].attn.wg.cols() / 3
+    }
+
+    /// Per-point input features (embedding rows).
+    pub fn in_features(&self) -> usize {
+        self.embed_w.shape()[0]
+    }
+
+    /// Per-point prediction features (head columns).
+    pub fn out_features(&self) -> usize {
+        self.head_w.cols()
+    }
+
+    /// Shape-consistency check across the whole trunk.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.embed_w.shape().len() == 2, "embed_w must be rank 2");
+        let c = self.dim();
+        anyhow::ensure!(c > 0 && !self.blocks.is_empty(), "empty model");
+        anyhow::ensure!(self.embed_b.shape() == [c], "embed_b shape");
+        anyhow::ensure!(self.norm_out.shape() == [c], "norm_out shape");
+        anyhow::ensure!(self.head_w.shape() == [c, self.out_features()], "head_w shape");
+        anyhow::ensure!(self.head_b.shape() == [self.out_features()], "head_b shape");
+        let h = self.num_heads();
+        anyhow::ensure!(h > 0 && c % h == 0, "dim {c} not divisible by heads {h}");
+        for (i, b) in self.blocks.iter().enumerate() {
+            for (nm, w) in [
+                ("wq", &b.attn.wq),
+                ("wk", &b.attn.wk),
+                ("wv", &b.attn.wv),
+                ("wo", &b.attn.wo),
+            ] {
+                anyhow::ensure!(w.shape() == [c, c], "blocks.{i}.attn.{nm} shape");
+            }
+            anyhow::ensure!(b.attn.wg.shape() == [c, 3 * h], "blocks.{i}.attn.wg shape");
+            let hid = b.mlp.w1.cols();
+            anyhow::ensure!(b.mlp.w1.shape() == [c, hid], "blocks.{i}.mlp.w1 shape");
+            anyhow::ensure!(b.mlp.w2.shape() == [hid, c], "blocks.{i}.mlp.w2 shape");
+            anyhow::ensure!(b.mlp.w3.shape() == [c, hid], "blocks.{i}.mlp.w3 shape");
+            anyhow::ensure!(b.norm1.shape() == [c], "blocks.{i}.norm1 shape");
+            anyhow::ensure!(b.norm2.shape() == [c], "blocks.{i}.norm2 shape");
+        }
+        Ok(())
+    }
+
+    /// `(name, tensor)` view in manifest naming, for saving and tests.
+    pub fn named_arrays(&self) -> Vec<(String, &Tensor)> {
+        let mut out: Vec<(String, &Tensor)> = Vec::new();
+        for (i, b) in self.blocks.iter().enumerate() {
+            out.push((format!("blocks.{i}.attn.wg"), &b.attn.wg));
+            out.push((format!("blocks.{i}.attn.wk"), &b.attn.wk));
+            out.push((format!("blocks.{i}.attn.wo"), &b.attn.wo));
+            out.push((format!("blocks.{i}.attn.wq"), &b.attn.wq));
+            out.push((format!("blocks.{i}.attn.wv"), &b.attn.wv));
+            out.push((format!("blocks.{i}.mlp.w1"), &b.mlp.w1));
+            out.push((format!("blocks.{i}.mlp.w2"), &b.mlp.w2));
+            out.push((format!("blocks.{i}.mlp.w3"), &b.mlp.w3));
+            out.push((format!("blocks.{i}.norm1"), &b.norm1));
+            out.push((format!("blocks.{i}.norm2"), &b.norm2));
+        }
+        out.push(("embed_b".into(), &self.embed_b));
+        out.push(("embed_w".into(), &self.embed_w));
+        out.push(("head_b".into(), &self.head_b));
+        out.push(("head_w".into(), &self.head_w));
+        out.push(("norm_out".into(), &self.norm_out));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeParams {
+        NativeParams::init(0, 6, 1, 32, 2, 2, 4)
+    }
+
+    #[test]
+    fn init_shapes_and_derived_dims() {
+        let p = tiny();
+        p.validate().unwrap();
+        assert_eq!(p.dim(), 32);
+        assert_eq!(p.num_heads(), 2);
+        assert_eq!(p.in_features(), 6);
+        assert_eq!(p.out_features(), 1);
+        assert_eq!(p.blocks.len(), 2);
+        assert_eq!(p.blocks[0].mlp.w1.shape(), &[32, 128]);
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.embed_w, b.embed_w);
+        assert_eq!(a.blocks[1].attn.wq, b.blocks[1].attn.wq);
+        let c = NativeParams::init(1, 6, 1, 32, 2, 2, 4);
+        assert_ne!(a.embed_w, c.embed_w);
+    }
+
+    #[test]
+    fn named_roundtrip_through_from_named() {
+        let p = tiny();
+        let arrays: Vec<(String, Tensor)> = p
+            .named_arrays()
+            .into_iter()
+            .map(|(n, t)| (n, t.clone()))
+            .collect();
+        let q = NativeParams::from_named(arrays).unwrap();
+        assert_eq!(p.embed_w, q.embed_w);
+        assert_eq!(p.blocks[0].attn.wg, q.blocks[0].attn.wg);
+        assert_eq!(p.blocks[1].norm2, q.blocks[1].norm2);
+    }
+
+    #[test]
+    fn from_named_skips_optimizer_moments() {
+        let p = tiny();
+        let mut arrays: Vec<(String, Tensor)> = p
+            .named_arrays()
+            .into_iter()
+            .map(|(n, t)| (n, t.clone()))
+            .collect();
+        let moments: Vec<(String, Tensor)> = arrays
+            .iter()
+            .flat_map(|(n, t)| {
+                [(format!("m.{n}"), t.clone()), (format!("v.{n}"), t.clone())]
+            })
+            .collect();
+        arrays.extend(moments);
+        let q = NativeParams::from_named(arrays).unwrap();
+        assert_eq!(q.blocks.len(), 2);
+    }
+
+    #[test]
+    fn from_named_rejects_missing_and_unknown() {
+        let p = tiny();
+        let arrays: Vec<(String, Tensor)> = p
+            .named_arrays()
+            .into_iter()
+            .filter(|(n, _)| n != "head_w")
+            .map(|(n, t)| (n, t.clone()))
+            .collect();
+        let err = NativeParams::from_named(arrays).unwrap_err().to_string();
+        assert!(err.contains("head_w"), "{err}");
+
+        let mut arrays: Vec<(String, Tensor)> = p
+            .named_arrays()
+            .into_iter()
+            .map(|(n, t)| (n, t.clone()))
+            .collect();
+        arrays.push(("surprise".into(), Tensor::zeros(vec![1])));
+        assert!(NativeParams::from_named(arrays).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = tiny();
+        let path = std::env::temp_dir().join("bsa_native_params_test.bsackpt");
+        p.save(&path).unwrap();
+        let q = NativeParams::load(&path).unwrap();
+        assert_eq!(p.embed_w, q.embed_w);
+        assert_eq!(p.blocks[1].mlp.w2, q.blocks[1].mlp.w2);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,91 @@
+//! PJRT-compiled backend: a [`Backend`] facade over a loaded
+//! `fwd_<tag>` executable and its pre-converted parameter literals.
+//!
+//! This is the fast path when `make artifacts` has produced compiled
+//! HLO: parameters are converted to `xla::Literal`s once at
+//! construction (the first serving implementation rebuilt ~5 MB of
+//! literals per batch — EXPERIMENTS.md §Perf), and every `forward` is a
+//! borrowed-literal execute plus one output download.
+
+use std::sync::Arc;
+
+use crate::runtime::{literal_to_tensor, tensor_to_literal, Engine, Executable};
+use crate::tensor::Tensor;
+
+use super::{Backend, BackendSpec};
+
+/// Immutable parameter literals shared across serving workers.
+///
+/// SAFETY: `xla::Literal` wraps a heap buffer that is never mutated
+/// after construction here; `forward` only passes borrowed pointers
+/// into `execute`, which reads them. The raw pointer inside is the only
+/// reason Send/Sync cannot be derived.
+struct ParamLiterals(Vec<xla::Literal>);
+unsafe impl Send for ParamLiterals {}
+unsafe impl Sync for ParamLiterals {}
+
+/// Backend over a compiled forward graph.
+pub struct PjrtBackend {
+    exe: Arc<Executable>,
+    params: ParamLiterals,
+    spec: BackendSpec,
+}
+
+impl PjrtBackend {
+    /// Load graph `graph` from the engine and bind `params` (host
+    /// tensors matching the graph's leading inputs, e.g. from a
+    /// checkpoint or an init graph).
+    pub fn new(engine: &Engine, graph: &str, params: Vec<Tensor>) -> anyhow::Result<PjrtBackend> {
+        let exe = engine.load(graph)?;
+        anyhow::ensure!(
+            params.len() == exe.info.nparams,
+            "graph {graph} needs {} params, got {}",
+            exe.info.nparams,
+            params.len()
+        );
+        for (t, spec) in params.iter().zip(&exe.info.inputs) {
+            anyhow::ensure!(
+                t.shape() == spec.dims.as_slice(),
+                "param {} shape {:?} != graph {:?}",
+                spec.name,
+                t.shape(),
+                spec.dims
+            );
+        }
+        let lits: Vec<xla::Literal> = params
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_, _>>()?;
+        let spec = BackendSpec {
+            name: format!("pjrt:{graph}"),
+            n: exe.info.n,
+            batch: exe.info.batch,
+            in_features: exe.info.in_features,
+            out_features: exe.info.out_features,
+        };
+        Ok(PjrtBackend { exe, params: ParamLiterals(lits), spec })
+    }
+
+    /// The underlying executable (manifest metadata access).
+    pub fn executable(&self) -> &Arc<Executable> {
+        &self.exe
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn forward(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let out = self.exe.run_with_tensors(&self.params.0, &[x])?;
+        literal_to_tensor(&out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PjrtBackend needs compiled artifacts + a PJRT client; it is
+    // exercised end-to-end (including the native-parity check) in
+    // rust/tests/integration.rs.
+}

@@ -1,13 +1,20 @@
 //! Serving router: bounded queue → deadline batcher → worker pool.
 //!
+//! The router is backend-agnostic: workers hold an
+//! `Arc<dyn Backend>` ([`crate::backend::Backend`]) and never see PJRT
+//! types, so the same hot path serves compiled HLO artifacts
+//! ([`PjrtBackend`](crate::backend::PjrtBackend)) or the pure-Rust BSA
+//! forward pass ([`NativeBackend`](crate::backend::NativeBackend)) on
+//! artifact-free hosts.
+//!
 //! Requests carry an arbitrary-size point cloud; a worker
 //!   1. looks up (or builds) the ball tree for the geometry (pads to the
-//!      compiled graph's N),
+//!      backend's N),
 //!   2. permutes features into ball order,
-//!   3. executes the `fwd_<tag>` graph,
+//!   3. runs the backend's forward pass,
 //!   4. inverse-permutes predictions back to the caller's point order.
 //!
-//! The dynamic batcher groups up to `graph.batch` requests (the compiled
+//! The dynamic batcher groups up to `spec.batch` requests (the backend's
 //! batch dimension) and flushes early after `flush_us` so tail latency is
 //! bounded — vLLM-style continuous batching collapsed to the static-shape
 //! setting of AOT-compiled graphs.
@@ -40,9 +47,9 @@
 //!   cache-missing requests — the only expensive step — are deduplicated
 //!   by geometry (a same-mesh burst builds its tree once) and built in
 //!   parallel under `std::thread::scope`, overlapping with the previous
-//!   batch's graph execution (which holds the process-wide
-//!   `EXECUTE_LOCK`). Steady-state repeated-geometry traffic never
-//!   spawns a thread.
+//!   batch's forward pass (which, on the PJRT backend, holds the
+//!   process-wide `EXECUTE_LOCK`). Steady-state repeated-geometry
+//!   traffic never spawns a thread.
 //!
 //! Measured numbers for cold-tree vs cached-tree p50/p95 latency and
 //! throughput are produced by `cargo bench -- serve_hot_path`, which
@@ -55,10 +62,11 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::backend::{Backend, BackendSpec, PjrtBackend};
 use crate::balltree::{BallTree, BallTreeCache};
 use crate::config::ServeConfig;
 use crate::metrics::LatencyHistogram;
-use crate::runtime::{literal_to_tensor, Engine, Executable};
+use crate::runtime::Engine;
 use crate::tensor::Tensor;
 
 /// An inference request: a point cloud + per-point features.
@@ -92,22 +100,11 @@ pub struct RouterStats {
     pub latency_summary: String,
 }
 
-/// Immutable parameter literals shared across workers.
-///
-/// SAFETY: `xla::Literal` wraps a heap buffer that is never mutated after
-/// construction here; workers only pass borrowed pointers into `execute`,
-/// which reads them. The raw pointer inside is the only reason Send/Sync
-/// cannot be derived.
-struct ParamLiterals(Vec<xla::Literal>);
-unsafe impl Send for ParamLiterals {}
-unsafe impl Sync for ParamLiterals {}
-
 struct Shared {
-    exe: Arc<Executable>,
-    /// Parameters pre-converted to literals once at startup (perf: the
-    /// first implementation rebuilt ~5 MB of literals per batch — see
-    /// EXPERIMENTS.md §Perf L3).
-    params: ParamLiterals,
+    /// The model engine — compiled-artifact or native (workers never see
+    /// which; parameter-literal caching and the execute lock live inside
+    /// the PJRT implementation).
+    backend: Arc<dyn Backend>,
     /// Content-addressed LRU of built ball trees (see module docs).
     tree_cache: BallTreeCache,
     served: AtomicU64,
@@ -131,32 +128,14 @@ pub struct Router {
 }
 
 impl Router {
-    /// Start the router over a forward graph and its parameter tensors.
-    ///
-    /// `params` are host tensors (e.g. from a checkpoint or an init graph)
-    /// matching the graph's leading inputs.
-    pub fn start(
-        engine: Arc<Engine>,
-        graph: &str,
-        params: Vec<Tensor>,
-        cfg: ServeConfig,
-    ) -> anyhow::Result<Router> {
-        let exe = engine.load(graph)?;
-        anyhow::ensure!(
-            params.len() == exe.info.nparams,
-            "graph {graph} needs {} params, got {}",
-            exe.info.nparams,
-            params.len()
-        );
-        let param_lits: Vec<xla::Literal> = params
-            .iter()
-            .map(crate::runtime::tensor_to_literal)
-            .collect::<Result<_, _>>()?;
+    /// Start the router over any [`Backend`] (the native backend makes
+    /// the whole serving stack artifact-free; see
+    /// [`Router::start_pjrt`] for the compiled-artifact convenience).
+    pub fn start(backend: Arc<dyn Backend>, cfg: ServeConfig) -> anyhow::Result<Router> {
         let (tx, rx) = sync_channel::<ServeRequest>(cfg.queue_cap);
         let rx = Arc::new(Mutex::new(rx));
         let shared = Arc::new(Shared {
-            exe,
-            params: ParamLiterals(param_lits),
+            backend,
             tree_cache: BallTreeCache::new(cfg.tree_cache),
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -179,6 +158,19 @@ impl Router {
             );
         }
         Ok(Router { tx: Some(tx), shared, workers, next_id: AtomicU64::new(1) })
+    }
+
+    /// Convenience: start over a compiled forward graph and its parameter
+    /// tensors (host tensors from a checkpoint or an init graph, matching
+    /// the graph's leading inputs).
+    pub fn start_pjrt(
+        engine: Arc<Engine>,
+        graph: &str,
+        params: Vec<Tensor>,
+        cfg: ServeConfig,
+    ) -> anyhow::Result<Router> {
+        let backend = PjrtBackend::new(&engine, graph, params)?;
+        Self::start(Arc::new(backend), cfg)
     }
 
     /// Submit a request; returns the receiver for its response, or an
@@ -244,15 +236,12 @@ impl Router {
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<ServeRequest>>>, shared: Arc<Shared>, cfg: ServeConfig) {
-    let graph_batch = shared.exe.info.batch;
+    let spec = shared.backend.spec().clone();
+    let graph_batch = spec.batch;
     // One reusable (B, N, F) input buffer per worker: batch assembly
     // writes into it in place, so steady-state serving performs no
     // per-request feature-tensor allocation.
-    let mut scratch = Tensor::zeros(vec![
-        graph_batch,
-        shared.exe.info.n,
-        shared.exe.info.in_features,
-    ]);
+    let mut scratch = Tensor::zeros(vec![spec.batch, spec.n, spec.in_features]);
     loop {
         if shared.stop.load(Ordering::Relaxed) {
             return;
@@ -287,27 +276,27 @@ fn worker_loop(rx: Arc<Mutex<Receiver<ServeRequest>>>, shared: Arc<Shared>, cfg:
     }
 }
 
-/// Reject a request the compiled graph cannot serve before any tree or
-/// buffer work happens (also guards `BallTree::build`'s preconditions).
-fn validate_request(info: &crate::runtime::GraphInfo, req: &ServeRequest) -> anyhow::Result<()> {
+/// Reject a request the backend cannot serve before any tree or buffer
+/// work happens (also guards `BallTree::build`'s preconditions).
+fn validate_request(spec: &BackendSpec, req: &ServeRequest) -> anyhow::Result<()> {
     anyhow::ensure!(
         req.coords.rows() > 0,
         "request {} has an empty point cloud",
         req.id
     );
     anyhow::ensure!(
-        req.features.cols() == info.in_features && req.features.rows() == req.coords.rows(),
-        "request {} features {:?} incompatible with graph ({} per-point features)",
+        req.features.cols() == spec.in_features && req.features.rows() == req.coords.rows(),
+        "request {} features {:?} incompatible with backend ({} per-point features)",
         req.id,
         req.features.shape(),
-        info.in_features
+        spec.in_features
     );
     anyhow::ensure!(
-        req.coords.rows() <= info.n,
-        "request {} has {} points > graph N {}",
+        req.coords.rows() <= spec.n,
+        "request {} has {} points > backend N {}",
         req.id,
         req.coords.rows(),
-        info.n
+        spec.n
     );
     Ok(())
 }
@@ -328,7 +317,7 @@ fn build_gather_group(
         let first = members[0].0;
         let tree = shared
             .tree_cache
-            .build_insert(&batch[first].coords, shared.exe.info.n, hash);
+            .build_insert(&batch[first].coords, shared.backend.spec().n, hash);
         members
             .into_iter()
             .map(|(bi, slot)| {
@@ -345,13 +334,13 @@ fn build_gather_group(
     })
 }
 
-/// Run one (possibly partial) batch through the compiled graph. `xt` is
-/// the worker's reusable `(B, N, F)` input tensor.
+/// Run one (possibly partial) batch through the backend. `xt` is the
+/// worker's reusable `(B, N, F)` input tensor.
 fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
-    let info = &shared.exe.info;
-    let n = info.n;
-    let f = info.in_features;
-    let graph_batch = info.batch;
+    let spec = shared.backend.spec();
+    let n = spec.n;
+    let f = spec.in_features;
+    let graph_batch = spec.batch;
     debug_assert!(batch.len() <= graph_batch);
     debug_assert_eq!(xt.len(), graph_batch * n * f);
 
@@ -367,7 +356,7 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
         let (used, pad) = xt.data_mut().split_at_mut(batch.len() * n * f);
         let mut pending: Vec<(usize, u64, &mut [f32])> = Vec::new();
         for (bi, (req, slot)) in batch.iter().zip(used.chunks_mut(n * f)).enumerate() {
-            if let Err(e) = validate_request(info, req) {
+            if let Err(e) = validate_request(spec, req) {
                 // reused buffer: don't leak a previous batch's features
                 slot.fill(0.0);
                 preps[bi] = Some(Err(e));
@@ -433,19 +422,16 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
         pad.fill(0.0);
     }
 
-    let run = (|| -> anyhow::Result<Tensor> {
-        let out = shared.exe.run_with_tensors(&shared.params.0, &[&*xt])?;
-        literal_to_tensor(&out[0])
-    })();
+    let run = shared.backend.forward(&*xt);
 
     match run {
         Ok(pred) => {
-            let of = info.out_features;
+            let of = spec.out_features;
             if pred.cols() != of || pred.rows() != graph_batch * n {
-                // The manifest promised (B, N, out_features); anything else
+                // The spec promised (B, N, out_features); anything else
                 // would scatter garbage back to callers.
                 let msg = format!(
-                    "prediction shape {:?} does not match graph ({graph_batch}, {n}, {of})",
+                    "prediction shape {:?} does not match backend ({graph_batch}, {n}, {of})",
                     pred.shape()
                 );
                 fail_batch(batch, &msg);
@@ -482,9 +468,10 @@ fn fail_batch(batch: Vec<ServeRequest>, msg: &str) {
 
 #[cfg(test)]
 mod tests {
-    // Router integration tests (with a real compiled graph) live in
-    // rust/tests/integration.rs; queue/backpressure behaviour is covered
-    // there too since Router requires an Engine. Ball-tree cache hit/miss,
-    // LRU eviction, and cached-vs-fresh determinism are unit-tested next
-    // to BallTreeCache in src/balltree.rs (content_hash lives there now).
+    // Router integration tests live in rust/tests/integration.rs — both
+    // over a real compiled graph (PjrtBackend, needs artifacts) and over
+    // the artifact-free NativeBackend, which also covers queue /
+    // backpressure behaviour on hosts without a PJRT toolchain. Ball-tree
+    // cache hit/miss, LRU eviction, and cached-vs-fresh determinism are
+    // unit-tested next to BallTreeCache in src/balltree.rs.
 }

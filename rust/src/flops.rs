@@ -97,14 +97,17 @@ fn bsa_attention_core(cfg: &ModelConfig, variant: &str) -> f64 {
 }
 
 /// Forward FLOPs of a whole model variant at the given config.
-pub fn model_flops(variant: &str, cfg: &ModelConfig) -> Flops {
+///
+/// Unknown variant names are a typed error (they reach here straight
+/// from CLI/config strings, so a bad value must report, not abort).
+pub fn model_flops(variant: &str, cfg: &ModelConfig) -> anyhow::Result<Flops> {
     let n = cfg.seq_len as f64;
     let c = cfg.dim as f64;
     let blocks = cfg.num_blocks as f64;
     let heads = cfg.num_heads as f64;
     let ratio = 4.0;
 
-    match variant {
+    Ok(match variant {
         "full" => Flops {
             projections: blocks * proj_flops(n, c, heads, false),
             attention: blocks * attn_core(n, n, c),
@@ -150,8 +153,11 @@ pub fn model_flops(variant: &str, cfg: &ModelConfig) -> Flops {
             mlp: blocks * mlp_flops(n, c, ratio),
             other: 2.0 * n * c * 8.0,
         },
-        other => panic!("unknown variant {other}"),
-    }
+        other => anyhow::bail!(
+            "unknown model variant {other:?} \
+             (expected erwin|full|bsa|bsa_nogs|bsa_gc|pointnet)"
+        ),
+    })
 }
 
 /// Single-attention-layer FLOPs (used by the F3/F4 scaling benches).
@@ -181,15 +187,23 @@ mod tests {
     #[test]
     fn full_attention_matches_paper_magnitude() {
         // Paper Table 3: Full Attention = 87.08 GFLOPs at N=4096.
-        let f = model_flops("full", &paper_cfg());
+        let f = model_flops("full", &paper_cfg()).unwrap();
         let g = f.gflops();
         assert!((80.0..95.0).contains(&g), "full = {g} GFLOPs");
     }
 
     #[test]
+    fn unknown_variant_is_typed_error() {
+        // Bad CLI/config strings must report, not abort the process.
+        let err = model_flops("bsa_typo", &paper_cfg()).unwrap_err().to_string();
+        assert!(err.contains("bsa_typo"), "error names the bad variant: {err}");
+        assert!(err.contains("expected"), "error lists the valid set: {err}");
+    }
+
+    #[test]
     fn bsa_matches_paper_magnitude() {
         // Paper Table 3: BSA = 27.91 GFLOPs.
-        let g = model_flops("bsa", &paper_cfg()).gflops();
+        let g = model_flops("bsa", &paper_cfg()).unwrap().gflops();
         assert!((20.0..35.0).contains(&g), "bsa = {g} GFLOPs");
     }
 
@@ -197,11 +211,11 @@ mod tests {
     fn paper_ordering_holds() {
         // Erwin < BSA+gc < BSA <= BSA-nogs << Full (Table 3 shape).
         let cfg = paper_cfg();
-        let erwin = model_flops("erwin", &cfg).gflops();
-        let gc = model_flops("bsa_gc", &cfg).gflops();
-        let bsa = model_flops("bsa", &cfg).gflops();
-        let nogs = model_flops("bsa_nogs", &cfg).gflops();
-        let full = model_flops("full", &cfg).gflops();
+        let erwin = model_flops("erwin", &cfg).unwrap().gflops();
+        let gc = model_flops("bsa_gc", &cfg).unwrap().gflops();
+        let bsa = model_flops("bsa", &cfg).unwrap().gflops();
+        let nogs = model_flops("bsa_nogs", &cfg).unwrap().gflops();
+        let full = model_flops("full", &cfg).unwrap().gflops();
         assert!(erwin < gc, "erwin {erwin} < gc {gc}");
         assert!(gc < bsa, "gc {gc} < bsa {bsa}");
         assert!(bsa <= nogs, "bsa {bsa} <= nogs {nogs}");
@@ -218,12 +232,14 @@ mod tests {
         small.seq_len = 4096;
         let mut large = paper_cfg();
         large.seq_len = 16384;
-        let r_full = model_flops("full", &large).attention / model_flops("full", &small).attention;
-        let r_bsa = model_flops("bsa", &large).attention / model_flops("bsa", &small).attention;
+        let r_full =
+            model_flops("full", &large).unwrap().attention / model_flops("full", &small).unwrap().attention;
+        let r_bsa =
+            model_flops("bsa", &large).unwrap().attention / model_flops("bsa", &small).unwrap().attention;
         assert!(r_full > 14.0, "full ratio {r_full}");
         assert!(r_bsa < 13.0, "bsa ratio {r_bsa}");
-        let abs_ratio =
-            model_flops("full", &large).attention / model_flops("bsa", &large).attention;
+        let abs_ratio = model_flops("full", &large).unwrap().attention
+            / model_flops("bsa", &large).unwrap().attention;
         assert!(abs_ratio > 5.0, "full/bsa at 16384 = {abs_ratio}");
     }
 
@@ -246,8 +262,8 @@ mod tests {
         a.seq_len = 1024;
         let mut b = cfg.clone();
         b.seq_len = 4096;
-        let ra = model_flops("pointnet", &a).total();
-        let rb = model_flops("pointnet", &b).total();
+        let ra = model_flops("pointnet", &a).unwrap().total();
+        let rb = model_flops("pointnet", &b).unwrap().total();
         assert!((rb / ra - 4.0).abs() < 0.01);
     }
 }

@@ -216,7 +216,8 @@ ENTRY %main.5 (x.1: f32[4,8]) -> f32[4,4] {
             let analytic = crate::flops::model_flops(
                 "full",
                 &crate::config::ModelConfig { seq_len: 4096, ..Default::default() },
-            );
+            )
+            .unwrap();
             // dot_flops should be within 3x of the matmul part (fusions,
             // softmax excluded from dots)
             let ratio = s.dot_flops / (analytic.projections + analytic.attention + analytic.mlp);

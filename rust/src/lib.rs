@@ -8,16 +8,25 @@
 //!   BSA transformer plus Full-Attention / Erwin-style / PointNet
 //!   baselines, AOT-lowered to HLO text artifacts.
 //! * **L3** — this crate: ball-tree geometry substrate, synthetic dataset
-//!   generators, PJRT runtime, training orchestrator, serving router with
-//!   dynamic batching, metrics, analytic FLOPs model, CLI.
+//!   generators, inference backends, PJRT runtime, training orchestrator,
+//!   serving router with dynamic batching, metrics, analytic FLOPs model,
+//!   CLI.
 //!
-//! Python never runs on the request path: `make artifacts` lowers the
-//! model once, and everything here executes the compiled HLO via the
-//! PJRT C API (`xla` crate).
+//! Inference is multi-backend behind the [`backend::Backend`] trait:
+//!
+//! * [`backend::PjrtBackend`] executes AOT-compiled HLO through the PJRT
+//!   C API (`xla` crate) — Python never runs on the request path;
+//!   `make artifacts` lowers the model once.
+//! * [`backend::NativeBackend`] runs the full BSA forward pass in pure
+//!   Rust (ball attention, block compression, grouped selection, gated
+//!   merge), so serving, benches, and integration tests work on hosts
+//!   with no artifacts and no Python/XLA toolchain at all — and double
+//!   as a semantic parity oracle for the compiled graphs.
 //!
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
 //! reproduction results.
 
+pub mod backend;
 pub mod balltree;
 pub mod cli;
 pub mod config;

@@ -4,6 +4,10 @@
 //!   train     train a model variant on a synthetic task
 //!   eval      evaluate a checkpoint on the held-out split
 //!   serve     start the TCP inference server
+//!             (`--backend pjrt` runs compiled HLO artifacts;
+//!              `--backend native` runs the pure-Rust BSA forward pass —
+//!              no artifacts or Python toolchain needed; weights come
+//!              from `--params <file>.bsackpt` or a seeded random init)
 //!   gen-data  materialize a dataset shard (.bsad)
 //!   balltree  inspect ball-tree statistics for a sample
 //!   flops     print the analytic FLOPs table (Table 3 GFLOPS column)
@@ -25,6 +29,9 @@ fn flag_specs() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
         FlagSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
+        FlagSpec { name: "backend", help: "inference backend: pjrt (compiled HLO artifacts) | native (pure-Rust BSA forward; needs no artifacts or Python toolchain)", takes_value: true, default: Some("pjrt") },
+        FlagSpec { name: "params", help: "native-backend weights: a .bsackpt param file (flat binary of named f32 arrays — params_<tag>.bsackpt from aot.py or any training checkpoint); random init if omitted", takes_value: true, default: None },
+        FlagSpec { name: "variant", help: "model variant for `bsa flops`: erwin|full|bsa|bsa_nogs|bsa_gc|pointnet (all when omitted)", takes_value: true, default: None },
         FlagSpec { name: "tag", help: "artifact tag (model_task_nN_bB)", takes_value: true, default: Some("bsa_air_n1024_b2") },
         FlagSpec { name: "task", help: "dataset task: air|ela|syn", takes_value: true, default: Some("air") },
         FlagSpec { name: "steps", help: "training steps", takes_value: true, default: None },
@@ -89,7 +96,7 @@ fn print_usage(specs: &[FlagSpec]) {
          commands:\n  \
          train     train a model variant on a synthetic task\n  \
          eval      evaluate a checkpoint on the held-out split\n  \
-         serve     start the TCP inference server\n  \
+         serve     start the TCP inference server (--backend native|pjrt)\n  \
          gen-data  materialize a dataset shard (.bsad)\n  \
          balltree  inspect ball-tree statistics\n  \
          flops     print the analytic FLOPs table\n  \
@@ -164,24 +171,78 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use bsa::backend::{Backend as _, BackendKind};
     let doc = load_doc(args)?;
     let mut sc = ServeConfig::from_doc(&doc);
     sc.addr = args.str_flag("addr", &sc.addr);
     sc.workers = args.usize_flag("workers", sc.workers)?;
-    let tag = args.str_flag("tag", "bsa_air_n4096_b1");
-    let engine = Arc::new(Engine::new(Path::new(&args.str_flag("artifacts", "artifacts")))?);
+    let kind: BackendKind = args.str_flag("backend", "pjrt").parse()?;
 
-    // parameters: checkpoint if given, else init graph of a train-capable tag
-    let params = load_or_init_params(&engine, &tag, args)?;
-    let router = Arc::new(bsa::coordinator::Router::start(
-        engine,
-        &format!("fwd_{tag}"),
-        params,
-        sc.clone(),
-    )?);
+    let router = match kind {
+        BackendKind::Pjrt => {
+            let tag = args.str_flag("tag", "bsa_air_n4096_b1");
+            let engine =
+                Arc::new(Engine::new(Path::new(&args.str_flag("artifacts", "artifacts")))?);
+            // parameters: checkpoint if given, else init graph of a
+            // train-capable tag
+            let params = load_or_init_params(&engine, &tag, args)?;
+            println!("serving fwd_{tag} (pjrt) on {} with {} workers", sc.addr, sc.workers);
+            Arc::new(bsa::coordinator::Router::start_pjrt(
+                engine,
+                &format!("fwd_{tag}"),
+                params,
+                sc.clone(),
+            )?)
+        }
+        BackendKind::Native => {
+            let backend = native_backend(args, &doc, &sc)?;
+            println!(
+                "serving {} (native, artifact-free) on {} with {} workers",
+                backend.spec().name,
+                sc.addr,
+                sc.workers
+            );
+            Arc::new(bsa::coordinator::Router::start(Arc::new(backend), sc.clone())?)
+        }
+    };
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-    println!("serving fwd_{tag} on {} with {} workers", sc.addr, sc.workers);
     bsa::server::serve(&sc.addr, router, stop)
+}
+
+/// Build the pure-Rust backend: architecture from `[model]` config (+
+/// `--n` sequence-length override), features from the task's generator,
+/// weights from `--params`/`--checkpoint` (.bsackpt) or a seeded init.
+fn native_backend(
+    args: &Args,
+    doc: &Document,
+    sc: &ServeConfig,
+) -> anyhow::Result<bsa::backend::NativeBackend> {
+    use bsa::backend::{native::AttnHyper, NativeBackend};
+    let mut mc = ModelConfig::from_doc(doc);
+    mc.seq_len = args.usize_flag("n", sc.seq_len)?;
+    anyhow::ensure!(
+        mc.variant == "bsa",
+        "native backend implements the paper's bsa variant (got {:?})",
+        mc.variant
+    );
+    mc.ball_size = mc.ball_size.min(mc.seq_len);
+    mc.validate()?;
+    let task = args.str_flag("task", "air");
+    let gen = bsa::data::generator_for(&task, 0)?;
+    let batch = sc.max_batch.max(1);
+    let param_file = args.flag("params").or_else(|| args.flag("checkpoint"));
+    match param_file {
+        Some(p) => NativeBackend::load(
+            Path::new(p),
+            AttnHyper::from_model(&mc),
+            mc.seq_len,
+            batch,
+        ),
+        None => {
+            let seed = args.u64_flag("seed", 0)?;
+            NativeBackend::init(seed, &mc, gen.feature_dim(), 1, batch)
+        }
+    }
 }
 
 /// Load params from --checkpoint, or run an init graph for random weights.
@@ -264,10 +325,19 @@ fn cmd_flops(args: &Args) -> anyhow::Result<()> {
         ModelConfig::default()
     };
     cfg.seq_len = n;
+    // --variant restricts the table to one row; an unknown name is a
+    // clean CLI error (model_flops returns Err rather than panicking).
+    let variants: Vec<String> = match args.flag("variant") {
+        Some(v) => vec![v.to_string()],
+        None => ["erwin", "full", "bsa", "bsa_nogs", "bsa_gc", "pointnet"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
     let mut t = Table::new(&["Attention type", "GFLOPS"]);
-    for v in ["erwin", "full", "bsa", "bsa_nogs", "bsa_gc", "pointnet"] {
-        let f = model_flops(v, &cfg);
-        t.row(&[v.to_string(), format!("{:.2}", f.gflops())]);
+    for v in &variants {
+        let f = model_flops(v, &cfg)?;
+        t.row(&[v.clone(), format!("{:.2}", f.gflops())]);
     }
     println!("analytic FLOPs at N={n}, dim={}, blocks={}:", cfg.dim, cfg.num_blocks);
     println!("{}", t.render());

@@ -14,7 +14,7 @@ pub use manifest::{DType, GraphInfo, GraphKind, IoSpec, Manifest};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::tensor::Tensor;
 
@@ -100,12 +100,25 @@ impl Executable {
 unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
 
+/// Executable-cache entry: compiled, or claimed by an in-flight compile.
+///
+/// The `Building` marker is what makes [`Engine::load`] single-flight:
+/// a thread that finds it waits on the condvar instead of compiling the
+/// same graph a second time (the original double-checked cache let two
+/// threads that both missed race into duplicate compiles).
+enum CacheSlot {
+    Ready(Arc<Executable>),
+    Building,
+}
+
 /// Process-wide engine: PJRT client + manifest + executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    cache: Mutex<HashMap<String, CacheSlot>>,
+    /// Signalled when an in-flight compile finishes (or fails).
+    cache_done: Condvar,
 }
 
 // SAFETY: see the note on `Executable`; the client pointer is thread-safe
@@ -125,6 +138,7 @@ impl Engine {
             manifest,
             dir: artifacts_dir.to_path_buf(),
             cache: Mutex::new(HashMap::new()),
+            cache_done: Condvar::new(),
         })
     }
 
@@ -140,33 +154,99 @@ impl Engine {
     }
 
     /// Load (or fetch from cache) a compiled graph by manifest name.
+    ///
+    /// Single-flight: the first thread to miss claims the entry
+    /// (`CacheSlot::Building`) and compiles outside the cache lock;
+    /// concurrent callers for the same graph block on the condvar and
+    /// receive the shared executable, so each graph compiles exactly
+    /// once per engine. A failed compile clears the claim (and wakes
+    /// waiters to retry or fail themselves) rather than caching the
+    /// error.
     pub fn load(&self, name: &str) -> anyhow::Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+        {
+            let mut cache = self.cache.lock().unwrap();
+            loop {
+                let in_flight = match cache.get(name) {
+                    Some(CacheSlot::Ready(e)) => return Ok(e.clone()),
+                    Some(CacheSlot::Building) => true,
+                    None => false,
+                };
+                if in_flight {
+                    cache = self.cache_done.wait(cache).unwrap();
+                } else {
+                    cache.insert(name.to_string(), CacheSlot::Building);
+                    break;
+                }
+            }
         }
-        let info = self.manifest.get(name)?.clone();
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = {
-            // serialize with executions (see EXECUTE_LOCK)
-            let _guard = EXECUTE_LOCK.lock().unwrap();
-            self.client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?
-        };
-        let entry = Arc::new(Executable { info, exe });
+        // Panic-safe claim: if the compile below unwinds (poisoned
+        // EXECUTE_LOCK, FFI abort surfaced as a panic), the guard clears
+        // the `Building` marker and wakes waiters so they retry or fail
+        // themselves — a panic must degrade to "someone else compiles",
+        // never to a permanent hang of every loader of this graph.
+        struct Claim<'a> {
+            engine: &'a Engine,
+            name: &'a str,
+            done: bool,
+        }
+        impl Drop for Claim<'_> {
+            fn drop(&mut self) {
+                if !self.done {
+                    // recover a poisoned lock: panicking inside Drop
+                    // during unwind would abort the process
+                    let mut cache = self
+                        .engine
+                        .cache
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    cache.remove(self.name);
+                    drop(cache);
+                    self.engine.cache_done.notify_all();
+                }
+            }
+        }
+        let mut claim = Claim { engine: self, name, done: false };
+
+        let built = (|| -> anyhow::Result<Arc<Executable>> {
+            let info = self.manifest.get(name)?.clone();
+            let path = self.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = {
+                // serialize with executions (see EXECUTE_LOCK)
+                let _guard = EXECUTE_LOCK.lock().unwrap();
+                self.client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?
+            };
+            Ok(Arc::new(Executable { info, exe }))
+        })();
+        let mut cache = self.cache.lock().unwrap();
+        match &built {
+            Ok(entry) => {
+                cache.insert(name.to_string(), CacheSlot::Ready(entry.clone()));
+            }
+            Err(_) => {
+                // release the claim so a later caller can retry
+                cache.remove(name);
+            }
+        }
+        claim.done = true;
+        drop(cache);
+        self.cache_done.notify_all();
+        built
+    }
+
+    /// Number of compiled graphs currently cached (in-flight compiles
+    /// are not counted).
+    pub fn cached(&self) -> usize {
         self.cache
             .lock()
             .unwrap()
-            .insert(name.to_string(), entry.clone());
-        Ok(entry)
-    }
-
-    /// Number of compiled graphs currently cached.
-    pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+            .values()
+            .filter(|s| matches!(s, CacheSlot::Ready(_)))
+            .count()
     }
 }
 

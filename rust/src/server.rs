@@ -3,6 +3,12 @@
 //! vendored offline; the protocol is documented here and implemented for
 //! both server and client).
 //!
+//! The server is backend-agnostic: the router it fronts may execute
+//! compiled HLO artifacts or the pure-Rust
+//! [`NativeBackend`](crate::backend::NativeBackend) (`bsa serve
+//! --backend native`) — the wire protocol and stats surface are
+//! identical either way.
+//!
 //! Frame layout (little-endian):
 //!   request:  magic "BSRQ" | n u32 | d u32 | f u32 | coords n*d f32 | feats n*f f32
 //!   response: magic "BSRS" | status u32 (0 = ok) | n u32 | o u32 | preds n*o f32

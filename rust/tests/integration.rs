@@ -1,20 +1,41 @@
-//! End-to-end integration tests over the compiled artifacts.
+//! End-to-end integration tests.
 //!
-//! These need `make artifacts` to have produced the `core` suite (the
-//! tiny `bsa_syn_n256_b1` graphs are built for exactly this). Tests skip
-//! gracefully when artifacts are missing so `cargo test` works before the
-//! first artifact build, but CI runs them via `make test`.
+//! PJRT-path tests need `make artifacts` to have produced the `core`
+//! suite (the tiny `bsa_syn_n256_b1` graphs are built for exactly this)
+//! and skip gracefully when artifacts are missing. The `native_*` tests
+//! run the same router/serving surface over the pure-Rust
+//! [`NativeBackend`] and therefore run on every host — no artifacts, no
+//! Python toolchain. When both are available,
+//! `native_backend_matches_pjrt_forward` is the semantic parity gate
+//! between the compiled graphs and the native implementation.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use bsa::config::{ServeConfig, TrainConfig};
+use bsa::backend::{native::AttnHyper, Backend, NativeBackend};
+use bsa::config::{ModelConfig, ServeConfig, TrainConfig};
 use bsa::coordinator::{Router, Trainer};
 use bsa::data::generator_for;
 use bsa::runtime::{literal_to_tensor, scalar_i32, Engine};
 use bsa::tensor::Tensor;
 
 const TINY: &str = "bsa_syn_n256_b1";
+
+/// Native twin of the tiny core artifact (same architecture dims).
+fn tiny_native_config() -> ModelConfig {
+    ModelConfig {
+        dim: 32,
+        num_heads: 2,
+        num_blocks: 2,
+        ball_size: 64,
+        seq_len: 256,
+        ..Default::default()
+    }
+}
+
+fn tiny_native_backend(seed: u64) -> NativeBackend {
+    NativeBackend::init(seed, &tiny_native_config(), 6, 1, 1).unwrap()
+}
 
 fn artifacts_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -156,7 +177,7 @@ fn router_serves_and_unpermutes() {
         .collect();
     let sc = ServeConfig { workers: 2, flush_us: 200, seq_len: 256, ..Default::default() };
     let router =
-        Arc::new(Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap());
+        Arc::new(Router::start_pjrt(engine, &format!("fwd_{TINY}"), params, sc).unwrap());
 
     // a cloud *smaller* than N exercises ball-tree padding + unpermute
     let gen = generator_for("syn", 2).unwrap();
@@ -199,7 +220,7 @@ fn router_tree_cache_is_semantically_invisible() {
 
     let sc_off = ServeConfig { workers: 1, flush_us: 100, tree_cache: 0, ..Default::default() };
     let r_off =
-        Router::start(engine.clone(), &format!("fwd_{TINY}"), params.clone(), sc_off).unwrap();
+        Router::start_pjrt(engine.clone(), &format!("fwd_{TINY}"), params.clone(), sc_off).unwrap();
     let p_off = r_off
         .infer(sample.coords.clone(), sample.features.clone())
         .unwrap();
@@ -207,7 +228,7 @@ fn router_tree_cache_is_semantically_invisible() {
     assert_eq!((st_off.tree_hits, st_off.tree_misses), (0, 1));
 
     let sc_on = ServeConfig { workers: 1, flush_us: 100, tree_cache: 8, ..Default::default() };
-    let r_on = Router::start(engine, &format!("fwd_{TINY}"), params, sc_on).unwrap();
+    let r_on = Router::start_pjrt(engine, &format!("fwd_{TINY}"), params, sc_on).unwrap();
     let p_cold = r_on
         .infer(sample.coords.clone(), sample.features.clone())
         .unwrap();
@@ -230,7 +251,7 @@ fn router_rejects_malformed_requests() {
         .map(|l| literal_to_tensor(l).unwrap())
         .collect();
     let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
-    let router = Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap();
+    let router = Router::start_pjrt(engine, &format!("fwd_{TINY}"), params, sc).unwrap();
 
     // wrong feature width
     let coords = Tensor::zeros(vec![64, 3]);
@@ -277,7 +298,7 @@ fn dynamic_batcher_fills_compiled_batch() {
         .map(|l| literal_to_tensor(l).unwrap())
         .collect();
     let sc = ServeConfig { workers: 1, flush_us: 50_000, ..Default::default() };
-    let router = Router::start(engine, graph, params, sc).unwrap();
+    let router = Router::start_pjrt(engine, graph, params, sc).unwrap();
 
     let gen = generator_for("air", 4).unwrap();
     let mut rxs = vec![];
@@ -321,7 +342,7 @@ fn checkpoint_roundtrips_into_router() {
         .map(|(_, t)| t)
         .collect();
     let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
-    let router = Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap();
+    let router = Router::start_pjrt(engine, &format!("fwd_{TINY}"), params, sc).unwrap();
     let gen = generator_for("syn", 6).unwrap();
     let s = gen.generate(0, 220);
     let pred = router.infer(s.coords, s.features).unwrap();
@@ -341,7 +362,7 @@ fn tcp_server_roundtrip() {
         .map(|l| literal_to_tensor(l).unwrap())
         .collect();
     let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
-    let router = Arc::new(Router::start(engine, &format!("fwd_{TINY}"), params, sc).unwrap());
+    let router = Arc::new(Router::start_pjrt(engine, &format!("fwd_{TINY}"), params, sc).unwrap());
 
     let addr = "127.0.0.1:17177";
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -369,4 +390,165 @@ fn tcp_server_roundtrip() {
 
     stop.store(true, std::sync::atomic::Ordering::SeqCst);
     srv.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// native backend: artifact-free serving + pjrt parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_router_serves_without_artifacts() {
+    // The full serving surface — router, ball-tree cache, zero-copy
+    // batching, padding/unpermute — over the pure-Rust backend. Runs on
+    // hosts with no artifacts/ directory and no Python toolchain.
+    let backend = Arc::new(tiny_native_backend(0));
+    let sc = ServeConfig { workers: 2, flush_us: 200, seq_len: 256, ..Default::default() };
+    let router = Router::start(backend, sc).unwrap();
+
+    // a cloud *smaller* than N exercises ball-tree padding + unpermute
+    let gen = generator_for("syn", 2).unwrap();
+    let sample = gen.generate(0, 200);
+    let pred = router
+        .infer(sample.coords.clone(), sample.features.clone())
+        .unwrap();
+    assert_eq!(pred.shape(), &[200, 1]);
+    assert!(pred.all_finite());
+
+    // deterministic serving: identical input => identical prediction
+    let pred2 = router.infer(sample.coords, sample.features).unwrap();
+    assert_eq!(pred.data(), pred2.data(), "native serving must be deterministic");
+
+    let stats = router.shutdown();
+    assert_eq!(stats.served, 2);
+    assert!(stats.tree_hits >= 1, "second request must hit the tree cache");
+}
+
+#[test]
+fn native_router_rejects_malformed_and_survives() {
+    let backend = Arc::new(tiny_native_backend(1));
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Router::start(backend, sc).unwrap();
+
+    // wrong feature width / too many points / empty cloud all error
+    assert!(router.infer(Tensor::zeros(vec![64, 3]), Tensor::zeros(vec![64, 3])).is_err());
+    assert!(router.infer(Tensor::zeros(vec![512, 3]), Tensor::zeros(vec![512, 6])).is_err());
+    assert!(router.infer(Tensor::zeros(vec![0, 3]), Tensor::zeros(vec![0, 6])).is_err());
+
+    // the (sole) worker survived and still serves
+    let gen = generator_for("syn", 5).unwrap();
+    let s = gen.generate(0, 180);
+    let pred = router.infer(s.coords, s.features).unwrap();
+    assert_eq!(pred.shape(), &[180, 1]);
+}
+
+#[test]
+fn native_tcp_server_roundtrip() {
+    // TCP frame protocol end-to-end over the native backend: the whole
+    // stack is artifact-free, including the "BSST" stats surface.
+    let backend = Arc::new(tiny_native_backend(2));
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Arc::new(Router::start(backend, sc).unwrap());
+
+    let addr = "127.0.0.1:17179";
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let srv = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || bsa::server::serve(&addr, router, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let gen = generator_for("syn", 3).unwrap();
+    let sample = gen.generate(0, 170);
+    let mut client = bsa::server::Client::connect(addr).unwrap();
+    let pred = client.predict(&sample.coords, &sample.features).unwrap();
+    assert_eq!(pred.shape(), &[170, 1]);
+    assert!(pred.all_finite());
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("\"served\""), "stats json: {stats}");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+}
+
+#[test]
+fn native_backend_loads_param_file() {
+    // Param-file round trip through the backend constructor: weights
+    // saved to a .bsackpt file serve identically to the in-memory ones.
+    let be = tiny_native_backend(3);
+    let path = std::env::temp_dir().join("bsa_it_native_params.bsackpt");
+    be.params().save(&path).unwrap();
+    let loaded = NativeBackend::load(
+        &path,
+        AttnHyper::from_model(&tiny_native_config()),
+        256,
+        1,
+    )
+    .unwrap();
+    let gen = generator_for("syn", 7).unwrap();
+    let s = gen.generate(0, 256);
+    let x = Tensor::new(vec![1, 256, 6], s.features.data().to_vec());
+    assert_eq!(
+        be.forward(&x).unwrap(),
+        loaded.forward(&x).unwrap(),
+        "param file round trip must preserve the function"
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn native_backend_matches_pjrt_forward() {
+    // Semantic parity gate: the compiled fwd graph and the native rust
+    // forward pass, fed identical weights (from the init graph, matched
+    // by manifest input names) and an identical fixture, must agree to
+    // 1e-3 max-abs. Skips (like every pjrt test) when artifacts are
+    // missing.
+    let Some(engine) = engine() else { return };
+    let init = engine.load(&format!("init_{TINY}")).unwrap();
+    let fwd = engine.load(&format!("fwd_{TINY}")).unwrap();
+    // One init execution feeds BOTH backends: the literals go to the
+    // pjrt forward, their tensor conversions to the native one, so the
+    // two can never see different weights.
+    let param_lits = init.run(&[scalar_i32(0)]).unwrap();
+    let params: Vec<Tensor> = param_lits
+        .iter()
+        .map(|l| literal_to_tensor(l).unwrap())
+        .collect();
+    let names: Vec<String> = fwd
+        .info
+        .inputs
+        .iter()
+        .take(fwd.info.nparams)
+        .map(|s| s.name.clone())
+        .collect();
+    let native = NativeBackend::from_flat(
+        params,
+        &names,
+        AttnHyper::from_graph(&fwd.info),
+        fwd.info.n,
+        fwd.info.batch,
+    )
+    .unwrap();
+
+    let gen = generator_for("syn", 11).unwrap();
+    let n = fwd.info.n;
+    let x = Tensor::new(
+        vec![fwd.info.batch, n, fwd.info.in_features],
+        gen.generate(0, n).features.data().to_vec(),
+    );
+    let pjrt_out =
+        literal_to_tensor(&fwd.run_with_tensors(&param_lits, &[&x]).unwrap()[0]).unwrap();
+    let native_out = native.forward(&x).unwrap();
+    assert_eq!(pjrt_out.shape(), native_out.shape());
+    let max_abs = pjrt_out
+        .data()
+        .iter()
+        .zip(native_out.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_abs < 1e-3,
+        "pjrt and native forward disagree: max |diff| = {max_abs}"
+    );
 }

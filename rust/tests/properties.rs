@@ -3,8 +3,9 @@
 //! (proptest is not vendored offline; bsa::proptest_lite is the in-tree
 //! equivalent — deterministic cases, replayable by seed.)
 
+use bsa::backend::{kernels, linalg, Backend, NativeBackend};
 use bsa::balltree::BallTree;
-use bsa::config::Document;
+use bsa::config::{Document, ModelConfig};
 use bsa::data::{generator_for, NormStats, Sample};
 use bsa::metrics::{Accumulator, ErrorStats};
 use bsa::prng::Rng;
@@ -146,6 +147,111 @@ fn prop_balltree_cache_transparent_for_preprocessing() {
         assert_eq!(a, b);
     });
     assert!(cache.hits() >= 15, "every second lookup must hit");
+}
+
+// ---------------------------------------------------------------------------
+// native backend kernels (the pure-Rust BSA forward pass)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_softmax_rows_sum_to_one_under_large_logits() {
+    // Numerical stability of the native softmax: rows must sum to 1 and
+    // stay finite even when logits span huge magnitudes (the own-ball
+    // mask injects -1e30 into score rows on every request).
+    forall(40, |g| {
+        let rows = g.usize_in(1..12);
+        let cols = g.usize_in(1..24);
+        let mag = g.f32_in(1.0..3e4);
+        let mut x: Vec<f32> = g.normals(rows * cols).iter().map(|v| v * mag).collect();
+        if g.bool() {
+            // mix mask values in like the selection branch does
+            let i = g.usize_in(0..x.len());
+            x[i] = kernels::NEG_INF;
+        }
+        linalg::softmax_rows(&mut x, rows, cols);
+        for row in x.chunks_exact(cols) {
+            assert!(row.iter().all(|v| v.is_finite() && *v >= 0.0));
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row sums to {s}");
+        }
+    });
+}
+
+#[test]
+fn prop_ball_attention_invariant_to_within_ball_relabeling() {
+    // Ball attention treats tokens inside a ball as a set: permuting the
+    // q/k/v rows *within* each ball must permute the outputs identically
+    // (tolerance-level: summation order inside the softmax changes).
+    forall(25, |g| {
+        let d = g.usize_in(2..6);
+        let ball = g.pow2_in(4, 16);
+        let n = ball * g.usize_in(1..5);
+        let q = g.normals(n * d);
+        let k = g.normals(n * d);
+        let v = g.normals(n * d);
+
+        // per-ball permutation of token indices
+        let mut rng = Rng::new(g.case ^ 0xba11);
+        let mut perm: Vec<usize> = (0..n).collect();
+        for b in 0..n / ball {
+            rng.shuffle(&mut perm[b * ball..(b + 1) * ball]);
+        }
+        let permute = |x: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; n * d];
+            for (i, &p) in perm.iter().enumerate() {
+                out[i * d..(i + 1) * d].copy_from_slice(&x[p * d..(p + 1) * d]);
+            }
+            out
+        };
+
+        let mut scratch = Vec::new();
+        let mut out = vec![0.0f32; n * d];
+        kernels::ball_attention(&q, &k, &v, n, d, ball, &mut out, &mut scratch);
+        let mut out_p = vec![0.0f32; n * d];
+        kernels::ball_attention(
+            &permute(&q),
+            &permute(&k),
+            &permute(&v),
+            n,
+            d,
+            ball,
+            &mut out_p,
+            &mut scratch,
+        );
+        let expected = permute(&out);
+        for (a, b) in out_p.iter().zip(&expected) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_native_forward_deterministic_for_fixed_seed() {
+    // Two backends built from the same seed are the same function, and
+    // repeated evaluation of one backend is bit-stable — the property
+    // that makes the native path usable as a parity oracle.
+    forall(6, |g| {
+        let mc = ModelConfig {
+            dim: 16,
+            num_heads: 2,
+            num_blocks: 1,
+            ball_size: 32,
+            cmp_block: 8,
+            sel_block: 8,
+            top_k: 2,
+            group_size: 8,
+            seq_len: 64,
+            ..Default::default()
+        };
+        let seed = g.case ^ 0xf00d;
+        let a = NativeBackend::init(seed, &mc, 3, 1, 1).unwrap();
+        let b = NativeBackend::init(seed, &mc, 3, 1, 1).unwrap();
+        let x = Tensor::new(vec![1, 64, 3], g.normals(64 * 3));
+        let ya = a.forward(&x).unwrap();
+        assert_eq!(ya, a.forward(&x).unwrap(), "repeat eval must be bit-stable");
+        assert_eq!(ya, b.forward(&x).unwrap(), "same seed, same function");
+        assert!(ya.all_finite());
+    });
 }
 
 // ---------------------------------------------------------------------------

@@ -20,6 +20,8 @@ REPS="${BENCH_REPS:-1}"
   cargo clippy --all-targets -- -D warnings
   echo "== serve_hot_path bench (smoke, --reps ${REPS})"
   cargo bench --bench paper -- serve_hot_path --reps "${REPS}"
+  echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e)"
+  cargo bench --bench paper -- bsa_native --reps "${REPS}"
 )
 
-echo "check.sh: all gates passed; BENCH_serve.json refreshed"
+echo "check.sh: all gates passed; BENCH_serve.json + BENCH_native.json refreshed"
