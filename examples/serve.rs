@@ -69,7 +69,12 @@ fn main() -> anyhow::Result<()> {
                 seq_len: 1024,
                 ..Default::default()
             };
-            let backend = Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?);
+            // kernel threads: [serve] native_threads / BSA_NATIVE_THREADS
+            // env / hardware parallelism (0 = auto); a pure latency knob —
+            // native outputs are bitwise identical at every setting
+            let backend =
+                Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?.with_threads(sc.native_threads));
+            println!("native kernel threads: {}", backend.threads());
             (Arc::new(Router::start(backend, sc.clone())?), 896usize)
         }
     };

@@ -1,0 +1,204 @@
+"""Numpy mirror of the Rust native parallel kernels' *tiling and chunking
+logic* (rust/src/backend/{pool,linalg,kernels}.rs).
+
+The Rust side's conformance gate (rust/tests/conformance.rs) asserts
+fast == `*_reference` on the real binaries; this file mirrors the same
+index arithmetic — packed-panel GEMM loops, contiguous row chunking,
+ball/group/block chunk offsets, argmax-and-suppress top-k — in exact
+float32 so the *algorithms* are testable on hosts without a Rust
+toolchain. Every loop here is a line-for-line transcription of the Rust
+loop nest it names; if an index bug exists in the scheme, it exists in
+both and fails here. numpy-only on purpose: no jax import, so it runs
+anywhere `pytest python/tests` runs.
+"""
+
+import numpy as np
+
+# panel constants mirroring rust/src/backend/linalg.rs
+KC = 256
+NC = 128
+MR = 4
+
+f32 = np.float32
+
+
+def chunk_rows(rows, threads):
+    """Mirror of pool::chunk_rows: contiguous near-equal ranges."""
+    t = max(1, min(threads, max(rows, 1)))
+    per = (rows + t - 1) // t
+    out = []
+    start = 0
+    while start < rows:
+        end = min(start + per, rows)
+        out.append((start, end))
+        start = end
+    return out
+
+
+def matmul_reference(a, b, m, k, n):
+    """Mirror of linalg::matmul_reference (i-k-j, ascending-k adds)."""
+    out = np.zeros(m * n, dtype=f32)
+    for i in range(m):
+        for kk in range(k):
+            av = a[i * k + kk]
+            for j in range(n):
+                out[i * n + j] = f32(out[i * n + j] + f32(av * b[kk * n + j]))
+    return out
+
+
+def matmul_rows_blocked(a, b, m, k, n):
+    """Mirror of linalg::matmul_rows_blocked: direct i-k-j when B fits
+    one panel (k <= KC and n <= NC), packed KC x NC panels otherwise."""
+    if k <= KC and n <= NC:
+        return matmul_reference(a, b, m, k, n)
+    out = np.zeros(m * n, dtype=f32)
+    packed = np.zeros(min(KC, max(k, 1)) * min(NC, n), dtype=f32)
+    jc = 0
+    while jc < n:
+        ncb = min(NC, n - jc)
+        kc = 0
+        while kc < k:
+            kcb = min(KC, k - kc)
+            for kk in range(kcb):
+                src = (kc + kk) * n + jc
+                packed[kk * ncb:(kk + 1) * ncb] = b[src:src + ncb]
+            for i in range(m):
+                for kk in range(kcb):
+                    av = a[i * k + kc + kk]
+                    for jj in range(ncb):
+                        o = i * n + jc + jj
+                        out[o] = f32(out[o] + f32(av * packed[kk * ncb + jj]))
+            kc += kcb
+        jc += ncb
+    return out
+
+
+def matmul_parallel(a, b, m, k, n, threads):
+    """Mirror of linalg::matmul: blocked kernel per contiguous row chunk."""
+    out = np.zeros(m * n, dtype=f32)
+    for row0, row1 in chunk_rows(m, threads):
+        rows = row1 - row0
+        out[row0 * n:row1 * n] = matmul_rows_blocked(
+            a[row0 * k:row1 * k], b, rows, k, n
+        )
+    return out
+
+
+def test_blocked_gemm_bitwise_equals_reference_across_panel_boundaries():
+    # k > KC and n > NC force the panel loops to wrap — the exact case
+    # the Rust conformance sweep pins, mirrored here bit-for-bit.
+    rng = np.random.default_rng(0)
+    for (m, k, n) in [(3, KC + 7, NC + 22), (5, 40, 33), (1, 2 * KC + 1, 1), (2, 10, NC + 5)]:
+        a = rng.standard_normal(m * k).astype(f32)
+        b = rng.standard_normal(k * n).astype(f32)
+        ref = matmul_reference(a, b, m, k, n)
+        for threads in (1, 2, 3):
+            fast = matmul_parallel(a, b, m, k, n, threads)
+            assert fast.tobytes() == ref.tobytes(), (
+                f"blocked GEMM diverged at m={m} k={k} n={n} threads={threads}"
+            )
+
+
+def test_chunk_rows_partitions_exactly():
+    for rows in (0, 1, 7, 23, 64):
+        for threads in (1, 2, 3, 8, 64):
+            chunks = chunk_rows(rows, threads)
+            covered = [i for (s, e) in chunks for i in range(s, e)]
+            assert covered == list(range(rows))
+            assert len(chunks) <= max(threads, 1)
+
+
+def softmax_rows(x, rows, cols):
+    """Mirror of linalg::softmax_rows_reference (max-subtracted)."""
+    out = x.copy()
+    for r in range(rows):
+        row = out[r * cols:(r + 1) * cols]
+        m = row.max()
+        e = np.exp(row - m, dtype=f32)
+        s = f32(0.0)
+        for v in e:
+            s = f32(s + v)
+        if s > 0:
+            row[:] = e / s
+    return out
+
+
+def ball_attention_chunked(q, k, v, n, d, ball, threads):
+    """Mirror of kernels::ball_attention's chunk offsets: par_rows over
+    balls, absolute ball index = ball0 + bi within each chunk."""
+    out = np.zeros(n * d, dtype=f32)
+    scale = f32(1.0 / np.sqrt(f32(d)))
+    chunk = ball * d
+    nballs = n // ball
+    for ball0, ball1 in chunk_rows(nballs, threads):
+        for b in range(ball0, ball1):
+            lo, hi = b * chunk, (b + 1) * chunk
+            qb = q[lo:hi].reshape(ball, d)
+            kb = k[lo:hi].reshape(ball, d)
+            vb = v[lo:hi].reshape(ball, d)
+            scores = (qb @ kb.T).astype(f32) * scale
+            flat = softmax_rows(scores.reshape(-1), ball, ball).reshape(ball, ball)
+            out[lo:hi] = (flat @ vb).astype(f32).reshape(-1)
+    return out
+
+
+def test_ball_chunking_covers_every_ball_once():
+    rng = np.random.default_rng(1)
+    n, d, ball = 21, 3, 3  # uneven ball size, odd ball count
+    q = rng.standard_normal(n * d).astype(f32)
+    k = rng.standard_normal(n * d).astype(f32)
+    v = rng.standard_normal(n * d).astype(f32)
+    ref = ball_attention_chunked(q, k, v, n, d, ball, 1)
+    for threads in (2, 3, 5, 8):
+        out = ball_attention_chunked(q, k, v, n, d, ball, threads)
+        assert out.tobytes() == ref.tobytes(), f"threads={threads}"
+    # degenerate single-point balls: softmax over one key => out == v
+    out1 = ball_attention_chunked(q, k, v, n, d, 1, 4)
+    np.testing.assert_allclose(out1, v, atol=1e-6)
+
+
+def topk_row(row, k):
+    """Mirror of kernels::topk_row (first-max wins, suppress, sort)."""
+    row = row.copy()
+    out = []
+    for _ in range(k):
+        best, bv = 0, -np.inf
+        for i, val in enumerate(row):
+            if val > bv:  # strict > keeps the first occurrence on ties
+                bv = val
+                best = i
+        out.append(best)
+        row[best] = f32(row[best] - f32(2e30))
+    return sorted(out)
+
+
+def test_topk_chunking_matches_serial_with_ties():
+    rng = np.random.default_rng(2)
+    groups, nb, k = 9, 12, 4
+    # quantized scores make duplicates (ties) common
+    scores = (rng.standard_normal(groups * nb) * 2).round() / 2
+    scores = scores.astype(f32)
+    serial = [topk_row(scores[g * nb:(g + 1) * nb], k) for g in range(groups)]
+    for threads in (2, 3, 8):
+        chunked = [None] * groups
+        for g0, g1 in chunk_rows(groups, threads):
+            for g in range(g0, g1):
+                chunked[g] = topk_row(scores[g * nb:(g + 1) * nb], k)
+        assert chunked == serial, f"threads={threads}"
+
+
+def test_compress_chunk_offsets():
+    # Mirror of kernels::compress_mean: the chunk starting at block b0
+    # reads x[b0*block*d : (b0+blocks)*block*d] — off-by-one in either
+    # bound shears every downstream mean.
+    rng = np.random.default_rng(3)
+    n, d, block = 35, 4, 5  # odd block count, uneven block size
+    nb = n // block
+    x = rng.standard_normal(n * d).astype(f32)
+    ref = x.reshape(nb, block, d).mean(axis=1, dtype=f32).reshape(-1)
+    for threads in (1, 2, 3, 8):
+        out = np.zeros(nb * d, dtype=f32)
+        for b0, b1 in chunk_rows(nb, threads):
+            xs = x[b0 * block * d:b1 * block * d].reshape(b1 - b0, block, d)
+            out[b0 * d:b1 * d] = xs.mean(axis=1, dtype=f32).reshape(-1)
+        np.testing.assert_allclose(out, ref, atol=1e-6)

@@ -14,10 +14,13 @@
 //! ball-tree build vs BallTreeCache hit, plus end-to-end router latency
 //! when artifacts are present) and writes the machine-readable
 //! `BENCH_serve.json` perf-trajectory artifact. `bsa_native` measures
-//! the pure-Rust BSA forward pass (p50/p95 vs N, native vs pjrt at the
+//! the pure-Rust BSA forward pass (p50/p95 vs N, a threads-in-{1,2,4,8}
+//! throughput sweep on the paper-config forward, native vs pjrt at the
 //! tiny config when artifacts exist, end-to-end native router) and
 //! writes `BENCH_native.json` — it needs no artifacts at all, so the
-//! perf gate runs end-to-end on artifact-free hosts. Host-side targets
+//! perf gate runs end-to-end on artifact-free hosts, and
+//! `scripts/check.sh` uses the sweep's threads=1 row as the
+//! single-thread throughput regression baseline. Host-side targets
 //! run even when no compiled artifacts exist; engine-dependent targets
 //! are skipped with a note.
 //!
@@ -867,13 +870,18 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
 
 /// Measure the native BSA forward pass the way `serve_hot_path` measures
 /// preprocessing: machine-readable p50/p95 so the next PR can regress
-/// against it, on *any* host. Three levels:
+/// against it, on *any* host. Four levels:
 ///
 /// 1. forward p50/p95 vs N for the demo-scale architecture (dim 32,
 ///    2 blocks — the native twin of the tiny core artifact);
-/// 2. native vs pjrt on the same architecture at N=256 when the compiled
+/// 2. threads-vs-throughput sweep (threads in {1, 2, 4, 8}) on the
+///    paper-config forward pass (Table 4 defaults: dim 64, 6 blocks,
+///    N=1024) — the machine-readable record of the parallel kernels'
+///    speedup, and the baseline `scripts/check.sh` regresses the
+///    single-thread row against;
+/// 3. native vs pjrt on the demo architecture at N=256 when the compiled
 ///    `fwd_bsa_syn_n256_b1` graph is present;
-/// 3. end-to-end through the native `Router` (batching + ball-tree
+/// 4. end-to-end through the native `Router` (batching + ball-tree
 ///    cache + forward) — proof the serving stack runs artifact-free.
 fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     use bsa::backend::{Backend, NativeBackend};
@@ -925,7 +933,59 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         ));
     }
 
-    // --- level 2: native vs pjrt at the tiny config ----------------------
+    // --- level 2: threads-vs-throughput on the paper config --------------
+    // Table-4 defaults (ModelConfig::default(); the arch is recorded in
+    // the JSON so the trajectory stays labeled if defaults move). The
+    // parallel kernels are bitwise order-preserving, so the sweep is a
+    // pure latency curve; its threads=1 row is the single-thread baseline
+    // scripts/check.sh guards against regression.
+    let mut sweep_t = Table::new(&["threads", "p50 ms", "p95 ms", "fwd/s", "speedup vs 1T"]);
+    let mut sweep_json = Vec::new();
+    let sweep_mc = ModelConfig::default();
+    let sweep_arch_json = format!(
+        "{{\"dim\": {}, \"heads\": {}, \"blocks\": {}, \"ball\": {}, \"n\": {}}}",
+        sweep_mc.dim, sweep_mc.num_heads, sweep_mc.num_blocks, sweep_mc.ball_size, sweep_mc.seq_len
+    );
+    {
+        let mc = &sweep_mc;
+        let x = {
+            let mut rng = bsa::prng::Rng::new(mc.seq_len as u64);
+            Tensor::new(vec![1, mc.seq_len, 6], rng.normals(mc.seq_len * 6))
+        };
+        let mut base_p50 = 0.0f64;
+        for &t in &[1usize, 2, 4, 8] {
+            let be = NativeBackend::init(0, mc, 6, 1, 1)?.with_threads(t);
+            let _ = be.forward(&x)?; // warmup
+            let mut hist = LatencyHistogram::new();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let r0 = Instant::now();
+                let out = be.forward(&x)?;
+                std::hint::black_box(&out);
+                hist.record_us(r0.elapsed().as_secs_f64() * 1e6);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let (p50, p95) = (hist.percentile_us(50.0), hist.percentile_us(95.0));
+            if t == 1 {
+                base_p50 = p50;
+            }
+            let fwd_per_s = reps as f64 / wall;
+            let speedup = if p50 > 0.0 { base_p50 / p50 } else { 0.0 };
+            sweep_t.row(&[
+                t.to_string(),
+                format!("{:.2}", p50 / 1e3),
+                format!("{:.2}", p95 / 1e3),
+                format!("{fwd_per_s:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            sweep_json.push(format!(
+                "{{\"threads\": {t}, \"p50_us\": {p50:.1}, \"p95_us\": {p95:.1}, \
+                 \"fwd_per_s\": {fwd_per_s:.3}, \"speedup_vs_1t\": {speedup:.3}}}"
+            ));
+        }
+    }
+
+    // --- level 3: native vs pjrt at the tiny config ----------------------
     let mut pjrt_json = String::from("{\"available\": false}");
     let mut pjrt_line = String::from(
         "pjrt comparison: artifacts unavailable (native-only run)\n",
@@ -965,7 +1025,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 3: end-to-end native router (artifact-free serving) ------
+    // --- level 4: end-to-end native router (artifact-free serving) ------
     let mc = arch(256);
     let backend = Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?);
     let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
@@ -993,8 +1053,11 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     let json = format!(
         "{{\n  \"bench\": \"bsa_native\",\n  \"reps\": {reps},\n  \
          \"arch\": {{\"dim\": 32, \"heads\": 2, \"blocks\": 2, \"ball\": 64}},\n  \
-         \"forward\": [{}],\n  \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
-        fwd_json.join(", ")
+         \"forward\": [{}],\n  \
+         \"sweep_arch\": {sweep_arch_json},\n  \
+         \"threads_sweep\": [{}],\n  \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
+        fwd_json.join(", "),
+        sweep_json.join(", ")
     );
     // BENCH_native.json lives next to ROADMAP.md (the per-PR perf
     // trajectory); cargo runs benches from rust/, so look one level up.
@@ -1010,6 +1073,11 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         "## bsa_native — pure-Rust BSA forward (dim 32, 2 blocks, {reps} reps)\n\n"
     );
     content.push_str(&t.render());
+    content.push_str(&format!(
+        "\n### threads-vs-throughput (paper Table-4 config: dim {}, {} blocks, N={})\n\n",
+        sweep_mc.dim, sweep_mc.num_blocks, sweep_mc.seq_len
+    ));
+    content.push_str(&sweep_t.render());
     content.push('\n');
     content.push_str(&pjrt_line);
     content.push_str(&format!(

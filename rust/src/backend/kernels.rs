@@ -1,28 +1,64 @@
-//! Native CPU ports of the BSA attention kernels.
+//! Native CPU ports of the BSA attention kernels — parallel blocked
+//! versions plus `*_reference` scalar twins.
 //!
-//! Each function mirrors its pure-jnp oracle in
-//! `python/compile/kernels/ref.py` — same shapes, same masking constants,
-//! same top-k tie-breaking — so the [`NativeBackend`](super::NativeBackend)
-//! can serve as a semantic parity check for the compiled graphs. All
-//! operands are flat row-major `(N, d)` slices for one attention head;
-//! the model layer folds batch and heads before calling in here, exactly
-//! like the jax side folds `(B, N, C)` to `(B*H, N, dh)`.
+//! Each `*_reference` function mirrors its pure-jnp oracle in
+//! `python/compile/kernels/ref.py` — same shapes, same masking
+//! constants, same top-k tie-breaking. The un-suffixed functions are the
+//! production kernels: they split their output over
+//! [`pool::par_rows`](super::pool::par_rows) chunks (balls for ball
+//! attention, blocks for compression, groups for selection/top-k) and
+//! compute each unit with the exact per-element accumulation order of
+//! the twin — so parallel == reference holds **bitwise**, which
+//! `rust/tests/conformance.rs` sweeps across randomized shapes and
+//! thread counts (see the "Kernel conformance" section in [`super`]).
+//!
+//! All operands are flat row-major `(N, d)` slices for one attention
+//! head; the model layer folds batch and heads before calling in here,
+//! exactly like the jax side folds `(B, N, C)` to `(B*H, N, dh)`.
 //!
 //! Notation follows the paper (Sec. 2): ball size `m`, compression block
 //! `l`, selection group `g`, `k*` selected blocks.
 
-use super::linalg::{matmul, matmul_nt, softmax_rows};
+use super::linalg::{
+    matmul, matmul_nt, matmul_nt_reference, matmul_reference, softmax_rows,
+    softmax_rows_reference,
+};
+use super::pool;
 
 /// Mask value matching `ref.py::NEG_INF`: large but finite so an
 /// all-masked row softmaxes to uniform instead of NaN.
 pub const NEG_INF: f32 = -1e30;
 
-/// Dense scaled-dot-product attention: `out = softmax(q k^T * scale) v`.
-///
-/// `q` is `(nq, d)`, `k`/`v` are `(nk, d)`, `out` is `(nq, d)`.
-/// `scores` is caller-owned scratch, resized to `nq * nk`.
+/// Dense scaled-dot-product attention: `out = softmax(q k^T * scale) v`,
+/// parallel over query rows (the compression branch calls this with
+/// `nq = N`). `q` is `(nq, d)`, `k`/`v` are `(nk, d)`, `out` is
+/// `(nq, d)`. `scores` is caller-owned scratch, resized to `nq * nk`.
 #[allow(clippy::too_many_arguments)]
 pub fn attend(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    threads: usize,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    scores.resize(nq * nk, 0.0);
+    matmul_nt(q, k, nq, d, nk, threads, scores);
+    for s in scores.iter_mut() {
+        *s *= scale;
+    }
+    softmax_rows(scores, nq, nk, threads);
+    matmul(scores, v, nq, nk, d, threads, out);
+}
+
+/// Scalar twin of [`attend`] (and the building block the parallel ball /
+/// selection kernels run per unit on their own thread).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_reference(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -34,19 +70,56 @@ pub fn attend(
     scores: &mut Vec<f32>,
 ) {
     scores.resize(nq * nk, 0.0);
-    matmul_nt(q, k, nq, d, nk, scores);
+    matmul_nt_reference(q, k, nq, d, nk, scores);
     for s in scores.iter_mut() {
         *s *= scale;
     }
-    softmax_rows(scores, nq, nk);
-    matmul(scores, v, nq, nk, d, out);
+    softmax_rows_reference(scores, nq, nk);
+    matmul_reference(scores, v, nq, nk, d, out);
 }
 
 /// Ball attention (paper eq. 3): full attention inside disjoint balls of
-/// `ball_size` tokens. `q`/`k`/`v`/`out` are `(n, d)` with
-/// `n % ball_size == 0` (the ball tree guarantees this by padding).
+/// `ball_size` tokens, one ball-batch per thread chunk. `q`/`k`/`v`/`out`
+/// are `(n, d)` with `n % ball_size == 0` (the ball tree guarantees this
+/// by padding).
 #[allow(clippy::too_many_arguments)]
 pub fn ball_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    ball_size: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(n % ball_size, 0, "n must be divisible by ball size");
+    assert_eq!(out.len(), n * d, "ball_attention out len");
+    let scale = 1.0 / (d as f32).sqrt();
+    let chunk = ball_size * d;
+    pool::par_rows(out, chunk, threads, |ball0, ochunk| {
+        let mut scores = Vec::new();
+        for (bi, oball) in ochunk.chunks_exact_mut(chunk).enumerate() {
+            let r = (ball0 + bi) * chunk..(ball0 + bi + 1) * chunk;
+            attend_reference(
+                &q[r.clone()],
+                &k[r.clone()],
+                &v[r],
+                ball_size,
+                ball_size,
+                d,
+                scale,
+                oball,
+                &mut scores,
+            );
+        }
+    });
+}
+
+/// Scalar twin of [`ball_attention`] (caller-owned `scores` scratch,
+/// like the original serial kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn ball_attention_reference(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -61,7 +134,7 @@ pub fn ball_attention(
     let chunk = ball_size * d;
     for b in 0..n / ball_size {
         let r = b * chunk..(b + 1) * chunk;
-        attend(
+        attend_reference(
             &q[r.clone()],
             &k[r.clone()],
             &v[r.clone()],
@@ -76,8 +149,21 @@ pub fn ball_attention(
 }
 
 /// Compression pooling phi = mean (paper eq. 5): mean-pool
-/// non-overlapping blocks of `block` tokens, `(n, d) -> (n/block, d)`.
-pub fn compress_mean(x: &[f32], n: usize, d: usize, block: usize, out: &mut [f32]) {
+/// non-overlapping blocks of `block` tokens, `(n, d) -> (n/block, d)`,
+/// parallel over block chunks.
+pub fn compress_mean(x: &[f32], n: usize, d: usize, block: usize, threads: usize, out: &mut [f32]) {
+    assert_eq!(n % block, 0, "n must be divisible by block");
+    let nb = n / block;
+    assert_eq!(out.len(), nb * d, "compress out len");
+    pool::par_rows(out, d, threads, |b0, ochunk| {
+        let blocks = ochunk.len() / d;
+        let xr = &x[b0 * block * d..(b0 + blocks) * block * d];
+        compress_mean_reference(xr, blocks * block, d, block, ochunk);
+    });
+}
+
+/// Scalar twin of [`compress_mean`].
+pub fn compress_mean_reference(x: &[f32], n: usize, d: usize, block: usize, out: &mut [f32]) {
     assert_eq!(n % block, 0, "n must be divisible by block");
     let nb = n / block;
     assert_eq!(out.len(), nb * d, "compress out len");
@@ -109,19 +195,41 @@ pub fn group_scores(
     d: usize,
     group: usize,
     nb: usize,
+    threads: usize,
     qg: &mut Vec<f32>,
     out: &mut [f32],
 ) {
     assert_eq!(n % group, 0, "n must be divisible by group");
     let groups = n / group;
     qg.resize(groups * d, 0.0);
-    compress_mean(q, n, d, group, qg);
-    matmul_nt(qg, kc, groups, d, nb, out);
+    compress_mean(q, n, d, group, threads, qg);
+    matmul_nt(qg, kc, groups, d, nb, threads, out);
+}
+
+/// Scalar twin of [`group_scores`].
+#[allow(clippy::too_many_arguments)]
+pub fn group_scores_reference(
+    q: &[f32],
+    kc: &[f32],
+    n: usize,
+    d: usize,
+    group: usize,
+    nb: usize,
+    qg: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(n % group, 0, "n must be divisible by group");
+    let groups = n / group;
+    qg.resize(groups * d, 0.0);
+    compress_mean_reference(q, n, d, group, qg);
+    matmul_nt_reference(qg, kc, groups, d, nb, out);
 }
 
 /// Mask scores of compressed blocks inside the query group's own ball
 /// (paper Sec. 3.2): selection should reach *outside* the coverage ball
-/// attention already provides. `scores` is `(groups, nb)`.
+/// attention already provides. `scores` is `(groups, nb)`. Elementwise
+/// and branch-free per cell, so it is its own reference (shared by the
+/// parallel and reference forward paths).
 pub fn mask_own_ball(scores: &mut [f32], groups: usize, nb: usize, group: usize, cmp_block: usize, ball_size: usize) {
     assert_eq!(scores.len(), groups * nb, "mask scores len");
     for gi in 0..groups {
@@ -135,43 +243,119 @@ pub fn mask_own_ball(scores: &mut [f32], groups: usize, nb: usize, group: usize,
     }
 }
 
+/// Per-group first-max argmax-and-suppress top-k for one score row
+/// (bit-matching `ref_topk_indices`' tie-breaking: strict `>` keeps the
+/// first occurrence, like `jnp.argmax`). `row` is clobbered.
+fn topk_row(row: &mut [f32], k: usize, out: &mut [usize]) {
+    for slot in out.iter_mut().take(k) {
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        *slot = best;
+        row[best] -= 2e30;
+    }
+    out[..k].sort_unstable();
+}
+
 /// Top-k block indices per score row, ascending-sorted (contiguous
-/// gathers downstream). Implemented as k rounds of first-max
-/// argmax-and-suppress, bit-matching `ref_topk_indices` (which avoids
-/// `lax.top_k` for AOT-toolchain reasons; k* is 4 in the paper, so the
-/// loop is tiny either way).
-pub fn topk_indices(scores: &[f32], groups: usize, nb: usize, k: usize, out: &mut Vec<usize>) {
+/// gathers downstream), parallel over group-row chunks. `out` is resized
+/// to `groups * k`.
+pub fn topk_indices(scores: &[f32], groups: usize, nb: usize, k: usize, threads: usize, out: &mut Vec<usize>) {
     assert_eq!(scores.len(), groups * nb, "topk scores len");
     assert!(k <= nb, "top_k {k} exceeds block count {nb}");
     out.clear();
-    out.reserve(groups * k);
+    out.resize(groups * k, 0);
+    if k == 0 {
+        return;
+    }
+    pool::par_rows(out.as_mut_slice(), k, threads, |g0, ochunk| {
+        let mut row = vec![0.0f32; nb];
+        for (gi, oslot) in ochunk.chunks_exact_mut(k).enumerate() {
+            row.copy_from_slice(&scores[(g0 + gi) * nb..(g0 + gi + 1) * nb]);
+            topk_row(&mut row, k, oslot);
+        }
+    });
+}
+
+/// Scalar twin of [`topk_indices`]: k rounds of argmax-and-suppress per
+/// row, single thread (ref.py avoids `lax.top_k` for AOT-toolchain
+/// reasons; k* is 4 in the paper, so the loop is tiny either way).
+pub fn topk_indices_reference(scores: &[f32], groups: usize, nb: usize, k: usize, out: &mut Vec<usize>) {
+    assert_eq!(scores.len(), groups * nb, "topk scores len");
+    assert!(k <= nb, "top_k {k} exceeds block count {nb}");
+    out.clear();
+    out.resize(groups * k, 0);
+    if k == 0 {
+        return;
+    }
     let mut row = vec![0.0f32; nb];
     for gi in 0..groups {
         row.copy_from_slice(&scores[gi * nb..(gi + 1) * nb]);
-        let base = out.len();
-        for _ in 0..k {
-            let mut best = 0usize;
-            let mut bv = f32::NEG_INFINITY;
-            for (i, &v) in row.iter().enumerate() {
-                // strict > keeps the first occurrence on ties (jnp.argmax)
-                if v > bv {
-                    bv = v;
-                    best = i;
-                }
-            }
-            out.push(best);
-            row[best] -= 2e30;
-        }
-        out[base..base + k].sort_unstable();
+        topk_row(&mut row, k, &mut out[gi * k..(gi + 1) * k]);
     }
 }
 
 /// Grouped selection attention (paper eqs. 6-8, 10-12): every query in
 /// group `p` attends the `k*` selected blocks of `sel_block` tokens given
-/// by `idx[p]`. `q`/`k`/`v`/`out` are `(n, d)`; `idx` is `groups * k`
-/// flat; `ksel`/`vsel` are `k * sel_block * d` scratch.
+/// by `idx[p]`, parallel over group chunks (gather scratch is
+/// per-thread). `q`/`k`/`v`/`out` are `(n, d)`; `idx` is `groups * k`
+/// flat.
 #[allow(clippy::too_many_arguments)]
 pub fn select_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    idx: &[usize],
+    n: usize,
+    d: usize,
+    sel_block: usize,
+    group: usize,
+    top_k: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(n % group, 0, "n must be divisible by group");
+    let groups = n / group;
+    assert_eq!(idx.len(), groups * top_k, "idx len");
+    assert_eq!(out.len(), n * d, "select_attention out len");
+    let scale = 1.0 / (d as f32).sqrt();
+    let blk = sel_block * d;
+    let gd = group * d;
+    pool::par_rows(out, gd, threads, |p0, ochunk| {
+        let mut ksel = vec![0.0f32; top_k * blk];
+        let mut vsel = vec![0.0f32; top_k * blk];
+        let mut scores = Vec::new();
+        for (pi, ogroup) in ochunk.chunks_exact_mut(gd).enumerate() {
+            let p = p0 + pi;
+            for (j, &bi) in idx[p * top_k..(p + 1) * top_k].iter().enumerate() {
+                debug_assert!((bi + 1) * blk <= k.len(), "block index {bi} out of range");
+                ksel[j * blk..(j + 1) * blk].copy_from_slice(&k[bi * blk..(bi + 1) * blk]);
+                vsel[j * blk..(j + 1) * blk].copy_from_slice(&v[bi * blk..(bi + 1) * blk]);
+            }
+            attend_reference(
+                &q[p * gd..(p + 1) * gd],
+                &ksel,
+                &vsel,
+                group,
+                top_k * sel_block,
+                d,
+                scale,
+                ogroup,
+                &mut scores,
+            );
+        }
+    });
+}
+
+/// Scalar twin of [`select_attention`] (caller-owned gather scratch,
+/// like the original serial kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn select_attention_reference(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -200,7 +384,7 @@ pub fn select_attention(
             vsel[j * blk..(j + 1) * blk].copy_from_slice(&v[bi * blk..(bi + 1) * blk]);
         }
         let qr = p * group * d..(p + 1) * group * d;
-        attend(
+        attend_reference(
             &q[qr.clone()],
             ksel,
             vsel,
@@ -232,10 +416,13 @@ mod tests {
         let v = [vec![2.0f32; d], vec![4.0f32; d]].concat();
         let mut out = vec![0.0f32; d];
         let mut s = Vec::new();
-        attend(&q, &k, &v, 1, 2, d, 0.5, &mut out, &mut s);
+        attend(&q, &k, &v, 1, 2, d, 0.5, 2, &mut out, &mut s);
         for &o in &out {
             assert!((o - 3.0).abs() < 1e-6);
         }
+        let mut refr = vec![0.0f32; d];
+        attend_reference(&q, &k, &v, 1, 2, d, 0.5, &mut refr, &mut s);
+        assert_eq!(out, refr);
     }
 
     #[test]
@@ -248,20 +435,20 @@ mod tests {
         let mut whole = vec![0.0f32; n * d];
         let mut dense = vec![0.0f32; n * d];
         let mut s = Vec::new();
-        ball_attention(&q, &k, &v, n, d, n, &mut whole, &mut s);
-        attend(&q, &k, &v, n, n, d, 1.0 / (d as f32).sqrt(), &mut dense, &mut s);
+        ball_attention(&q, &k, &v, n, d, n, 2, &mut whole);
+        attend_reference(&q, &k, &v, n, n, d, 1.0 / (d as f32).sqrt(), &mut dense, &mut s);
         assert_eq!(whole, dense);
 
         // two balls: each half ignores the other (change the far half's
         // values, near half's output must not move)
         let mut halves = vec![0.0f32; n * d];
-        ball_attention(&q, &k, &v, n, d, n / 2, &mut halves, &mut s);
+        ball_attention(&q, &k, &v, n, d, n / 2, 2, &mut halves);
         let mut v2 = v.clone();
         for x in &mut v2[n / 2 * d..] {
             *x += 100.0;
         }
         let mut halves2 = vec![0.0f32; n * d];
-        ball_attention(&q, &k, &v2, n, d, n / 2, &mut halves2, &mut s);
+        ball_attention(&q, &k, &v2, n, d, n / 2, 2, &mut halves2);
         assert_eq!(halves[..n / 2 * d], halves2[..n / 2 * d]);
         assert_ne!(halves[n / 2 * d..], halves2[n / 2 * d..]);
     }
@@ -271,8 +458,11 @@ mod tests {
         // rows 0..3 constant per row, block 2 => means of row pairs
         let x = [0.0f32, 0.0, 1.0, 1.0, 2.0, 2.0, 4.0, 4.0];
         let mut out = vec![0.0f32; 4];
-        compress_mean(&x, 4, 2, 2, &mut out);
+        compress_mean(&x, 4, 2, 2, 2, &mut out);
         assert_eq!(out, [0.5, 0.5, 3.0, 3.0]);
+        let mut refr = vec![0.0f32; 4];
+        compress_mean_reference(&x, 4, 2, 2, &mut refr);
+        assert_eq!(out, refr);
     }
 
     #[test]
@@ -295,9 +485,12 @@ mod tests {
     fn topk_picks_largest_sorted_and_first_on_ties() {
         let scores = [0.1f32, 5.0, 3.0, 5.0, -1.0, 4.0];
         let mut out = Vec::new();
-        topk_indices(&scores, 1, 6, 3, &mut out);
+        topk_indices(&scores, 1, 6, 3, 2, &mut out);
         // picks: 1 (first 5.0), 3 (second 5.0), 5 (4.0) -> sorted
         assert_eq!(out, vec![1, 3, 5]);
+        let mut refr = Vec::new();
+        topk_indices_reference(&scores, 1, 6, 3, &mut refr);
+        assert_eq!(out, refr);
     }
 
     #[test]
@@ -311,10 +504,10 @@ mod tests {
         let top_k = n / l;
         let idx: Vec<usize> = (0..n / g).flat_map(|_| 0..top_k).collect();
         let mut sel = vec![0.0f32; n * d];
-        let (mut ks, mut vs, mut sc) = (Vec::new(), Vec::new(), Vec::new());
-        select_attention(&q, &k, &v, &idx, n, d, l, g, top_k, &mut sel, &mut ks, &mut vs, &mut sc);
+        select_attention(&q, &k, &v, &idx, n, d, l, g, top_k, 2, &mut sel);
+        let mut sc = Vec::new();
         let mut dense = vec![0.0f32; n * d];
-        attend(&q, &k, &v, n, n, d, 1.0 / (d as f32).sqrt(), &mut dense, &mut sc);
+        attend_reference(&q, &k, &v, n, n, d, 1.0 / (d as f32).sqrt(), &mut dense, &mut sc);
         for (a, b) in sel.iter().zip(&dense) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }

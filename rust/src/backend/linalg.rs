@@ -1,18 +1,102 @@
 //! Dense f32 primitives for the native backend: GEMM, stable softmax,
-//! RMSNorm, activations.
+//! RMSNorm, activations — cache-blocked and thread-parallel.
 //!
 //! All functions operate on flat row-major slices with explicit
-//! dimensions (no `Tensor` overhead on the per-head hot loops) and are
-//! allocation-free — callers own every buffer, matching the zero-copy
-//! discipline of the serving batch assembler. The GEMM uses i-k-j loop
-//! order so the inner loop streams both the output row and the B row
-//! sequentially (the classic cache-friendly ordering for row-major
-//! operands); at the model widths involved (<= a few hundred columns)
-//! this is within a small factor of a blocked kernel and keeps the code
-//! dependency-free.
+//! dimensions (no `Tensor` overhead on the per-head hot loops). Each
+//! performance kernel has a `*_reference` scalar twin — the original
+//! single-threaded loop-nest — and the fast version is constructed to be
+//! **bitwise equal** to it: work is split into contiguous row chunks
+//! (see [`super::pool::par_rows`]) and blocking/packing never reorders
+//! any output element's floating-point accumulation. The differential
+//! harness in `rust/tests/conformance.rs` sweeps randomized shapes and
+//! thread counts against the twins; see the "Kernel conformance" section
+//! of [`super`]'s docs before touching either side of a pair.
+//!
+//! The GEMM is a panel-blocked kernel: B is packed one `KC x NC` panel
+//! at a time into a dense per-thread buffer (so the inner loops stream a
+//! hot, contiguous panel instead of striding through all of B), and each
+//! thread owns a contiguous block of output rows. Panels are visited in
+//! ascending-k order, so every `out[i][j]` still accumulates its k terms
+//! in exactly the reference order.
 
-/// `out = a @ b` where `a` is `(m, k)`, `b` is `(k, n)`, `out` is `(m, n)`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+use super::pool;
+
+/// k-dimension panel height for the packed GEMM.
+const KC: usize = 256;
+/// n-dimension panel width for the packed GEMM.
+const NC: usize = 128;
+/// Register-blocking factor (output rows sharing one streamed B row) for
+/// the transposed GEMM.
+const MR: usize = 4;
+
+/// `out = a @ b` where `a` is `(m, k)`, `b` is `(k, n)`, `out` is
+/// `(m, n)`. Panel-blocked and parallel over output-row chunks;
+/// bitwise equal to [`matmul_reference`] for all shapes and `threads`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul a len");
+    assert_eq!(b.len(), k * n, "matmul b len");
+    assert_eq!(out.len(), m * n, "matmul out len");
+    if m == 0 || n == 0 {
+        return;
+    }
+    pool::par_rows(out, n, threads, |row0, orows| {
+        let rows = orows.len() / n;
+        matmul_rows_blocked(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, orows);
+    });
+}
+
+/// Serial panel kernel for one contiguous block of output rows. Packs B
+/// `KC x NC` panels; per output element the k terms are accumulated in
+/// ascending order, exactly like the scalar reference. When all of B
+/// already fits in a single panel (`k <= KC && n <= NC` — every
+/// per-head kernel matmul at the paper widths) packing would copy B
+/// once to read it once, so the i-k-j nest streams B directly instead:
+/// no packed buffer, no allocation, identical accumulation order.
+fn matmul_rows_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    if k <= KC && n <= NC {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        return;
+    }
+    let mut packed = vec![0.0f32; KC.min(k.max(1)) * NC.min(n)];
+    let mut jc = 0;
+    while jc < n {
+        let ncb = NC.min(n - jc);
+        let mut kc = 0;
+        while kc < k {
+            let kcb = KC.min(k - kc);
+            for kk in 0..kcb {
+                let src = (kc + kk) * n + jc;
+                packed[kk * ncb..(kk + 1) * ncb].copy_from_slice(&b[src..src + ncb]);
+            }
+            for i in 0..m {
+                let arow = &a[i * k + kc..i * k + kc + kcb];
+                let orow = &mut out[i * n + jc..i * n + jc + ncb];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &packed[kk * ncb..(kk + 1) * ncb];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            kc += kcb;
+        }
+        jc += ncb;
+    }
+}
+
+/// Scalar twin of [`matmul`]: the classic i-k-j loop nest, single
+/// thread, no blocking. The conformance oracle.
+pub fn matmul_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "matmul a len");
     assert_eq!(b.len(), k * n, "matmul b len");
     assert_eq!(out.len(), m * n, "matmul out len");
@@ -29,11 +113,41 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
     }
 }
 
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
 /// `out = a @ b^T` where `a` is `(m, k)`, `b` is `(n, k)`, `out` is
-/// `(m, n)` — the attention-score shape (queries against keys), where
-/// both operands are row-major and the dot products run over contiguous
-/// rows.
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+/// `(m, n)` — the attention-score shape. Register-blocked (each loaded B
+/// row is reused across `MR` output rows) and parallel over
+/// output-row chunks; bitwise equal to [`matmul_nt_reference`].
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_nt a len");
+    assert_eq!(b.len(), n * k, "matmul_nt b len");
+    assert_eq!(out.len(), m * n, "matmul_nt out len");
+    if m == 0 || n == 0 {
+        return;
+    }
+    pool::par_rows(out, n, threads, |row0, orows| {
+        let rows = orows.len() / n;
+        let a = &a[row0 * k..(row0 + rows) * k];
+        let mut i = 0;
+        while i < rows {
+            let mb = MR.min(rows - i);
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                for ii in 0..mb {
+                    orows[(i + ii) * n + j] = dot(&a[(i + ii) * k..(i + ii + 1) * k], brow);
+                }
+            }
+            i += mb;
+        }
+    });
+}
+
+/// Scalar twin of [`matmul_nt`]: row-by-row dot products.
+pub fn matmul_nt_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "matmul_nt a len");
     assert_eq!(b.len(), n * k, "matmul_nt b len");
     assert_eq!(out.len(), m * n, "matmul_nt out len");
@@ -41,15 +155,24 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            *o = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+            *o = dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
 }
 
-/// In-place row-wise softmax over a `(rows, cols)` matrix, with the
-/// standard max-subtraction so large-magnitude logits stay finite.
-pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+/// In-place row-wise softmax over a `(rows, cols)` matrix, parallel
+/// over row chunks (rows are independent; each chunk runs the scalar
+/// twin verbatim, so this is bitwise equal to
+/// [`softmax_rows_reference`]).
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize, threads: usize) {
+    assert_eq!(x.len(), rows * cols, "softmax len");
+    pool::par_rows(x, cols, threads, |_, chunk| {
+        softmax_rows_reference(chunk, chunk.len() / cols, cols);
+    });
+}
+
+/// Scalar twin of [`softmax_rows`]: row-wise max-subtracted softmax.
+pub fn softmax_rows_reference(x: &mut [f32], rows: usize, cols: usize) {
     assert_eq!(x.len(), rows * cols, "softmax len");
     for row in x.chunks_exact_mut(cols) {
         let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -70,8 +193,20 @@ pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
 
 /// Row-wise RMSNorm (Zhang & Sennrich 2019): `out = x / rms(x) * scale`
 /// with `rms = sqrt(mean(x^2) + eps)`, matching the jax reference
-/// (`model.rms_norm`, eps 1e-6).
-pub fn rms_norm(x: &[f32], scale: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+/// (`model.rms_norm`, eps 1e-6). Parallel over row chunks; bitwise
+/// equal to [`rms_norm_reference`].
+pub fn rms_norm(x: &[f32], scale: &[f32], rows: usize, cols: usize, threads: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), rows * cols, "rms_norm x len");
+    assert_eq!(scale.len(), cols, "rms_norm scale len");
+    assert_eq!(out.len(), rows * cols, "rms_norm out len");
+    pool::par_rows(out, cols, threads, |row0, ochunk| {
+        let r = ochunk.len() / cols;
+        rms_norm_reference(&x[row0 * cols..(row0 + r) * cols], scale, r, cols, ochunk);
+    });
+}
+
+/// Scalar twin of [`rms_norm`].
+pub fn rms_norm_reference(x: &[f32], scale: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
     assert_eq!(x.len(), rows * cols, "rms_norm x len");
     assert_eq!(scale.len(), cols, "rms_norm scale len");
     assert_eq!(out.len(), rows * cols, "rms_norm out len");
@@ -85,7 +220,8 @@ pub fn rms_norm(x: &[f32], scale: &[f32], rows: usize, cols: usize, out: &mut [f
     }
 }
 
-/// Add a length-`cols` bias to every row of a `(rows, cols)` matrix.
+/// Add a length-`cols` bias to every row of a `(rows, cols)` matrix
+/// (memory-bound; stays serial).
 pub fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
     assert_eq!(x.len(), rows * cols, "add_bias x len");
     assert_eq!(bias.len(), cols, "add_bias bias len");
@@ -111,6 +247,7 @@ pub fn silu(x: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prng::Rng;
 
     #[test]
     fn matmul_small_known() {
@@ -118,8 +255,26 @@ mod tests {
         let a = [1., 2., 3., 4.];
         let b = [5., 6., 7., 8.];
         let mut out = [0.0f32; 4];
-        matmul(&a, &b, 2, 2, 2, &mut out);
+        matmul(&a, &b, 2, 2, 2, 1, &mut out);
         assert_eq!(out, [19., 22., 43., 50.]);
+        let mut refr = [0.0f32; 4];
+        matmul_reference(&a, &b, 2, 2, 2, &mut refr);
+        assert_eq!(out, refr);
+    }
+
+    #[test]
+    fn matmul_blocked_crosses_panel_boundaries_bitwise() {
+        // k > KC and n > NC so the panel loops actually iterate
+        let (m, k, n) = (5usize, KC + 7, NC + 33);
+        let a = Rng::new(1).normals(m * k);
+        let b = Rng::new(2).normals(k * n);
+        for threads in [1usize, 2, 3] {
+            let mut fast = vec![0.0f32; m * n];
+            matmul(&a, &b, m, k, n, threads, &mut fast);
+            let mut refr = vec![0.0f32; m * n];
+            matmul_reference(&a, &b, m, k, n, &mut refr);
+            assert_eq!(fast, refr, "threads {threads}");
+        }
     }
 
     #[test]
@@ -134,15 +289,30 @@ mod tests {
         }
         let mut x = vec![0.0f32; 8];
         let mut y = vec![0.0f32; 8];
-        matmul_nt(&a, &b, 2, 3, 4, &mut x);
-        matmul(&a, &bt, 2, 3, 4, &mut y);
+        matmul_nt(&a, &b, 2, 3, 4, 2, &mut x);
+        matmul(&a, &bt, 2, 3, 4, 1, &mut y);
         assert_eq!(x, y);
+        let mut refr = vec![0.0f32; 8];
+        matmul_nt_reference(&a, &b, 2, 3, 4, &mut refr);
+        assert_eq!(x, refr);
+    }
+
+    #[test]
+    fn matmul_handles_degenerate_dims() {
+        // m = 0 and n = 0 are no-ops, k = 0 zeroes the output
+        let mut empty: Vec<f32> = vec![];
+        matmul(&[], &[1.0, 2.0], 0, 1, 2, 4, &mut empty);
+        matmul(&[1.0, 2.0], &[], 2, 1, 0, 4, &mut empty);
+        matmul_nt(&[], &[1.0, 2.0], 0, 1, 2, 4, &mut empty);
+        let mut out = vec![9.0f32; 4];
+        matmul(&[], &[], 2, 0, 2, 4, &mut out);
+        assert_eq!(out, [0.0; 4]);
     }
 
     #[test]
     fn softmax_rows_sum_to_one_and_order_preserved() {
         let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
-        softmax_rows(&mut x, 2, 3);
+        softmax_rows(&mut x, 2, 3, 2);
         for row in x.chunks_exact(3) {
             let s: f32 = row.iter().sum();
             assert!((s - 1.0).abs() < 1e-6, "row sums to {s}");
@@ -153,7 +323,7 @@ mod tests {
     #[test]
     fn softmax_stable_under_huge_logits() {
         let mut x = vec![1e30f32, 1e30, -1e30, 3e4, -3e4, 0.0];
-        softmax_rows(&mut x, 2, 3);
+        softmax_rows(&mut x, 2, 3, 1);
         assert!(x.iter().all(|v| v.is_finite()));
         let s0: f32 = x[..3].iter().sum();
         let s1: f32 = x[3..].iter().sum();
@@ -165,7 +335,7 @@ mod tests {
     fn rms_norm_unit_scale_normalizes() {
         let x = vec![3.0f32, 4.0];
         let mut out = vec![0.0f32; 2];
-        rms_norm(&x, &[1.0, 1.0], 1, 2, &mut out);
+        rms_norm(&x, &[1.0, 1.0], 1, 2, 2, &mut out);
         // rms = sqrt((9+16)/2) = sqrt(12.5)
         let rms = 12.5f32.sqrt();
         assert!((out[0] - 3.0 / rms).abs() < 1e-5);

@@ -30,12 +30,53 @@
 //! alongside the HLO artifacts for the same purpose.
 //!
 //! Select the backend on the CLI with `bsa serve --backend native|pjrt`.
+//!
+//! # Kernel conformance
+//!
+//! The native kernels come in pairs: a fast production version
+//! (cache-blocked, thread-parallel over [`pool::par_rows`] chunks) and a
+//! `*_reference` scalar twin — the plain loop nest that mirrors the jnp
+//! oracle in `python/compile/kernels/ref.py`. The pairs are
+//! [`linalg::matmul`]/[`linalg::matmul_reference`],
+//! [`linalg::matmul_nt`]/[`linalg::matmul_nt_reference`],
+//! [`linalg::softmax_rows`]/[`linalg::softmax_rows_reference`],
+//! [`linalg::rms_norm`]/[`linalg::rms_norm_reference`],
+//! [`kernels::attend`]/[`kernels::attend_reference`],
+//! [`kernels::ball_attention`]/[`kernels::ball_attention_reference`],
+//! [`kernels::compress_mean`]/[`kernels::compress_mean_reference`],
+//! [`kernels::group_scores`]/[`kernels::group_scores_reference`],
+//! [`kernels::topk_indices`]/[`kernels::topk_indices_reference`], and
+//! [`kernels::select_attention`]/[`kernels::select_attention_reference`]
+//! (`kernels::mask_own_ball` is elementwise and serves as its own
+//! reference).
+//!
+//! The invariant is stronger than a tolerance: every fast kernel splits
+//! work into **contiguous** output chunks (rows / balls / blocks /
+//! groups) and preserves each output element's floating-point
+//! accumulation order, so fast == reference holds *bitwise* for every
+//! shape and thread count. That is what makes the forward pass
+//! deterministic across `BSA_NATIVE_THREADS` settings and lets the
+//! serving layer treat the thread budget as a pure latency knob.
+//!
+//! `rust/tests/conformance.rs` is the differential harness that enforces
+//! all of this: randomized shape sweeps (uneven ball sizes, degenerate
+//! single-point balls, tie-heavy top-k rows, panel-boundary-crossing
+//! GEMMs) comparing fast vs reference within 1e-5, a concurrent
+//! bit-determinism check on a shared `Arc<dyn Backend>`, and the
+//! native-vs-pjrt fixture gate. **To add a new kernel:** (1) write the
+//! scalar `*_reference` twin first and unit-test its math; (2) build the
+//! fast version on `pool::par_rows` over disjoint output rows, computing
+//! each row exactly as the twin does (delegate to the twin per chunk
+//! when possible); (3) add a `conf_*` sweep to conformance.rs that
+//! randomizes shapes *and* thread counts, including the degenerate edges
+//! (unit dims, one chunk per thread, more threads than rows).
 
 pub mod kernels;
 pub mod linalg;
 pub mod native;
 pub mod params;
 pub mod pjrt;
+pub mod pool;
 
 pub use native::NativeBackend;
 pub use params::NativeParams;

@@ -10,8 +10,19 @@
 //! `(N, dh)` head-major operands the Pallas/ref kernels see — which is
 //! what makes this backend a usable parity oracle for the compiled HLO.
 //!
+//! Compute is thread-parallel via [`super::pool`]: the projections and
+//! MLP GEMMs split output rows across threads, ball attention splits
+//! balls, compression splits blocks, selection/top-k split groups. The
+//! thread count comes from [`NativeBackend::with_threads`] /
+//! `ServeConfig::native_threads`, with the `BSA_NATIVE_THREADS` env var
+//! as the zero-config override (see [`pool::resolve_threads`]). All
+//! parallel kernels are bitwise equal to their `*_reference` twins, so
+//! the forward pass is deterministic across thread counts — asserted by
+//! `rust/tests/conformance.rs`.
+//!
 //! Scratch buffers are allocated once per `forward` call and reused
-//! across blocks and heads; per-call cost is a handful of `Vec`s, far
+//! across blocks and heads (plus small per-thread gather buffers inside
+//! the parallel kernels); per-call cost is a handful of `Vec`s, far
 //! below the matmul work itself.
 
 use crate::config::ModelConfig;
@@ -20,6 +31,7 @@ use crate::tensor::Tensor;
 use super::kernels;
 use super::linalg;
 use super::params::{BlockParams, NativeParams};
+use super::pool;
 use super::{Backend, BackendSpec};
 
 /// Sparse-attention hyperparameters the forward pass needs at run time
@@ -59,18 +71,22 @@ impl AttnHyper {
 }
 
 /// The native CPU backend: BSA parameters + sparse hyperparameters +
-/// the static `(batch, n)` serving shape.
+/// the static `(batch, n)` serving shape + kernel thread budget.
 pub struct NativeBackend {
     params: NativeParams,
     hyper: AttnHyper,
     spec: BackendSpec,
+    /// Resolved kernel thread count (>= 1); see [`Self::with_threads`].
+    threads: usize,
 }
 
 impl NativeBackend {
     /// Build from explicit parameters. `n` is the serving sequence
     /// length (requests are ball-tree padded to it), `batch` the batch
     /// size a single `forward` consumes. The ball size is clamped to
-    /// `n` exactly like aot.py clamps it at lowering.
+    /// `n` exactly like aot.py clamps it at lowering. Kernel threads
+    /// default to the `BSA_NATIVE_THREADS` env var or the machine's
+    /// available parallelism; override with [`Self::with_threads`].
     pub fn new(
         params: NativeParams,
         mut hyper: AttnHyper,
@@ -101,7 +117,21 @@ impl NativeBackend {
             in_features: params.in_features(),
             out_features: params.out_features(),
         };
-        Ok(NativeBackend { params, hyper, spec })
+        Ok(NativeBackend { params, hyper, spec, threads: pool::resolve_threads(0) })
+    }
+
+    /// Set the kernel thread budget: `threads > 0` pins the count, `0`
+    /// re-resolves from `BSA_NATIVE_THREADS` / hardware parallelism.
+    /// Outputs are bitwise identical for every setting (the parallel
+    /// kernels are order-preserving); this only trades latency for CPU.
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.threads = pool::resolve_threads(threads);
+        self
+    }
+
+    /// The resolved kernel thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Deterministic random-weight backend (smoke tests, latency benches,
@@ -184,11 +214,12 @@ impl NativeBackend {
         let groups = n / g;
         let rows = b * n;
         let scale = 1.0 / (dh as f32).sqrt();
+        let th = self.threads;
 
-        linalg::matmul(a, blk.attn.wq.data(), rows, c, c, &mut s.q);
-        linalg::matmul(a, blk.attn.wk.data(), rows, c, c, &mut s.k);
-        linalg::matmul(a, blk.attn.wv.data(), rows, c, c, &mut s.v);
-        linalg::matmul(a, blk.attn.wg.data(), rows, c, 3 * h_cnt, &mut s.gates);
+        linalg::matmul(a, blk.attn.wq.data(), rows, c, c, th, &mut s.q);
+        linalg::matmul(a, blk.attn.wk.data(), rows, c, c, th, &mut s.k);
+        linalg::matmul(a, blk.attn.wv.data(), rows, c, c, th, &mut s.v);
+        linalg::matmul(a, blk.attn.wg.data(), rows, c, 3 * h_cnt, th, &mut s.gates);
 
         for bi in 0..b {
             for hd in 0..h_cnt {
@@ -201,22 +232,21 @@ impl NativeBackend {
                     s.vs[t * dh..(t + 1) * dh].copy_from_slice(&s.v[src..src + dh]);
                 }
 
-                // ball branch (eq. 3)
-                kernels::ball_attention(&s.qs, &s.ks, &s.vs, n, dh, m, &mut s.o_ball, &mut s.scores);
+                // ball branch (eq. 3): one ball batch per thread chunk
+                kernels::ball_attention(&s.qs, &s.ks, &s.vs, n, dh, m, th, &mut s.o_ball);
 
                 // compression branch (eq. 5): mean phi + dense attention
-                kernels::compress_mean(&s.ks, n, dh, l, &mut s.kc);
-                kernels::compress_mean(&s.vs, n, dh, l, &mut s.vc);
-                kernels::attend(&s.qs, &s.kc, &s.vc, n, nb, dh, scale, &mut s.o_cmp, &mut s.scores);
+                kernels::compress_mean(&s.ks, n, dh, l, th, &mut s.kc);
+                kernels::compress_mean(&s.vs, n, dh, l, th, &mut s.vc);
+                kernels::attend(&s.qs, &s.kc, &s.vc, n, nb, dh, scale, th, &mut s.o_cmp, &mut s.scores);
 
                 // selection branch (eqs. 6-8, 10-12): grouped top-k over
                 // compressed keys, own-ball blocks masked out
-                kernels::group_scores(&s.qs, &s.kc, n, dh, g, nb, &mut s.qg, &mut s.gscores);
+                kernels::group_scores(&s.qs, &s.kc, n, dh, g, nb, th, &mut s.qg, &mut s.gscores);
                 kernels::mask_own_ball(&mut s.gscores, groups, nb, g, l, m);
-                kernels::topk_indices(&s.gscores, groups, nb, top_k, &mut s.idx);
+                kernels::topk_indices(&s.gscores, groups, nb, top_k, th, &mut s.idx);
                 kernels::select_attention(
-                    &s.qs, &s.ks, &s.vs, &s.idx, n, dh, l, g, top_k,
-                    &mut s.o_slc, &mut s.ksel, &mut s.vsel, &mut s.scores,
+                    &s.qs, &s.ks, &s.vs, &s.idx, n, dh, l, g, top_k, th, &mut s.o_slc,
                 );
 
                 // gated fusion (eq. 9): per-token per-head sigmoid gates,
@@ -236,11 +266,13 @@ impl NativeBackend {
                 }
             }
         }
-        linalg::matmul(&s.merged, blk.attn.wo.data(), rows, c, c, out);
+        linalg::matmul(&s.merged, blk.attn.wo.data(), rows, c, c, th, out);
     }
 }
 
-/// Per-forward scratch buffers (sized once, reused across blocks/heads).
+/// Per-forward scratch buffers (sized once, reused across blocks/heads;
+/// the parallel kernels' per-thread gather buffers live inside the
+/// kernels themselves).
 struct Scratch {
     // (B*N, C) projections
     q: Vec<f32>,
@@ -261,8 +293,6 @@ struct Scratch {
     qg: Vec<f32>,
     gscores: Vec<f32>,
     idx: Vec<usize>,
-    ksel: Vec<f32>,
-    vsel: Vec<f32>,
     scores: Vec<f32>,
 }
 
@@ -285,8 +315,6 @@ impl Scratch {
             qg: Vec::new(),
             gscores: vec![0.0; groups * nb],
             idx: Vec::new(),
-            ksel: Vec::new(),
-            vsel: Vec::new(),
             scores: Vec::new(),
         }
     }
@@ -314,11 +342,12 @@ impl Backend for NativeBackend {
         let rows = b * n;
         let nb = n / self.hyper.cmp_block;
         let groups = n / self.hyper.group_size;
+        let th = self.threads;
         let mut s = Scratch::new(rows, c, n, dh, nb, groups, h_cnt);
 
         // embed
         let mut h = vec![0.0f32; rows * c];
-        linalg::matmul(x.data(), self.params.embed_w.data(), rows, spec.in_features, c, &mut h);
+        linalg::matmul(x.data(), self.params.embed_w.data(), rows, spec.in_features, c, th, &mut h);
         linalg::add_bias(&mut h, self.params.embed_b.data(), rows, c);
 
         // trunk
@@ -329,29 +358,29 @@ impl Backend for NativeBackend {
         let mut h3 = vec![0.0f32; rows * hid];
         for blk in &self.params.blocks {
             // x = x + attn(rms_norm(x))
-            linalg::rms_norm(&h, blk.norm1.data(), rows, c, &mut norm);
+            linalg::rms_norm(&h, blk.norm1.data(), rows, c, th, &mut norm);
             self.attention(blk, &norm, &mut branch, &mut s);
             for (hv, &av) in h.iter_mut().zip(&branch) {
                 *hv += av;
             }
             // x = x + swiglu(rms_norm(x))
-            linalg::rms_norm(&h, blk.norm2.data(), rows, c, &mut norm);
-            linalg::matmul(&norm, blk.mlp.w1.data(), rows, c, hid, &mut h1);
-            linalg::matmul(&norm, blk.mlp.w3.data(), rows, c, hid, &mut h3);
+            linalg::rms_norm(&h, blk.norm2.data(), rows, c, th, &mut norm);
+            linalg::matmul(&norm, blk.mlp.w1.data(), rows, c, hid, th, &mut h1);
+            linalg::matmul(&norm, blk.mlp.w3.data(), rows, c, hid, th, &mut h3);
             for (a, &g) in h1.iter_mut().zip(&h3) {
                 *a = linalg::silu(*a) * g;
             }
-            linalg::matmul(&h1, blk.mlp.w2.data(), rows, hid, c, &mut branch);
+            linalg::matmul(&h1, blk.mlp.w2.data(), rows, hid, c, th, &mut branch);
             for (hv, &mv) in h.iter_mut().zip(&branch) {
                 *hv += mv;
             }
         }
 
         // head
-        linalg::rms_norm(&h, self.params.norm_out.data(), rows, c, &mut norm);
+        linalg::rms_norm(&h, self.params.norm_out.data(), rows, c, th, &mut norm);
         let of = spec.out_features;
         let mut out = vec![0.0f32; rows * of];
-        linalg::matmul(&norm, self.params.head_w.data(), rows, c, of, &mut out);
+        linalg::matmul(&norm, self.params.head_w.data(), rows, c, of, th, &mut out);
         linalg::add_bias(&mut out, self.params.head_b.data(), rows, of);
         Ok(Tensor::new(vec![b, n, of], out))
     }
@@ -406,6 +435,27 @@ mod tests {
         assert_eq!(a, b, "same seed, same input => bit-identical output");
         let c = tiny_backend(8).forward(&x).unwrap();
         assert_ne!(a, c, "different seed must change the function");
+    }
+
+    #[test]
+    fn forward_bitwise_stable_across_thread_counts() {
+        // The load-bearing property of the parallel kernels: the thread
+        // budget is a pure latency knob, never a numerics knob.
+        let x = input(256, 6, 4);
+        let base = tiny_backend(5).with_threads(1).forward(&x).unwrap();
+        for t in [2usize, 3, 8] {
+            let out = tiny_backend(5).with_threads(t).forward(&x).unwrap();
+            assert_eq!(base, out, "threads={t} changed the output");
+        }
+    }
+
+    #[test]
+    fn with_threads_resolves_and_caps() {
+        let be = tiny_backend(0).with_threads(3);
+        assert_eq!(be.threads(), 3);
+        let be = be.with_threads(100_000);
+        assert_eq!(be.threads(), pool::MAX_THREADS);
+        assert!(tiny_backend(0).threads() >= 1, "auto-resolve is positive");
     }
 
     #[test]

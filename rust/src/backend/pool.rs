@@ -1,0 +1,207 @@
+//! Work splitting for the native kernels: std scoped threads, no deps.
+//!
+//! Every parallel kernel in [`super::linalg`] and [`super::kernels`]
+//! funnels through [`par_rows`]: the output buffer is split into
+//! contiguous chunks of whole rows (a "row" being whatever unit the
+//! kernel parallelizes over — a GEMM output row, a ball, a selection
+//! group), each chunk is handed to a scoped thread, and the closure
+//! computes its rows exactly like the serial `*_reference` twin would.
+//! Because chunks are contiguous and each output element's accumulation
+//! order is untouched, the parallel kernels are bitwise equal to their
+//! scalar twins — the property `rust/tests/conformance.rs` enforces.
+//!
+//! Thread-count resolution (see [`resolve_threads`]): an explicit
+//! request wins, then the `BSA_NATIVE_THREADS` environment override,
+//! then `std::thread::available_parallelism()`. The resolved count is an
+//! upper bound — `par_rows` never spawns more threads than it has rows,
+//! the last chunk always runs on the caller's thread, and a count of 1
+//! runs inline with zero spawn overhead.
+//!
+//! Deliberate simplicity trade-off: threads are spawned per `par_rows`
+//! call (scoped, joined before return) rather than parked in a
+//! persistent pool. At the model's GEMM-dominated kernel sizes each
+//! call carries milliseconds of work, so spawn cost is low-single-digit
+//! percent; if profiling ever shows otherwise, the upgrade path is a
+//! persistent worker pool behind this same `par_rows` signature —
+//! callers and the bitwise chunking contract stay untouched (tracked in
+//! ROADMAP.md).
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Hard upper bound on kernel threads (sanity cap for typo'd overrides).
+pub const MAX_THREADS: usize = 64;
+
+/// Name of the environment override consulted by [`resolve_threads`].
+pub const THREADS_ENV: &str = "BSA_NATIVE_THREADS";
+
+fn hardware_threads() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Resolve a kernel thread count: `requested > 0` wins, else the
+/// `BSA_NATIVE_THREADS` env var (if set to a positive integer), else the
+/// machine's available parallelism. Always in `1..=MAX_THREADS`.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested.min(MAX_THREADS);
+    }
+    if let Ok(s) = std::env::var(THREADS_ENV) {
+        if let Ok(t) = s.trim().parse::<usize>() {
+            if t > 0 {
+                return t.min(MAX_THREADS);
+            }
+        }
+    }
+    hardware_threads().min(MAX_THREADS)
+}
+
+/// Split `rows` items into at most `threads` contiguous, near-equal
+/// ranges covering `0..rows` in order (the chunking [`par_rows`] uses).
+pub fn chunk_rows(rows: usize, threads: usize) -> Vec<Range<usize>> {
+    let t = threads.max(1).min(rows.max(1));
+    let per = (rows + t - 1) / t;
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < rows {
+        let end = (start + per).min(rows);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Run `f(first_row, chunk)` over disjoint contiguous whole-row chunks
+/// of `out` (`row_width` elements per row), one chunk per thread. The
+/// chunks are exactly [`chunk_rows`]`(rows, threads)`; the **last**
+/// chunk always runs inline on the caller's thread (it would otherwise
+/// sit idle in the scope join), so a call spawns at most
+/// `chunks - 1` threads and `threads <= 1` (or a single row) spawns
+/// none at all.
+///
+/// `f` must compute rows identically regardless of which chunk they
+/// land in; every caller in this crate guarantees that by delegating to
+/// (or matching) its scalar `*_reference` twin, which is what keeps
+/// parallel kernels bitwise deterministic across thread counts.
+pub fn par_rows<T, F>(out: &mut [T], row_width: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if out.is_empty() {
+        return;
+    }
+    assert!(row_width > 0, "par_rows row_width must be positive");
+    assert_eq!(out.len() % row_width, 0, "par_rows out not whole rows");
+    let rows = out.len() / row_width;
+    let t = threads.max(1).min(rows);
+    if t == 1 {
+        f(0, out);
+        return;
+    }
+    let chunks = chunk_rows(rows, t);
+    let last = chunks.len() - 1;
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for (ci, range) in chunks.iter().enumerate() {
+            let take = range.end - range.start;
+            let (chunk, tail) = {
+                let r = std::mem::take(&mut rest);
+                r.split_at_mut(take * row_width)
+            };
+            rest = tail;
+            if ci == last {
+                f(range.start, chunk);
+            } else {
+                let fr = &f;
+                let row0 = range.start;
+                s.spawn(move || fr(row0, chunk));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolve_explicit_wins_and_is_capped() {
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(10_000), MAX_THREADS);
+        assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn chunk_rows_partitions_in_order() {
+        for rows in [0usize, 1, 5, 7, 16, 33] {
+            for t in [1usize, 2, 3, 8, 64] {
+                let chunks = chunk_rows(rows, t);
+                let mut next = 0;
+                for r in &chunks {
+                    assert_eq!(r.start, next, "contiguous");
+                    assert!(r.end > r.start, "non-empty");
+                    next = r.end;
+                }
+                assert_eq!(next, rows, "covers 0..{rows}");
+                assert!(chunks.len() <= t.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn par_rows_touches_every_row_once() {
+        for threads in [1usize, 2, 3, 7] {
+            let rows = 23;
+            let width = 4;
+            let mut out = vec![0.0f32; rows * width];
+            let calls = AtomicUsize::new(0);
+            par_rows(&mut out, width, threads, |row0, chunk| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                for (i, row) in chunk.chunks_exact_mut(width).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + i) as f32 + 1.0;
+                    }
+                }
+            });
+            for (i, row) in out.chunks_exact(width).enumerate() {
+                for &v in row {
+                    assert_eq!(v, i as f32 + 1.0, "row {i} threads {threads}");
+                }
+            }
+            assert!(calls.load(Ordering::Relaxed) <= threads);
+        }
+    }
+
+    #[test]
+    fn par_rows_handles_empty_and_single_row() {
+        let mut empty: Vec<f32> = vec![];
+        par_rows(&mut empty, 8, 4, |_, _| panic!("must not be called"));
+        let mut one = vec![0.0f32; 6];
+        par_rows(&mut one, 6, 8, |row0, chunk| {
+            assert_eq!(row0, 0);
+            chunk.fill(1.0);
+        });
+        assert!(one.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn par_rows_works_for_usize_rows() {
+        // topk writes index rows; par_rows is generic over Send elements
+        let mut out = vec![0usize; 12];
+        par_rows(&mut out, 3, 4, |row0, chunk| {
+            for (i, row) in chunk.chunks_exact_mut(3).enumerate() {
+                row.fill(row0 + i);
+            }
+        });
+        for (i, row) in out.chunks_exact(3).enumerate() {
+            assert!(row.iter().all(|&v| v == i));
+        }
+    }
+}

@@ -382,6 +382,12 @@ pub struct ServeConfig {
     /// 0 disables). Repeated geometries — one mesh, many feature fields —
     /// skip `BallTree::build` entirely on a hit.
     pub tree_cache: usize,
+    /// Kernel threads for the native backend's forward pass (0 = auto:
+    /// the `BSA_NATIVE_THREADS` env var if set, else the machine's
+    /// available parallelism — see `backend::pool::resolve_threads`).
+    /// Purely a latency knob: native outputs are bitwise identical for
+    /// every setting.
+    pub native_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -394,6 +400,7 @@ impl Default for ServeConfig {
             queue_cap: 1024,
             seq_len: 4096,
             tree_cache: 64,
+            native_threads: 0,
         }
     }
 }
@@ -409,6 +416,8 @@ impl ServeConfig {
             queue_cap: doc.int_or("serve", "queue_cap", d.queue_cap as i64) as usize,
             seq_len: doc.int_or("serve", "seq_len", d.seq_len as i64) as usize,
             tree_cache: doc.int_or("serve", "tree_cache", d.tree_cache as i64) as usize,
+            native_threads: doc.int_or("serve", "native_threads", d.native_threads as i64)
+                as usize,
         }
     }
 }
@@ -541,6 +550,13 @@ empty = []
         assert_eq!(sc.tree_cache, 8);
         let off = Document::parse("[serve]\ntree_cache = 0\n").unwrap();
         assert_eq!(ServeConfig::from_doc(&off).tree_cache, 0);
+    }
+
+    #[test]
+    fn serve_config_native_threads_knob() {
+        assert_eq!(ServeConfig::default().native_threads, 0, "default = auto");
+        let doc = Document::parse("[serve]\nnative_threads = 4\n").unwrap();
+        assert_eq!(ServeConfig::from_doc(&doc).native_threads, 4);
     }
 
     #[test]

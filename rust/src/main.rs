@@ -39,6 +39,9 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "checkpoint", help: "checkpoint path", takes_value: true, default: None },
         FlagSpec { name: "addr", help: "server bind address", takes_value: true, default: Some("127.0.0.1:7077") },
         FlagSpec { name: "workers", help: "serving workers", takes_value: true, default: Some("2") },
+        // no baked-in default: absent flag falls back to the config
+        // file's [serve] native_threads (a Some() default would clobber it)
+        FlagSpec { name: "threads", help: "native-backend kernel threads per forward pass (0 = auto: BSA_NATIVE_THREADS env var, else hardware parallelism; default: [serve] native_threads or 0); outputs are bitwise identical for every setting", takes_value: true, default: None },
         FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
         FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
         FlagSpec { name: "out", help: "output path", takes_value: true, default: None },
@@ -176,6 +179,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut sc = ServeConfig::from_doc(&doc);
     sc.addr = args.str_flag("addr", &sc.addr);
     sc.workers = args.usize_flag("workers", sc.workers)?;
+    sc.native_threads = args.usize_flag("threads", sc.native_threads)?;
     let kind: BackendKind = args.str_flag("backend", "pjrt").parse()?;
 
     let router = match kind {
@@ -197,10 +201,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         BackendKind::Native => {
             let backend = native_backend(args, &doc, &sc)?;
             println!(
-                "serving {} (native, artifact-free) on {} with {} workers",
+                "serving {} (native, artifact-free) on {} with {} workers, {} kernel threads",
                 backend.spec().name,
                 sc.addr,
-                sc.workers
+                sc.workers,
+                backend.threads()
             );
             Arc::new(bsa::coordinator::Router::start(Arc::new(backend), sc.clone())?)
         }
@@ -231,7 +236,7 @@ fn native_backend(
     let gen = bsa::data::generator_for(&task, 0)?;
     let batch = sc.max_batch.max(1);
     let param_file = args.flag("params").or_else(|| args.flag("checkpoint"));
-    match param_file {
+    let backend = match param_file {
         Some(p) => NativeBackend::load(
             Path::new(p),
             AttnHyper::from_model(&mc),
@@ -242,7 +247,10 @@ fn native_backend(
             let seed = args.u64_flag("seed", 0)?;
             NativeBackend::init(seed, &mc, gen.feature_dim(), 1, batch)
         }
-    }
+    }?;
+    // `--threads` / [serve] native_threads; 0 defers to the
+    // BSA_NATIVE_THREADS env override, then hardware parallelism.
+    Ok(backend.with_threads(sc.native_threads))
 }
 
 /// Load params from --checkpoint, or run an init graph for random weights.

@@ -1,0 +1,568 @@
+//! Differential conformance harness for the native parallel kernels.
+//!
+//! Every fast kernel in `bsa::backend::{linalg, kernels}` has a
+//! `*_reference` scalar twin (see the "Kernel conformance" section of
+//! the `backend` module docs). This file is the gate that keeps the
+//! pairs equivalent: randomized shape sweeps — uneven ball sizes,
+//! degenerate single-point balls, panel-boundary-crossing GEMMs,
+//! tie-heavy top-k rows — across randomized thread counts, asserting
+//! fast == reference within 1e-5 (the parallel kernels are
+//! order-preserving, so in practice they agree bitwise; the tolerance is
+//! the contract, the exactness an implementation detail). On top of the
+//! kernel sweeps: whole-forward equivalence across thread counts,
+//! concurrent bit-determinism on a shared `Arc<dyn Backend>`, typed
+//! errors for shapes the kernels cannot serve (N not divisible by ball
+//! size), `params.rs` error paths (truncated / corrupt / mis-shaped
+//! `.bsackpt` files), and — when compiled artifacts exist — the
+//! native-vs-pjrt fixture gate.
+//!
+//! Failures print the `proptest_lite` case id so a shape can be
+//! replayed; run just this file with `cargo test --test conformance`
+//! (what `scripts/check.sh --quick` does, in release mode so the
+//! optimizer-on behaviour of the parallel kernels is what's tested).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use bsa::backend::native::AttnHyper;
+use bsa::backend::{kernels, linalg, pool, Backend, NativeBackend, NativeParams};
+use bsa::config::ModelConfig;
+use bsa::proptest_lite::{forall, Gen};
+use bsa::tensor::Tensor;
+
+/// Conformance tolerance (the acceptance contract; the kernels are in
+/// fact bitwise-equal, which `conf_forward_bitwise_across_threads`
+/// checks end to end).
+const TOL: f32 = 1e-5;
+
+fn assert_close(fast: &[f32], reference: &[f32], what: &str) {
+    assert_eq!(fast.len(), reference.len(), "{what}: length mismatch");
+    for (i, (a, b)) in fast.iter().zip(reference).enumerate() {
+        assert!(
+            (a - b).abs() <= TOL,
+            "{what}[{i}]: fast {a} vs reference {b}"
+        );
+    }
+}
+
+/// Thread counts worth sweeping: serial, even/odd splits, and more
+/// threads than most sweep shapes have rows (exercises the clamp).
+fn pick_threads(g: &mut Gen) -> usize {
+    *g.choose(&[1usize, 2, 3, 4, 8])
+}
+
+// ---------------------------------------------------------------------------
+// linalg: GEMM family
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conf_matmul_matches_reference() {
+    forall(40, |g| {
+        let m = g.usize_in(1..33);
+        let k = g.usize_in(1..48);
+        let n = g.usize_in(1..40);
+        let threads = pick_threads(g);
+        let a = g.normals(m * k);
+        let b = g.normals(k * n);
+        let mut fast = vec![0.0f32; m * n];
+        linalg::matmul(&a, &b, m, k, n, threads, &mut fast);
+        let mut refr = vec![0.0f32; m * n];
+        linalg::matmul_reference(&a, &b, m, k, n, &mut refr);
+        assert_close(&fast, &refr, "matmul");
+    });
+}
+
+#[test]
+fn conf_matmul_large_crosses_panels() {
+    // KC = 256 and NC = 128 internally: k > 256, n > 128 forces the
+    // packed-panel loops to wrap, the case a small sweep never reaches.
+    for (m, k, n) in [(3usize, 300usize, 150usize), (9, 513, 257), (1, 1024, 1)] {
+        let a = bsa::prng::Rng::new(k as u64).normals(m * k);
+        let b = bsa::prng::Rng::new(n as u64).normals(k * n);
+        for threads in [1usize, 2, 5] {
+            let mut fast = vec![0.0f32; m * n];
+            linalg::matmul(&a, &b, m, k, n, threads, &mut fast);
+            let mut refr = vec![0.0f32; m * n];
+            linalg::matmul_reference(&a, &b, m, k, n, &mut refr);
+            assert_close(&fast, &refr, "matmul panel");
+        }
+    }
+}
+
+#[test]
+fn conf_matmul_nt_matches_reference() {
+    forall(40, |g| {
+        let m = g.usize_in(1..33);
+        let k = g.usize_in(1..40);
+        let n = g.usize_in(1..48);
+        let threads = pick_threads(g);
+        let a = g.normals(m * k);
+        let b = g.normals(n * k);
+        let mut fast = vec![0.0f32; m * n];
+        linalg::matmul_nt(&a, &b, m, k, n, threads, &mut fast);
+        let mut refr = vec![0.0f32; m * n];
+        linalg::matmul_nt_reference(&a, &b, m, k, n, &mut refr);
+        assert_close(&fast, &refr, "matmul_nt");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// linalg: rowwise ops
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conf_softmax_rows_matches_reference() {
+    forall(40, |g| {
+        let rows = g.usize_in(1..24);
+        let cols = g.usize_in(1..24);
+        let threads = pick_threads(g);
+        let mag = g.f32_in(0.5..3e4);
+        let mut fast: Vec<f32> = g.normals(rows * cols).iter().map(|v| v * mag).collect();
+        if g.bool() {
+            // mask values like the selection branch injects
+            let i = g.usize_in(0..fast.len());
+            fast[i] = kernels::NEG_INF;
+        }
+        let mut refr = fast.clone();
+        linalg::softmax_rows(&mut fast, rows, cols, threads);
+        linalg::softmax_rows_reference(&mut refr, rows, cols);
+        assert_close(&fast, &refr, "softmax_rows");
+    });
+}
+
+#[test]
+fn conf_rms_norm_matches_reference() {
+    forall(40, |g| {
+        let rows = g.usize_in(1..24);
+        let cols = g.usize_in(1..32);
+        let threads = pick_threads(g);
+        let x = g.normals(rows * cols);
+        let scale = g.normals(cols);
+        let mut fast = vec![0.0f32; rows * cols];
+        linalg::rms_norm(&x, &scale, rows, cols, threads, &mut fast);
+        let mut refr = vec![0.0f32; rows * cols];
+        linalg::rms_norm_reference(&x, &scale, rows, cols, &mut refr);
+        assert_close(&fast, &refr, "rms_norm");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// kernels: attention family
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conf_attend_matches_reference() {
+    forall(30, |g| {
+        let nq = g.usize_in(1..32);
+        let nk = g.usize_in(1..32);
+        let d = g.usize_in(1..12);
+        let threads = pick_threads(g);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = g.normals(nq * d);
+        let k = g.normals(nk * d);
+        let v = g.normals(nk * d);
+        let mut fast = vec![0.0f32; nq * d];
+        let mut s1 = Vec::new();
+        kernels::attend(&q, &k, &v, nq, nk, d, scale, threads, &mut fast, &mut s1);
+        let mut refr = vec![0.0f32; nq * d];
+        let mut s2 = Vec::new();
+        kernels::attend_reference(&q, &k, &v, nq, nk, d, scale, &mut refr, &mut s2);
+        assert_close(&fast, &refr, "attend");
+    });
+}
+
+#[test]
+fn conf_ball_attention_matches_reference() {
+    // Uneven (non-power-of-two) ball sizes, the degenerate single-point
+    // ball, and ball == n all sweep through here.
+    forall(30, |g| {
+        let ball = g.usize_in(1..17); // 1 = degenerate single-point balls
+        let nballs = g.usize_in(1..9);
+        let n = ball * nballs;
+        let d = g.usize_in(1..10);
+        let threads = pick_threads(g);
+        let q = g.normals(n * d);
+        let k = g.normals(n * d);
+        let v = g.normals(n * d);
+        let mut fast = vec![0.0f32; n * d];
+        kernels::ball_attention(&q, &k, &v, n, d, ball, threads, &mut fast);
+        let mut refr = vec![0.0f32; n * d];
+        let mut scores = Vec::new();
+        kernels::ball_attention_reference(&q, &k, &v, n, d, ball, &mut refr, &mut scores);
+        assert_close(&fast, &refr, "ball_attention");
+    });
+}
+
+#[test]
+fn conf_single_point_balls_are_value_passthrough() {
+    // ball_size 1: softmax over one key is 1.0, so out == v exactly —
+    // the degenerate edge a chunked implementation is most likely to
+    // get wrong.
+    let (n, d) = (7usize, 3usize);
+    let q = bsa::prng::Rng::new(1).normals(n * d);
+    let k = bsa::prng::Rng::new(2).normals(n * d);
+    let v = bsa::prng::Rng::new(3).normals(n * d);
+    for threads in [1usize, 2, 8] {
+        let mut out = vec![0.0f32; n * d];
+        kernels::ball_attention(&q, &k, &v, n, d, 1, threads, &mut out);
+        assert_close(&out, &v, "single-point ball passthrough");
+    }
+}
+
+#[test]
+fn conf_compress_mean_matches_reference() {
+    forall(30, |g| {
+        let block = g.usize_in(1..13);
+        let nb = g.usize_in(1..17);
+        let n = block * nb;
+        let d = g.usize_in(1..10);
+        let threads = pick_threads(g);
+        let x = g.normals(n * d);
+        let mut fast = vec![0.0f32; nb * d];
+        kernels::compress_mean(&x, n, d, block, threads, &mut fast);
+        let mut refr = vec![0.0f32; nb * d];
+        kernels::compress_mean_reference(&x, n, d, block, &mut refr);
+        assert_close(&fast, &refr, "compress_mean");
+    });
+}
+
+#[test]
+fn conf_group_scores_matches_reference() {
+    forall(30, |g| {
+        let group = g.usize_in(1..9);
+        let groups = g.usize_in(1..9);
+        let n = group * groups;
+        let d = g.usize_in(1..10);
+        let nb = g.usize_in(1..12);
+        let threads = pick_threads(g);
+        let q = g.normals(n * d);
+        let kc = g.normals(nb * d);
+        let mut qg1 = Vec::new();
+        let mut fast = vec![0.0f32; groups * nb];
+        kernels::group_scores(&q, &kc, n, d, group, nb, threads, &mut qg1, &mut fast);
+        let mut qg2 = Vec::new();
+        let mut refr = vec![0.0f32; groups * nb];
+        kernels::group_scores_reference(&q, &kc, n, d, group, nb, &mut qg2, &mut refr);
+        assert_close(&fast, &refr, "group_scores");
+    });
+}
+
+#[test]
+fn conf_topk_matches_reference_with_ties() {
+    forall(40, |g| {
+        let groups = g.usize_in(1..12);
+        let nb = g.usize_in(1..20);
+        let k = g.usize_in(1..nb + 1);
+        let threads = pick_threads(g);
+        // quantize so duplicate scores (ties) are common — tie-breaking
+        // must stay "first occurrence wins" under parallel chunking
+        let scores: Vec<f32> = g
+            .normals(groups * nb)
+            .iter()
+            .map(|v| (v * 2.0).round() / 2.0)
+            .collect();
+        let mut fast = Vec::new();
+        kernels::topk_indices(&scores, groups, nb, k, threads, &mut fast);
+        let mut refr = Vec::new();
+        kernels::topk_indices_reference(&scores, groups, nb, k, &mut refr);
+        assert_eq!(fast, refr, "topk indices diverge (ties?)");
+        // structural sanity: ascending within each group, in range
+        for grp in fast.chunks_exact(k) {
+            for w in grp.windows(2) {
+                assert!(w[0] < w[1], "not strictly ascending: {grp:?}");
+            }
+            assert!(grp.iter().all(|&i| i < nb));
+        }
+    });
+}
+
+#[test]
+fn conf_select_attention_matches_reference() {
+    forall(25, |g| {
+        let sel_block = g.usize_in(1..7);
+        let nblocks = g.usize_in(1..7);
+        let group = g.usize_in(1..7);
+        // n must be divisible by both the selection block and the group
+        let n = sel_block * group * nblocks.max(1);
+        let nb = n / sel_block;
+        let d = g.usize_in(1..8);
+        let top_k = g.usize_in(1..nb + 1);
+        let groups = n / group;
+        let threads = pick_threads(g);
+        let q = g.normals(n * d);
+        let k = g.normals(n * d);
+        let v = g.normals(n * d);
+        // random (sorted, in-range) selections per group, like topk emits
+        let mut idx = Vec::with_capacity(groups * top_k);
+        for _ in 0..groups {
+            let mut picks: Vec<usize> = (0..top_k).map(|_| g.usize_in(0..nb)).collect();
+            picks.sort_unstable();
+            idx.extend(picks);
+        }
+        let mut fast = vec![0.0f32; n * d];
+        kernels::select_attention(&q, &k, &v, &idx, n, d, sel_block, group, top_k, threads, &mut fast);
+        let mut refr = vec![0.0f32; n * d];
+        let (mut ks, mut vs, mut sc) = (Vec::new(), Vec::new(), Vec::new());
+        kernels::select_attention_reference(
+            &q, &k, &v, &idx, n, d, sel_block, group, top_k, &mut refr, &mut ks, &mut vs, &mut sc,
+        );
+        assert_close(&fast, &refr, "select_attention");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// whole-forward equivalence + determinism
+// ---------------------------------------------------------------------------
+
+fn tiny_config() -> ModelConfig {
+    ModelConfig {
+        dim: 32,
+        num_heads: 2,
+        num_blocks: 2,
+        ball_size: 64,
+        seq_len: 256,
+        ..Default::default()
+    }
+}
+
+fn fixture_input(n: usize, f: usize, seed: u64) -> Tensor {
+    let mut rng = bsa::prng::Rng::new(seed);
+    Tensor::new(vec![1, n, f], rng.normals(n * f))
+}
+
+#[test]
+fn conf_forward_bitwise_across_threads() {
+    // Stronger than the 1e-5 kernel contract: the full forward pass is
+    // bit-identical for every thread budget, because every parallel
+    // kernel preserves per-element accumulation order.
+    let x = fixture_input(256, 6, 21);
+    let base = NativeBackend::init(9, &tiny_config(), 6, 1, 1)
+        .unwrap()
+        .with_threads(1)
+        .forward(&x)
+        .unwrap();
+    for t in [2usize, 3, 4, 8] {
+        let out = NativeBackend::init(9, &tiny_config(), 6, 1, 1)
+            .unwrap()
+            .with_threads(t)
+            .forward(&x)
+            .unwrap();
+        assert_eq!(base, out, "threads={t} changed the forward output");
+    }
+}
+
+#[test]
+fn conf_forward_randomized_shapes_match_serial() {
+    // Randomized small architectures: parallel forward == serial forward
+    // within tolerance (bitwise, in fact) across shape combinations the
+    // fixed tiny config never visits.
+    forall(6, |g| {
+        let dim = *g.choose(&[16usize, 32]);
+        let heads = *g.choose(&[1usize, 2]);
+        let ball = *g.choose(&[16usize, 32]);
+        let mc = ModelConfig {
+            dim,
+            num_heads: heads,
+            num_blocks: g.usize_in(1..3),
+            ball_size: ball,
+            cmp_block: 8,
+            sel_block: 8,
+            top_k: 2,
+            group_size: 8,
+            seq_len: ball * g.usize_in(1..5),
+            ..Default::default()
+        };
+        let x = fixture_input(mc.seq_len, 3, g.case ^ 0xc0);
+        let serial = NativeBackend::init(g.case, &mc, 3, 1, 1)
+            .unwrap()
+            .with_threads(1)
+            .forward(&x)
+            .unwrap();
+        let parallel = NativeBackend::init(g.case, &mc, 3, 1, 1)
+            .unwrap()
+            .with_threads(pick_threads(g))
+            .forward(&x)
+            .unwrap();
+        assert_close(parallel.data(), serial.data(), "forward");
+    });
+}
+
+#[test]
+fn conf_concurrent_forwards_bitwise_identical() {
+    // Interleaving-freedom check: 8 threads drive the *same*
+    // `Arc<dyn Backend>` concurrently (the router's worker-pool shape).
+    // Any shared-scratch aliasing between concurrent forwards would
+    // corrupt at least one output; all eight must be bit-identical.
+    let backend: Arc<dyn Backend> =
+        Arc::new(NativeBackend::init(3, &tiny_config(), 6, 1, 1).unwrap().with_threads(2));
+    let x = fixture_input(256, 6, 33);
+    let expected = backend.forward(&x).unwrap();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let backend = backend.clone();
+                let x = &x;
+                s.spawn(move || backend.forward(x).unwrap())
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.join().expect("concurrent forward panicked");
+            assert_eq!(out, expected, "concurrent forward {i} diverged");
+        }
+    });
+}
+
+#[test]
+fn conf_rejects_n_not_divisible_by_ball() {
+    // The kernels require uniform balls; shapes that break that must be
+    // a typed construction error, never a wrong answer or a panic.
+    let params = NativeParams::init(0, 6, 1, 32, 2, 1, 4);
+    let hyper = AttnHyper { ball_size: 48, cmp_block: 8, group_size: 8, top_k: 2 };
+    let err = NativeBackend::new(params, hyper, 100, 1).unwrap_err().to_string();
+    assert!(err.contains("ball"), "error names the ball constraint: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// params.rs error paths: corrupt / truncated / mis-shaped .bsackpt files
+// ---------------------------------------------------------------------------
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+#[test]
+fn conf_params_truncated_file_is_typed_error() {
+    let p = NativeParams::init(0, 6, 1, 32, 2, 1, 4);
+    let path = tmp("bsa_conf_truncated.bsackpt");
+    p.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // cut mid-array: the loader must return Err, not panic or hand back
+    // a silently short parameter set
+    for cut in [bytes.len() / 2, bytes.len() - 10, 17] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(
+            NativeParams::load(&path).is_err(),
+            "truncation at {cut} bytes must fail"
+        );
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn conf_params_wrong_magic_is_typed_error() {
+    let path = tmp("bsa_conf_magic.bsackpt");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"NOPE");
+    bytes.extend_from_slice(&[0u8; 64]);
+    std::fs::write(&path, &bytes).unwrap();
+    let err = NativeParams::load(&path).unwrap_err().to_string();
+    assert!(err.contains("bsackpt"), "error names the format: {err}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn conf_params_shape_mismatch_is_typed_error() {
+    // A param file whose arrays disagree with the architecture's shape
+    // contract (wq must be (C, C)) fails validation with the array name.
+    let p = NativeParams::init(0, 6, 1, 32, 2, 1, 4);
+    let mut arrays: Vec<(String, Tensor)> = p
+        .named_arrays()
+        .into_iter()
+        .map(|(n, t)| (n, t.clone()))
+        .collect();
+    for (name, t) in arrays.iter_mut() {
+        if name == "blocks.0.attn.wq" {
+            *t = Tensor::zeros(vec![32, 16]); // wrong: must be (32, 32)
+        }
+    }
+    let err = NativeParams::from_named(arrays).unwrap_err().to_string();
+    assert!(err.contains("wq"), "error names the offending array: {err}");
+
+    // and the same through a round-tripped file
+    let path = tmp("bsa_conf_shape.bsackpt");
+    let mut bad = p.clone();
+    bad.blocks[0].attn.wq = Tensor::zeros(vec![32, 16]);
+    // save() itself doesn't validate (it's a dumb container); load must
+    let arrays: Vec<(String, Tensor)> = bad
+        .named_arrays()
+        .into_iter()
+        .map(|(n, t)| (n, t.clone()))
+        .collect();
+    bsa::coordinator::checkpoint::Checkpoint { step: 0, arrays }
+        .save(&path)
+        .unwrap();
+    assert!(NativeParams::load(&path).is_err());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn conf_backend_spec_mismatch_is_typed_error() {
+    // Valid params + a serving shape the params cannot serve: top_k
+    // exceeding the block count at the requested N must error at
+    // construction, before any request can hit it.
+    let params = NativeParams::init(0, 6, 1, 32, 2, 1, 4);
+    let hyper = AttnHyper { ball_size: 16, cmp_block: 8, group_size: 8, top_k: 64 };
+    let err = NativeBackend::new(params, hyper, 16, 1).unwrap_err().to_string();
+    assert!(err.contains("top_k"), "error names top_k: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// native == pjrt on the fixture (skips without artifacts, like every
+// pjrt-dependent test)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conf_native_matches_pjrt_fixture() {
+    use bsa::runtime::{literal_to_tensor, scalar_i32, Engine};
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping conf_native_matches_pjrt_fixture: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Arc::new(Engine::new(&dir).expect("engine"));
+    let init = engine.load("init_bsa_syn_n256_b1").unwrap();
+    let fwd = engine.load("fwd_bsa_syn_n256_b1").unwrap();
+    let param_lits = init.run(&[scalar_i32(0)]).unwrap();
+    let params: Vec<Tensor> = param_lits
+        .iter()
+        .map(|l| literal_to_tensor(l).unwrap())
+        .collect();
+    let names: Vec<String> = fwd
+        .info
+        .inputs
+        .iter()
+        .take(fwd.info.nparams)
+        .map(|s| s.name.clone())
+        .collect();
+    let native = NativeBackend::from_flat(
+        params,
+        &names,
+        AttnHyper::from_graph(&fwd.info),
+        fwd.info.n,
+        fwd.info.batch,
+    )
+    .unwrap()
+    .with_threads(pool::resolve_threads(0));
+
+    let x = {
+        let mut rng = bsa::prng::Rng::new(11);
+        Tensor::new(
+            vec![fwd.info.batch, fwd.info.n, fwd.info.in_features],
+            rng.normals(fwd.info.batch * fwd.info.n * fwd.info.in_features),
+        )
+    };
+    let pjrt_out =
+        literal_to_tensor(&fwd.run_with_tensors(&param_lits, &[&x]).unwrap()[0]).unwrap();
+    let native_out = native.forward(&x).unwrap();
+    assert_eq!(pjrt_out.shape(), native_out.shape());
+    let max_abs = pjrt_out
+        .data()
+        .iter()
+        .zip(native_out.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_abs < 1e-3,
+        "pjrt and native forward disagree: max |diff| = {max_abs}"
+    );
+}

@@ -473,6 +473,64 @@ fn native_tcp_server_roundtrip() {
 }
 
 #[test]
+fn native_tcp_interleaved_batches_roundtrip_and_stats() {
+    // Two clients pipeline requests concurrently with *different* point
+    // counts against the same server: every reply must carry exactly its
+    // own request's length (no cross-request scatter from the shared
+    // batch buffer), and the router's ball-tree cache counters must show
+    // one build per distinct geometry with all repeats hitting.
+    let backend = Arc::new(tiny_native_backend(4));
+    let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
+    let router = Arc::new(Router::start(backend, sc).unwrap());
+
+    let addr = "127.0.0.1:17181";
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let srv = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || bsa::server::serve(&addr, router, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let gen = generator_for("syn", 9).unwrap();
+    let rounds = 3usize;
+    let run_client = |sample_seed: u64, points: usize| {
+        let sample = gen.generate(sample_seed, points);
+        let mut client = bsa::server::Client::connect(addr).unwrap();
+        for round in 0..rounds {
+            let pred = client.predict(&sample.coords, &sample.features).unwrap();
+            assert_eq!(
+                pred.shape(),
+                &[points, 1],
+                "client {sample_seed} round {round}: reply length != request length"
+            );
+            assert!(pred.all_finite());
+        }
+    };
+    std::thread::scope(|s| {
+        let a = s.spawn(|| run_client(0, 150));
+        let b = s.spawn(|| run_client(1, 230));
+        a.join().expect("client A");
+        b.join().expect("client B");
+    });
+
+    // Counters: 2 distinct geometries -> 2 builds; each client's
+    // remaining requests are sequential on an already-resident tree.
+    let mut client = bsa::server::Client::connect(addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("\"served\": 6"), "stats json: {stats}");
+    assert!(stats.contains("\"tree_misses\": 2"), "stats json: {stats}");
+    assert!(stats.contains("\"tree_hits\": 4"), "stats json: {stats}");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.served, 6);
+    assert_eq!((st.tree_hits, st.tree_misses), (4, 2));
+}
+
+#[test]
 fn native_backend_loads_param_file() {
     // Param-file round trip through the backend constructor: weights
     // saved to a .bsackpt file serve identically to the in-memory ones.

@@ -168,7 +168,7 @@ fn prop_softmax_rows_sum_to_one_under_large_logits() {
             let i = g.usize_in(0..x.len());
             x[i] = kernels::NEG_INF;
         }
-        linalg::softmax_rows(&mut x, rows, cols);
+        linalg::softmax_rows(&mut x, rows, cols, g.usize_in(1..5));
         for row in x.chunks_exact(cols) {
             assert!(row.iter().all(|v| v.is_finite() && *v >= 0.0));
             let s: f32 = row.iter().sum();
@@ -182,10 +182,13 @@ fn prop_ball_attention_invariant_to_within_ball_relabeling() {
     // Ball attention treats tokens inside a ball as a set: permuting the
     // q/k/v rows *within* each ball must permute the outputs identically
     // (tolerance-level: summation order inside the softmax changes).
+    // Runs the parallel production kernel at a random thread count —
+    // the invariant must hold regardless of chunking.
     forall(25, |g| {
         let d = g.usize_in(2..6);
         let ball = g.pow2_in(4, 16);
         let n = ball * g.usize_in(1..5);
+        let threads = g.usize_in(1..5);
         let q = g.normals(n * d);
         let k = g.normals(n * d);
         let v = g.normals(n * d);
@@ -204,9 +207,8 @@ fn prop_ball_attention_invariant_to_within_ball_relabeling() {
             out
         };
 
-        let mut scratch = Vec::new();
         let mut out = vec![0.0f32; n * d];
-        kernels::ball_attention(&q, &k, &v, n, d, ball, &mut out, &mut scratch);
+        kernels::ball_attention(&q, &k, &v, n, d, ball, threads, &mut out);
         let mut out_p = vec![0.0f32; n * d];
         kernels::ball_attention(
             &permute(&q),
@@ -215,8 +217,8 @@ fn prop_ball_attention_invariant_to_within_ball_relabeling() {
             n,
             d,
             ball,
+            threads,
             &mut out_p,
-            &mut scratch,
         );
         let expected = permute(&out);
         for (a, b) in out_p.iter().zip(&expected) {

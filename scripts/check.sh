@@ -1,14 +1,51 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 build+tests, lints, and the serving perf
-# artifact (BENCH_serve.json) in smoke mode. CI and pre-PR runs use this
-# so the correctness gate and the perf trajectory can't drift apart.
+# One-command gate: tier-1 build+tests (debug AND release — the parallel
+# kernels must pass with the optimizer on, where race-adjacent bugs
+# actually surface), lints, and the perf artifacts (BENCH_serve.json +
+# BENCH_native.json) in smoke mode. CI and pre-PR runs use this so the
+# correctness gate and the perf trajectory can't drift apart.
 #
-#   scripts/check.sh            # full gate
+#   scripts/check.sh                # full gate
+#   scripts/check.sh --quick        # build + conformance tests only
 #   BENCH_REPS=5 scripts/check.sh   # heavier perf sampling
+#
+# The full gate also guards the native perf trajectory: if a committed
+# BENCH_native.json has a numeric single-thread throughput baseline
+# (threads_sweep, threads=1, fwd_per_s) and both the baseline and the
+# fresh run sampled with reps >= 3 (single-sample smoke runs are noise),
+# the fresh run must stay within 10% of the baseline or the gate fails.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+QUICK=0
+for arg in "$@"; do
+  case "$arg" in
+    --quick) QUICK=1 ;;
+    *) echo "check.sh: unknown flag ${arg} (supported: --quick)" >&2; exit 2 ;;
+  esac
+done
+
 REPS="${BENCH_REPS:-1}"
+
+if [[ "$QUICK" == 1 ]]; then
+  (
+    cd rust
+    echo "== cargo build --release"
+    cargo build --release
+    echo "== cargo test -q --release --test conformance"
+    cargo test -q --release --test conformance
+  )
+  echo "check.sh --quick: build + kernel conformance passed"
+  exit 0
+fi
+
+# Stash the committed perf baseline before the bench overwrites it.
+BASELINE=""
+if [[ -f BENCH_native.json ]]; then
+  BASELINE="$(mktemp)"
+  cp BENCH_native.json "$BASELINE"
+fi
+trap '[[ -z "${BASELINE}" ]] || rm -f "${BASELINE}"' EXIT
 
 (
   cd rust
@@ -16,12 +53,60 @@ REPS="${BENCH_REPS:-1}"
   cargo build --release
   echo "== cargo test -q"
   cargo test -q
+  echo "== cargo test -q --release (parallel kernels with the optimizer on)"
+  cargo test -q --release
   echo "== cargo clippy --all-targets -- -D warnings"
   cargo clippy --all-targets -- -D warnings
   echo "== serve_hot_path bench (smoke, --reps ${REPS})"
   cargo bench --bench paper -- serve_hot_path --reps "${REPS}"
-  echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e)"
+  echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e + threads sweep)"
   cargo bench --bench paper -- bsa_native --reps "${REPS}"
 )
+
+# Single-thread throughput regression gate (>10% vs the committed
+# baseline). Arms only when BOTH runs sampled with reps >= 3 — a
+# single-sample fwd_per_s (the default smoke reps=1) is scheduling
+# noise and must neither fail the gate nor ratchet a lucky baseline.
+if [[ -n "${BASELINE}" ]] && command -v python3 >/dev/null 2>&1; then
+  python3 - "$BASELINE" BENCH_native.json <<'PYEOF'
+import json, sys
+
+MIN_REPS = 3
+
+def sweep_point(path):
+    """(fwd_per_s at threads=1, reps) or (None, reps) when absent."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except Exception:
+        return None, 0
+    reps = doc.get("reps") if isinstance(doc.get("reps"), int) else 0
+    for row in doc.get("threads_sweep") or []:
+        fps = row.get("fwd_per_s")
+        if row.get("threads") == 1 and isinstance(fps, (int, float)) and not isinstance(fps, bool):
+            return float(fps), reps
+    return None, reps
+
+base, base_reps = sweep_point(sys.argv[1])
+cur, cur_reps = sweep_point(sys.argv[2])
+if base is None:
+    print("check.sh: committed BENCH_native.json has no numeric single-thread "
+          "baseline yet; regression gate skipped (commit a BENCH_REPS>=3 run to arm it)")
+elif cur is None:
+    sys.exit("check.sh: fresh BENCH_native.json lost its threads_sweep — bench broken?")
+elif base_reps < MIN_REPS or cur_reps < MIN_REPS:
+    print(f"check.sh: regression gate skipped — needs reps >= {MIN_REPS} on both sides "
+          f"(baseline reps={base_reps}, current reps={cur_reps}; rerun with BENCH_REPS>=3)")
+elif cur < 0.9 * base:
+    sys.exit(f"check.sh: single-thread native throughput regressed >10%: "
+             f"{base:.3f} -> {cur:.3f} fwd/s")
+else:
+    print(f"check.sh: single-thread native throughput ok: {base:.3f} -> {cur:.3f} fwd/s")
+PYEOF
+elif [[ -n "${BASELINE}" ]]; then
+  echo "check.sh: WARNING — baseline present but python3 unavailable; regression gate NOT run"
+else
+  echo "check.sh: no committed BENCH_native.json baseline; regression gate skipped"
+fi
 
 echo "check.sh: all gates passed; BENCH_serve.json + BENCH_native.json refreshed"
