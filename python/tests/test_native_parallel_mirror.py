@@ -202,3 +202,59 @@ def test_compress_chunk_offsets():
             xs = x[b0 * block * d:b1 * block * d].reshape(b1 - b0, block, d)
             out[b0 * d:b1 * d] = xs.mean(axis=1, dtype=f32).reshape(-1)
         np.testing.assert_allclose(out, ref, atol=1e-6)
+
+
+def test_head_parallel_split_fold_roundtrip():
+    # Mirror of the head-parallel scheme in native.rs::attention (PR 4):
+    # unit u = bi*H + hd gathers the (N, dh) column slice hd*dh.. of its
+    # batch item from the token-major (B*N, C) projection, writes its
+    # result into the head-major staging block merged_hm[u*n*dh ..], and
+    # a fold pass restores token-major rows. The round-trip must equal
+    # the old serial scheme's direct column writes exactly.
+    rng = np.random.default_rng(4)
+    b, h, n, dh = 2, 3, 8, 4
+    c = h * dh
+    proj = rng.standard_normal(b * n * c).astype(f32)
+
+    # per-unit transform standing in for the three-branch attention
+    # (any per-(token, head) function works; the scheme is what's tested)
+    def unit_fn(block, u):
+        return (block * f32(2.0) + f32(u)).astype(f32)
+
+    # old serial scheme: direct writes into token-major column slices
+    serial = np.zeros(b * n * c, dtype=f32)
+    for bi in range(b):
+        for hd in range(h):
+            col0 = hd * dh
+            gathered = np.zeros(n * dh, dtype=f32)
+            for t in range(n):
+                src = (bi * n + t) * c + col0
+                gathered[t * dh:(t + 1) * dh] = proj[src:src + dh]
+            res = unit_fn(gathered, bi * h + hd)
+            for t in range(n):
+                dst = (bi * n + t) * c + col0
+                serial[dst:dst + dh] = res[t * dh:(t + 1) * dh]
+
+    # head-parallel scheme: unit-chunked gather -> head-major staging ->
+    # row-chunked fold (both chunkings swept over thread counts)
+    units = b * h
+    for threads in (1, 2, 3, 8):
+        merged_hm = np.zeros(units * n * dh, dtype=f32)
+        for u0, u1 in chunk_rows(units, threads):
+            for u in range(u0, u1):
+                bi, hd = u // h, u % h
+                col0 = hd * dh
+                gathered = np.zeros(n * dh, dtype=f32)
+                for t in range(n):
+                    src = (bi * n + t) * c + col0
+                    gathered[t * dh:(t + 1) * dh] = proj[src:src + dh]
+                merged_hm[u * n * dh:(u + 1) * n * dh] = unit_fn(gathered, u)
+        merged = np.zeros(b * n * c, dtype=f32)
+        for r0, r1 in chunk_rows(b * n, threads):
+            for r in range(r0, r1):
+                bi, t = r // n, r % n
+                for hd in range(h):
+                    src = ((bi * h + hd) * n + t) * dh
+                    merged[r * c + hd * dh:r * c + (hd + 1) * dh] = \
+                        merged_hm[src:src + dh]
+        assert np.array_equal(merged, serial), f"threads={threads}"

@@ -870,7 +870,7 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
 
 /// Measure the native BSA forward pass the way `serve_hot_path` measures
 /// preprocessing: machine-readable p50/p95 so the next PR can regress
-/// against it, on *any* host. Four levels:
+/// against it, on *any* host. Six levels:
 ///
 /// 1. forward p50/p95 vs N for the demo-scale architecture (dim 32,
 ///    2 blocks — the native twin of the tiny core artifact);
@@ -879,9 +879,17 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
 ///    N=1024) — the machine-readable record of the parallel kernels'
 ///    speedup, and the baseline `scripts/check.sh` regresses the
 ///    single-thread row against;
-/// 3. native vs pjrt on the demo architecture at N=256 when the compiled
+/// 3. dispatch-overhead microbench: the persistent worker pool vs the
+///    retained scoped-spawn dispatcher on a small (256x64) rowwise
+///    kernel, where per-call thread spawning actually shows — the
+///    `pool_dispatch` record of `BENCH_native.json` (outputs are
+///    asserted bitwise-identical between the two dispatchers);
+/// 4. head-parallel attention sweep: batch 2 x 4 heads = 8 independent
+///    (batch, head) units across threads in {1, 2, 4, 8} — the record of
+///    the head-parallel speedup (`head_parallel` in the JSON);
+/// 5. native vs pjrt on the demo architecture at N=256 when the compiled
 ///    `fwd_bsa_syn_n256_b1` graph is present;
-/// 4. end-to-end through the native `Router` (batching + ball-tree
+/// 6. end-to-end through the native `Router` (batching + ball-tree
 ///    cache + forward) — proof the serving stack runs artifact-free.
 fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     use bsa::backend::{Backend, NativeBackend};
@@ -985,7 +993,121 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 3: native vs pjrt at the tiny config ----------------------
+    // --- level 3: dispatch overhead, persistent pool vs scoped spawn -----
+    // Small kernels are where spawn cost shows: a 256-row x 64-wide
+    // rowwise workload (tens of microseconds of math) dispatched
+    // hundreds of times. Both dispatchers share chunk_rows, so their
+    // outputs are bitwise identical — asserted before timing.
+    let mut disp_t = Table::new(&["threads", "pool us/call", "scoped us/call", "saved us/call"]);
+    let mut disp_json = Vec::new();
+    let disp_calls = (300 * reps).max(300);
+    {
+        use bsa::backend::pool;
+        let rows_n = 256usize;
+        let width = 64usize;
+        let src = bsa::prng::Rng::new(17).normals(rows_n * width);
+        let work = |row0: usize, chunk: &mut [f32]| {
+            for (i, row) in chunk.chunks_exact_mut(width).enumerate() {
+                let s = &src[(row0 + i) * width..(row0 + i + 1) * width];
+                let mut acc = 0.0f32;
+                for &x in s {
+                    acc += x * x;
+                }
+                for v in row.iter_mut() {
+                    *v = acc;
+                }
+            }
+        };
+        for &t in &[2usize, 4, 8] {
+            let mut pooled = vec![0.0f32; rows_n * width];
+            let mut scoped = vec![0.0f32; rows_n * width];
+            pool::par_rows(&mut pooled, width, t, work); // warms the pool workers
+            pool::par_rows_scoped(&mut scoped, width, t, work);
+            assert_eq!(pooled, scoped, "pool vs scoped diverged (threads {t})");
+            let t0 = Instant::now();
+            for _ in 0..disp_calls {
+                pool::par_rows(&mut pooled, width, t, work);
+            }
+            let pool_us = t0.elapsed().as_secs_f64() * 1e6 / disp_calls as f64;
+            let t0 = Instant::now();
+            for _ in 0..disp_calls {
+                pool::par_rows_scoped(&mut scoped, width, t, work);
+            }
+            let scoped_us = t0.elapsed().as_secs_f64() * 1e6 / disp_calls as f64;
+            std::hint::black_box((&pooled, &scoped));
+            disp_t.row(&[
+                t.to_string(),
+                format!("{pool_us:.2}"),
+                format!("{scoped_us:.2}"),
+                format!("{:.2}", scoped_us - pool_us),
+            ]);
+            disp_json.push(format!(
+                "{{\"threads\": {t}, \"pool_us\": {pool_us:.3}, \"scoped_us\": {scoped_us:.3}, \
+                 \"saved_us\": {:.3}}}",
+                scoped_us - pool_us
+            ));
+        }
+    }
+
+    // --- level 4: head-parallel attention sweep ---------------------------
+    // batch 2 x 4 heads = 8 independent (batch, head) units: the axis
+    // native.rs::attention parallelizes over. Bitwise-invariant across
+    // the sweep (the conformance suite asserts that; this records the
+    // latency curve).
+    let mut hp_t = Table::new(&["threads", "p50 ms", "p95 ms", "fwd/s", "speedup vs 1T"]);
+    let mut hp_json = Vec::new();
+    let hp_mc = ModelConfig {
+        dim: 64,
+        num_heads: 4,
+        num_blocks: 2,
+        ball_size: 128,
+        seq_len: 512,
+        ..Default::default()
+    };
+    let hp_batch = 2usize;
+    let hp_units = hp_batch * hp_mc.num_heads;
+    {
+        let x = {
+            let mut rng = bsa::prng::Rng::new(77);
+            Tensor::new(
+                vec![hp_batch, hp_mc.seq_len, 6],
+                rng.normals(hp_batch * hp_mc.seq_len * 6),
+            )
+        };
+        let mut base_p50 = 0.0f64;
+        for &t in &[1usize, 2, 4, 8] {
+            let be = NativeBackend::init(0, &hp_mc, 6, 1, hp_batch)?.with_threads(t);
+            let _ = be.forward(&x)?; // warmup
+            let mut hist = LatencyHistogram::new();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let r0 = Instant::now();
+                let out = be.forward(&x)?;
+                std::hint::black_box(&out);
+                hist.record_us(r0.elapsed().as_secs_f64() * 1e6);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let (p50, p95) = (hist.percentile_us(50.0), hist.percentile_us(95.0));
+            if t == 1 {
+                base_p50 = p50;
+            }
+            let fwd_per_s = reps as f64 / wall;
+            let speedup = if p50 > 0.0 { base_p50 / p50 } else { 0.0 };
+            hp_t.row(&[
+                t.to_string(),
+                format!("{:.2}", p50 / 1e3),
+                format!("{:.2}", p95 / 1e3),
+                format!("{fwd_per_s:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            hp_json.push(format!(
+                "{{\"threads\": {t}, \"p50_us\": {p50:.1}, \"p95_us\": {p95:.1}, \
+                 \"fwd_per_s\": {fwd_per_s:.3}, \"speedup_vs_1t\": {speedup:.3}}}"
+            ));
+        }
+    }
+
+    // --- level 5: native vs pjrt at the tiny config ----------------------
     let mut pjrt_json = String::from("{\"available\": false}");
     let mut pjrt_line = String::from(
         "pjrt comparison: artifacts unavailable (native-only run)\n",
@@ -1025,7 +1147,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 4: end-to-end native router (artifact-free serving) ------
+    // --- level 6: end-to-end native router (artifact-free serving) ------
     let mc = arch(256);
     let backend = Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?);
     let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
@@ -1055,9 +1177,22 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
          \"arch\": {{\"dim\": 32, \"heads\": 2, \"blocks\": 2, \"ball\": 64}},\n  \
          \"forward\": [{}],\n  \
          \"sweep_arch\": {sweep_arch_json},\n  \
-         \"threads_sweep\": [{}],\n  \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
+         \"threads_sweep\": [{}],\n  \
+         \"pool_dispatch\": {{\"rows\": 256, \"width\": 64, \"calls\": {disp_calls}, \
+         \"points\": [{}]}},\n  \
+         \"head_parallel\": {{\"arch\": {{\"dim\": {}, \"heads\": {}, \"blocks\": {}, \
+         \"ball\": {}, \"n\": {}, \"batch\": {hp_batch}}}, \"units\": {hp_units}, \
+         \"points\": [{}]}},\n  \
+         \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
         fwd_json.join(", "),
-        sweep_json.join(", ")
+        sweep_json.join(", "),
+        disp_json.join(", "),
+        hp_mc.dim,
+        hp_mc.num_heads,
+        hp_mc.num_blocks,
+        hp_mc.ball_size,
+        hp_mc.seq_len,
+        hp_json.join(", ")
     );
     // BENCH_native.json lives next to ROADMAP.md (the per-PR perf
     // trajectory); cargo runs benches from rust/, so look one level up.
@@ -1078,6 +1213,16 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         sweep_mc.dim, sweep_mc.num_blocks, sweep_mc.seq_len
     ));
     content.push_str(&sweep_t.render());
+    content.push_str(&format!(
+        "\n### dispatch overhead — persistent pool vs per-call scoped spawn \
+         (256x64 rowwise kernel, {disp_calls} calls)\n\n"
+    ));
+    content.push_str(&disp_t.render());
+    content.push_str(&format!(
+        "\n### head-parallel attention (dim {}, {} heads, batch {hp_batch} -> {hp_units} units, N={})\n\n",
+        hp_mc.dim, hp_mc.num_heads, hp_mc.seq_len
+    ));
+    content.push_str(&hp_t.render());
     content.push('\n');
     content.push_str(&pjrt_line);
     content.push_str(&format!(

@@ -6,11 +6,15 @@
 //! constants, same top-k tie-breaking. The un-suffixed functions are the
 //! production kernels: they split their output over
 //! [`pool::par_rows`](super::pool::par_rows) chunks (balls for ball
-//! attention, blocks for compression, groups for selection/top-k) and
+//! attention, blocks for compression, groups for selection/top-k) —
+//! executed by the persistent worker pool, not per-call threads — and
 //! compute each unit with the exact per-element accumulation order of
-//! the twin — so parallel == reference holds **bitwise**, which
+//! the twin, so parallel == reference holds **bitwise**, which
 //! `rust/tests/conformance.rs` sweeps across randomized shapes and
 //! thread counts (see the "Kernel conformance" section in [`super`]).
+//! The head-parallel attention in [`super::native`] calls these kernels
+//! from inside pool jobs; nested dispatches are safe (the pool's waiters
+//! help run queued work) and bitwise-neutral by the same invariant.
 //!
 //! All operands are flat row-major `(N, d)` slices for one attention
 //! head; the model layer folds batch and heads before calling in here,

@@ -6,11 +6,14 @@
 //! performance kernel has a `*_reference` scalar twin — the original
 //! single-threaded loop-nest — and the fast version is constructed to be
 //! **bitwise equal** to it: work is split into contiguous row chunks
-//! (see [`super::pool::par_rows`]) and blocking/packing never reorders
-//! any output element's floating-point accumulation. The differential
-//! harness in `rust/tests/conformance.rs` sweeps randomized shapes and
-//! thread counts against the twins; see the "Kernel conformance" section
-//! of [`super`]'s docs before touching either side of a pair.
+//! dispatched on the persistent worker pool (see
+//! [`super::pool::par_rows`]) and blocking/packing never reorders any
+//! output element's floating-point accumulation — which worker runs a
+//! chunk, or how often the pool is reused, cannot change a bit. The
+//! differential harness in `rust/tests/conformance.rs` sweeps randomized
+//! shapes and thread counts against the twins; see the "Kernel
+//! conformance" section of [`super`]'s docs before touching either side
+//! of a pair.
 //!
 //! The GEMM is a panel-blocked kernel: B is packed one `KC x NC` panel
 //! at a time into a dense per-thread buffer (so the inner loops stream a

@@ -27,7 +27,9 @@
 //! `embed_w`, …); optimizer-moment arrays (`m.*` / `v.*`) in a full
 //! training checkpoint are ignored, so a trainer checkpoint *is* a valid
 //! native param file. `python/compile/aot.py` emits `params_<tag>.bsackpt`
-//! alongside the HLO artifacts for the same purpose.
+//! alongside the HLO artifacts for the same purpose. The byte-level
+//! specification (field widths, bounds, error cases) lives in
+//! `docs/FORMATS.md` at the repo root.
 //!
 //! Select the backend on the CLI with `bsa serve --backend native|pjrt`.
 //!
@@ -58,18 +60,30 @@
 //! deterministic across `BSA_NATIVE_THREADS` settings and lets the
 //! serving layer treat the thread budget as a pure latency knob.
 //!
+//! Dispatch runs on [`pool`]'s **persistent worker pool** (lazy-init,
+//! work queue, parked workers, at most [`pool::MAX_THREADS`] threads per
+//! process) rather than spawning scoped threads per call; which worker
+//! executes a chunk is invisible to the numerics, so pool reuse across
+//! thousands of dispatches cannot change a single bit — conformance
+//! sweeps assert exactly that, plus that dropping an explicit
+//! [`pool::WorkerPool`] joins every worker. On top of the row-parallel
+//! kernels, [`native`]'s attention is head-parallel: (batch, head) units
+//! run as pool jobs with per-thread scratch and write disjoint blocks of
+//! a head-major staging buffer (see the [`native`] module docs).
+//!
 //! `rust/tests/conformance.rs` is the differential harness that enforces
 //! all of this: randomized shape sweeps (uneven ball sizes, degenerate
 //! single-point balls, tie-heavy top-k rows, panel-boundary-crossing
-//! GEMMs) comparing fast vs reference within 1e-5, a concurrent
-//! bit-determinism check on a shared `Arc<dyn Backend>`, and the
-//! native-vs-pjrt fixture gate. **To add a new kernel:** (1) write the
-//! scalar `*_reference` twin first and unit-test its math; (2) build the
-//! fast version on `pool::par_rows` over disjoint output rows, computing
-//! each row exactly as the twin does (delegate to the twin per chunk
-//! when possible); (3) add a `conf_*` sweep to conformance.rs that
-//! randomizes shapes *and* thread counts, including the degenerate edges
-//! (unit dims, one chunk per thread, more threads than rows).
+//! GEMMs) comparing fast vs reference within 1e-5, pool-reuse and
+//! pool-lifecycle checks, a concurrent bit-determinism check on a shared
+//! `Arc<dyn Backend>`, and the native-vs-pjrt fixture gate. **To add a
+//! new kernel:** (1) write the scalar `*_reference` twin first and
+//! unit-test its math; (2) build the fast version on `pool::par_rows`
+//! over disjoint output rows, computing each row exactly as the twin
+//! does (delegate to the twin per chunk when possible); (3) add a
+//! `conf_*` sweep to conformance.rs that randomizes shapes *and* thread
+//! counts, including the degenerate edges (unit dims, one chunk per
+//! thread, more threads than rows).
 
 pub mod kernels;
 pub mod linalg;

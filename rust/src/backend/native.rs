@@ -10,19 +10,30 @@
 //! `(N, dh)` head-major operands the Pallas/ref kernels see — which is
 //! what makes this backend a usable parity oracle for the compiled HLO.
 //!
-//! Compute is thread-parallel via [`super::pool`]: the projections and
-//! MLP GEMMs split output rows across threads, ball attention splits
-//! balls, compression splits blocks, selection/top-k split groups. The
-//! thread count comes from [`NativeBackend::with_threads`] /
+//! Compute is thread-parallel via [`super::pool`]'s persistent worker
+//! pool on two axes. The projections and MLP GEMMs split output rows
+//! across threads. Attention is **head-parallel**: the per-(batch, head)
+//! units of the attention step are independent — each reads its own
+//! column slice of the Q/K/V projections and writes its own `(N, dh)`
+//! block of a head-major staging buffer — so the units are dispatched
+//! as pool jobs with per-thread `HeadScratch` buffers, and
+//! a pure reordering pass folds the head-major blocks back into
+//! token-major `(B*N, C)` rows before the output projection. When the
+//! thread budget exceeds the unit count, the leftover budget goes to the
+//! kernels *inside* each unit (nested dispatches are deadlock-free: the
+//! pool's waiters run queued jobs instead of blocking).
+//!
+//! The thread count comes from [`NativeBackend::with_threads`] /
 //! `ServeConfig::native_threads`, with the `BSA_NATIVE_THREADS` env var
 //! as the zero-config override (see [`pool::resolve_threads`]). All
-//! parallel kernels are bitwise equal to their `*_reference` twins, so
-//! the forward pass is deterministic across thread counts — asserted by
+//! parallel kernels are bitwise equal to their `*_reference` twins, and
+//! the gated head merge is a fixed-order per-element expression, so the
+//! forward pass is deterministic across thread counts — asserted by
 //! `rust/tests/conformance.rs`.
 //!
 //! Scratch buffers are allocated once per `forward` call and reused
-//! across blocks and heads (plus small per-thread gather buffers inside
-//! the parallel kernels); per-call cost is a handful of `Vec`s, far
+//! across blocks (plus one `HeadScratch` per pool chunk inside the
+//! head-parallel dispatch); per-call cost is a handful of `Vec`s, far
 //! below the matmul work itself.
 
 use crate::config::ModelConfig;
@@ -196,11 +207,25 @@ impl NativeBackend {
         &self.hyper
     }
 
-    /// Three-branch BSA attention for one block (paper Sec. 2.2), heads
-    /// folded. `a` is the RMS-normed input `(B*N, C)` flat; the gated
-    /// merged result (pre-`wo`) is accumulated per head into `merged`,
-    /// then projected into `out`.
-    #[allow(clippy::too_many_arguments)]
+    /// Three-branch BSA attention for one block (paper Sec. 2.2),
+    /// **head-parallel**. `a` is the RMS-normed input `(B*N, C)` flat.
+    ///
+    /// The `B * H` (batch, head) units are independent: each gathers its
+    /// own `(N, dh)` column slice of the Q/K/V projections, runs the
+    /// three branches, and writes its gated merge (eq. 9) into its own
+    /// `(N, dh)` block of the head-major staging buffer `merged_hm`
+    /// (layout `(B, H, N, dh)`). The units are dispatched over the
+    /// worker pool with one `HeadScratch` per chunk; a reordering pass
+    /// then folds `merged_hm` back to token-major `(B*N, C)` `merged`
+    /// rows, which `wo` projects into `out`.
+    ///
+    /// Bitwise determinism: unit outputs land in disjoint buffers, the
+    /// fold is a pure copy, and the kernels inside a unit are themselves
+    /// bitwise thread-count-invariant — so this function's output is
+    /// identical for every thread budget (and to the old serial
+    /// per-head loop it replaced). When `threads > units`, the surplus
+    /// is handed to the kernels inside each unit (`inner` below); the
+    /// pool's help-while-waiting latch makes that nesting safe.
     fn attention(&self, blk: &BlockParams, a: &[f32], out: &mut [f32], s: &mut Scratch) {
         let (b, n) = (self.spec.batch, self.spec.n);
         let c = self.params.dim();
@@ -221,73 +246,145 @@ impl NativeBackend {
         linalg::matmul(a, blk.attn.wv.data(), rows, c, c, th, &mut s.v);
         linalg::matmul(a, blk.attn.wg.data(), rows, c, 3 * h_cnt, th, &mut s.gates);
 
-        for bi in 0..b {
-            for hd in 0..h_cnt {
+        let units = b * h_cnt;
+        // Surplus thread budget (th > units) flows to the kernels inside
+        // the units: the first `th % units` units get one extra nested
+        // thread, so summed concurrency equals the budget exactly —
+        // neither idle threads (floor) nor oversubscription (ceil).
+        // Which unit gets the surplus is fixed by unit index, and thread
+        // counts never affect numerics, so this is bitwise-neutral.
+        let inner_base = th / units;
+        let inner_extra = th % units;
+        let Scratch { q, k, v, gates, merged, merged_hm, head_scratch } = s;
+        let (q, k, v, gates) = (&q[..], &k[..], &v[..], &gates[..]);
+
+        // Free-list of HeadScratch instances shared by the chunks and
+        // reused across blocks (and the whole forward): each chunk pops
+        // one (allocating only on first use), works through its units,
+        // and returns it — two uncontended lock ops per chunk instead of
+        // hundreds of KB of fresh zeroed Vecs per chunk per block.
+        let scratch_pool = std::sync::Mutex::new(std::mem::take(head_scratch));
+        pool::par_rows(&mut merged_hm[..], n * dh, th, |u0, hchunk| {
+            let mut hs = scratch_pool
+                .lock()
+                .unwrap()
+                .pop()
+                .unwrap_or_else(|| HeadScratch::new(n, dh, nb, groups));
+            for (ui, ublock) in hchunk.chunks_exact_mut(n * dh).enumerate() {
+                let u = u0 + ui;
+                let (bi, hd) = (u / h_cnt, u % h_cnt);
+                let inner = (inner_base + usize::from(u < inner_extra)).max(1);
                 // split heads: column slice hd*dh.. of this batch item
                 let col0 = hd * dh;
                 for t in 0..n {
                     let src = (bi * n + t) * c + col0;
-                    s.qs[t * dh..(t + 1) * dh].copy_from_slice(&s.q[src..src + dh]);
-                    s.ks[t * dh..(t + 1) * dh].copy_from_slice(&s.k[src..src + dh]);
-                    s.vs[t * dh..(t + 1) * dh].copy_from_slice(&s.v[src..src + dh]);
+                    hs.qs[t * dh..(t + 1) * dh].copy_from_slice(&q[src..src + dh]);
+                    hs.ks[t * dh..(t + 1) * dh].copy_from_slice(&k[src..src + dh]);
+                    hs.vs[t * dh..(t + 1) * dh].copy_from_slice(&v[src..src + dh]);
                 }
 
-                // ball branch (eq. 3): one ball batch per thread chunk
-                kernels::ball_attention(&s.qs, &s.ks, &s.vs, n, dh, m, th, &mut s.o_ball);
+                // ball branch (eq. 3)
+                kernels::ball_attention(&hs.qs, &hs.ks, &hs.vs, n, dh, m, inner, &mut hs.o_ball);
 
                 // compression branch (eq. 5): mean phi + dense attention
-                kernels::compress_mean(&s.ks, n, dh, l, th, &mut s.kc);
-                kernels::compress_mean(&s.vs, n, dh, l, th, &mut s.vc);
-                kernels::attend(&s.qs, &s.kc, &s.vc, n, nb, dh, scale, th, &mut s.o_cmp, &mut s.scores);
+                kernels::compress_mean(&hs.ks, n, dh, l, inner, &mut hs.kc);
+                kernels::compress_mean(&hs.vs, n, dh, l, inner, &mut hs.vc);
+                kernels::attend(
+                    &hs.qs, &hs.kc, &hs.vc, n, nb, dh, scale, inner, &mut hs.o_cmp,
+                    &mut hs.scores,
+                );
 
                 // selection branch (eqs. 6-8, 10-12): grouped top-k over
                 // compressed keys, own-ball blocks masked out
-                kernels::group_scores(&s.qs, &s.kc, n, dh, g, nb, th, &mut s.qg, &mut s.gscores);
-                kernels::mask_own_ball(&mut s.gscores, groups, nb, g, l, m);
-                kernels::topk_indices(&s.gscores, groups, nb, top_k, th, &mut s.idx);
+                kernels::group_scores(
+                    &hs.qs, &hs.kc, n, dh, g, nb, inner, &mut hs.qg, &mut hs.gscores,
+                );
+                kernels::mask_own_ball(&mut hs.gscores, groups, nb, g, l, m);
+                kernels::topk_indices(&hs.gscores, groups, nb, top_k, inner, &mut hs.idx);
                 kernels::select_attention(
-                    &s.qs, &s.ks, &s.vs, &s.idx, n, dh, l, g, top_k, th, &mut s.o_slc,
+                    &hs.qs, &hs.ks, &hs.vs, &hs.idx, n, dh, l, g, top_k, inner, &mut hs.o_slc,
                 );
 
                 // gated fusion (eq. 9): per-token per-head sigmoid gates,
-                // written into this head's column slice of `merged`
+                // written into this unit's own (N, dh) block
                 for t in 0..n {
-                    let row = bi * n + t;
-                    let grow = row * 3 * h_cnt;
-                    let gb = linalg::sigmoid(s.gates[grow + hd]);
-                    let gc = linalg::sigmoid(s.gates[grow + h_cnt + hd]);
-                    let gs = linalg::sigmoid(s.gates[grow + 2 * h_cnt + hd]);
-                    let dst = row * c + col0;
+                    let grow = (bi * n + t) * 3 * h_cnt;
+                    let gb = linalg::sigmoid(gates[grow + hd]);
+                    let gc = linalg::sigmoid(gates[grow + h_cnt + hd]);
+                    let gs = linalg::sigmoid(gates[grow + 2 * h_cnt + hd]);
+                    let dst = t * dh;
                     for d0 in 0..dh {
-                        s.merged[dst + d0] = gb * s.o_ball[t * dh + d0]
-                            + gc * s.o_cmp[t * dh + d0]
-                            + gs * s.o_slc[t * dh + d0];
+                        ublock[dst + d0] = gb * hs.o_ball[dst + d0]
+                            + gc * hs.o_cmp[dst + d0]
+                            + gs * hs.o_slc[dst + d0];
                     }
                 }
             }
-        }
-        linalg::matmul(&s.merged, blk.attn.wo.data(), rows, c, c, th, out);
+            scratch_pool.lock().unwrap().push(hs);
+        });
+        *head_scratch = scratch_pool.into_inner().unwrap();
+
+        // fold heads: (B, H, N, dh) head-major -> (B*N, C) token-major
+        // (pure copy, so bitwise-neutral; row-parallel over tokens)
+        let merged_hm = &merged_hm[..];
+        pool::par_rows(&mut merged[..], c, th, |row0, ochunk| {
+            for (ri, orow) in ochunk.chunks_exact_mut(c).enumerate() {
+                let r = row0 + ri;
+                let (bi, t) = (r / n, r % n);
+                for hd in 0..h_cnt {
+                    let src = ((bi * h_cnt + hd) * n + t) * dh;
+                    orow[hd * dh..(hd + 1) * dh].copy_from_slice(&merged_hm[src..src + dh]);
+                }
+            }
+        });
+        linalg::matmul(&merged[..], blk.attn.wo.data(), rows, c, c, th, out);
     }
 }
 
-/// Per-forward scratch buffers (sized once, reused across blocks/heads;
-/// the parallel kernels' per-thread gather buffers live inside the
-/// kernels themselves).
+/// Per-forward scratch buffers (sized once, reused across blocks; the
+/// per-(batch, head) attention scratch lives in `HeadScratch`, one per
+/// pool chunk).
 struct Scratch {
     // (B*N, C) projections
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
     gates: Vec<f32>,
+    /// Token-major (B*N, C) gated merge, input to the `wo` projection.
     merged: Vec<f32>,
-    // per-head (N, dh) operands and branch outputs
+    /// Head-major (B, H, N, dh) staging buffer the parallel units write
+    /// into (disjoint (N, dh) blocks, one per unit).
+    merged_hm: Vec<f32>,
+    /// Free-list of per-chunk attention scratch, grown lazily to the
+    /// peak concurrent chunk count and reused across blocks.
+    head_scratch: Vec<HeadScratch>,
+}
+
+impl Scratch {
+    fn new(rows: usize, c: usize, h_cnt: usize) -> Scratch {
+        Scratch {
+            q: vec![0.0; rows * c],
+            k: vec![0.0; rows * c],
+            v: vec![0.0; rows * c],
+            gates: vec![0.0; rows * 3 * h_cnt],
+            merged: vec![0.0; rows * c],
+            merged_hm: vec![0.0; rows * c],
+            head_scratch: Vec::new(),
+        }
+    }
+}
+
+/// Scratch for one (batch, head) attention unit: the `(N, dh)` operand
+/// gathers, the three branch outputs, and the compression/selection
+/// intermediates. One instance per pool chunk ("per-thread head
+/// scratch"), reused across the units in that chunk.
+struct HeadScratch {
     qs: Vec<f32>,
     ks: Vec<f32>,
     vs: Vec<f32>,
     o_ball: Vec<f32>,
     o_cmp: Vec<f32>,
     o_slc: Vec<f32>,
-    // compression / selection intermediates
     kc: Vec<f32>,
     vc: Vec<f32>,
     qg: Vec<f32>,
@@ -296,14 +393,9 @@ struct Scratch {
     scores: Vec<f32>,
 }
 
-impl Scratch {
-    fn new(rows: usize, c: usize, n: usize, dh: usize, nb: usize, groups: usize, h_cnt: usize) -> Scratch {
-        Scratch {
-            q: vec![0.0; rows * c],
-            k: vec![0.0; rows * c],
-            v: vec![0.0; rows * c],
-            gates: vec![0.0; rows * 3 * h_cnt],
-            merged: vec![0.0; rows * c],
+impl HeadScratch {
+    fn new(n: usize, dh: usize, nb: usize, groups: usize) -> HeadScratch {
+        HeadScratch {
             qs: vec![0.0; n * dh],
             ks: vec![0.0; n * dh],
             vs: vec![0.0; n * dh],
@@ -338,12 +430,9 @@ impl Backend for NativeBackend {
         let (b, n) = (spec.batch, spec.n);
         let c = self.params.dim();
         let h_cnt = self.params.num_heads();
-        let dh = c / h_cnt;
         let rows = b * n;
-        let nb = n / self.hyper.cmp_block;
-        let groups = n / self.hyper.group_size;
         let th = self.threads;
-        let mut s = Scratch::new(rows, c, n, dh, nb, groups, h_cnt);
+        let mut s = Scratch::new(rows, c, h_cnt);
 
         // embed
         let mut h = vec![0.0f32; rows * c];

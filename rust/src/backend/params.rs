@@ -6,6 +6,11 @@
 //! aot.py emits next to the HLO artifacts (`blocks.0.attn.wq`,
 //! `embed_w`, `norm_out`, ...). A full training checkpoint is accepted
 //! too: its optimizer-moment arrays (`m.*`, `v.*`) are skipped.
+//!
+//! The `.bsackpt` container itself (magic, header, per-array layout,
+//! bounds, and the error cases `rust/tests/conformance.rs` pins) is
+//! specified in `docs/FORMATS.md`; the reader/writer lives in
+//! [`checkpoint`](crate::coordinator::checkpoint).
 
 use std::collections::BTreeMap;
 use std::path::Path;

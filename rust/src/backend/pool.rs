@@ -1,35 +1,71 @@
-//! Work splitting for the native kernels: std scoped threads, no deps.
+//! Work splitting for the native kernels: a persistent worker pool with
+//! a shared work queue — no deps, no threads spawned on the hot path.
 //!
 //! Every parallel kernel in [`super::linalg`] and [`super::kernels`]
 //! funnels through [`par_rows`]: the output buffer is split into
 //! contiguous chunks of whole rows (a "row" being whatever unit the
 //! kernel parallelizes over — a GEMM output row, a ball, a selection
-//! group), each chunk is handed to a scoped thread, and the closure
-//! computes its rows exactly like the serial `*_reference` twin would.
-//! Because chunks are contiguous and each output element's accumulation
-//! order is untouched, the parallel kernels are bitwise equal to their
-//! scalar twins — the property `rust/tests/conformance.rs` enforces.
+//! group), each chunk becomes one job on the [`WorkerPool`]'s queue, and
+//! the closure computes its rows exactly like the serial `*_reference`
+//! twin would. Because chunks are contiguous and each output element's
+//! accumulation order is untouched, the parallel kernels are bitwise
+//! equal to their scalar twins — the property `rust/tests/conformance.rs`
+//! enforces. Which worker executes which chunk never affects the result,
+//! so the pool's scheduling freedom is invisible to the numerics.
+//!
+//! # Pool lifecycle
+//!
+//! The free [`par_rows`] dispatches on a lazily-created process-wide
+//! pool ([`global_pool`]): workers are spawned on demand up to the
+//! **aggregate** budget of every dispatch currently in flight — so
+//! concurrent forwards (the router's worker pool) each get their
+//! requested parallelism, never more than [`MAX_THREADS`] total — park
+//! on a condvar when the queue is empty, and are reused across every
+//! kernel call for the life of the process; construction/drop churn of
+//! backends never spawns or leaks threads. Explicit pools
+//! ([`WorkerPool::new`]) signal shutdown and **join every worker on
+//! drop**; `rust/tests/conformance.rs` asserts both properties (bitwise
+//! stability across 100+ reused dispatches, and a zero live-worker gauge
+//! after drop).
+//!
+//! # Dispatch + completion
+//!
+//! A `par_rows` call enqueues `chunks - 1` lifetime-erased jobs, runs
+//! the **last** chunk inline on the caller's thread, then waits on a
+//! completion latch. The erasure is sound for the same reason
+//! `std::thread::scope` is: the latch is not released until every job
+//! has finished touching the borrowed closure/output, so `par_rows`
+//! cannot return (or unwind — inline-chunk panics are caught and
+//! re-thrown after the wait) while a worker still holds a borrow. While
+//! waiting, the caller *helps*: it pops and runs queued jobs instead of
+//! blocking, so nested `par_rows` calls — e.g. the head-parallel
+//! attention in [`super::native`] running row-parallel GEMMs inside its
+//! per-head jobs — can never deadlock the pool, even when every worker
+//! is itself waiting on an inner dispatch. Job panics are captured and
+//! resumed on the caller, matching scoped-spawn semantics.
 //!
 //! Thread-count resolution (see [`resolve_threads`]): an explicit
 //! request wins, then the `BSA_NATIVE_THREADS` environment override,
 //! then `std::thread::available_parallelism()`. The resolved count is an
-//! upper bound — `par_rows` never spawns more threads than it has rows,
-//! the last chunk always runs on the caller's thread, and a count of 1
-//! runs inline with zero spawn overhead.
+//! upper bound — `par_rows` never uses more workers than it has rows,
+//! and a count of 1 runs inline with zero dispatch overhead.
 //!
-//! Deliberate simplicity trade-off: threads are spawned per `par_rows`
-//! call (scoped, joined before return) rather than parked in a
-//! persistent pool. At the model's GEMM-dominated kernel sizes each
-//! call carries milliseconds of work, so spawn cost is low-single-digit
-//! percent; if profiling ever shows otherwise, the upgrade path is a
-//! persistent worker pool behind this same `par_rows` signature —
-//! callers and the bitwise chunking contract stay untouched (tracked in
-//! ROADMAP.md).
+//! The previous implementation spawned scoped threads per call;
+//! [`par_rows_scoped`] retains it verbatim as the differential oracle
+//! for the pool dispatcher and as the comparator in the spawn-overhead
+//! microbench (`cargo bench --bench paper -- bsa_native`, the
+//! `pool_dispatch` section of `BENCH_native.json`).
 
+use std::any::Any;
+use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::OnceLock;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{JoinHandle, Thread};
 
-/// Hard upper bound on kernel threads (sanity cap for typo'd overrides).
+/// Hard upper bound on kernel threads (sanity cap for typo'd overrides;
+/// also the ceiling on the global pool's worker population).
 pub const MAX_THREADS: usize = 64;
 
 /// Name of the environment override consulted by [`resolve_threads`].
@@ -76,19 +112,335 @@ pub fn chunk_rows(rows: usize, threads: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Run `f(first_row, chunk)` over disjoint contiguous whole-row chunks
-/// of `out` (`row_width` elements per row), one chunk per thread. The
-/// chunks are exactly [`chunk_rows`]`(rows, threads)`; the **last**
-/// chunk always runs inline on the caller's thread (it would otherwise
-/// sit idle in the scope join), so a call spawns at most
-/// `chunks - 1` threads and `threads <= 1` (or a single row) spawns
-/// none at all.
+/// A queued unit of work: one chunk closure from a `par_rows` dispatch,
+/// lifetime-erased (see the SAFETY argument at the erasure site).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_ready: Condvar,
+}
+
+/// Completion latch for one `par_rows` dispatch. Modeled on
+/// `std::thread::scope`'s internals: an atomic countdown plus
+/// park/unpark, so the last job's final action is an `unpark` on a
+/// *cloned* thread handle — after the decrement that releases the
+/// caller, a job never touches the latch again, which is what makes it
+/// sound to keep the latch on the caller's stack.
+struct Latch {
+    remaining: AtomicUsize,
+    caller: Thread,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch {
+            remaining: AtomicUsize::new(jobs),
+            caller: std::thread::current(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    /// Called exactly once by each job, as its very last action.
+    fn complete(&self, panicked: Option<Box<dyn Any + Send>>) {
+        if let Some(p) = panicked {
+            *self.panic.lock().unwrap() = Some(p);
+        }
+        // Clone the handle BEFORE the decrement: the moment `remaining`
+        // hits zero the caller may return from `wait` and free the latch.
+        let caller = self.caller.clone();
+        if self.remaining.fetch_sub(1, Ordering::Release) == 1 {
+            caller.unpark();
+        }
+    }
+
+    /// Wait until every job has completed, then re-throw the first
+    /// captured job panic. Instead of blocking outright, the caller
+    /// *helps*: any queued job (from this or any other dispatch on
+    /// `pool`) is popped and run, which keeps nested dispatches
+    /// deadlock-free — a waiter's own queued jobs are always runnable by
+    /// the waiter itself. `park` is wrapped in a re-check loop, so
+    /// spurious wakeups and stale unpark tokens are harmless.
+    fn wait(&self, pool: &WorkerPool) {
+        while self.remaining.load(Ordering::Acquire) != 0 {
+            match pool.try_pop() {
+                Some(job) => {
+                    // par_rows jobs catch their own panics; this outer
+                    // catch only shields the waiter from raw panics.
+                    let _ = std::panic::catch_unwind(AssertUnwindSafe(job));
+                }
+                None => std::thread::park(),
+            }
+        }
+        if let Some(p) = self.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads executing [`par_rows`]
+/// chunk jobs from a shared FIFO queue.
 ///
-/// `f` must compute rows identically regardless of which chunk they
-/// land in; every caller in this crate guarantees that by delegating to
-/// (or matching) its scalar `*_reference` twin, which is what keeps
-/// parallel kernels bitwise deterministic across thread counts.
+/// The free [`par_rows`] uses the lazily-created [`global_pool`]; an
+/// explicit `WorkerPool` is useful for lifecycle tests and embedders
+/// that want ownership. Dropping a pool signals shutdown, drains the
+/// queue, and joins every worker — no thread outlives its pool.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Live-worker gauge (incremented at spawn, decremented on worker
+    /// exit via a drop guard, so even a panicking worker counts down).
+    live: Arc<AtomicUsize>,
+    /// Sum of the worker demand (`threads - 1`) of every dispatch
+    /// currently in flight: concurrent `par_rows` callers grow the pool
+    /// to their *aggregate* demand (capped at [`MAX_THREADS`]), not just
+    /// the largest single budget — otherwise multi-worker serving would
+    /// contend for a pool sized to one forward pass.
+    inflight: AtomicUsize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Decrements the in-flight demand on drop, so a dispatch that unwinds
+/// (job or inline-chunk panic) still releases its claim.
+struct InflightGuard<'a>(&'a AtomicUsize, usize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(self.1, Ordering::Relaxed);
+    }
+}
+
+fn worker_main(shared: Arc<PoolShared>, live: Arc<AtomicUsize>) {
+    struct Gauge(Arc<AtomicUsize>);
+    impl Drop for Gauge {
+        fn drop(&mut self) {
+            self.0.fetch_sub(1, Ordering::Release);
+        }
+    }
+    let _gauge = Gauge(live);
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        // Keep the worker alive across any panicking job (par_rows jobs
+        // catch their own panics and report through the latch; this is
+        // the backstop for everything else).
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+impl WorkerPool {
+    /// Create a pool with `workers` threads parked and ready (capped at
+    /// [`MAX_THREADS`]). `0` starts empty; [`par_rows`](Self::par_rows)
+    /// grows the pool on demand.
+    pub fn new(workers: usize) -> WorkerPool {
+        let pool = WorkerPool {
+            shared: Arc::new(PoolShared {
+                state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+                work_ready: Condvar::new(),
+            }),
+            live: Arc::new(AtomicUsize::new(0)),
+            inflight: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+        };
+        pool.ensure_workers(workers);
+        pool
+    }
+
+    /// Grow the worker population to at least `target` threads (capped
+    /// at [`MAX_THREADS`]); never shrinks.
+    fn ensure_workers(&self, target: usize) {
+        let target = target.min(MAX_THREADS);
+        // cheap read first: the common case is an already-warm pool
+        if self.live.load(Ordering::Relaxed) >= target {
+            return;
+        }
+        let mut handles = self.handles.lock().unwrap();
+        while handles.len() < target {
+            let shared = self.shared.clone();
+            let live = self.live.clone();
+            self.live.fetch_add(1, Ordering::Relaxed);
+            let h = std::thread::Builder::new()
+                .name(format!("bsa-pool-{}", handles.len()))
+                .spawn(move || worker_main(shared, live))
+                .expect("spawn bsa-pool worker");
+            handles.push(h);
+        }
+    }
+
+    /// Number of worker threads ever spawned (the pool never shrinks
+    /// before drop).
+    pub fn worker_count(&self) -> usize {
+        self.handles.lock().unwrap().len()
+    }
+
+    /// Worker threads currently alive.
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// Clonable live-worker gauge that stays readable after the pool is
+    /// dropped — `Drop` joins every worker, so the gauge must read 0 the
+    /// moment `drop` returns (asserted by the conformance suite).
+    pub fn live_gauge(&self) -> Arc<AtomicUsize> {
+        self.live.clone()
+    }
+
+    fn push_job(&self, job: Job) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.jobs.push_back(job);
+        drop(st);
+        self.shared.work_ready.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.shared.state.lock().unwrap().jobs.pop_front()
+    }
+
+    /// Run `f(first_row, chunk)` over disjoint contiguous whole-row
+    /// chunks of `out` (`row_width` elements per row), one chunk per
+    /// queued job. The chunks are exactly [`chunk_rows`]`(rows,
+    /// threads)`; the **last** chunk always runs inline on the caller's
+    /// thread, so a dispatch enqueues at most `chunks - 1` jobs and
+    /// `threads <= 1` (or a single row) touches no queue at all.
+    ///
+    /// `f` must compute rows identically regardless of which chunk (or
+    /// worker) they land in; every caller in this crate guarantees that
+    /// by delegating to (or matching) its scalar `*_reference` twin,
+    /// which is what keeps parallel kernels bitwise deterministic across
+    /// thread counts.
+    pub fn par_rows<T, F>(&self, out: &mut [T], row_width: usize, threads: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if out.is_empty() {
+            return;
+        }
+        assert!(row_width > 0, "par_rows row_width must be positive");
+        assert_eq!(out.len() % row_width, 0, "par_rows out not whole rows");
+        let rows = out.len() / row_width;
+        let t = threads.max(1).min(rows);
+        if t == 1 {
+            f(0, out);
+            return;
+        }
+        // Register this dispatch's demand and size the pool to the
+        // aggregate of every in-flight dispatch (the guard releases the
+        // claim on return *or* unwind).
+        let want = t - 1;
+        let total = self.inflight.fetch_add(want, Ordering::Relaxed) + want;
+        let _inflight = InflightGuard(&self.inflight, want);
+        self.ensure_workers(total);
+        let chunks = chunk_rows(rows, t);
+        let last = chunks.len() - 1;
+        let latch = Latch::new(last);
+        let mut rest = out;
+        let mut inline_chunk: Option<(usize, &mut [T])> = None;
+        for (ci, range) in chunks.iter().enumerate() {
+            let take = (range.end - range.start) * row_width;
+            let (chunk, tail) = {
+                let r = std::mem::take(&mut rest);
+                r.split_at_mut(take)
+            };
+            rest = tail;
+            if ci == last {
+                inline_chunk = Some((range.start, chunk));
+            } else {
+                let fr = &f;
+                let latch_ref = &latch;
+                let row0 = range.start;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let r = std::panic::catch_unwind(AssertUnwindSafe(|| fr(row0, chunk)));
+                    latch_ref.complete(r.err());
+                });
+                // SAFETY: the job borrows `f`, `latch`, and a disjoint
+                // sub-slice of `out`, all of which outlive `latch.wait`
+                // below — and `wait` does not return until every job has
+                // run `complete` as its final action. The inline chunk's
+                // panic is caught so even an unwinding caller reaches the
+                // wait. Erasing the lifetime is therefore sound for the
+                // same reason `std::thread::scope` is.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                };
+                self.push_job(job);
+            }
+        }
+        let (row0, chunk) = inline_chunk.expect("chunks is never empty here");
+        let inline_result = std::panic::catch_unwind(AssertUnwindSafe(|| f(row0, chunk)));
+        latch.wait(self);
+        if let Err(p) = inline_result {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            st.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        let handles = std::mem::take(
+            self.handles
+                .get_mut()
+                .unwrap_or_else(|poisoned| poisoned.into_inner()),
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool behind the free [`par_rows`]: created lazily on
+/// first dispatch, grown on demand up to [`MAX_THREADS`] workers, and
+/// shared by every kernel/backend in the process. It is intentionally
+/// never torn down — the OS reclaims it at process exit; explicit
+/// [`WorkerPool`]s join on drop.
+pub fn global_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(0))
+}
+
+/// Dispatch on the [`global_pool`] — the entry point every kernel in
+/// [`super::linalg`]/[`super::kernels`] uses. See
+/// [`WorkerPool::par_rows`] for the contract.
 pub fn par_rows<T, F>(out: &mut [T], row_width: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    global_pool().par_rows(out, row_width, threads, f)
+}
+
+/// The pre-pool dispatcher: scoped threads spawned per call, joined
+/// before return. Chunking and semantics are identical to [`par_rows`]
+/// (same [`chunk_rows`], last chunk inline), so the two are bitwise
+/// interchangeable — retained as the differential oracle for the pool
+/// and as the comparator in the `pool_dispatch` spawn-overhead
+/// microbench (`BENCH_native.json`). Production code paths should use
+/// [`par_rows`].
+pub fn par_rows_scoped<T, F>(out: &mut [T], row_width: usize, threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
@@ -202,6 +554,110 @@ mod tests {
         });
         for (i, row) in out.chunks_exact(3).enumerate() {
             assert!(row.iter().all(|&v| v == i));
+        }
+    }
+
+    #[test]
+    fn pool_reuses_workers_across_dispatches() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.worker_count(), 3);
+        for round in 0..50 {
+            let mut out = vec![0.0f32; 16 * 4];
+            pool.par_rows(&mut out, 4, 3, |row0, chunk| {
+                for (i, row) in chunk.chunks_exact_mut(4).enumerate() {
+                    row.fill((row0 + i) as f32);
+                }
+            });
+            for (i, row) in out.chunks_exact(4).enumerate() {
+                assert!(row.iter().all(|&v| v == i as f32), "round {round} row {i}");
+            }
+            assert_eq!(pool.worker_count(), 3, "round {round} spawned extra workers");
+        }
+    }
+
+    #[test]
+    fn pool_grows_on_demand_and_caps() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.worker_count(), 0);
+        let mut out = vec![0.0f32; 8];
+        pool.par_rows(&mut out, 1, 4, |_, chunk| chunk.fill(1.0));
+        // 4-way dispatch needs at most 3 workers (last chunk is inline)
+        assert!(pool.worker_count() <= 3 && pool.worker_count() >= 1);
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(4);
+        let gauge = pool.live_gauge();
+        let mut out = vec![0.0f32; 32];
+        pool.par_rows(&mut out, 2, 4, |_, chunk| chunk.fill(2.0));
+        assert_eq!(gauge.load(Ordering::SeqCst), 4);
+        drop(pool);
+        assert_eq!(gauge.load(Ordering::SeqCst), 0, "drop must join every worker");
+    }
+
+    #[test]
+    fn nested_par_rows_completes() {
+        // A job that itself dispatches must not deadlock: the waiter
+        // helps by running queued jobs (the head-parallel attention path
+        // nests kernel dispatches exactly like this).
+        let mut out = vec![0.0f32; 8 * 32];
+        par_rows(&mut out, 32, 4, |row0, chunk| {
+            for (i, row) in chunk.chunks_exact_mut(32).enumerate() {
+                let r = row0 + i;
+                par_rows(row, 8, 3, |sub0, sub| {
+                    for (j, cell) in sub.iter_mut().enumerate() {
+                        *cell = (r * 100 + sub0 * 8 + j) as f32;
+                    }
+                });
+            }
+        });
+        for (e, &v) in out.iter().enumerate() {
+            let (r, within) = (e / 32, e % 32);
+            assert_eq!(v, (r * 100 + within) as f32, "elem {e}");
+        }
+    }
+
+    #[test]
+    fn par_rows_propagates_job_panics() {
+        // Panic in a queued job (first chunk) must surface on the
+        // caller — and the pool must stay usable afterwards.
+        let result = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0f32; 16];
+            par_rows(&mut out, 2, 4, |row0, _chunk| {
+                if row0 == 0 {
+                    panic!("job boom");
+                }
+            });
+        });
+        assert!(result.is_err(), "job panic must propagate");
+        let mut out = vec![0.0f32; 16];
+        par_rows(&mut out, 2, 4, |_, chunk| chunk.fill(3.0));
+        assert!(out.iter().all(|&v| v == 3.0), "pool unusable after panic");
+    }
+
+    #[test]
+    fn pool_matches_scoped_dispatcher_bitwise() {
+        let src: Vec<f32> = (0..96).map(|i| (i as f32).sin()).collect();
+        let work = |row0: usize, chunk: &mut [f32]| {
+            for (i, row) in chunk.chunks_exact_mut(8).enumerate() {
+                let s = &src[(row0 + i) * 8..(row0 + i + 1) * 8];
+                let mut acc = 0.0f32;
+                for &x in s {
+                    acc += x * x;
+                }
+                for v in row.iter_mut() {
+                    *v = acc;
+                }
+            }
+        };
+        for threads in [1usize, 2, 3, 5] {
+            let mut a = vec![0.0f32; 96];
+            let mut b = vec![0.0f32; 96];
+            par_rows(&mut a, 8, threads, work);
+            par_rows_scoped(&mut b, 8, threads, work);
+            assert_eq!(a, b, "pool vs scoped at threads={threads}");
         }
     }
 }

@@ -385,6 +385,10 @@ pub struct ServeConfig {
     /// Kernel threads for the native backend's forward pass (0 = auto:
     /// the `BSA_NATIVE_THREADS` env var if set, else the machine's
     /// available parallelism — see `backend::pool::resolve_threads`).
+    /// This is also the demand one forward pass registers with the
+    /// persistent worker pool: the pool is shared process-wide, grows
+    /// lazily to the *aggregate* demand of concurrent forwards (capped
+    /// at `backend::pool::MAX_THREADS`), and never spawns per request.
     /// Purely a latency knob: native outputs are bitwise identical for
     /// every setting.
     pub native_threads: usize,

@@ -41,7 +41,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "workers", help: "serving workers", takes_value: true, default: Some("2") },
         // no baked-in default: absent flag falls back to the config
         // file's [serve] native_threads (a Some() default would clobber it)
-        FlagSpec { name: "threads", help: "native-backend kernel threads per forward pass (0 = auto: BSA_NATIVE_THREADS env var, else hardware parallelism; default: [serve] native_threads or 0); outputs are bitwise identical for every setting", takes_value: true, default: None },
+        FlagSpec { name: "threads", help: "native-backend kernel threads per forward pass, i.e. the demand each forward registers with the shared persistent worker pool (0 = auto: BSA_NATIVE_THREADS env var, else hardware parallelism; default: [serve] native_threads or 0); outputs are bitwise identical for every setting", takes_value: true, default: None },
         FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
         FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
         FlagSpec { name: "out", help: "output path", takes_value: true, default: None },

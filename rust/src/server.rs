@@ -16,6 +16,11 @@
 //!   stats:    magic "BSST" (no body) → "BSRS" | status 2 | len u32 | json bytes
 //!             (router counters incl. ball-tree cache hits/misses — the
 //!             serving hot path's observability surface)
+//!
+//! The normative protocol specification — field bounds, status codes,
+//! the BSST stats-frame JSON schema, and pipelining/shutdown semantics —
+//! is `docs/FORMATS.md` at the repo root; keep this module and that
+//! document in sync.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};

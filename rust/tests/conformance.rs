@@ -16,6 +16,15 @@
 //! `.bsackpt` files), and — when compiled artifacts exist — the
 //! native-vs-pjrt fixture gate.
 //!
+//! The parallel dispatches run on `backend::pool`'s **persistent worker
+//! pool**, so this file also gates the pool's lifecycle contract:
+//! bitwise-identical kernel output across 100+ reused dispatches at
+//! mixed thread counts, a flat global worker population under repeated
+//! backend construct/drop churn, and explicit `WorkerPool` drop joining
+//! every worker (live gauge reads zero the moment drop returns). The
+//! whole-forward sweeps additionally exercise the head-parallel
+//! attention path, including nested dispatches (threads > batch*heads).
+//!
 //! Failures print the `proptest_lite` case id so a shape can be
 //! replayed; run just this file with `cargo test --test conformance`
 //! (what `scripts/check.sh --quick` does, in release mode so the
@@ -420,6 +429,135 @@ fn conf_rejects_n_not_divisible_by_ball() {
     let hyper = AttnHyper { ball_size: 48, cmp_block: 8, group_size: 8, top_k: 2 };
     let err = NativeBackend::new(params, hyper, 100, 1).unwrap_err().to_string();
     assert!(err.contains("ball"), "error names the ball constraint: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// persistent worker pool: reuse determinism + lifecycle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conf_pool_reuse_bitwise_across_dispatches() {
+    // 120 dispatches through the same process-wide pool, cycling thread
+    // counts and kernels: queue reuse, worker identity, and dispatch
+    // order must never change a bit vs the scalar references computed
+    // once up front.
+    let (m, k, n) = (13usize, 24, 17);
+    let a = bsa::prng::Rng::new(5).normals(m * k);
+    let b = bsa::prng::Rng::new(6).normals(k * n);
+    let mut mm_ref = vec![0.0f32; m * n];
+    linalg::matmul_reference(&a, &b, m, k, n, &mut mm_ref);
+
+    let (bn, bd, ball) = (24usize, 6usize, 4usize);
+    let q = bsa::prng::Rng::new(7).normals(bn * bd);
+    let kk = bsa::prng::Rng::new(8).normals(bn * bd);
+    let v = bsa::prng::Rng::new(9).normals(bn * bd);
+    let mut ball_ref = vec![0.0f32; bn * bd];
+    let mut sc = Vec::new();
+    kernels::ball_attention_reference(&q, &kk, &v, bn, bd, ball, &mut ball_ref, &mut sc);
+
+    for i in 0..120 {
+        let threads = [1usize, 2, 3, 4, 8][i % 5];
+        let mut mm = vec![0.0f32; m * n];
+        linalg::matmul(&a, &b, m, k, n, threads, &mut mm);
+        assert_eq!(mm, mm_ref, "matmul dispatch {i} (threads {threads}) diverged");
+        let mut bo = vec![0.0f32; bn * bd];
+        kernels::ball_attention(&q, &kk, &v, bn, bd, ball, threads, &mut bo);
+        assert_eq!(bo, ball_ref, "ball dispatch {i} (threads {threads}) diverged");
+    }
+}
+
+#[test]
+fn conf_pool_matches_scoped_spawn_bitwise() {
+    // The retained scoped-spawn dispatcher is the differential oracle
+    // for the pool dispatcher: same chunking, same results, bit for bit.
+    let src = bsa::prng::Rng::new(12).normals(64 * 8);
+    let work = |row0: usize, chunk: &mut [f32]| {
+        for (i, row) in chunk.chunks_exact_mut(8).enumerate() {
+            let s = &src[(row0 + i) * 8..(row0 + i + 1) * 8];
+            let mut acc = 0.0f32;
+            for &x in s {
+                acc += x * x;
+            }
+            for (j, out) in row.iter_mut().enumerate() {
+                *out = acc + j as f32;
+            }
+        }
+    };
+    for threads in [1usize, 2, 3, 5, 8] {
+        let mut pooled = vec![0.0f32; 64 * 8];
+        let mut scoped = vec![0.0f32; 64 * 8];
+        pool::par_rows(&mut pooled, 8, threads, work);
+        pool::par_rows_scoped(&mut scoped, 8, threads, work);
+        assert_eq!(pooled, scoped, "pool vs scoped diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn conf_worker_pool_drop_joins_workers() {
+    // Explicit pools must not leak threads: every construct/dispatch/
+    // drop round ends with the live-worker gauge back at zero the moment
+    // drop returns (Drop joins all workers).
+    use std::sync::atomic::Ordering;
+    for round in 0..6 {
+        let p = pool::WorkerPool::new(4);
+        let gauge = p.live_gauge();
+        assert_eq!(p.worker_count(), 4, "round {round}");
+        let mut out = vec![0.0f32; 64 * 8];
+        p.par_rows(&mut out, 8, 4, |row0, chunk| {
+            for (i, row) in chunk.chunks_exact_mut(8).enumerate() {
+                row.fill((row0 + i) as f32);
+            }
+        });
+        for (i, row) in out.chunks_exact(8).enumerate() {
+            assert!(row.iter().all(|&v| v == i as f32), "round {round} row {i}");
+        }
+        assert_eq!(gauge.load(Ordering::SeqCst), 4, "round {round}: workers alive");
+        drop(p);
+        assert_eq!(
+            gauge.load(Ordering::SeqCst),
+            0,
+            "round {round}: drop must join every worker"
+        );
+    }
+}
+
+#[test]
+fn conf_backend_churn_keeps_global_pool_healthy() {
+    // NativeBackend shares the lazily-grown global pool: backend
+    // construct/forward/drop churn must leave the pool healthy. The
+    // race-free invariants (other tests dispatch on the same pool
+    // concurrently, so exact worker counts are not assertable here;
+    // the deterministic join-on-drop property is covered by
+    // conf_worker_pool_drop_joins_workers on explicit pools):
+    //   1. forwards stay correct across the whole churn;
+    //   2. the pool never exceeds its MAX_THREADS cap, no matter how
+    //      many backends came and went (aggregate demand is capped);
+    //   3. no global worker ever exits — live_workers >= worker_count
+    //      read-after (a dead/leaked-then-reaped worker would show
+    //      live < spawned, since only pool drop retires workers and
+    //      the global pool is never dropped).
+    let x = fixture_input(256, 6, 51);
+    let expected = NativeBackend::init(0, &tiny_config(), 6, 1, 1)
+        .unwrap()
+        .with_threads(4)
+        .forward(&x)
+        .unwrap();
+    for round in 0..8 {
+        let be = NativeBackend::init(0, &tiny_config(), 6, 1, 1)
+            .unwrap()
+            .with_threads(4);
+        let out = be.forward(&x).unwrap();
+        assert_eq!(out, expected, "round {round}: churn changed the forward output");
+        drop(be);
+        let spawned = pool::global_pool().worker_count();
+        let live = pool::global_pool().live_workers();
+        assert!(spawned <= pool::MAX_THREADS, "round {round}: pool exceeded MAX_THREADS");
+        assert!(
+            live >= spawned,
+            "round {round}: {} of {spawned} global workers exited",
+            spawned - live
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------

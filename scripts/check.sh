@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # One-command gate: tier-1 build+tests (debug AND release — the parallel
 # kernels must pass with the optimizer on, where race-adjacent bugs
-# actually surface), lints, and the perf artifacts (BENCH_serve.json +
-# BENCH_native.json) in smoke mode. CI and pre-PR runs use this so the
-# correctness gate and the perf trajectory can't drift apart.
+# actually surface), lints, rustdoc with warnings-as-errors (README /
+# FORMATS.md cross-references must not rot), and the perf artifacts
+# (BENCH_serve.json + BENCH_native.json) in smoke mode. CI and pre-PR
+# runs use this so the correctness gate and the perf trajectory can't
+# drift apart.
 #
 #   scripts/check.sh                # full gate
 #   scripts/check.sh --quick        # build + conformance tests only
@@ -57,6 +59,8 @@ trap '[[ -z "${BASELINE}" ]] || rm -f "${BASELINE}"' EXIT
   cargo test -q --release
   echo "== cargo clippy --all-targets -- -D warnings"
   cargo clippy --all-targets -- -D warnings
+  echo "== cargo doc --no-deps (rustdoc warnings are errors: docs must not rot)"
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
   echo "== serve_hot_path bench (smoke, --reps ${REPS})"
   cargo bench --bench paper -- serve_hot_path --reps "${REPS}"
   echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e + threads sweep)"
