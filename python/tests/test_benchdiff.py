@@ -1,0 +1,138 @@
+"""Tests for scripts/benchdiff.py — the rebar-style cross-run perf
+artifact differ that scripts/check.sh prints after refreshing
+BENCH_native.json / BENCH_serve.json.
+
+Import-level tests on the flatten/diff/regression logic plus one
+subprocess round trip of the CLI exit-code contract (0 informational,
+2 on --fail-over regression). numpy-free on purpose: this suite runs in
+the CI python-mirror job with nothing but pytest installed.
+"""
+
+import importlib.util
+import json
+import pathlib
+import subprocess
+import sys
+
+SCRIPT = pathlib.Path(__file__).resolve().parents[2] / "scripts" / "benchdiff.py"
+
+spec = importlib.util.spec_from_file_location("benchdiff", SCRIPT)
+benchdiff = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(benchdiff)
+
+
+OLD = {
+    "bench": "bsa_native",
+    "reps": 5,
+    "threads_sweep": [
+        {"threads": 1, "p50_us": 1000.0, "fwd_per_s": 10.0},
+        {"threads": 2, "p50_us": 600.0, "fwd_per_s": 18.0},
+    ],
+    "simd": {
+        "mode": "avx2",
+        "kernels": [
+            {"name": "matmul_nt", "scalar_us": 40.0, "simd_us": 10.0, "speedup": 4.0}
+        ],
+        "e2e": {"threads": 1, "scalar_fwd_per_s": 10.0, "simd_fwd_per_s": 30.0, "speedup": 3.0},
+    },
+}
+
+
+def new_doc(fwd1=10.0, p50=1000.0):
+    doc = json.loads(json.dumps(OLD))
+    doc["threads_sweep"][0]["fwd_per_s"] = fwd1
+    doc["threads_sweep"][0]["p50_us"] = p50
+    return doc
+
+
+def test_flatten_keys_lists_by_identity_field():
+    flat = benchdiff.flatten(OLD)
+    assert flat["threads_sweep[threads=1].fwd_per_s"] == 10.0
+    assert flat["simd.kernels[name=matmul_nt].simd_us"] == 10.0
+    # descriptors and strings are not measurements
+    assert "reps" not in flat
+    assert "bench" not in flat
+    assert "simd.mode" not in flat
+
+
+def test_direction_classification():
+    assert benchdiff.direction("threads_sweep[threads=1].fwd_per_s") == "higher"
+    assert benchdiff.direction("x.speedup") == "higher"
+    assert benchdiff.direction("pool.saved_us") == "higher"  # before the _us rule
+    assert benchdiff.direction("x.p50_us") == "lower"
+    assert benchdiff.direction("preprocess.cached.p95_us") == "lower"
+    assert benchdiff.direction("router.tree_hits") == "higher"
+    assert benchdiff.direction("router.tree_misses") == "lower"
+    assert benchdiff.direction("arch.depth") is None
+
+
+def test_diff_reports_deltas_and_verdicts():
+    rows, skipped = benchdiff.diff(OLD, new_doc(fwd1=8.0, p50=1250.0))
+    by_path = {r[0]: r for r in rows}
+    path, old, new, delta, verdict = by_path["threads_sweep[threads=1].fwd_per_s"]
+    assert (old, new) == (10.0, 8.0)
+    assert abs(delta - (-20.0)) < 1e-9
+    assert verdict == "worse"
+    _, _, _, delta, verdict = by_path["threads_sweep[threads=1].p50_us"]
+    assert abs(delta - 25.0) < 1e-9
+    assert verdict == "worse"
+    # untouched metrics are "~"
+    assert by_path["simd.kernels[name=matmul_nt].speedup"][4] == "~"
+    assert skipped == 0
+
+
+def test_null_leaves_are_skipped_not_compared():
+    placeholder = json.loads(json.dumps(OLD))
+    placeholder["threads_sweep"][0]["fwd_per_s"] = None
+    rows, skipped = benchdiff.diff(placeholder, OLD)
+    assert skipped >= 1
+    assert all(r[0] != "threads_sweep[threads=1].fwd_per_s" for r in rows)
+
+
+def test_regressions_respect_direction_and_threshold():
+    rows, _ = benchdiff.diff(OLD, new_doc(fwd1=8.0))  # -20% on higher-better
+    regs = benchdiff.regressions(rows, 10.0)
+    assert [r[0] for r in regs] == ["threads_sweep[threads=1].fwd_per_s"]
+    assert benchdiff.regressions(rows, 25.0) == []
+    # an improvement never trips the gate
+    rows, _ = benchdiff.diff(OLD, new_doc(fwd1=20.0))
+    assert benchdiff.regressions(rows, 10.0) == []
+
+
+def test_section_filter():
+    rows, _ = benchdiff.diff(OLD, new_doc(fwd1=8.0), section="simd")
+    assert rows and all(r[0].startswith("simd") for r in rows)
+
+
+def test_cli_exit_codes(tmp_path):
+    old_p = tmp_path / "old.json"
+    new_p = tmp_path / "new.json"
+    old_p.write_text(json.dumps(OLD))
+    new_p.write_text(json.dumps(new_doc(fwd1=8.0)))
+
+    # informational mode always exits 0 and prints a table
+    run = subprocess.run(
+        [sys.executable, str(SCRIPT), str(old_p), str(new_p), "--label", "t"],
+        capture_output=True,
+        text=True,
+    )
+    assert run.returncode == 0, run.stderr
+    assert "fwd_per_s" in run.stdout and "worse" in run.stdout
+
+    # --fail-over trips on the 20% regression
+    run = subprocess.run(
+        [sys.executable, str(SCRIPT), str(old_p), str(new_p), "--fail-over", "10"],
+        capture_output=True,
+        text=True,
+    )
+    assert run.returncode == 2
+    assert "regressed" in run.stderr
+
+    # unreadable input is a clean error, not a traceback
+    run = subprocess.run(
+        [sys.executable, str(SCRIPT), str(tmp_path / "missing.json"), str(new_p)],
+        capture_output=True,
+        text=True,
+    )
+    assert run.returncode == 1
+    assert "cannot read" in run.stderr

@@ -1,0 +1,184 @@
+"""Numpy mirror of the Rust SIMD microkernel layer's *numerics*
+(rust/src/backend/simd.rs).
+
+The Rust side's conformance gate (rust/tests/conformance.rs +
+rust/tests/simd_off.rs) asserts the microkernels against their scalar
+twins on the real binaries; this file re-derives the two load-bearing
+numeric claims in exact float32, so they are checkable on hosts without
+a Rust toolchain:
+
+1. the polynomial ``exp_lane`` (cephes-style: clamp, magic-constant
+   round-to-even, Cody-Waite ln2 split, degree-6 poly, exponent-bit
+   scale) is within ~1.2e-7 relative error of true exp over the clamped
+   range, is exactly 1.0 at 0, and saturates near the smallest normal
+   for masked (-1e30-style) logits — which is what makes the 1e-5
+   kernel twin bound safe;
+2. the 8-lane + pairwise-tree ``dot``/``exp_sum`` reduction order stays
+   within a reassociation-sized bound of the left-to-right scalar
+   chain, including every lane-tail residue N % 8 in 1..=7.
+
+Every constant below is a verbatim transcription of simd.rs; if a
+constant drifts there, re-run this file's derivation before loosening
+anything.
+"""
+
+import numpy as np
+
+f32 = np.float32
+
+LANES = 8
+
+# constants mirroring rust/src/backend/simd.rs (exp_lane)
+EXP_HI = f32(88.02)
+EXP_LO = f32(-87.336544)
+LOG2E = f32(1.442695041)
+LN2_HI = f32(0.693359375)
+LN2_LO = f32(-2.12194440e-4)
+EXP_MAGIC = f32(12582912.0)  # 1.5 * 2^23
+EXP_C = [
+    f32(1.98756915e-4),
+    f32(1.39819995e-3),
+    f32(8.3334519e-3),
+    f32(4.1665796e-2),
+    f32(1.66666655e-1),
+    f32(5.0000001e-1),
+]
+
+
+def exp_lane(x):
+    """Exact-f32 mirror of simd::exp_lane (one scalar lane)."""
+    x = min(max(f32(x), EXP_LO), EXP_HI)
+    n = f32(f32(f32(x * LOG2E) + EXP_MAGIC) - EXP_MAGIC)
+    r = f32(x - f32(n * LN2_HI))
+    r = f32(r - f32(n * LN2_LO))
+    p = EXP_C[0]
+    for c in EXP_C[1:]:
+        p = f32(f32(p * r) + c)
+    p = f32(f32(p * f32(r * r)) + f32(r + f32(1.0)))
+    bits = np.uint32((int(n) + 127) << 23)
+    return f32(p * bits.view(f32))
+
+
+def hsum8(acc):
+    """Mirror of simd::hsum8: the fixed pairwise combine tree."""
+    a = [f32(v) for v in acc]
+    return f32(
+        f32(f32(a[0] + a[1]) + f32(a[2] + a[3]))
+        + f32(f32(a[4] + a[5]) + f32(a[6] + a[7]))
+    )
+
+
+def dot_portable(x, y):
+    """Mirror of simd::dot_portable: lane accumulators, tree, tail."""
+    acc = [f32(0.0)] * LANES
+    n = len(x)
+    lanes = n - n % LANES
+    for i in range(0, lanes, LANES):
+        for l in range(LANES):
+            acc[l] = f32(acc[l] + f32(f32(x[i + l]) * f32(y[i + l])))
+    s = hsum8(acc)
+    for j in range(lanes, n):
+        s = f32(s + f32(f32(x[j]) * f32(y[j])))
+    return s
+
+
+def dot_scalar(x, y):
+    """Mirror of simd::dot_scalar: one left-to-right chain."""
+    s = f32(0.0)
+    for a, b in zip(x, y):
+        s = f32(s + f32(f32(a) * f32(b)))
+    return s
+
+
+def exp_sum_portable(row, mx):
+    """Mirror of simd::exp_sum_portable (in place, returns the sum)."""
+    acc = [f32(0.0)] * LANES
+    n = len(row)
+    lanes = n - n % LANES
+    out = np.array(row, dtype=f32)
+    for i in range(0, lanes, LANES):
+        for l in range(LANES):
+            e = exp_lane(f32(out[i + l] - mx))
+            out[i + l] = e
+            acc[l] = f32(acc[l] + e)
+    s = hsum8(acc)
+    for j in range(lanes, n):
+        e = exp_lane(f32(out[j] - mx))
+        out[j] = e
+        s = f32(s + e)
+    return out, s
+
+
+# ---------------------------------------------------------------------------
+# exp polynomial accuracy
+# ---------------------------------------------------------------------------
+
+
+def test_exp_lane_relative_error_bound():
+    xs = np.linspace(-87.0, 0.0, 5001).astype(f32)
+    worst = 0.0
+    for x in xs:
+        approx = float(exp_lane(x))
+        exact = float(np.exp(np.float64(x)))
+        worst = max(worst, abs(approx - exact) / exact)
+    assert worst < 5e-7, f"exp poly drifted: max rel err {worst}"
+
+
+def test_exp_lane_anchors():
+    assert float(exp_lane(0.0)) == 1.0, "exp(0) must be exactly 1"
+    # masked logits (NEG_INF = -1e30 after max-subtraction) saturate at
+    # the smallest normal instead of 0 — negligible in any softmax sum
+    tiny = float(exp_lane(-2e30))
+    assert 0.0 <= tiny < 1.3e-38
+    # positive side stays finite up to the clamp
+    assert np.isfinite(exp_lane(88.0))
+
+
+def test_exp_lane_monotone_on_grid():
+    xs = np.linspace(-30.0, 0.0, 601).astype(f32)
+    vals = [float(exp_lane(x)) for x in xs]
+    assert all(b >= a for a, b in zip(vals, vals[1:])), "exp poly not monotone"
+
+
+# ---------------------------------------------------------------------------
+# reduction reordering bounds (lane tails included)
+# ---------------------------------------------------------------------------
+
+
+def test_dot_tree_matches_scalar_chain_at_every_tail():
+    rng = np.random.default_rng(7)
+    for n in [1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 33, 64, 100]:
+        x = rng.standard_normal(n).astype(f32)
+        y = rng.standard_normal(n).astype(f32)
+        tree = float(dot_portable(x, y))
+        chain = float(dot_scalar(x, y))
+        l1 = float(np.sum(np.abs(x.astype(np.float64) * y.astype(np.float64))))
+        tol = 8 * n * np.finfo(np.float32).eps * (l1 + 1.0)
+        assert abs(tree - chain) <= tol, f"n={n}: {tree} vs {chain}"
+
+
+def test_softmax_panels_match_float64_reference():
+    rng = np.random.default_rng(11)
+    for n in [1, 3, 7, 8, 9, 17, 40]:
+        row = rng.standard_normal(n).astype(f32)
+        if n >= 3:
+            row[0] = f32(3e4)   # huge logit
+            row[1] = f32(-1e30)  # mask value
+        mx = f32(row.max())
+        exps, s = exp_sum_portable(row, mx)
+        got = exps / s
+        ref64 = np.exp(row.astype(np.float64) - np.float64(mx))
+        ref = ref64 / ref64.sum()
+        assert np.all(np.isfinite(got)), f"n={n}: non-finite softmax"
+        assert np.max(np.abs(got - ref)) < 1e-5, f"n={n}: softmax off"
+        assert abs(got.sum() - 1.0) < 1e-5
+
+
+def test_softmax_panels_handle_subnormal_rows():
+    row = np.array([1e-40, -1e-40, 2e-41, 0.0, -0.0, 8.5e-39, 1e-44], dtype=f32)
+    mx = f32(row.max())
+    exps, s = exp_sum_portable(row, mx)
+    got = exps / s
+    assert np.all(np.isfinite(got))
+    # subnormal logits are all ~0 apart: softmax must be ~uniform
+    assert np.max(np.abs(got - 1.0 / len(row))) < 1e-6

@@ -870,7 +870,7 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
 
 /// Measure the native BSA forward pass the way `serve_hot_path` measures
 /// preprocessing: machine-readable p50/p95 so the next PR can regress
-/// against it, on *any* host. Six levels:
+/// against it, on *any* host. Seven levels:
 ///
 /// 1. forward p50/p95 vs N for the demo-scale architecture (dim 32,
 ///    2 blocks — the native twin of the tiny core artifact);
@@ -879,17 +879,23 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
 ///    N=1024) — the machine-readable record of the parallel kernels'
 ///    speedup, and the baseline `scripts/check.sh` regresses the
 ///    single-thread row against;
-/// 3. dispatch-overhead microbench: the persistent worker pool vs the
+/// 3. SIMD microkernel A/B: per-kernel us/call and end-to-end single
+///    thread fwd/s with the `backend::simd` layer forced off (scalar
+///    twins) vs on (best detected level) — the `simd` record of
+///    `BENCH_native.json`, i.e. the data-level-parallelism win on this
+///    host (the force toggle is process-global; this harness is
+///    single-threaded at that point, and mode is restored to auto);
+/// 4. dispatch-overhead microbench: the persistent worker pool vs the
 ///    retained scoped-spawn dispatcher on a small (256x64) rowwise
 ///    kernel, where per-call thread spawning actually shows — the
 ///    `pool_dispatch` record of `BENCH_native.json` (outputs are
 ///    asserted bitwise-identical between the two dispatchers);
-/// 4. head-parallel attention sweep: batch 2 x 4 heads = 8 independent
+/// 5. head-parallel attention sweep: batch 2 x 4 heads = 8 independent
 ///    (batch, head) units across threads in {1, 2, 4, 8} — the record of
 ///    the head-parallel speedup (`head_parallel` in the JSON);
-/// 5. native vs pjrt on the demo architecture at N=256 when the compiled
+/// 6. native vs pjrt on the demo architecture at N=256 when the compiled
 ///    `fwd_bsa_syn_n256_b1` graph is present;
-/// 6. end-to-end through the native `Router` (batching + ball-tree
+/// 7. end-to-end through the native `Router` (batching + ball-tree
 ///    cache + forward) — proof the serving stack runs artifact-free.
 fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     use bsa::backend::{Backend, NativeBackend};
@@ -993,7 +999,132 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 3: dispatch overhead, persistent pool vs scoped spawn -----
+    // --- level 3: SIMD microkernels, scalar twins vs active level --------
+    // Force the dispatch level per timing pass (Off = the scalar
+    // reference loops, On = best detected AVX2/NEON/portable level).
+    // The toggle is process-global, but nothing else is timing kernels
+    // here and the mode is restored to Auto before the later levels.
+    let mut simd_t = Table::new(&["kernel", "scalar us/call", "simd us/call", "speedup"]);
+    let mut simd_json = Vec::new();
+    let simd_mode;
+    let simd_e2e_json;
+    {
+        use bsa::backend::{kernels, linalg, simd};
+
+        simd::set_force(simd::Force::On);
+        simd_mode = simd::active().name();
+        simd::set_force(simd::Force::Auto);
+
+        let calls = (200 * reps).max(200);
+        {
+            let mut time_pair = |label: &str, f: &mut dyn FnMut()| {
+                let mut us = [0.0f64; 2];
+                for (slot, force) in [(0usize, simd::Force::Off), (1, simd::Force::On)] {
+                    simd::set_force(force);
+                    f(); // warmup at this level
+                    let t0 = Instant::now();
+                    for _ in 0..calls {
+                        f();
+                    }
+                    us[slot] = t0.elapsed().as_secs_f64() * 1e6 / calls as f64;
+                }
+                simd::set_force(simd::Force::Auto);
+                let speedup = if us[1] > 0.0 { us[0] / us[1] } else { 0.0 };
+                simd_t.row(&[
+                    label.to_string(),
+                    format!("{:.2}", us[0]),
+                    format!("{:.2}", us[1]),
+                    format!("{speedup:.2}x"),
+                ]);
+                simd_json.push(format!(
+                    "{{\"name\": \"{label}\", \"scalar_us\": {:.3}, \"simd_us\": {:.3}, \
+                     \"speedup\": {speedup:.3}}}",
+                    us[0], us[1]
+                ));
+            };
+
+            // attention-score GEMM (simd::dot reduction)
+            let (m, kdim, n) = (128usize, 64usize, 128usize);
+            let a = bsa::prng::Rng::new(31).normals(m * kdim);
+            let b = bsa::prng::Rng::new(32).normals(n * kdim);
+            let mut nt_out = vec![0.0f32; m * n];
+            time_pair("matmul_nt_128x64x128", &mut || {
+                linalg::matmul_nt(&a, &b, m, kdim, n, 1, &mut nt_out);
+                std::hint::black_box(&nt_out);
+            });
+
+            // row softmax (max / exp-sum / scale panels)
+            let sm_src = bsa::prng::Rng::new(33).normals(128 * 256);
+            let mut sm = sm_src.clone();
+            time_pair("softmax_rows_128x256", &mut || {
+                sm.copy_from_slice(&sm_src);
+                linalg::softmax_rows(&mut sm, 128, 256, 1);
+                std::hint::black_box(&sm);
+            });
+
+            // RMSNorm (sum-of-squares reduction)
+            let rn_x = bsa::prng::Rng::new(34).normals(256 * 64);
+            let rn_s = bsa::prng::Rng::new(35).normals(64);
+            let mut rn_out = vec![0.0f32; 256 * 64];
+            time_pair("rms_norm_256x64", &mut || {
+                linalg::rms_norm(&rn_x, &rn_s, 256, 64, 1, &mut rn_out);
+                std::hint::black_box(&rn_out);
+            });
+
+            // ball attention (the per-unit dot/softmax/axpy panels)
+            let (bn, bd, ball) = (512usize, 16usize, 64usize);
+            let bq = bsa::prng::Rng::new(36).normals(bn * bd);
+            let bk = bsa::prng::Rng::new(37).normals(bn * bd);
+            let bv = bsa::prng::Rng::new(38).normals(bn * bd);
+            let mut ball_out = vec![0.0f32; bn * bd];
+            time_pair("ball_attention_n512_d16_m64", &mut || {
+                kernels::ball_attention(&bq, &bk, &bv, bn, bd, ball, 1, &mut ball_out);
+                std::hint::black_box(&ball_out);
+            });
+
+            // block compression (element-parallel add/scale panels)
+            let cm_x = bsa::prng::Rng::new(39).normals(1024 * 64);
+            let mut cm_out = vec![0.0f32; (1024 / 8) * 64];
+            time_pair("compress_mean_n1024_d64_l8", &mut || {
+                kernels::compress_mean(&cm_x, 1024, 64, 8, 1, &mut cm_out);
+                std::hint::black_box(&cm_out);
+            });
+        }
+
+        // end-to-end: the paper-config forward (threads=1, so the delta
+        // is pure data-level parallelism), scalar twins vs active level
+        let x = {
+            let mut rng = bsa::prng::Rng::new(sweep_mc.seq_len as u64 + 1);
+            Tensor::new(vec![1, sweep_mc.seq_len, 6], rng.normals(sweep_mc.seq_len * 6))
+        };
+        let be = NativeBackend::init(0, &sweep_mc, 6, 1, 1)?.with_threads(1);
+        let mut fwd_per_s = [0.0f64; 2];
+        for (slot, force) in [(0usize, simd::Force::Off), (1, simd::Force::On)] {
+            simd::set_force(force);
+            let _ = be.forward(&x)?; // warmup
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let out = be.forward(&x)?;
+                std::hint::black_box(&out);
+            }
+            fwd_per_s[slot] = reps as f64 / t0.elapsed().as_secs_f64();
+        }
+        simd::set_force(simd::Force::Auto);
+        let e2e_speedup = if fwd_per_s[0] > 0.0 { fwd_per_s[1] / fwd_per_s[0] } else { 0.0 };
+        simd_e2e_json = format!(
+            "{{\"threads\": 1, \"scalar_fwd_per_s\": {:.3}, \"simd_fwd_per_s\": {:.3}, \
+             \"speedup\": {e2e_speedup:.3}}}",
+            fwd_per_s[0], fwd_per_s[1]
+        );
+        simd_t.row(&[
+            "e2e_forward_paper_1t".into(),
+            format!("{:.2} fwd/s", fwd_per_s[0]),
+            format!("{:.2} fwd/s", fwd_per_s[1]),
+            format!("{e2e_speedup:.2}x"),
+        ]);
+    }
+
+    // --- level 4: dispatch overhead, persistent pool vs scoped spawn -----
     // Small kernels are where spawn cost shows: a 256-row x 64-wide
     // rowwise workload (tens of microseconds of math) dispatched
     // hundreds of times. Both dispatchers share chunk_rows, so their
@@ -1049,7 +1180,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 4: head-parallel attention sweep ---------------------------
+    // --- level 5: head-parallel attention sweep ---------------------------
     // batch 2 x 4 heads = 8 independent (batch, head) units: the axis
     // native.rs::attention parallelizes over. Bitwise-invariant across
     // the sweep (the conformance suite asserts that; this records the
@@ -1107,7 +1238,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 5: native vs pjrt at the tiny config ----------------------
+    // --- level 6: native vs pjrt at the tiny config ----------------------
     let mut pjrt_json = String::from("{\"available\": false}");
     let mut pjrt_line = String::from(
         "pjrt comparison: artifacts unavailable (native-only run)\n",
@@ -1147,7 +1278,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 6: end-to-end native router (artifact-free serving) ------
+    // --- level 7: end-to-end native router (artifact-free serving) ------
     let mc = arch(256);
     let backend = Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?);
     let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
@@ -1178,6 +1309,8 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
          \"forward\": [{}],\n  \
          \"sweep_arch\": {sweep_arch_json},\n  \
          \"threads_sweep\": [{}],\n  \
+         \"simd\": {{\"mode\": \"{simd_mode}\", \"kernels\": [{}], \
+         \"e2e\": {simd_e2e_json}}},\n  \
          \"pool_dispatch\": {{\"rows\": 256, \"width\": 64, \"calls\": {disp_calls}, \
          \"points\": [{}]}},\n  \
          \"head_parallel\": {{\"arch\": {{\"dim\": {}, \"heads\": {}, \"blocks\": {}, \
@@ -1186,6 +1319,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
          \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
         fwd_json.join(", "),
         sweep_json.join(", "),
+        simd_json.join(", "),
         disp_json.join(", "),
         hp_mc.dim,
         hp_mc.num_heads,
@@ -1213,6 +1347,10 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         sweep_mc.dim, sweep_mc.num_blocks, sweep_mc.seq_len
     ));
     content.push_str(&sweep_t.render());
+    content.push_str(&format!(
+        "\n### SIMD microkernels — scalar twins vs {simd_mode} (single thread)\n\n"
+    ));
+    content.push_str(&simd_t.render());
     content.push_str(&format!(
         "\n### dispatch overhead — persistent pool vs per-call scoped spawn \
          (256x64 rowwise kernel, {disp_calls} calls)\n\n"

@@ -8,13 +8,20 @@
 //! [`pool::par_rows`](super::pool::par_rows) chunks (balls for ball
 //! attention, blocks for compression, groups for selection/top-k) —
 //! executed by the persistent worker pool, not per-call threads — and
-//! compute each unit with the exact per-element accumulation order of
-//! the twin, so parallel == reference holds **bitwise**, which
-//! `rust/tests/conformance.rs` sweeps across randomized shapes and
-//! thread counts (see the "Kernel conformance" section in [`super`]).
+//! compute each unit on the [`super::simd`] microkernels
+//! ([`attend_unit`]'s dot / max / exp-sum / axpy panels, the
+//! compression add/scale panels). With SIMD active the attention-family
+//! kernels match their twins to the documented **1e-5** differential
+//! bound (horizontal reductions reorder accumulation);
+//! [`compress_mean`] and [`topk_indices`] stay bitwise, and with
+//! `BSA_NATIVE_SIMD=off` every kernel runs the twin's exact scalar
+//! loops. In all modes, outputs are **bitwise stable across thread
+//! counts** — chunking never changes what a unit computes.
+//! `rust/tests/conformance.rs` sweeps all of this across randomized
+//! shapes and thread counts (see "Kernel conformance" in [`super`]).
 //! The head-parallel attention in [`super::native`] calls these kernels
 //! from inside pool jobs; nested dispatches are safe (the pool's waiters
-//! help run queued work) and bitwise-neutral by the same invariant.
+//! help run queued work) and thread-count-neutral by the same invariant.
 //!
 //! All operands are flat row-major `(N, d)` slices for one attention
 //! head; the model layer folds batch and heads before calling in here,
@@ -24,10 +31,10 @@
 //! `l`, selection group `g`, `k*` selected blocks.
 
 use super::linalg::{
-    matmul, matmul_nt, matmul_nt_reference, matmul_reference, softmax_rows,
+    matmul, matmul_nt, matmul_nt_reference, matmul_reference, softmax_row_simd, softmax_rows,
     softmax_rows_reference,
 };
-use super::pool;
+use super::{pool, simd};
 
 /// Mask value matching `ref.py::NEG_INF`: large but finite so an
 /// all-masked row softmaxes to uniform instead of NaN.
@@ -52,9 +59,7 @@ pub fn attend(
 ) {
     scores.resize(nq * nk, 0.0);
     matmul_nt(q, k, nq, d, nk, threads, scores);
-    for s in scores.iter_mut() {
-        *s *= scale;
-    }
+    simd::scale(scores, scale);
     softmax_rows(scores, nq, nk, threads);
     matmul(scores, v, nq, nk, d, threads, out);
 }
@@ -82,6 +87,49 @@ pub fn attend_reference(
     matmul_reference(scores, v, nq, nk, d, out);
 }
 
+/// One serial attention unit on the [`super::simd`] microkernels: per
+/// query row, `simd::dot` scores against every key, the row softmax
+/// panels, and an ascending-key `simd::axpy` accumulation of the
+/// values — the same per-element op sequence as the parallel
+/// [`attend`] composition, so a ball/selection unit computed here is a
+/// 1e-5 twin of [`attend_reference`] when SIMD is active. When SIMD is
+/// off this delegates to the scalar twin verbatim, keeping the
+/// `BSA_NATIVE_SIMD=off` path bitwise. The ball and selection kernels
+/// run this per chunk unit; thread counts never change what a unit
+/// computes.
+#[allow(clippy::too_many_arguments)]
+fn attend_unit(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    let lvl = simd::active();
+    if lvl == simd::Level::Scalar {
+        attend_reference(q, k, v, nq, nk, d, scale, out, scores);
+        return;
+    }
+    scores.resize(nq * nk, 0.0);
+    for i in 0..nq {
+        let qrow = &q[i * d..(i + 1) * d];
+        let srow = &mut scores[i * nk..(i + 1) * nk];
+        for (j, s) in srow.iter_mut().enumerate() {
+            *s = simd::dot_at(lvl, qrow, &k[j * d..(j + 1) * d]) * scale;
+        }
+        softmax_row_simd(lvl, srow);
+        let orow = &mut out[i * d..(i + 1) * d];
+        orow.fill(0.0);
+        for (j, &w) in srow.iter().enumerate() {
+            simd::axpy_at(lvl, w, &v[j * d..(j + 1) * d], orow);
+        }
+    }
+}
+
 /// Ball attention (paper eq. 3): full attention inside disjoint balls of
 /// `ball_size` tokens, one ball-batch per thread chunk. `q`/`k`/`v`/`out`
 /// are `(n, d)` with `n % ball_size == 0` (the ball tree guarantees this
@@ -105,7 +153,7 @@ pub fn ball_attention(
         let mut scores = Vec::new();
         for (bi, oball) in ochunk.chunks_exact_mut(chunk).enumerate() {
             let r = (ball0 + bi) * chunk..(ball0 + bi + 1) * chunk;
-            attend_reference(
+            attend_unit(
                 &q[r.clone()],
                 &k[r.clone()],
                 &v[r],
@@ -154,15 +202,25 @@ pub fn ball_attention_reference(
 
 /// Compression pooling phi = mean (paper eq. 5): mean-pool
 /// non-overlapping blocks of `block` tokens, `(n, d) -> (n/block, d)`,
-/// parallel over block chunks.
+/// parallel over block chunks. Built only from the element-parallel
+/// [`simd::add_assign`] / [`simd::scale`] panels, so it stays
+/// **bitwise equal** to [`compress_mean_reference`] at every SIMD
+/// level and thread count.
 pub fn compress_mean(x: &[f32], n: usize, d: usize, block: usize, threads: usize, out: &mut [f32]) {
     assert_eq!(n % block, 0, "n must be divisible by block");
     let nb = n / block;
     assert_eq!(out.len(), nb * d, "compress out len");
+    let inv = 1.0 / block as f32;
+    let lvl = simd::active();
     pool::par_rows(out, d, threads, |b0, ochunk| {
-        let blocks = ochunk.len() / d;
-        let xr = &x[b0 * block * d..(b0 + blocks) * block * d];
-        compress_mean_reference(xr, blocks * block, d, block, ochunk);
+        for (bi, orow) in ochunk.chunks_exact_mut(d).enumerate() {
+            let b = b0 + bi;
+            orow.fill(0.0);
+            for t in 0..block {
+                simd::add_assign_at(lvl, orow, &x[(b * block + t) * d..(b * block + t + 1) * d]);
+            }
+            simd::scale_at(lvl, orow, inv);
+        }
     });
 }
 
@@ -341,7 +399,7 @@ pub fn select_attention(
                 ksel[j * blk..(j + 1) * blk].copy_from_slice(&k[bi * blk..(bi + 1) * blk]);
                 vsel[j * blk..(j + 1) * blk].copy_from_slice(&v[bi * blk..(bi + 1) * blk]);
             }
-            attend_reference(
+            attend_unit(
                 &q[p * gd..(p + 1) * gd],
                 &ksel,
                 &vsel,
@@ -441,7 +499,11 @@ mod tests {
         let mut s = Vec::new();
         ball_attention(&q, &k, &v, n, d, n, 2, &mut whole);
         attend_reference(&q, &k, &v, n, n, d, 1.0 / (d as f32).sqrt(), &mut dense, &mut s);
-        assert_eq!(whole, dense);
+        // 1e-5 (not bitwise): with SIMD active the unit's reductions
+        // reorder accumulation vs the scalar reference (the twin rule).
+        for (a, b) in whole.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
 
         // two balls: each half ignores the other (change the far half's
         // values, near half's output must not move)

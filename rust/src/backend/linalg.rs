@@ -4,16 +4,24 @@
 //! All functions operate on flat row-major slices with explicit
 //! dimensions (no `Tensor` overhead on the per-head hot loops). Each
 //! performance kernel has a `*_reference` scalar twin — the original
-//! single-threaded loop-nest — and the fast version is constructed to be
-//! **bitwise equal** to it: work is split into contiguous row chunks
+//! single-threaded loop-nest. Work is split into contiguous row chunks
 //! dispatched on the persistent worker pool (see
 //! [`super::pool::par_rows`]) and blocking/packing never reorders any
 //! output element's floating-point accumulation — which worker runs a
-//! chunk, or how often the pool is reused, cannot change a bit. The
-//! differential harness in `rust/tests/conformance.rs` sweeps randomized
-//! shapes and thread counts against the twins; see the "Kernel
-//! conformance" section of [`super`]'s docs before touching either side
-//! of a pair.
+//! chunk, or how often the pool is reused, cannot change a bit, so
+//! outputs are **bitwise stable across thread counts**.
+//!
+//! The inner loops run on the [`super::simd`] microkernels. Kernels
+//! built only from element-parallel panels ([`matmul`] via
+//! `simd::axpy`) stay **bitwise equal** to their twins at every SIMD
+//! level; kernels built on horizontal reductions ([`matmul_nt`] via
+//! `simd::dot`, [`softmax_rows`] via the max/exp-sum panels,
+//! [`rms_norm`] via `simd::sum_sq`) match their twins to the **1e-5**
+//! differential bound when SIMD is active and bitwise when it is off
+//! (`BSA_NATIVE_SIMD=off`). The differential harness in
+//! `rust/tests/conformance.rs` sweeps randomized shapes and thread
+//! counts against the twins; see the "Kernel conformance" section of
+//! [`super`]'s docs before touching either side of a pair.
 //!
 //! The GEMM is a panel-blocked kernel: B is packed one `KC x NC` panel
 //! at a time into a dense per-thread buffer (so the inner loops stream a
@@ -22,7 +30,7 @@
 //! ascending-k order, so every `out[i][j]` still accumulates its k terms
 //! in exactly the reference order.
 
-use super::pool;
+use super::{pool, simd};
 
 /// k-dimension panel height for the packed GEMM.
 const KC: usize = 256;
@@ -31,6 +39,10 @@ const NC: usize = 128;
 /// Register-blocking factor (output rows sharing one streamed B row) for
 /// the transposed GEMM.
 const MR: usize = 4;
+/// RMSNorm epsilon, matching the jax reference (`model.rms_norm`,
+/// eps 1e-6) — shared by the SIMD path and the scalar twin so the two
+/// can never drift apart.
+const RMS_EPS: f32 = 1e-6;
 
 /// `out = a @ b` where `a` is `(m, k)`, `b` is `(k, n)`, `out` is
 /// `(m, n)`. Panel-blocked and parallel over output-row chunks;
@@ -42,30 +54,38 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize
     if m == 0 || n == 0 {
         return;
     }
+    let lvl = simd::active();
     pool::par_rows(out, n, threads, |row0, orows| {
         let rows = orows.len() / n;
-        matmul_rows_blocked(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, orows);
+        matmul_rows_blocked(lvl, &a[row0 * k..(row0 + rows) * k], b, rows, k, n, orows);
     });
 }
 
 /// Serial panel kernel for one contiguous block of output rows. Packs B
 /// `KC x NC` panels; per output element the k terms are accumulated in
-/// ascending order, exactly like the scalar reference. When all of B
+/// ascending order, exactly like the scalar reference (the
+/// [`simd::axpy`] inner panel is element-parallel, so it is bitwise
+/// identical to the scalar loop at every SIMD level). When all of B
 /// already fits in a single panel (`k <= KC && n <= NC` — every
 /// per-head kernel matmul at the paper widths) packing would copy B
 /// once to read it once, so the i-k-j nest streams B directly instead:
 /// no packed buffer, no allocation, identical accumulation order.
-fn matmul_rows_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+fn matmul_rows_blocked(
+    lvl: simd::Level,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     out.fill(0.0);
     if k <= KC && n <= NC {
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
             for (kk, &av) in arow.iter().enumerate() {
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+                simd::axpy_at(lvl, av, &b[kk * n..(kk + 1) * n], orow);
             }
         }
         return;
@@ -85,10 +105,7 @@ fn matmul_rows_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: 
                 let arow = &a[i * k + kc..i * k + kc + kcb];
                 let orow = &mut out[i * n + jc..i * n + jc + ncb];
                 for (kk, &av) in arow.iter().enumerate() {
-                    let brow = &packed[kk * ncb..(kk + 1) * ncb];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
+                    simd::axpy_at(lvl, av, &packed[kk * ncb..(kk + 1) * ncb], orow);
                 }
             }
             kc += kcb;
@@ -116,6 +133,8 @@ pub fn matmul_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out:
     }
 }
 
+/// Scalar dot product — the reference twins' accumulation order
+/// (identical to [`simd::dot_scalar`]).
 #[inline]
 fn dot(x: &[f32], y: &[f32]) -> f32 {
     x.iter().zip(y).map(|(a, b)| a * b).sum()
@@ -123,8 +142,10 @@ fn dot(x: &[f32], y: &[f32]) -> f32 {
 
 /// `out = a @ b^T` where `a` is `(m, k)`, `b` is `(n, k)`, `out` is
 /// `(m, n)` — the attention-score shape. Register-blocked (each loaded B
-/// row is reused across `MR` output rows) and parallel over
-/// output-row chunks; bitwise equal to [`matmul_nt_reference`].
+/// row is reused across `MR` output rows) and parallel over output-row
+/// chunks. The per-element [`simd::dot`] reduction makes this a 1e-5
+/// twin of [`matmul_nt_reference`] when SIMD is active (bitwise when
+/// off, and always bitwise across thread counts).
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "matmul_nt a len");
     assert_eq!(b.len(), n * k, "matmul_nt b len");
@@ -132,6 +153,7 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: us
     if m == 0 || n == 0 {
         return;
     }
+    let lvl = simd::active();
     pool::par_rows(out, n, threads, |row0, orows| {
         let rows = orows.len() / n;
         let a = &a[row0 * k..(row0 + rows) * k];
@@ -141,7 +163,8 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: us
             for j in 0..n {
                 let brow = &b[j * k..(j + 1) * k];
                 for ii in 0..mb {
-                    orows[(i + ii) * n + j] = dot(&a[(i + ii) * k..(i + ii + 1) * k], brow);
+                    orows[(i + ii) * n + j] =
+                        simd::dot_at(lvl, &a[(i + ii) * k..(i + ii + 1) * k], brow);
                 }
             }
             i += mb;
@@ -164,14 +187,38 @@ pub fn matmul_nt_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, o
 }
 
 /// In-place row-wise softmax over a `(rows, cols)` matrix, parallel
-/// over row chunks (rows are independent; each chunk runs the scalar
-/// twin verbatim, so this is bitwise equal to
-/// [`softmax_rows_reference`]).
+/// over row chunks (rows are independent). With SIMD active each row
+/// runs the [`simd::row_max`] / [`simd::exp_sum`] / [`simd::scale`]
+/// panels (polynomial exp, lane-tree sum, reciprocal-multiply
+/// normalize) — a 1e-5 twin of [`softmax_rows_reference`]; with SIMD
+/// off each chunk runs the scalar twin verbatim, bitwise.
 pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize, threads: usize) {
     assert_eq!(x.len(), rows * cols, "softmax len");
+    let lvl = simd::active();
+    if lvl == simd::Level::Scalar {
+        pool::par_rows(x, cols, threads, |_, chunk| {
+            softmax_rows_reference(chunk, chunk.len() / cols, cols);
+        });
+        return;
+    }
     pool::par_rows(x, cols, threads, |_, chunk| {
-        softmax_rows_reference(chunk, chunk.len() / cols, cols);
+        for row in chunk.chunks_exact_mut(cols) {
+            softmax_row_simd(lvl, row);
+        }
     });
+}
+
+/// One softmax row on the SIMD panels at a pre-resolved level (shared
+/// with the per-unit attention kernels in [`super::kernels`]).
+#[inline]
+pub(super) fn softmax_row_simd(lvl: simd::Level, row: &mut [f32]) {
+    let max = simd::row_max_at(lvl, row);
+    let sum = simd::exp_sum_at(lvl, row, max);
+    // All-(-inf) rows cannot occur here (the own-ball mask uses a large
+    // finite value), but guard the normalization anyway.
+    if sum > 0.0 {
+        simd::scale_at(lvl, row, 1.0 / sum);
+    }
 }
 
 /// Scalar twin of [`softmax_rows`]: row-wise max-subtracted softmax.
@@ -196,15 +243,33 @@ pub fn softmax_rows_reference(x: &mut [f32], rows: usize, cols: usize) {
 
 /// Row-wise RMSNorm (Zhang & Sennrich 2019): `out = x / rms(x) * scale`
 /// with `rms = sqrt(mean(x^2) + eps)`, matching the jax reference
-/// (`model.rms_norm`, eps 1e-6). Parallel over row chunks; bitwise
-/// equal to [`rms_norm_reference`].
+/// (`model.rms_norm`, eps 1e-6). Parallel over row chunks. The
+/// mean-square reduction runs on [`simd::sum_sq`] when SIMD is active
+/// (1e-5 twin of [`rms_norm_reference`]; bitwise when off and across
+/// thread counts — the per-element normalization is identical either
+/// way).
 pub fn rms_norm(x: &[f32], scale: &[f32], rows: usize, cols: usize, threads: usize, out: &mut [f32]) {
     assert_eq!(x.len(), rows * cols, "rms_norm x len");
     assert_eq!(scale.len(), cols, "rms_norm scale len");
     assert_eq!(out.len(), rows * cols, "rms_norm out len");
+    let lvl = simd::active();
+    if lvl == simd::Level::Scalar {
+        pool::par_rows(out, cols, threads, |row0, ochunk| {
+            let r = ochunk.len() / cols;
+            rms_norm_reference(&x[row0 * cols..(row0 + r) * cols], scale, r, cols, ochunk);
+        });
+        return;
+    }
     pool::par_rows(out, cols, threads, |row0, ochunk| {
         let r = ochunk.len() / cols;
-        rms_norm_reference(&x[row0 * cols..(row0 + r) * cols], scale, r, cols, ochunk);
+        let xr = &x[row0 * cols..(row0 + r) * cols];
+        for (xrow, orow) in xr.chunks_exact(cols).zip(ochunk.chunks_exact_mut(cols)) {
+            let ms = simd::sum_sq_at(lvl, xrow) / cols as f32;
+            let inv = 1.0 / (ms + RMS_EPS).sqrt();
+            for ((o, &v), &s) in orow.iter_mut().zip(xrow).zip(scale) {
+                *o = v * inv * s;
+            }
+        }
     });
 }
 
@@ -213,10 +278,9 @@ pub fn rms_norm_reference(x: &[f32], scale: &[f32], rows: usize, cols: usize, ou
     assert_eq!(x.len(), rows * cols, "rms_norm x len");
     assert_eq!(scale.len(), cols, "rms_norm scale len");
     assert_eq!(out.len(), rows * cols, "rms_norm out len");
-    const EPS: f32 = 1e-6;
     for (xr, or) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
         let ms = xr.iter().map(|v| v * v).sum::<f32>() / cols as f32;
-        let inv = 1.0 / (ms + EPS).sqrt();
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
         for ((o, &v), &s) in or.iter_mut().zip(xr).zip(scale) {
             *o = v * inv * s;
         }

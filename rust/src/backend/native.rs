@@ -25,11 +25,17 @@
 //!
 //! The thread count comes from [`NativeBackend::with_threads`] /
 //! `ServeConfig::native_threads`, with the `BSA_NATIVE_THREADS` env var
-//! as the zero-config override (see [`pool::resolve_threads`]). All
-//! parallel kernels are bitwise equal to their `*_reference` twins, and
-//! the gated head merge is a fixed-order per-element expression, so the
-//! forward pass is deterministic across thread counts — asserted by
-//! `rust/tests/conformance.rs`.
+//! as the zero-config override (see [`pool::resolve_threads`]). The
+//! kernels' inner loops run on the [`super::simd`] microkernel layer
+//! (AVX2/NEON via runtime detection, `BSA_NATIVE_SIMD=off` to force the
+//! scalar loops — see `simd`'s docs for the 1e-5 twin rule). Every
+//! kernel computes a given output row identically regardless of which
+//! chunk or worker it lands in, and the gated head merge is a
+//! fixed-order per-element expression, so the forward pass is
+//! **bitwise deterministic across thread counts** at any fixed SIMD
+//! level — asserted by `rust/tests/conformance.rs`; with SIMD off it is
+//! additionally bitwise equal to the scalar `*_reference` composition
+//! (`rust/tests/simd_off.rs`).
 //!
 //! Scratch buffers are allocated once per `forward` call and reused
 //! across blocks (plus one `HeadScratch` per pool chunk inside the
@@ -222,10 +228,11 @@ impl NativeBackend {
     /// Bitwise determinism: unit outputs land in disjoint buffers, the
     /// fold is a pure copy, and the kernels inside a unit are themselves
     /// bitwise thread-count-invariant — so this function's output is
-    /// identical for every thread budget (and to the old serial
-    /// per-head loop it replaced). When `threads > units`, the surplus
-    /// is handed to the kernels inside each unit (`inner` below); the
-    /// pool's help-while-waiting latch makes that nesting safe.
+    /// identical for every thread budget (at whatever SIMD level the
+    /// process resolved; see [`super::simd`]). When `threads > units`,
+    /// the surplus is handed to the kernels inside each unit (`inner`
+    /// below); the pool's help-while-waiting latch makes that nesting
+    /// safe.
     fn attention(&self, blk: &BlockParams, a: &[f32], out: &mut [f32], s: &mut Scratch) {
         let (b, n) = (self.spec.batch, self.spec.n);
         let c = self.params.dim();

@@ -1,0 +1,824 @@
+//! SIMD microkernel layer: explicit 8-lane f32 panels the native
+//! kernels' inner loops are built from.
+//!
+//! # Lane-width contract
+//!
+//! Every microkernel is written against a fixed lane width of
+//! [`LANES`] = 8 f32 elements (one AVX2 `ymm` register, two NEON
+//! `float32x4_t`s). The portable implementations process the input as
+//! whole 8-lane panels — fixed-width local arrays with no loop-carried
+//! scalar dependence — so stable Rust autovectorizes them on any
+//! target, then handle the `len % 8` tail scalar-wise. The portable
+//! reductions ([`dot`], [`sum_sq`], [`exp_sum`], [`row_max`]) keep one
+//! accumulator per lane and combine them with a fixed pairwise tree
+//! (`hsum8`); the AVX2/NEON specializations use their own register
+//! blocking and horizontal-add sequences. Every implementation is
+//! fully deterministic on its own — same input, same level, same bits;
+//! which worker thread runs the panel can never matter — but last-bit
+//! results may differ *between* levels (all within the 1e-5 twin
+//! bound).
+//!
+//! # Dispatch levels and the escape hatch
+//!
+//! [`active`] resolves one process-wide [`Level`]:
+//!
+//! * [`Level::Scalar`] — the original scalar loops, bit-for-bit the
+//!   `*_reference` numerics. Selected by `BSA_NATIVE_SIMD=off` (see
+//!   [`SIMD_ENV`]), `[serve] native_simd = "off"`, `bsa serve --simd
+//!   off`, or [`set_force`].
+//! * [`Level::Portable`] — the autovectorizing lane-array panels
+//!   (always available; also `BSA_NATIVE_SIMD=portable`).
+//! * [`Level::Avx2`] — `std::arch` x86-64 specializations compiled with
+//!   `avx2,fma` (FMA dot/sum-sq; the remaining panels recompiled under
+//!   the wider feature set), chosen at runtime via
+//!   `is_x86_feature_detected!`.
+//! * [`Level::Neon`] — aarch64 `vfmaq_f32` dot/sum-sq via
+//!   `is_aarch64_feature_detected!` (the other panels use the portable
+//!   code, which the aarch64 baseline already vectorizes).
+//!
+//! # The amended twin rule (1e-5)
+//!
+//! The element-parallel panels ([`axpy`], [`add_assign`], [`scale`])
+//! perform exactly the scalar op sequence per element — separate mul
+//! and add, never a contracted FMA — so their results are **bitwise
+//! identical at every level**, and kernels built only from them
+//! (`linalg::matmul`, `kernels::compress_mean`) keep their bitwise
+//! equality with their scalar twins. The horizontal reductions are
+//! where SIMD genuinely reorders floating-point accumulation (lane
+//! partial sums + a tree combine instead of one left-to-right chain),
+//! and [`exp_sum`] additionally evaluates `exp` with a degree-6
+//! polynomial (max relative error ~1.2e-7, validated by
+//! `python/tests/test_simd_mirror.py`) instead of libm. Kernels built
+//! on them — `matmul_nt`, `softmax_rows`, `rms_norm`, and the
+//! attention family — therefore match their `*_reference` twins to the
+//! documented **1e-5 differential bound** rather than bitwise (see
+//! "Kernel conformance" in [`super`]). Two properties survive
+//! unconditionally:
+//!
+//! 1. **bitwise across thread counts** — the level is fixed
+//!    process-wide and panels are per-row deterministic, so the thread
+//!    budget still never changes a bit;
+//! 2. **`BSA_NATIVE_SIMD=off` is bitwise-equal to the scalar twins**
+//!    everywhere (asserted by `rust/tests/simd_off.rs`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Fixed lane width (f32 elements) every microkernel is blocked by.
+pub const LANES: usize = 8;
+
+/// Environment override consulted once per process by [`active`]:
+/// `off`/`0`/`false`/`scalar` force [`Level::Scalar`], `portable`
+/// forces [`Level::Portable`], anything else (or unset) auto-detects.
+pub const SIMD_ENV: &str = "BSA_NATIVE_SIMD";
+
+/// A resolved microkernel implementation level (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Original scalar loops — bitwise `*_reference` numerics.
+    Scalar,
+    /// Autovectorizing 8-lane panels, any target.
+    Portable,
+    /// x86-64 AVX2+FMA specializations.
+    Avx2,
+    /// aarch64 NEON specializations.
+    Neon,
+}
+
+impl Level {
+    /// Stable lowercase name for logs and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Portable => "portable",
+            Level::Avx2 => "avx2",
+            Level::Neon => "neon",
+        }
+    }
+}
+
+/// Programmatic override for the dispatch level (CLI `--simd`, config
+/// `[serve] native_simd`, bench A/B timing). `Auto` defers to the
+/// `BSA_NATIVE_SIMD` env var + hardware detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Force {
+    /// Env var if set, else hardware detection (the default).
+    #[default]
+    Auto,
+    /// Force the scalar loops (bitwise `*_reference` numerics).
+    Off,
+    /// Force the best detected SIMD level, ignoring the env var.
+    On,
+}
+
+impl std::str::FromStr for Force {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Force> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(Force::Auto),
+            "on" | "true" | "1" => Ok(Force::On),
+            "off" | "false" | "0" => Ok(Force::Off),
+            other => Err(anyhow::anyhow!(
+                "unknown simd mode {other:?} (expected \"auto\", \"on\", or \"off\")"
+            )),
+        }
+    }
+}
+
+const FORCE_AUTO: u8 = 0;
+const FORCE_OFF: u8 = 1;
+const FORCE_ON: u8 = 2;
+
+static FORCE: AtomicU8 = AtomicU8::new(FORCE_AUTO);
+
+/// Set the process-wide dispatch override. Call at startup (or from a
+/// single-threaded bench harness): the level is global, so flipping it
+/// while forwards are in flight changes which implementation later
+/// panels pick — never unsound, but it forfeits the "bitwise across
+/// thread counts" guarantee for the forwards that straddle the flip.
+pub fn set_force(f: Force) {
+    let v = match f {
+        Force::Auto => FORCE_AUTO,
+        Force::Off => FORCE_OFF,
+        Force::On => FORCE_ON,
+    };
+    FORCE.store(v, Ordering::Relaxed);
+}
+
+/// Best level the hardware supports (cached; ignores the env var).
+fn hardware_level() -> Level {
+    static HW: OnceLock<Level> = OnceLock::new();
+    *HW.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return Level::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Level::Neon;
+            }
+        }
+        Level::Portable
+    })
+}
+
+/// `BSA_NATIVE_SIMD` resolution (cached once per process).
+fn env_level() -> Level {
+    static RESOLVED: OnceLock<Level> = OnceLock::new();
+    *RESOLVED.get_or_init(|| {
+        match std::env::var(SIMD_ENV)
+            .ok()
+            .map(|s| s.trim().to_ascii_lowercase())
+            .as_deref()
+        {
+            Some("off") | Some("0") | Some("false") | Some("scalar") => Level::Scalar,
+            Some("portable") => Level::Portable,
+            _ => hardware_level(),
+        }
+    })
+}
+
+/// The level every microkernel dispatches on right now.
+#[inline]
+pub fn active() -> Level {
+    match FORCE.load(Ordering::Relaxed) {
+        FORCE_OFF => Level::Scalar,
+        FORCE_ON => hardware_level(),
+        _ => env_level(),
+    }
+}
+
+/// `true` when SIMD panels are in use (level != [`Level::Scalar`]).
+/// Kernels with a dedicated scalar code path branch on this once per
+/// chunk so that `BSA_NATIVE_SIMD=off` runs the original loops verbatim.
+#[inline]
+pub fn on() -> bool {
+    active() != Level::Scalar
+}
+
+/// Fixed pairwise combine of the 8 lane accumulators used by the
+/// *portable* reductions (the AVX2/NEON `dot`/`sum_sq` specializations
+/// have their own blocking and horizontal-add sequences, so last-bit
+/// results differ *across* levels; each level is deterministic on its
+/// own, which is all the twin contract needs).
+#[inline(always)]
+fn hsum8(a: &[f32; LANES]) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+// ---------------------------------------------------------------------------
+// exp panel (polynomial, vectorizable)
+// ---------------------------------------------------------------------------
+
+// Cephes-style expf: clamp, round-to-even via the 1.5*2^23 magic
+// constant, Cody-Waite ln2 split, degree-6 polynomial, exponent-bit
+// scale. Max relative error ~1.2e-7 over the clamped range, exp(0) is
+// exactly 1.0, and inputs below EXP_LO saturate at the smallest normal
+// (~1.18e-38) — negligible against any unmasked softmax term. The
+// numpy mirror in python/tests/test_simd_mirror.py re-derives these
+// bounds with exact f32 arithmetic.
+const EXP_HI: f32 = 88.02;
+const EXP_LO: f32 = -87.33654;
+const LOG2E: f32 = 1.442_695;
+const LN2_HI: f32 = 0.693_359_4;
+const LN2_LO: f32 = -2.121_944_4e-4;
+const EXP_MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+const EXP_C0: f32 = 1.987_569_1e-4;
+const EXP_C1: f32 = 1.398_199_9e-3;
+const EXP_C2: f32 = 8.333_452e-3;
+const EXP_C3: f32 = 4.166_579_6e-2;
+const EXP_C4: f32 = 1.666_666_6e-1;
+const EXP_C5: f32 = 0.5;
+
+/// Polynomial `e^x` for one lane (no branches, no libm — the body
+/// autovectorizes inside the lane loops that call it).
+#[inline(always)]
+fn exp_lane(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let n = (x * LOG2E + EXP_MAGIC) - EXP_MAGIC;
+    let r = x - n * LN2_HI;
+    let r = r - n * LN2_LO;
+    let mut p = EXP_C0;
+    p = p * r + EXP_C1;
+    p = p * r + EXP_C2;
+    p = p * r + EXP_C3;
+    p = p * r + EXP_C4;
+    p = p * r + EXP_C5;
+    let p = p * (r * r) + (r + 1.0);
+    let bits = (((n as i32) + 127) << 23) as u32;
+    p * f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// scalar twins (the pre-SIMD numerics, selected by Level::Scalar)
+// ---------------------------------------------------------------------------
+
+/// Scalar dot product — the exact accumulation order of the
+/// `*_reference` kernels (left-to-right, single chain).
+#[inline]
+pub fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Scalar sum of squares (RMSNorm reference order).
+#[inline]
+pub fn sum_sq_scalar(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum()
+}
+
+/// Scalar row max (softmax reference order).
+#[inline]
+pub fn row_max_scalar(x: &[f32]) -> f32 {
+    x.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// Scalar subtract-max exponentiation in place, returning the running
+/// sum — the softmax reference inner loop (libm `exp`, one sum chain).
+#[inline]
+pub fn exp_sum_scalar(row: &mut [f32], max: f32) -> f32 {
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    sum
+}
+
+// ---------------------------------------------------------------------------
+// portable 8-lane panels (autovectorize on stable Rust)
+// ---------------------------------------------------------------------------
+
+/// 8-lane dot product: one accumulator per lane, [`hsum8`] combine,
+/// scalar tail. Deterministic for a given length; reassociates the sum
+/// vs [`dot_scalar`] (the 1e-5 twin bound's origin).
+#[inline]
+pub fn dot_portable(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot operand lengths");
+    let mut acc = [0.0f32; LANES];
+    let mut cx = x.chunks_exact(LANES);
+    let mut cy = y.chunks_exact(LANES);
+    for (xs, ys) in (&mut cx).zip(&mut cy) {
+        for ((a, &xv), &yv) in acc.iter_mut().zip(xs).zip(ys) {
+            *a += xv * yv;
+        }
+    }
+    let mut sum = hsum8(&acc);
+    for (&xv, &yv) in cx.remainder().iter().zip(cy.remainder()) {
+        sum += xv * yv;
+    }
+    sum
+}
+
+/// 8-lane sum of squares (same shape as [`dot_portable`]).
+#[inline]
+pub fn sum_sq_portable(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut cx = x.chunks_exact(LANES);
+    for xs in &mut cx {
+        for (a, &xv) in acc.iter_mut().zip(xs) {
+            *a += xv * xv;
+        }
+    }
+    let mut sum = hsum8(&acc);
+    for &xv in cx.remainder() {
+        sum += xv * xv;
+    }
+    sum
+}
+
+/// 8-lane row max. `max` is exact under any reduction order (absent
+/// NaN), so this is value-identical to [`row_max_scalar`].
+#[inline]
+pub fn row_max_portable(x: &[f32]) -> f32 {
+    let mut m = [f32::NEG_INFINITY; LANES];
+    let mut cx = x.chunks_exact(LANES);
+    for xs in &mut cx {
+        for (a, &v) in m.iter_mut().zip(xs) {
+            *a = (*a).max(v);
+        }
+    }
+    let mut best = f32::NEG_INFINITY;
+    for &v in &m {
+        best = best.max(v);
+    }
+    for &v in cx.remainder() {
+        best = best.max(v);
+    }
+    best
+}
+
+/// 8-lane subtract-max exponentiation in place (polynomial
+/// [`exp_lane`]), returning the sum of the exponentials.
+#[inline]
+pub fn exp_sum_portable(row: &mut [f32], max: f32) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut chunks = row.chunks_exact_mut(LANES);
+    for xs in &mut chunks {
+        for (a, v) in acc.iter_mut().zip(xs.iter_mut()) {
+            let e = exp_lane(*v - max);
+            *v = e;
+            *a += e;
+        }
+    }
+    let mut sum = hsum8(&acc);
+    for v in chunks.into_remainder() {
+        let e = exp_lane(*v - max);
+        *v = e;
+        sum += e;
+    }
+    sum
+}
+
+// element-parallel panels: one op sequence per element, no loop-carried
+// accumulator — bitwise identical at every level (the autovectorizer
+// widens them without reassociating anything, and Rust never contracts
+// the separate mul and add into an FMA).
+
+#[inline]
+fn axpy_panel(a: f32, x: &[f32], y: &mut [f32]) {
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+#[inline]
+fn add_assign_panel(y: &mut [f32], x: &[f32]) {
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+#[inline]
+fn scale_panel(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 / FMA specializations (x86-64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::missing_safety_doc)] // module docs state the one contract
+mod avx2 {
+    //! `target_feature(avx2, fma)` bodies. The reductions are
+    //! hand-written with `_mm256_fmadd_ps` (two accumulators for ILP);
+    //! the remaining panels reuse the portable code, recompiled under
+    //! the wider feature set — same IEEE op sequence, wider registers.
+    //!
+    //! Safety: every fn here is `unsafe` solely because of
+    //! `target_feature`; callers must have verified
+    //! `is_x86_feature_detected!("avx2")` && `("fma")` (the dispatchers
+    //! in [`super`] do).
+
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(x.as_ptr().add(i)),
+                _mm256_loadu_ps(y.as_ptr().add(i)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(x.as_ptr().add(i + 8)),
+                _mm256_loadu_ps(y.as_ptr().add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(x.as_ptr().add(i)),
+                _mm256_loadu_ps(y.as_ptr().add(i)),
+                acc0,
+            );
+            i += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let s = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+        let mut sum = _mm_cvtss_f32(s);
+        while i < n {
+            sum += x[i] * y[i];
+            i += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sum_sq(x: &[f32]) -> f32 {
+        dot(x, x)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn row_max(x: &[f32]) -> f32 {
+        super::row_max_portable(x)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn exp_sum(row: &mut [f32], max: f32) -> f32 {
+        super::exp_sum_portable(row, max)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        super::axpy_panel(a, x, y)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn add_assign(y: &mut [f32], x: &[f32]) {
+        super::add_assign_panel(y, x)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale(x: &mut [f32], s: f32) {
+        super::scale_panel(x, s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON specializations (aarch64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::missing_safety_doc)] // module docs state the one contract
+mod neon {
+    //! `vfmaq_f32` reductions; everything else already vectorizes at
+    //! the aarch64 baseline, so the portable panels are used directly.
+    //!
+    //! Safety: `unsafe` solely because of `target_feature(neon)`;
+    //! callers must have verified `is_aarch64_feature_detected!("neon")`
+    //! (the dispatchers in [`super`] do).
+
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(
+                acc0,
+                vld1q_f32(x.as_ptr().add(i)),
+                vld1q_f32(y.as_ptr().add(i)),
+            );
+            acc1 = vfmaq_f32(
+                acc1,
+                vld1q_f32(x.as_ptr().add(i + 4)),
+                vld1q_f32(y.as_ptr().add(i + 4)),
+            );
+            i += 8;
+        }
+        let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            sum += x[i] * y[i];
+            i += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_sq(x: &[f32]) -> f32 {
+        dot(x, x)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatchers (the API the kernels call)
+//
+// Each microkernel comes as a `*_at(level, ...)` form plus a
+// convenience form that resolves [`active`] itself. Hot loops resolve
+// the level ONCE per kernel invocation and call `*_at` per
+// row/element — a branch on a local enum instead of an atomic load +
+// OnceLock read per inner-loop iteration (the level is process-wide
+// and fixed during a kernel call, so the two forms are equivalent).
+// ---------------------------------------------------------------------------
+
+/// Dot product at an explicit level. Reduction-reordering: matches
+/// [`dot_scalar`] to the 1e-5 twin bound, exactly at [`Level::Scalar`].
+#[inline]
+pub fn dot_at(level: Level, x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot operand lengths");
+    match level {
+        Level::Scalar => dot_scalar(x, y),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::dot(x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::dot(x, y) },
+        _ => dot_portable(x, y),
+    }
+}
+
+/// [`dot_at`] at the [`active`] level.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    dot_at(active(), x, y)
+}
+
+/// Sum of squares at an explicit level (same contract as [`dot_at`]).
+#[inline]
+pub fn sum_sq_at(level: Level, x: &[f32]) -> f32 {
+    match level {
+        Level::Scalar => sum_sq_scalar(x),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::sum_sq(x) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::sum_sq(x) },
+        _ => sum_sq_portable(x),
+    }
+}
+
+/// [`sum_sq_at`] at the [`active`] level.
+#[inline]
+pub fn sum_sq(x: &[f32]) -> f32 {
+    sum_sq_at(active(), x)
+}
+
+/// Row max at an explicit level — value-identical at every level (max
+/// is order-insensitive), dispatched only for codegen.
+#[inline]
+pub fn row_max_at(level: Level, x: &[f32]) -> f32 {
+    match level {
+        Level::Scalar => row_max_scalar(x),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::row_max(x) },
+        _ => row_max_portable(x),
+    }
+}
+
+/// [`row_max_at`] at the [`active`] level.
+#[inline]
+pub fn row_max(x: &[f32]) -> f32 {
+    row_max_at(active(), x)
+}
+
+/// Subtract-max exponentiation + sum at an explicit level. SIMD levels
+/// use the polynomial [`exp_lane`] and a lane-tree sum (1e-5 twin
+/// bound); [`Level::Scalar`] is the exact libm reference loop.
+#[inline]
+pub fn exp_sum_at(level: Level, row: &mut [f32], max: f32) -> f32 {
+    match level {
+        Level::Scalar => exp_sum_scalar(row, max),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::exp_sum(row, max) },
+        _ => exp_sum_portable(row, max),
+    }
+}
+
+/// [`exp_sum_at`] at the [`active`] level.
+#[inline]
+pub fn exp_sum(row: &mut [f32], max: f32) -> f32 {
+    exp_sum_at(active(), row, max)
+}
+
+/// `y += a * x` at an explicit level, element-parallel — **bitwise
+/// identical at every level** (no reassociation, no FMA contraction),
+/// so kernels built on it keep exact equality with their scalar twins.
+#[inline]
+pub fn axpy_at(level: Level, a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len(), "axpy operand lengths");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level == Level::Avx2 {
+            return unsafe { avx2::axpy(a, x, y) };
+        }
+    }
+    let _ = level;
+    axpy_panel(a, x, y)
+}
+
+/// [`axpy_at`] at the [`active`] level.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    axpy_at(active(), a, x, y)
+}
+
+/// `y += x` at an explicit level, element-parallel — bitwise identical
+/// at every level.
+#[inline]
+pub fn add_assign_at(level: Level, y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(x.len(), y.len(), "add_assign operand lengths");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level == Level::Avx2 {
+            return unsafe { avx2::add_assign(y, x) };
+        }
+    }
+    let _ = level;
+    add_assign_panel(y, x)
+}
+
+/// [`add_assign_at`] at the [`active`] level.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    add_assign_at(active(), y, x)
+}
+
+/// `x *= s` at an explicit level, element-parallel — bitwise identical
+/// at every level.
+#[inline]
+pub fn scale_at(level: Level, x: &mut [f32], s: f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level == Level::Avx2 {
+            return unsafe { avx2::scale(x, s) };
+        }
+    }
+    let _ = level;
+    scale_panel(x, s)
+}
+
+/// [`scale_at`] at the [`active`] level.
+#[inline]
+pub fn scale(x: &mut [f32], s: f32) {
+    scale_at(active(), x, s)
+}
+
+#[cfg(test)]
+mod tests {
+    // These tests never call set_force: the dispatch level is process
+    // global and the lib test binary runs tests concurrently, so
+    // flipping it here would race the linalg/kernels/native tests.
+    // Level-forcing behaviour is covered by rust/tests/simd_off.rs
+    // (a single-test binary where mutating the mode is safe).
+    use super::*;
+    use crate::prng::Rng;
+
+    /// Reassociation-safe bound for an n-term f32 reduction over the
+    /// given operands: n * eps * sum(|terms|), padded 8x.
+    fn sum_tol(terms: impl Iterator<Item = f32>, n: usize) -> f32 {
+        let l1: f32 = terms.map(f32::abs).sum();
+        8.0 * n as f32 * f32::EPSILON * (l1 + 1.0)
+    }
+
+    #[test]
+    fn dot_portable_matches_scalar_at_every_tail() {
+        for n in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100] {
+            let x = Rng::new(n as u64 + 1).normals(n);
+            let y = Rng::new(n as u64 + 1000).normals(n);
+            let fast = dot_portable(&x, &y);
+            let refr = dot_scalar(&x, &y);
+            let tol = sum_tol(x.iter().zip(&y).map(|(a, b)| a * b), n);
+            assert!((fast - refr).abs() <= tol, "n={n}: {fast} vs {refr}");
+        }
+    }
+
+    #[test]
+    fn dispatcher_reductions_within_twin_bound() {
+        let n = 37;
+        let x = Rng::new(2).normals(n);
+        let y = Rng::new(3).normals(n);
+        let d = dot(&x, &y);
+        let tol = sum_tol(x.iter().zip(&y).map(|(a, b)| a * b), n);
+        assert!((d - dot_scalar(&x, &y)).abs() <= tol);
+        let s = sum_sq(&x);
+        let tol = sum_tol(x.iter().map(|v| v * v), n);
+        assert!((s - sum_sq_scalar(&x)).abs() <= tol);
+    }
+
+    #[test]
+    fn row_max_is_exact_at_every_level_and_tail() {
+        for n in [1usize, 3, 7, 8, 9, 16, 21, 64] {
+            let x = Rng::new(n as u64 + 7).normals(n);
+            let expect = row_max_scalar(&x);
+            assert_eq!(row_max_portable(&x), expect, "portable n={n}");
+            assert_eq!(row_max(&x), expect, "dispatch n={n}");
+        }
+    }
+
+    #[test]
+    fn exp_lane_polynomial_accuracy() {
+        // relative error < 1e-6 across the softmax-relevant range, and
+        // the exact anchors the twin bound leans on
+        for i in 0..=2000 {
+            let x = -87.0 + 87.0 * (i as f32 / 2000.0);
+            let approx = exp_lane(x);
+            let exact = (x as f64).exp();
+            let rel = ((approx as f64) - exact).abs() / exact;
+            assert!(rel < 1e-6, "x={x}: rel err {rel}");
+        }
+        assert_eq!(exp_lane(0.0), 1.0, "exp(0) must be exactly 1");
+        assert!(exp_lane(-2e30) < 1.3e-38, "deep underflow saturates near zero");
+        assert!(exp_lane(-2e30) >= 0.0);
+    }
+
+    #[test]
+    fn exp_sum_portable_matches_libm_within_bound() {
+        for n in [1usize, 5, 8, 13, 64] {
+            let mut fast: Vec<f32> = Rng::new(n as u64 + 77).normals(n);
+            // include a masked-style entry and a large logit
+            if n >= 3 {
+                fast[0] = -1e30;
+                fast[1] = 3e4;
+            }
+            let mut refr = fast.clone();
+            let max = row_max_scalar(&fast);
+            let sf = exp_sum_portable(&mut fast, max);
+            let sr = exp_sum_scalar(&mut refr, max);
+            for (i, (a, b)) in fast.iter().zip(&refr).enumerate() {
+                assert!((a - b).abs() <= 1e-5, "n={n} elem {i}: {a} vs {b}");
+            }
+            assert!((sf - sr).abs() <= 1e-4 * (1.0 + sr.abs()), "n={n}: {sf} vs {sr}");
+        }
+    }
+
+    #[test]
+    fn elementwise_panels_bitwise_equal_scalar() {
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let x = Rng::new(n as u64 + 11).normals(n);
+            let base = Rng::new(n as u64 + 12).normals(n);
+            let a = 0.37f32;
+
+            let mut fast = base.clone();
+            axpy(a, &x, &mut fast);
+            let mut refr = base.clone();
+            for (o, &v) in refr.iter_mut().zip(&x) {
+                *o += a * v;
+            }
+            assert_eq!(fast, refr, "axpy n={n}");
+
+            let mut fast = base.clone();
+            add_assign(&mut fast, &x);
+            let mut refr = base.clone();
+            for (o, &v) in refr.iter_mut().zip(&x) {
+                *o += v;
+            }
+            assert_eq!(fast, refr, "add_assign n={n}");
+
+            let mut fast = base.clone();
+            scale(&mut fast, a);
+            let mut refr = base;
+            for v in refr.iter_mut() {
+                *v *= a;
+            }
+            assert_eq!(fast, refr, "scale n={n}");
+        }
+    }
+
+    #[test]
+    fn force_parses_and_levels_name() {
+        assert_eq!("auto".parse::<Force>().unwrap(), Force::Auto);
+        assert_eq!("on".parse::<Force>().unwrap(), Force::On);
+        assert_eq!("OFF".parse::<Force>().unwrap(), Force::Off);
+        assert!("fast".parse::<Force>().is_err());
+        // whatever the host resolves to, the name round-trips
+        let lvl = active();
+        assert!(["scalar", "portable", "avx2", "neon"].contains(&lvl.name()));
+    }
+}

@@ -392,6 +392,13 @@ pub struct ServeConfig {
     /// Purely a latency knob: native outputs are bitwise identical for
     /// every setting.
     pub native_threads: usize,
+    /// SIMD microkernel mode for the native backend: `"auto"` (default
+    /// — `BSA_NATIVE_SIMD` env var, else runtime AVX2/NEON detection),
+    /// `"on"` (best detected level, ignoring the env var), or `"off"`
+    /// (scalar loops, bitwise-equal to the `*_reference` twins). See
+    /// `backend::simd` for the 1e-5 twin rule SIMD levels operate
+    /// under.
+    pub native_simd: String,
 }
 
 impl Default for ServeConfig {
@@ -405,6 +412,7 @@ impl Default for ServeConfig {
             seq_len: 4096,
             tree_cache: 64,
             native_threads: 0,
+            native_simd: "auto".into(),
         }
     }
 }
@@ -422,6 +430,7 @@ impl ServeConfig {
             tree_cache: doc.int_or("serve", "tree_cache", d.tree_cache as i64) as usize,
             native_threads: doc.int_or("serve", "native_threads", d.native_threads as i64)
                 as usize,
+            native_simd: doc.str_or("serve", "native_simd", &d.native_simd),
         }
     }
 }
@@ -561,6 +570,13 @@ empty = []
         assert_eq!(ServeConfig::default().native_threads, 0, "default = auto");
         let doc = Document::parse("[serve]\nnative_threads = 4\n").unwrap();
         assert_eq!(ServeConfig::from_doc(&doc).native_threads, 4);
+    }
+
+    #[test]
+    fn serve_config_native_simd_knob() {
+        assert_eq!(ServeConfig::default().native_simd, "auto", "default = auto");
+        let doc = Document::parse("[serve]\nnative_simd = \"off\"\n").unwrap();
+        assert_eq!(ServeConfig::from_doc(&doc).native_simd, "off");
     }
 
     #[test]

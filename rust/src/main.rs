@@ -42,6 +42,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         // no baked-in default: absent flag falls back to the config
         // file's [serve] native_threads (a Some() default would clobber it)
         FlagSpec { name: "threads", help: "native-backend kernel threads per forward pass, i.e. the demand each forward registers with the shared persistent worker pool (0 = auto: BSA_NATIVE_THREADS env var, else hardware parallelism; default: [serve] native_threads or 0); outputs are bitwise identical for every setting", takes_value: true, default: None },
+        // no baked-in default: absent flag falls back to [serve] native_simd
+        FlagSpec { name: "simd", help: "native-backend SIMD microkernels: auto (BSA_NATIVE_SIMD env var, else runtime AVX2/NEON detection) | on (best detected level) | off (scalar loops, bitwise *_reference numerics); default: [serve] native_simd or auto", takes_value: true, default: None },
         FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
         FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
         FlagSpec { name: "out", help: "output path", takes_value: true, default: None },
@@ -180,6 +182,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     sc.addr = args.str_flag("addr", &sc.addr);
     sc.workers = args.usize_flag("workers", sc.workers)?;
     sc.native_threads = args.usize_flag("threads", sc.native_threads)?;
+    sc.native_simd = args.str_flag("simd", &sc.native_simd);
+    // Resolve the process-wide SIMD dispatch level before any kernel
+    // runs (`--simd` / [serve] native_simd; "auto" defers to the
+    // BSA_NATIVE_SIMD env var and hardware detection).
+    bsa::backend::simd::set_force(sc.native_simd.parse()?);
     let kind: BackendKind = args.str_flag("backend", "pjrt").parse()?;
 
     let router = match kind {
@@ -201,11 +208,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         BackendKind::Native => {
             let backend = native_backend(args, &doc, &sc)?;
             println!(
-                "serving {} (native, artifact-free) on {} with {} workers, {} kernel threads",
+                "serving {} (native, artifact-free) on {} with {} workers, {} kernel threads, simd {}",
                 backend.spec().name,
                 sc.addr,
                 sc.workers,
-                backend.threads()
+                backend.threads(),
+                bsa::backend::simd::active().name()
             );
             Arc::new(bsa::coordinator::Router::start(Arc::new(backend), sc.clone())?)
         }

@@ -37,13 +37,18 @@ const STATS_MAGIC: &[u8; 4] = b"BSST";
 const MAX_POINTS: u32 = 1 << 22;
 
 /// Serve loop: accept connections and answer prediction requests until
-/// `stop` is set. Each connection may pipeline many requests.
+/// `stop` is set. Each connection may pipeline many requests. Finished
+/// connection handlers are reaped (joined and dropped) on every accept
+/// iteration, so a long-lived server holds one `JoinHandle` per *live*
+/// connection rather than one per connection ever accepted; only the
+/// still-live handlers are joined at shutdown.
 pub fn serve(addr: &str, router: Arc<Router>, stop: Arc<AtomicBool>) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     log::info!("bsa server listening on {addr}");
     let mut conns: Vec<std::thread::JoinHandle<()>> = vec![];
     while !stop.load(Ordering::Relaxed) {
+        reap_finished(&mut conns);
         match listener.accept() {
             Ok((stream, peer)) => {
                 log::debug!("connection from {peer}");
@@ -65,6 +70,21 @@ pub fn serve(addr: &str, router: Arc<Router>, stop: Arc<AtomicBool>) -> anyhow::
         let _ = c.join();
     }
     Ok(())
+}
+
+/// Join and drop every connection handler that has already exited
+/// (`is_finished` is a cheap atomic read; join on a finished thread
+/// returns immediately). Order is irrelevant, so `swap_remove` keeps
+/// the reap O(live).
+fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
 }
 
 fn handle_conn(mut stream: TcpStream, router: &Router, stop: &AtomicBool) -> anyhow::Result<()> {
@@ -259,6 +279,43 @@ fn read_f32s<R: Read>(r: &mut R, n: usize) -> anyhow::Result<Vec<f32>> {
 #[cfg(test)]
 mod tests {
     // Wire-format framing is covered end-to-end by rust/tests/integration.rs
-    // (server + client over a compiled graph). Nothing unit-testable here
-    // without a Router.
+    // (server + client over a compiled graph). The handle-reaping logic is
+    // unit-tested here because the leak it prevents (a Vec<JoinHandle>
+    // growing per connection ever accepted) is invisible from outside the
+    // process: exited-but-unjoined threads leave the OS thread count on
+    // their own, so only inspecting the vec itself can catch a regression.
+    use super::reap_finished;
+
+    #[test]
+    fn reap_finished_drops_only_exited_handlers() {
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let mut conns = Vec::new();
+        for _ in 0..8 {
+            conns.push(std::thread::spawn(|| {}));
+        }
+        // one still-live handler, blocked like an idle connection
+        conns.push(std::thread::spawn(move || {
+            rx.recv().ok();
+        }));
+
+        // wait (bounded) for the 8 trivial handlers to exit
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while conns.iter().take(8).any(|h| !h.is_finished()) {
+            assert!(std::time::Instant::now() < deadline, "handlers never exited");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+
+        reap_finished(&mut conns);
+        assert_eq!(conns.len(), 1, "reap must drop every exited handler, keep the live one");
+
+        // release the live handler; a second reap empties the vec
+        tx.send(()).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !conns[0].is_finished() {
+            assert!(std::time::Instant::now() < deadline, "live handler never exited");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        reap_finished(&mut conns);
+        assert!(conns.is_empty(), "second reap must join the released handler");
+    }
 }

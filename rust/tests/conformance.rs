@@ -5,16 +5,21 @@
 //! the `backend` module docs). This file is the gate that keeps the
 //! pairs equivalent: randomized shape sweeps — uneven ball sizes,
 //! degenerate single-point balls, panel-boundary-crossing GEMMs,
-//! tie-heavy top-k rows — across randomized thread counts, asserting
-//! fast == reference within 1e-5 (the parallel kernels are
-//! order-preserving, so in practice they agree bitwise; the tolerance is
-//! the contract, the exactness an implementation detail). On top of the
-//! kernel sweeps: whole-forward equivalence across thread counts,
-//! concurrent bit-determinism on a shared `Arc<dyn Backend>`, typed
-//! errors for shapes the kernels cannot serve (N not divisible by ball
-//! size), `params.rs` error paths (truncated / corrupt / mis-shaped
-//! `.bsackpt` files), and — when compiled artifacts exist — the
-//! native-vs-pjrt fixture gate.
+//! tie-heavy top-k rows, SIMD lane-tail lengths (N%8 in 1..=7),
+//! single-row panels, subnormal/huge logits — across randomized thread
+//! counts, asserting fast == reference within 1e-5. That tolerance is
+//! the contract since the `backend::simd` microkernel layer landed:
+//! SIMD horizontal reductions reorder accumulation, so the fast kernels
+//! genuinely differ from their scalar twins in the last bits when SIMD
+//! is active (they stay bitwise across *thread counts*, and
+//! `rust/tests/simd_off.rs` pins the `BSA_NATIVE_SIMD=off`
+//! bitwise-equals-scalar guarantee). On top of the kernel sweeps:
+//! whole-forward equivalence across thread counts, concurrent
+//! bit-determinism on a shared `Arc<dyn Backend>`, typed errors for
+//! shapes the kernels cannot serve (N not divisible by ball size),
+//! `params.rs` error paths (truncated / corrupt / mis-shaped `.bsackpt`
+//! files), and — when compiled artifacts exist — the native-vs-pjrt
+//! fixture gate.
 //!
 //! The parallel dispatches run on `backend::pool`'s **persistent worker
 //! pool**, so this file also gates the pool's lifecycle contract:
@@ -34,14 +39,16 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use bsa::backend::native::AttnHyper;
-use bsa::backend::{kernels, linalg, pool, Backend, NativeBackend, NativeParams};
+use bsa::backend::{kernels, linalg, pool, simd, Backend, NativeBackend, NativeParams};
 use bsa::config::ModelConfig;
 use bsa::proptest_lite::{forall, Gen};
 use bsa::tensor::Tensor;
 
-/// Conformance tolerance (the acceptance contract; the kernels are in
-/// fact bitwise-equal, which `conf_forward_bitwise_across_threads`
-/// checks end to end).
+/// Conformance tolerance: the acceptance contract for fast-vs-reference
+/// at any SIMD level. (Across *thread counts* the kernels are bitwise
+/// equal, which `conf_forward_bitwise_across_threads` checks end to
+/// end; with SIMD off they are bitwise twins, see
+/// `rust/tests/simd_off.rs`.)
 const TOL: f32 = 1e-5;
 
 fn assert_close(fast: &[f32], reference: &[f32], what: &str) {
@@ -320,6 +327,198 @@ fn conf_select_attention_matches_reference() {
 }
 
 // ---------------------------------------------------------------------------
+// SIMD twins: lane tails, single-row panels, subnormal/huge logits
+// (these run at whatever level the host resolved — on a machine with
+// AVX2/NEON they exercise the specializations, elsewhere the portable
+// lane panels; the scalar level is pinned by rust/tests/simd_off.rs)
+// ---------------------------------------------------------------------------
+
+/// Lengths covering every lane-tail residue N % 8 in 1..=7 plus exact
+/// multiples and the single-element edge.
+const LANE_TAILS: [usize; 12] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17];
+
+#[test]
+fn conf_simd_kernels_at_lane_tail_widths() {
+    // The reduction dimension (k for matmul_nt, cols for softmax /
+    // rms_norm) is where lane tails live: sweep every residue at random
+    // thread counts against the scalar twins.
+    forall(24, |g| {
+        let k = *g.choose(&LANE_TAILS);
+        let m = g.usize_in(1..10);
+        let n = *g.choose(&LANE_TAILS);
+        let threads = pick_threads(g);
+        let a = g.normals(m * k);
+        let b = g.normals(n * k);
+        let mut fast = vec![0.0f32; m * n];
+        linalg::matmul_nt(&a, &b, m, k, n, threads, &mut fast);
+        let mut refr = vec![0.0f32; m * n];
+        linalg::matmul_nt_reference(&a, &b, m, k, n, &mut refr);
+        assert_close(&fast, &refr, "matmul_nt lane tail");
+
+        let rows = g.usize_in(1..6);
+        let cols = *g.choose(&LANE_TAILS);
+        let mut sm_fast = g.normals(rows * cols);
+        let mut sm_ref = sm_fast.clone();
+        linalg::softmax_rows(&mut sm_fast, rows, cols, threads);
+        linalg::softmax_rows_reference(&mut sm_ref, rows, cols);
+        assert_close(&sm_fast, &sm_ref, "softmax lane tail");
+
+        let x = g.normals(rows * cols);
+        let scale = g.normals(cols);
+        let mut rn_fast = vec![0.0f32; rows * cols];
+        linalg::rms_norm(&x, &scale, rows, cols, threads, &mut rn_fast);
+        let mut rn_ref = vec![0.0f32; rows * cols];
+        linalg::rms_norm_reference(&x, &scale, rows, cols, &mut rn_ref);
+        assert_close(&rn_fast, &rn_ref, "rms_norm lane tail");
+    });
+}
+
+#[test]
+fn conf_simd_attention_at_lane_tail_head_dims() {
+    // Head dims with every tail residue through the ball / selection
+    // unit kernels (the per-unit dot/axpy panels see `d`-length rows).
+    forall(16, |g| {
+        let d = *g.choose(&LANE_TAILS);
+        let ball = g.usize_in(1..9);
+        let nballs = g.usize_in(1..5);
+        let n = ball * nballs;
+        let threads = pick_threads(g);
+        let q = g.normals(n * d);
+        let k = g.normals(n * d);
+        let v = g.normals(n * d);
+        let mut fast = vec![0.0f32; n * d];
+        kernels::ball_attention(&q, &k, &v, n, d, ball, threads, &mut fast);
+        let mut refr = vec![0.0f32; n * d];
+        let mut scores = Vec::new();
+        kernels::ball_attention_reference(&q, &k, &v, n, d, ball, &mut refr, &mut scores);
+        assert_close(&fast, &refr, "ball_attention lane-tail d");
+
+        // selection with the same d: group == sel_block == ball keeps
+        // the divisibility contract while d sweeps the tails
+        let top_k = g.usize_in(1..nballs + 1);
+        let groups = n / ball;
+        let mut idx = Vec::with_capacity(groups * top_k);
+        for _ in 0..groups {
+            let mut picks: Vec<usize> = (0..top_k).map(|_| g.usize_in(0..nballs)).collect();
+            picks.sort_unstable();
+            idx.extend(picks);
+        }
+        let mut sel_fast = vec![0.0f32; n * d];
+        kernels::select_attention(&q, &k, &v, &idx, n, d, ball, ball, top_k, threads, &mut sel_fast);
+        let mut sel_ref = vec![0.0f32; n * d];
+        let (mut ks, mut vs, mut sc) = (Vec::new(), Vec::new(), Vec::new());
+        kernels::select_attention_reference(
+            &q, &k, &v, &idx, n, d, ball, ball, top_k, &mut sel_ref, &mut ks, &mut vs, &mut sc,
+        );
+        assert_close(&sel_fast, &sel_ref, "select_attention lane-tail d");
+    });
+}
+
+#[test]
+fn conf_simd_single_row_panels() {
+    // rows = 1 (one chunk no matter the thread count) at lane-tail
+    // widths: the degenerate panel shape a chunked SIMD kernel is most
+    // likely to get wrong.
+    for &cols in &LANE_TAILS {
+        for threads in [1usize, 3, 8] {
+            let mut sm_fast = bsa::prng::Rng::new(cols as u64 + 1).normals(cols);
+            let mut sm_ref = sm_fast.clone();
+            linalg::softmax_rows(&mut sm_fast, 1, cols, threads);
+            linalg::softmax_rows_reference(&mut sm_ref, 1, cols);
+            assert_close(&sm_fast, &sm_ref, "single-row softmax");
+
+            let a = bsa::prng::Rng::new(cols as u64 + 2).normals(cols);
+            let b = bsa::prng::Rng::new(cols as u64 + 3).normals(3 * cols);
+            let mut nt_fast = vec![0.0f32; 3];
+            linalg::matmul_nt(&a, &b, 1, cols, 3, threads, &mut nt_fast);
+            let mut nt_ref = vec![0.0f32; 3];
+            linalg::matmul_nt_reference(&a, &b, 1, cols, 3, &mut nt_ref);
+            assert_close(&nt_fast, &nt_ref, "single-row matmul_nt");
+        }
+    }
+}
+
+#[test]
+fn conf_simd_subnormal_and_huge_logits() {
+    // Softmax rows mixing huge logits (3e4: exp underflows for the
+    // rest), NEG_INF mask values, exact zeros, and subnormals; plus
+    // rms_norm on an all-subnormal row (mean-square underflows to ~0,
+    // the eps term must keep the output finite). The fast kernels must
+    // stay finite and within the twin bound everywhere.
+    let rows: Vec<Vec<f32>> = vec![
+        vec![3e4, -3e4, 0.0, 1.0e-40, kernels::NEG_INF],
+        vec![kernels::NEG_INF; 7],
+        vec![1.0e-40, -1.0e-40, 1.0e-38, 0.0, -0.0, 2.0e-41, 8.5e-39, 1.0e-44],
+        vec![700.0, 699.5, -700.0],
+        vec![0.0],
+    ];
+    for (ri, row) in rows.iter().enumerate() {
+        let cols = row.len();
+        for threads in [1usize, 4] {
+            let mut fast = row.clone();
+            let mut refr = row.clone();
+            linalg::softmax_rows(&mut fast, 1, cols, threads);
+            linalg::softmax_rows_reference(&mut refr, 1, cols);
+            assert!(fast.iter().all(|v| v.is_finite()), "row {ri}: non-finite softmax");
+            assert_close(&fast, &refr, "subnormal/huge softmax");
+        }
+    }
+    let sub = vec![1.0e-40f32, 2.0e-41, -3.0e-39, 1.0e-44, 0.0, -1.0e-40, 5.0e-42, 9.0e-39, 1.0e-41];
+    let scale = vec![1.0f32; sub.len()];
+    let mut fast = vec![0.0f32; sub.len()];
+    linalg::rms_norm(&sub, &scale, 1, sub.len(), 2, &mut fast);
+    let mut refr = vec![0.0f32; sub.len()];
+    linalg::rms_norm_reference(&sub, &scale, 1, sub.len(), &mut refr);
+    assert!(fast.iter().all(|v| v.is_finite()), "subnormal rms_norm non-finite");
+    assert_close(&fast, &refr, "subnormal rms_norm");
+}
+
+#[test]
+fn conf_simd_microkernels_match_scalar_twins() {
+    // The microkernel layer itself, at every lane-tail length: the
+    // reductions within a reassociation-sized bound of their scalar
+    // twins, `row_max` exactly, and the element-parallel panels
+    // bitwise (the property linalg::matmul's bitwise twin status
+    // rests on). The resolved level must also be stable for the whole
+    // process — that is what "bitwise across thread counts" stands on.
+    let lvl = simd::active();
+    for &n in &LANE_TAILS {
+        let x = bsa::prng::Rng::new(n as u64 + 31).normals(n);
+        let y = bsa::prng::Rng::new(n as u64 + 77).normals(n);
+        let l1: f32 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let tol = 8.0 * n as f32 * f32::EPSILON * (l1 + 1.0);
+        assert!(
+            (simd::dot(&x, &y) - simd::dot_scalar(&x, &y)).abs() <= tol,
+            "dot n={n}"
+        );
+        assert!(
+            (simd::sum_sq(&x) - simd::sum_sq_scalar(&x)).abs() <= tol,
+            "sum_sq n={n}"
+        );
+        assert_eq!(simd::row_max(&x), simd::row_max_scalar(&x), "row_max n={n}");
+
+        let mut ef = x.clone();
+        let mut er = x.clone();
+        let max = simd::row_max_scalar(&x);
+        let sf = simd::exp_sum(&mut ef, max);
+        let sr = simd::exp_sum_scalar(&mut er, max);
+        for (a, b) in ef.iter().zip(&er) {
+            assert!((a - b).abs() <= TOL, "exp_sum n={n}: {a} vs {b}");
+        }
+        assert!((sf - sr).abs() <= 1e-4 * (1.0 + sr.abs()), "exp_sum total n={n}");
+
+        let mut af = y.clone();
+        simd::axpy(0.5, &x, &mut af);
+        let mut ar = y.clone();
+        for (o, &v) in ar.iter_mut().zip(&x) {
+            *o += 0.5 * v;
+        }
+        assert_eq!(af, ar, "axpy must be a bitwise panel (n={n})");
+    }
+    assert_eq!(simd::active(), lvl, "dispatch level changed mid-run");
+}
+
+// ---------------------------------------------------------------------------
 // whole-forward equivalence + determinism
 // ---------------------------------------------------------------------------
 
@@ -439,13 +638,18 @@ fn conf_rejects_n_not_divisible_by_ball() {
 fn conf_pool_reuse_bitwise_across_dispatches() {
     // 120 dispatches through the same process-wide pool, cycling thread
     // counts and kernels: queue reuse, worker identity, and dispatch
-    // order must never change a bit vs the scalar references computed
-    // once up front.
+    // order must never change a bit vs the fast kernels' own threads=1
+    // output computed once up front (which itself must sit within the
+    // 1e-5 twin bound of the scalar references — matmul is a bitwise
+    // twin, ball attention a 1e-5 twin when SIMD reductions are active).
     let (m, k, n) = (13usize, 24, 17);
     let a = bsa::prng::Rng::new(5).normals(m * k);
     let b = bsa::prng::Rng::new(6).normals(k * n);
     let mut mm_ref = vec![0.0f32; m * n];
     linalg::matmul_reference(&a, &b, m, k, n, &mut mm_ref);
+    let mut mm_expect = vec![0.0f32; m * n];
+    linalg::matmul(&a, &b, m, k, n, 1, &mut mm_expect);
+    assert_eq!(mm_expect, mm_ref, "matmul is an element-parallel bitwise twin");
 
     let (bn, bd, ball) = (24usize, 6usize, 4usize);
     let q = bsa::prng::Rng::new(7).normals(bn * bd);
@@ -454,15 +658,18 @@ fn conf_pool_reuse_bitwise_across_dispatches() {
     let mut ball_ref = vec![0.0f32; bn * bd];
     let mut sc = Vec::new();
     kernels::ball_attention_reference(&q, &kk, &v, bn, bd, ball, &mut ball_ref, &mut sc);
+    let mut ball_expect = vec![0.0f32; bn * bd];
+    kernels::ball_attention(&q, &kk, &v, bn, bd, ball, 1, &mut ball_expect);
+    assert_close(&ball_expect, &ball_ref, "ball vs scalar twin");
 
     for i in 0..120 {
         let threads = [1usize, 2, 3, 4, 8][i % 5];
         let mut mm = vec![0.0f32; m * n];
         linalg::matmul(&a, &b, m, k, n, threads, &mut mm);
-        assert_eq!(mm, mm_ref, "matmul dispatch {i} (threads {threads}) diverged");
+        assert_eq!(mm, mm_expect, "matmul dispatch {i} (threads {threads}) diverged");
         let mut bo = vec![0.0f32; bn * bd];
         kernels::ball_attention(&q, &kk, &v, bn, bd, ball, threads, &mut bo);
-        assert_eq!(bo, ball_ref, "ball dispatch {i} (threads {threads}) diverged");
+        assert_eq!(bo, ball_expect, "ball dispatch {i} (threads {threads}) diverged");
     }
 }
 

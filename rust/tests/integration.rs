@@ -530,6 +530,95 @@ fn native_tcp_interleaved_batches_roundtrip_and_stats() {
     assert_eq!((st.tree_hits, st.tree_misses), (4, 2));
 }
 
+/// Live thread count of this process (linux: /proc/self/status
+/// `Threads:`; elsewhere 0, which makes the churn assertion vacuous
+/// rather than flaky).
+fn live_threads() -> usize {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("Threads:") {
+                if let Ok(n) = rest.trim().parse() {
+                    return n;
+                }
+            }
+        }
+    }
+    0
+}
+
+#[test]
+fn native_tcp_connection_churn_reaps_handlers() {
+    // serve() reaps finished connection handlers in the accept loop (it
+    // used to push one JoinHandle per connection and only join at
+    // shutdown). The reap logic itself is unit-tested in
+    // server.rs::tests::reap_finished_drops_only_exited_handlers — the
+    // handle-vec growth is not observable from outside the process
+    // (exited threads leave the OS thread count without a join). This
+    // end-to-end churn covers the serving behaviour around it: every
+    // request answered across many short-lived connections, the thread
+    // population staying flat, and shutdown staying clean.
+    let backend = Arc::new(tiny_native_backend(6));
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Arc::new(Router::start(backend, sc).unwrap());
+
+    let addr = "127.0.0.1:17183";
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let srv = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || bsa::server::serve(&addr, router, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let gen = generator_for("syn", 10).unwrap();
+    let sample = gen.generate(0, 160);
+    // warm everything the first request lazily creates (worker pool
+    // growth, tree cache) so the baseline thread count is steady-state
+    {
+        let mut c = bsa::server::Client::connect(addr).unwrap();
+        let p = c.predict(&sample.coords, &sample.features).unwrap();
+        assert_eq!(p.shape(), &[160, 1]);
+    }
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let before = live_threads();
+
+    let churn = 24usize;
+    for round in 0..churn {
+        let mut c = bsa::server::Client::connect(addr).unwrap();
+        let p = c.predict(&sample.coords, &sample.features).unwrap();
+        assert_eq!(p.shape(), &[160, 1], "churn round {round}");
+        assert!(p.all_finite());
+        // client drops here: the handler sees EOF and exits; the accept
+        // loop's reap joins it on a later iteration
+    }
+    // handlers poll their sockets on a 100ms timeout; give the EOFs and
+    // the accept-loop reap time to land before counting
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    let after = live_threads();
+    assert!(
+        after <= before + 3,
+        "connection churn grew the thread population: {before} -> {after}"
+    );
+
+    // the server still accepts and serves after the churn
+    {
+        let mut c = bsa::server::Client::connect(addr).unwrap();
+        let p = c.predict(&sample.coords, &sample.features).unwrap();
+        assert_eq!(p.shape(), &[160, 1]);
+        let stats = c.stats().unwrap();
+        assert!(
+            stats.contains(&format!("\"served\": {}", churn + 2)),
+            "stats json after churn: {stats}"
+        );
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.served as usize, churn + 2);
+}
+
 #[test]
 fn native_backend_loads_param_file() {
     // Param-file round trip through the backend constructor: weights

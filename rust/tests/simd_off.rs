@@ -1,0 +1,124 @@
+//! `BSA_NATIVE_SIMD=off` gate: with SIMD disabled, every fast kernel —
+//! and the whole forward pass — must be **bitwise** equal to the scalar
+//! `*_reference` composition, at every thread count.
+//!
+//! This file deliberately contains exactly ONE `#[test]` function: the
+//! SIMD dispatch level is resolved process-wide from the environment on
+//! first use, and integration-test binaries run their tests on
+//! concurrent threads, so a second test could race the `set_var` below
+//! against the first resolution. One test per binary makes the env
+//! sequencing deterministic (conformance.rs covers the SIMD-on levels;
+//! this binary pins the escape hatch).
+
+use bsa::backend::{kernels, linalg, simd, Backend, NativeBackend};
+use bsa::config::ModelConfig;
+use bsa::tensor::Tensor;
+
+#[test]
+fn simd_off_is_bitwise_equal_to_scalar_references() {
+    // Must run before anything in this process touches a kernel: the
+    // env resolution is cached once.
+    std::env::set_var(simd::SIMD_ENV, "off");
+    assert_eq!(simd::active(), simd::Level::Scalar, "env escape hatch ignored");
+    assert!(!simd::on());
+
+    // kernel-by-kernel: fast == reference, bit for bit, across threads
+    let (m, k, n) = (9usize, 23, 17);
+    let a = bsa::prng::Rng::new(1).normals(m * k);
+    let b = bsa::prng::Rng::new(2).normals(k * n);
+    let bt = bsa::prng::Rng::new(3).normals(n * k);
+    for threads in [1usize, 2, 3, 8] {
+        let mut fast = vec![0.0f32; m * n];
+        linalg::matmul(&a, &b, m, k, n, threads, &mut fast);
+        let mut refr = vec![0.0f32; m * n];
+        linalg::matmul_reference(&a, &b, m, k, n, &mut refr);
+        assert_eq!(fast, refr, "matmul (threads {threads})");
+
+        let mut fast = vec![0.0f32; m * n];
+        linalg::matmul_nt(&a, &bt, m, k, n, threads, &mut fast);
+        let mut refr = vec![0.0f32; m * n];
+        linalg::matmul_nt_reference(&a, &bt, m, k, n, &mut refr);
+        assert_eq!(fast, refr, "matmul_nt (threads {threads})");
+
+        let mut sm_fast = bsa::prng::Rng::new(4).normals(m * n);
+        let mut sm_ref = sm_fast.clone();
+        linalg::softmax_rows(&mut sm_fast, m, n, threads);
+        linalg::softmax_rows_reference(&mut sm_ref, m, n);
+        assert_eq!(sm_fast, sm_ref, "softmax_rows (threads {threads})");
+
+        let x = bsa::prng::Rng::new(5).normals(m * n);
+        let scale = bsa::prng::Rng::new(6).normals(n);
+        let mut rn_fast = vec![0.0f32; m * n];
+        linalg::rms_norm(&x, &scale, m, n, threads, &mut rn_fast);
+        let mut rn_ref = vec![0.0f32; m * n];
+        linalg::rms_norm_reference(&x, &scale, m, n, &mut rn_ref);
+        assert_eq!(rn_fast, rn_ref, "rms_norm (threads {threads})");
+    }
+
+    // attention family at an awkward (lane-tail) head dim
+    let (bn, bd, ball) = (30usize, 7usize, 5usize);
+    let q = bsa::prng::Rng::new(7).normals(bn * bd);
+    let kk = bsa::prng::Rng::new(8).normals(bn * bd);
+    let v = bsa::prng::Rng::new(9).normals(bn * bd);
+    for threads in [1usize, 4] {
+        let mut fast = vec![0.0f32; bn * bd];
+        kernels::ball_attention(&q, &kk, &v, bn, bd, ball, threads, &mut fast);
+        let mut refr = vec![0.0f32; bn * bd];
+        let mut sc = Vec::new();
+        kernels::ball_attention_reference(&q, &kk, &v, bn, bd, ball, &mut refr, &mut sc);
+        assert_eq!(fast, refr, "ball_attention (threads {threads})");
+
+        let block = 6usize;
+        let mut cm_fast = vec![0.0f32; (bn / block) * bd];
+        kernels::compress_mean(&q, bn, bd, block, threads, &mut cm_fast);
+        let mut cm_ref = vec![0.0f32; (bn / block) * bd];
+        kernels::compress_mean_reference(&q, bn, bd, block, &mut cm_ref);
+        assert_eq!(cm_fast, cm_ref, "compress_mean (threads {threads})");
+
+        let (group, top_k, nb) = (5usize, 2usize, bn / ball);
+        let groups = bn / group;
+        let idx: Vec<usize> = (0..groups).flat_map(|g| [g % nb, (g + 1) % nb]).collect();
+        let mut sorted = idx.clone();
+        for pair in sorted.chunks_exact_mut(top_k) {
+            pair.sort_unstable();
+        }
+        let mut sel_fast = vec![0.0f32; bn * bd];
+        kernels::select_attention(
+            &q, &kk, &v, &sorted, bn, bd, ball, group, top_k, threads, &mut sel_fast,
+        );
+        let mut sel_ref = vec![0.0f32; bn * bd];
+        let (mut ks, mut vs, mut scr) = (Vec::new(), Vec::new(), Vec::new());
+        kernels::select_attention_reference(
+            &q, &kk, &v, &sorted, bn, bd, ball, group, top_k, &mut sel_ref, &mut ks, &mut vs,
+            &mut scr,
+        );
+        assert_eq!(sel_fast, sel_ref, "select_attention (threads {threads})");
+    }
+
+    // whole forward: scalar mode is still bitwise across thread counts
+    let mc = ModelConfig {
+        dim: 32,
+        num_heads: 2,
+        num_blocks: 2,
+        ball_size: 64,
+        seq_len: 256,
+        ..Default::default()
+    };
+    let x = {
+        let mut rng = bsa::prng::Rng::new(12);
+        Tensor::new(vec![1, 256, 6], rng.normals(256 * 6))
+    };
+    let base = NativeBackend::init(5, &mc, 6, 1, 1)
+        .unwrap()
+        .with_threads(1)
+        .forward(&x)
+        .unwrap();
+    for t in [2usize, 4, 8] {
+        let out = NativeBackend::init(5, &mc, 6, 1, 1)
+            .unwrap()
+            .with_threads(t)
+            .forward(&x)
+            .unwrap();
+        assert_eq!(base, out, "scalar-mode forward diverged at threads={t}");
+    }
+}

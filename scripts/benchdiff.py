@@ -1,0 +1,211 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json perf artifacts into a per-section delta table.
+
+rebar-style cross-run comparison for the repo's machine-readable perf
+trajectory (BENCH_native.json / BENCH_serve.json):
+
+    scripts/benchdiff.py OLD.json NEW.json
+    scripts/benchdiff.py OLD.json NEW.json --fail-over 10
+    scripts/benchdiff.py OLD.json NEW.json --section threads_sweep
+
+Every numeric measurement leaf is flattened to a dotted path (list
+entries are keyed by their "name"/"threads"/"n" field when present, by
+index otherwise), matched across the two documents, and reported with
+its percent delta and a direction-aware verdict:
+
+    lower-is-better   keys ending in _us / _ms, p50/p95 latencies, misses
+    higher-is-better  keys ending in per_s / speedup / hits, saved_us
+
+Keys that are run descriptors rather than measurements (reps, threads,
+n, calls, requests, ...) are ignored. A leaf that is null on either
+side (structure-only placeholders) is skipped with a note, so the tool
+is safe against the committed pre-toolchain baselines.
+
+``--fail-over PCT`` exits 2 if any direction-known metric regressed by
+more than PCT percent — the CI-facing mode. Without it the tool always
+exits 0 (the informational mode scripts/check.sh runs after refreshing
+the artifacts).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# run descriptors, not measurements
+SKIP_KEYS = {
+    "reps", "threads", "n", "calls", "requests", "geometries", "n_points",
+    "target_len", "units", "rows", "width", "batch", "dim", "heads",
+    "blocks", "ball", "available", "count",
+}
+
+HIGHER_SUFFIXES = ("per_s", "speedup", "speedup_vs_1t", "hits", "saved_us")
+LOWER_SUFFIXES = ("_us", "_ms", "misses")
+
+
+def direction(path: str) -> str | None:
+    """'higher' / 'lower' is-better for a dotted metric path, else None."""
+    leaf = path.rsplit(".", 1)[-1]
+    for suf in HIGHER_SUFFIXES:
+        if leaf == suf or leaf.endswith(suf):
+            return "higher"
+    for suf in LOWER_SUFFIXES:
+        if leaf == suf or leaf.endswith(suf):
+            return "lower"
+    return None
+
+
+def _entry_key(entry: dict, index: int) -> str:
+    """Stable key for a list element: its name/threads/n field, else index."""
+    for field in ("name", "threads", "n", "label"):
+        if field in entry and not isinstance(entry[field], (dict, list)):
+            return f"{field}={entry[field]}"
+    return str(index)
+
+
+def flatten(doc, prefix: str = "") -> dict:
+    """Dotted path -> numeric-or-None for every measurement leaf."""
+    out: dict = {}
+    if isinstance(doc, dict):
+        for key, val in doc.items():
+            path = f"{prefix}.{key}" if prefix else str(key)
+            if isinstance(val, (dict, list)):
+                out.update(flatten(val, path))
+            elif key in SKIP_KEYS or isinstance(val, (str, bool)):
+                continue
+            else:  # number or null
+                out[path] = val
+    elif isinstance(doc, list):
+        for i, val in enumerate(doc):
+            if isinstance(val, dict):
+                out.update(flatten(val, f"{prefix}[{_entry_key(val, i)}]"))
+            elif isinstance(val, (int, float)) and not isinstance(val, bool):
+                out[f"{prefix}[{i}]"] = val
+    return out
+
+
+def diff(old_doc, new_doc, section: str | None = None) -> tuple[list, int]:
+    """Matched-metric rows plus the count of skipped (null/unmatched) leaves.
+
+    Each row is (path, old, new, delta_pct, verdict) where verdict is
+    'better' / 'worse' / '~' (within noise or direction-unknown).
+    """
+    old_flat = flatten(old_doc)
+    new_flat = flatten(new_doc)
+    rows = []
+    skipped = 0
+    for path in sorted(set(old_flat) | set(new_flat)):
+        if section and not path.startswith(section):
+            continue
+        old = old_flat.get(path)
+        new = new_flat.get(path)
+        if old is None or new is None:
+            skipped += 1
+            continue
+        if old == 0:
+            delta = 0.0 if new == 0 else float("inf")
+        else:
+            delta = (new - old) / abs(old) * 100.0
+        verdict = "~"
+        d = direction(path)
+        if d and abs(delta) >= 1.0:
+            improved = (delta > 0) == (d == "higher")
+            verdict = "better" if improved else "worse"
+        rows.append((path, old, new, delta, verdict))
+    return rows, skipped
+
+
+def regressions(rows, fail_over: float) -> list:
+    """Rows whose direction-aware delta is worse by more than fail_over %."""
+    out = []
+    for path, old, new, delta, _ in rows:
+        d = direction(path)
+        if d is None:
+            continue
+        worse = -delta if d == "higher" else delta
+        if worse > fail_over:
+            out.append((path, old, new, delta))
+    return out
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.3f}" if abs(v) < 1000 else f"{v:.1f}"
+    return str(v)
+
+
+def render(rows, skipped: int) -> str:
+    if not rows:
+        return f"benchdiff: no comparable numeric metrics ({skipped} null/unmatched leaves skipped)\n"
+    widths = [
+        max(len("metric"), *(len(r[0]) for r in rows)),
+        max(len("old"), *(len(_fmt(r[1])) for r in rows)),
+        max(len("new"), *(len(_fmt(r[2])) for r in rows)),
+    ]
+    lines = [
+        f"{'metric'.ljust(widths[0])}  {'old'.rjust(widths[1])}  "
+        f"{'new'.rjust(widths[2])}  {'delta%':>8}  verdict"
+    ]
+    lines.append("-" * len(lines[0]))
+    for path, old, new, delta, verdict in rows:
+        lines.append(
+            f"{path.ljust(widths[0])}  {_fmt(old).rjust(widths[1])}  "
+            f"{_fmt(new).rjust(widths[2])}  {delta:>+8.1f}  {verdict}"
+        )
+    if skipped:
+        lines.append(f"({skipped} null/unmatched leaves skipped)")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="fresh BENCH_*.json")
+    ap.add_argument(
+        "--fail-over",
+        type=float,
+        metavar="PCT",
+        help="exit 2 if any metric regressed by more than PCT percent",
+    )
+    ap.add_argument(
+        "--section", help="only compare dotted paths under this prefix"
+    )
+    ap.add_argument(
+        "--label", default="", help="tag printed above the table (e.g. native)"
+    )
+    args = ap.parse_args(argv)
+
+    docs = []
+    for path in (args.old, args.new):
+        try:
+            with open(path) as fh:
+                docs.append(json.load(fh))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"benchdiff: cannot read {path}: {e}", file=sys.stderr)
+            return 1
+
+    rows, skipped = diff(docs[0], docs[1], args.section)
+    if args.label:
+        print(f"== benchdiff [{args.label}]: {args.old} -> {args.new}")
+    print(render(rows, skipped), end="")
+
+    if args.fail_over is not None:
+        regs = regressions(rows, args.fail_over)
+        if regs:
+            print(
+                f"benchdiff: {len(regs)} metric(s) regressed beyond "
+                f"{args.fail_over:.1f}%:",
+                file=sys.stderr,
+            )
+            for path, old, new, delta in regs:
+                print(
+                    f"  {path}: {_fmt(old)} -> {_fmt(new)} ({delta:+.1f}%)",
+                    file=sys.stderr,
+                )
+            return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

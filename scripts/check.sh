@@ -1,17 +1,21 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 build+tests (debug AND release — the parallel
-# kernels must pass with the optimizer on, where race-adjacent bugs
-# actually surface), lints, rustdoc with warnings-as-errors (README /
-# FORMATS.md cross-references must not rot), and the perf artifacts
-# (BENCH_serve.json + BENCH_native.json) in smoke mode. CI and pre-PR
-# runs use this so the correctness gate and the perf trajectory can't
-# drift apart.
+# One-command gate: formatting, tier-1 build+tests (debug AND release —
+# the parallel kernels must pass with the optimizer on, where
+# race-adjacent bugs actually surface), lints, rustdoc with
+# warnings-as-errors (README / FORMATS.md cross-references must not
+# rot), and the perf artifacts (BENCH_serve.json + BENCH_native.json) in
+# smoke mode. CI (.github/workflows/ci.yml) and pre-PR runs use this so
+# the correctness gate and the perf trajectory can't drift apart; the
+# toolchain is pinned by rust-toolchain.toml so local and CI runs agree.
 #
 #   scripts/check.sh                # full gate
-#   scripts/check.sh --quick        # build + conformance tests only
+#   scripts/check.sh --quick        # fmt + build + conformance tests only
 #   BENCH_REPS=5 scripts/check.sh   # heavier perf sampling
 #
-# The full gate also guards the native perf trajectory: if a committed
+# After the benches refresh the artifacts, scripts/benchdiff.py prints a
+# per-metric delta table against the committed baselines (informational;
+# pass --fail-over to benchdiff for a hard threshold). The full gate
+# additionally guards the native perf trajectory: if a committed
 # BENCH_native.json has a numeric single-thread throughput baseline
 # (threads_sweep, threads=1, fwd_per_s) and both the baseline and the
 # fresh run sampled with reps >= 3 (single-sample smoke runs are noise),
@@ -32,25 +36,37 @@ REPS="${BENCH_REPS:-1}"
 if [[ "$QUICK" == 1 ]]; then
   (
     cd rust
+    echo "== cargo fmt --check"
+    cargo fmt --check
     echo "== cargo build --release"
     cargo build --release
     echo "== cargo test -q --release --test conformance"
     cargo test -q --release --test conformance
+    echo "== cargo test -q --release --test simd_off (BSA_NATIVE_SIMD=off bitwise gate)"
+    cargo test -q --release --test simd_off
   )
-  echo "check.sh --quick: build + kernel conformance passed"
+  echo "check.sh --quick: fmt + build + kernel conformance passed"
   exit 0
 fi
 
-# Stash the committed perf baseline before the bench overwrites it.
-BASELINE=""
+# Stash the committed perf baselines before the benches overwrite them
+# (benchdiff + the regression gate both need the pre-run numbers).
+BASELINE_NATIVE=""
+BASELINE_SERVE=""
 if [[ -f BENCH_native.json ]]; then
-  BASELINE="$(mktemp)"
-  cp BENCH_native.json "$BASELINE"
+  BASELINE_NATIVE="$(mktemp)"
+  cp BENCH_native.json "$BASELINE_NATIVE"
 fi
-trap '[[ -z "${BASELINE}" ]] || rm -f "${BASELINE}"' EXIT
+if [[ -f BENCH_serve.json ]]; then
+  BASELINE_SERVE="$(mktemp)"
+  cp BENCH_serve.json "$BASELINE_SERVE"
+fi
+trap '[[ -z "${BASELINE_NATIVE}" ]] || rm -f "${BASELINE_NATIVE}"; [[ -z "${BASELINE_SERVE}" ]] || rm -f "${BASELINE_SERVE}"' EXIT
 
 (
   cd rust
+  echo "== cargo fmt --check"
+  cargo fmt --check
   echo "== cargo build --release"
   cargo build --release
   echo "== cargo test -q"
@@ -63,16 +79,27 @@ trap '[[ -z "${BASELINE}" ]] || rm -f "${BASELINE}"' EXIT
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
   echo "== serve_hot_path bench (smoke, --reps ${REPS})"
   cargo bench --bench paper -- serve_hot_path --reps "${REPS}"
-  echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e + threads sweep)"
+  echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e + threads/simd sweeps)"
   cargo bench --bench paper -- bsa_native --reps "${REPS}"
 )
+
+# rebar-style per-metric deltas vs the committed baselines
+# (informational here; CI can add --fail-over for a hard threshold)
+if command -v python3 >/dev/null 2>&1; then
+  if [[ -n "${BASELINE_NATIVE}" ]]; then
+    python3 scripts/benchdiff.py "$BASELINE_NATIVE" BENCH_native.json --label native || true
+  fi
+  if [[ -n "${BASELINE_SERVE}" ]]; then
+    python3 scripts/benchdiff.py "$BASELINE_SERVE" BENCH_serve.json --label serve || true
+  fi
+fi
 
 # Single-thread throughput regression gate (>10% vs the committed
 # baseline). Arms only when BOTH runs sampled with reps >= 3 — a
 # single-sample fwd_per_s (the default smoke reps=1) is scheduling
 # noise and must neither fail the gate nor ratchet a lucky baseline.
-if [[ -n "${BASELINE}" ]] && command -v python3 >/dev/null 2>&1; then
-  python3 - "$BASELINE" BENCH_native.json <<'PYEOF'
+if [[ -n "${BASELINE_NATIVE}" ]] && command -v python3 >/dev/null 2>&1; then
+  python3 - "$BASELINE_NATIVE" BENCH_native.json <<'PYEOF'
 import json, sys
 
 MIN_REPS = 3
@@ -107,7 +134,7 @@ elif cur < 0.9 * base:
 else:
     print(f"check.sh: single-thread native throughput ok: {base:.3f} -> {cur:.3f} fwd/s")
 PYEOF
-elif [[ -n "${BASELINE}" ]]; then
+elif [[ -n "${BASELINE_NATIVE}" ]]; then
   echo "check.sh: WARNING — baseline present but python3 unavailable; regression gate NOT run"
 else
   echo "check.sh: no committed BENCH_native.json baseline; regression gate skipped"
