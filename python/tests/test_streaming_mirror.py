@@ -1,0 +1,299 @@
+"""Numpy mirror of the streaming-attention and half-precision numerics
+(rust/src/backend/kernels.rs ``stream_row`` + rust/src/half.rs).
+
+The Rust side's conformance gate (rust/tests/conformance.rs) asserts the
+streaming kernel against the materialized oracle on the real binaries;
+this file re-derives the two load-bearing numeric claims in exact
+float32, so they are checkable on hosts without a Rust toolchain:
+
+1. the **online-softmax rescale identity**: processing keys tile by tile
+   with a running max ``m``, exp-sum ``l``, and accumulator rescaled by
+   ``alpha = exp(m_old - m_new)`` whenever a later tile raises the max
+   produces the same attention output as materializing all scores and
+   applying one full softmax — exactly in real arithmetic, within 1e-5
+   in float32 across tile-tail widths and adversarial rescale chains.
+   The mirror below transcribes ``stream_row``'s update order
+   statement-for-statement (skip-tile on all--inf, uniform fallback when
+   ``l == 0``), so a change to the Rust loop's structure should be
+   re-derived here before loosening the Rust tolerances;
+
+2. the **binary16 conversion algorithm** in half.rs (round-to-nearest-
+   even encode including the subnormal range, exact decode) agrees
+   bit-for-bit with numpy.float16's hardware/compiler-backed conversion
+   on every tested pattern, and its round-trip stays within the
+   documented 2^-11 relative bound for normals — the basis of the f16
+   forward tolerance tier in backend/mod.rs "Kernel conformance".
+"""
+
+import math
+
+import numpy as np
+
+f32 = np.float32
+
+STREAM_TILE = 64  # kernels.rs: fixed key-tile width
+NEG_INF = f32(-1e30)  # kernels.rs mask value (finite on purpose)
+
+
+# ---------------------------------------------------------------------------
+# part 1: online-softmax streaming attention mirror
+# ---------------------------------------------------------------------------
+
+
+def attend_reference(q, k, v, scale):
+    """Materialized oracle: full scores, one softmax, float64 math."""
+    s = (q.astype(np.float64) @ k.astype(np.float64).T) * float(scale)
+    s = s - s.max(axis=1, keepdims=True)
+    e = np.exp(s)
+    w = e / e.sum(axis=1, keepdims=True)
+    return (w @ v.astype(np.float64)).astype(f32)
+
+
+def stream_row(qrow, k, v, scale):
+    """Exact-f32 transcription of kernels.rs stream_row (scalar level)."""
+    nk, d = k.shape
+    m = -math.inf
+    l = f32(0.0)
+    orow = np.zeros(d, dtype=f32)
+    j0 = 0
+    while j0 < nk:
+        tl = min(STREAM_TILE, nk - j0)
+        # tile_scores_at: per-key scaled dot products
+        tile = np.empty(tl, dtype=f32)
+        for jj in range(tl):
+            acc = f32(0.0)
+            for x, y in zip(qrow, k[j0 + jj]):
+                acc = f32(acc + f32(f32(x) * f32(y)))
+            tile[jj] = f32(acc * f32(scale))
+        tmax = float(tile.max())
+        if tmax == -math.inf:
+            j0 += tl
+            continue
+        if tmax > m:
+            if l > 0.0:
+                alpha = f32(np.exp(f32(m - tmax)))
+                orow = (orow * alpha).astype(f32)
+                l = f32(l * alpha)
+            m = tmax
+        weights = np.exp((tile - f32(m)).astype(f32)).astype(f32)
+        for w in weights:
+            l = f32(l + w)
+        for jj in range(tl):
+            orow = (orow + weights[jj] * v[j0 + jj].astype(f32)).astype(f32)
+        j0 += tl
+    if l > 0.0:
+        return (orow * f32(1.0 / l)).astype(f32)
+    # every tile was -inf-masked (or nk == 0): uniform value mean
+    w = f32(1.0 / nk)
+    for j in range(nk):
+        orow = (orow + w * v[j].astype(f32)).astype(f32)
+    return orow
+
+
+def test_streaming_matches_full_softmax_at_every_tile_tail():
+    rng = np.random.default_rng(3)
+    for nk in [1, 2, 7, STREAM_TILE - 1, STREAM_TILE, STREAM_TILE + 1,
+               STREAM_TILE + 7, 2 * STREAM_TILE, 2 * STREAM_TILE + 3]:
+        q = rng.standard_normal((3, 5)).astype(f32)
+        k = rng.standard_normal((nk, 5)).astype(f32)
+        v = rng.standard_normal((nk, 5)).astype(f32)
+        scale = f32(1.0 / np.sqrt(5.0))
+        want = attend_reference(q, k, v, scale)
+        for i in range(q.shape[0]):
+            got = stream_row(q[i], k, v, scale)
+            err = np.max(np.abs(got - want[i]))
+            assert err < 1e-5, f"nk={nk} row {i}: max err {err}"
+
+
+def test_streaming_rescale_chain_with_ascending_maxes():
+    # Adversarial for the online rescale: each tile's max strictly above
+    # the previous one, so every tile triggers alpha-rescaling of the
+    # accumulated output and exp-sum. A bug in the rescale order shows
+    # up here and nowhere else.
+    rng = np.random.default_rng(9)
+    nk = 4 * STREAM_TILE
+    d = 6
+    q = np.ones((1, d), dtype=f32)
+    k = rng.standard_normal((nk, d)).astype(f32) * f32(0.1)
+    # plant an ascending spike in each tile: 2, 4, 6, 8 (logit = spike*d)
+    for t in range(4):
+        k[t * STREAM_TILE + 5] = f32(2.0 * (t + 1))
+    v = rng.standard_normal((nk, d)).astype(f32)
+    want = attend_reference(q, k, v, f32(1.0))
+    got = stream_row(q[0], k, v, f32(1.0))
+    assert np.max(np.abs(got - want[0])) < 1e-5
+
+
+def test_streaming_descending_maxes_never_rescale():
+    # The complement: first tile holds the global max, so m never moves
+    # after tile 0 and alpha-rescaling must not fire (l > 0 branch with
+    # tmax <= m). Exactness of the no-rescale path.
+    rng = np.random.default_rng(10)
+    nk = 3 * STREAM_TILE
+    d = 4
+    q = np.ones((1, d), dtype=f32)
+    k = rng.standard_normal((nk, d)).astype(f32) * f32(0.1)
+    k[3] = f32(5.0)  # global max in tile 0
+    v = rng.standard_normal((nk, d)).astype(f32)
+    want = attend_reference(q, k, v, f32(1.0))
+    got = stream_row(q[0], k, v, f32(1.0))
+    assert np.max(np.abs(got - want[0])) < 1e-5
+
+
+def test_streaming_all_masked_row_is_uniform_not_nan():
+    # NEG_INF (finite -1e30) logits: softmax of equal logits is uniform.
+    # True -inf logits: every tile is skipped, l stays 0, and the
+    # explicit fallback averages the values. Both uniform, both finite.
+    rng = np.random.default_rng(12)
+    nk = STREAM_TILE + 9
+    d = 3
+    v = rng.standard_normal((nk, d)).astype(f32)
+    mean = v.mean(axis=0).astype(f32)
+    for kval in [NEG_INF, f32(-np.inf)]:
+        q = np.zeros(d, dtype=f32)
+        q[0] = kval
+        k = np.zeros((nk, d), dtype=f32)
+        k[:, 0] = f32(1.0)  # logit = kval for every key
+        got = stream_row(q, k, v, f32(1.0))
+        assert np.all(np.isfinite(got)), f"kval={kval}: non-finite"
+        assert np.max(np.abs(got - mean)) < 1e-4, f"kval={kval}: not uniform"
+
+
+def test_streaming_single_key_is_value_passthrough():
+    rng = np.random.default_rng(13)
+    q = rng.standard_normal(5).astype(f32)
+    k = rng.standard_normal((1, 5)).astype(f32)
+    v = rng.standard_normal((1, 5)).astype(f32)
+    got = stream_row(q, k, v, f32(0.7))
+    assert np.max(np.abs(got - v[0])) < 1e-6
+
+
+def test_streaming_huge_logits_stay_finite():
+    # A late-tile key with ~1e3 logits: exp(m_old - m_new) underflows the
+    # earlier mass to ~0; the streaming result must converge to the
+    # winning value row, matching the materialized softmax.
+    rng = np.random.default_rng(14)
+    nk = 2 * STREAM_TILE + 3
+    d = 4
+    q = (np.ones(d) * 40.0).astype(f32)
+    k = rng.standard_normal((nk, d)).astype(f32)
+    k[nk - 1] = f32(30.0)
+    v = rng.standard_normal((nk, d)).astype(f32)
+    got = stream_row(q, k, v, f32(1.0))
+    want = attend_reference(q[None, :], k, v, f32(1.0))[0]
+    assert np.all(np.isfinite(got))
+    assert np.max(np.abs(got - want)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# part 2: binary16 conversion mirror (rust/src/half.rs)
+# ---------------------------------------------------------------------------
+
+
+def f32_to_f16_bits(x):
+    """Transcription of half::f32_to_f16_bits (round-to-nearest-even)."""
+    bits = int(np.array(x, dtype=f32).view(np.uint32))
+    sign = (bits >> 16) & 0x8000
+    exp = (bits >> 23) & 0xFF
+    mant = bits & 0x007F_FFFF
+    if exp == 0xFF:
+        return sign | (0x7C00 if mant == 0 else 0x7E00)
+    e = exp - 127 + 15
+    if e >= 0x1F:
+        return sign | 0x7C00
+    if e <= 0:
+        if e < -10:
+            return sign
+        m = mant | 0x0080_0000
+        shift = 14 - e
+        half_ulp = 1 << (shift - 1)
+        half = m >> shift
+        rem = m & ((1 << shift) - 1)
+        if rem > half_ulp or (rem == half_ulp and (half & 1) == 1):
+            half += 1
+        return sign | half
+    half = (e << 10) | (mant >> 13)
+    rem = mant & 0x1FFF
+    if rem > 0x1000 or (rem == 0x1000 and (half & 1) == 1):
+        half += 1
+    return sign | half
+
+
+def f16_bits_to_f32(h):
+    """Transcription of half::f16_bits_to_f32 (exact decode)."""
+    sign = (h & 0x8000) << 16
+    exp = (h >> 10) & 0x1F
+    mant = h & 0x03FF
+    if exp == 0:
+        if mant == 0:
+            bits = sign
+        else:
+            shift = 0
+            m = mant
+            while m < 0x0400:  # normalize: bring MSB to bit 10
+                m <<= 1
+                shift += 1
+            bits = sign | ((127 - 15 - shift + 1) << 23) | ((m & 0x03FF) << 13)
+    elif exp == 0x1F:
+        if mant == 0:
+            bits = sign | 0x7F80_0000
+        else:
+            bits = sign | 0x7FC0_0000 | (mant << 13)
+    else:
+        bits = sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    return np.uint32(bits).view(f32)
+
+
+def _np_f16_bits(x):
+    with np.errstate(over="ignore"):  # overflow-to-inf is the point
+        return int(np.array(x, dtype=f32).astype(np.float16).view(np.uint16))
+
+
+def test_encode_matches_numpy_float16_on_samples():
+    rng = np.random.default_rng(21)
+    samples = list(rng.standard_normal(2000) * 100.0)
+    samples += [
+        0.0, -0.0, 1.0, -2.0, 65504.0, 65519.0, 65520.0, 1e30, -1e30,
+        5.960464477539063e-08,   # smallest subnormal
+        2.9802322387695312e-08,  # exactly half of it: ties to even (zero)
+        6.103515625e-05,         # smallest normal
+        1.0 + 2.0 ** -11,        # tie: even mantissa keeps 1.0
+        1.0 + 3.0 * 2.0 ** -11,  # tie: rounds up to even
+        1e-10, -1e-10, 3.0e-5, -7.7e-6, float("inf"), float("-inf"),
+    ]
+    for x in samples:
+        ours = f32_to_f16_bits(f32(x))
+        theirs = _np_f16_bits(x)
+        assert ours == theirs, f"x={x}: ours {ours:#06x} vs numpy {theirs:#06x}"
+
+
+def test_encode_handles_nan_like_numpy():
+    ours = f32_to_f16_bits(f32(np.nan))
+    assert (ours & 0x7C00) == 0x7C00 and (ours & 0x03FF) != 0, "not a NaN"
+
+
+def test_decode_matches_numpy_on_every_bit_pattern():
+    # Exhaustive: all 65536 patterns decode to exactly numpy's f32 view.
+    all_bits = np.arange(1 << 16, dtype=np.uint16)
+    theirs = all_bits.view(np.float16).astype(f32)
+    for h in range(1 << 16):
+        ours = f16_bits_to_f32(h)
+        t = theirs[h]
+        if np.isnan(t):
+            assert np.isnan(ours), f"{h:#06x}: NaN mismatch"
+        else:
+            assert ours.view(np.uint32) == t.view(np.uint32), (
+                f"{h:#06x}: ours {ours} vs numpy {t}"
+            )
+
+
+def test_roundtrip_relative_error_bound_for_normals():
+    # decode(encode(x)) within 2^-11 * |x| across the f16 normal range —
+    # the bound the f16 forward tolerance tier is derived from.
+    rng = np.random.default_rng(22)
+    xs = (rng.standard_normal(5000) * 100.0).astype(f32)
+    for x in xs:
+        if abs(float(x)) < 6.2e-5 or abs(float(x)) > 65000.0:
+            continue
+        r = float(f16_bits_to_f32(f32_to_f16_bits(x)))
+        assert abs(r - float(x)) <= abs(float(x)) / 2048.0, f"x={x} r={r}"

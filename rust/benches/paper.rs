@@ -9,6 +9,8 @@
 //!                     smoke mode scripts/check.sh uses)
 //!          --max-n N (largest sequence length for fig3/fig4)
 //!          --out DIR (results directory, default bench_results)
+//!          --quick   (cap bsa_native's n_sweep at N=32768 — the
+//!                     CI/check.sh mode; the full sweep reaches N=1M)
 //!
 //! `serve_hot_path` measures the host-side serving hot path (cold
 //! ball-tree build vs BallTreeCache hit, plus end-to-end router latency
@@ -52,6 +54,7 @@ struct Opts {
     steps: usize,
     reps: usize,
     max_n: usize,
+    quick: bool,
     out: PathBuf,
 }
 
@@ -65,6 +68,7 @@ fn parse_opts() -> Opts {
         steps: 60,
         reps: 3,
         max_n: 8192,
+        quick: false,
         out: PathBuf::from("bench_results"),
     };
     let mut it = args.iter().peekable();
@@ -73,6 +77,7 @@ fn parse_opts() -> Opts {
             "--steps" => o.steps = it.next().and_then(|v| v.parse().ok()).unwrap_or(o.steps),
             "--reps" => o.reps = it.next().and_then(|v| v.parse().ok()).unwrap_or(o.reps),
             "--max-n" => o.max_n = it.next().and_then(|v| v.parse().ok()).unwrap_or(o.max_n),
+            "--quick" => o.quick = true,
             "--out" => {
                 if let Some(v) = it.next() {
                     o.out = PathBuf::from(v);
@@ -868,9 +873,27 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
 // bsa_native: pure-Rust forward latency + native-vs-pjrt + BENCH_native.json
 // ---------------------------------------------------------------------------
 
+/// Process peak resident set in MB (`VmHWM` from `/proc/self/status`);
+/// 0.0 where procfs is unavailable. Cumulative over the process
+/// lifetime — callers order their measurements so each reading is the
+/// high-water mark of the point that produced it.
+fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            if let Some(kb) = rest.split_whitespace().next().and_then(|v| v.parse::<f64>().ok()) {
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
 /// Measure the native BSA forward pass the way `serve_hot_path` measures
 /// preprocessing: machine-readable p50/p95 so the next PR can regress
-/// against it, on *any* host. Seven levels:
+/// against it, on *any* host. Eight levels:
 ///
 /// 1. forward p50/p95 vs N for the demo-scale architecture (dim 32,
 ///    2 blocks — the native twin of the tiny core artifact);
@@ -893,9 +916,20 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
 /// 5. head-parallel attention sweep: batch 2 x 4 heads = 8 independent
 ///    (batch, head) units across threads in {1, 2, 4, 8} — the record of
 ///    the head-parallel speedup (`head_parallel` in the JSON);
-/// 6. native vs pjrt on the demo architecture at N=256 when the compiled
+/// 6. large-N scaling sweep (`n_sweep` in the JSON): whole forwards at
+///    N in {4k, 32k, 256k, 1M} under the streaming attention path, one
+///    arm per storage precision (f16 first, then f32, N ascending, so
+///    the cumulative VmHWM peak-RSS reading is meaningful per point),
+///    recording fwd/s and peak RSS; plus a fixed-shape kernel A/B of
+///    the streaming `attend` against the retained
+///    `attend_materialized` pipeline (us/call and scratch footprint).
+///    `--quick` caps the sweep at N=32768 (what scripts/check.sh
+///    runs); the N=1M point is the no-nq*nk-buffer proof — the
+///    materialized compression branch would need an ~16 GB score
+///    matrix there, the streaming path a 64-float tile;
+/// 7. native vs pjrt on the demo architecture at N=256 when the compiled
 ///    `fwd_bsa_syn_n256_b1` graph is present;
-/// 7. end-to-end through the native `Router` (batching + ball-tree
+/// 8. end-to-end through the native `Router` (batching + ball-tree
 ///    cache + forward) — proof the serving stack runs artifact-free.
 fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     use bsa::backend::{Backend, NativeBackend};
@@ -1238,7 +1272,140 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 6: native vs pjrt at the tiny config ----------------------
+    // --- level 6: n_sweep — streaming forwards up to N=1M, f16 vs f32 ----
+    // Per-N architecture: dim 32, 2 heads, 1 block, ball 256 (fixed, so
+    // ball attention stays linear in N); cmp_block scales as
+    // min(256, N/1024) so the compressed-block count nb stays bounded,
+    // and top_k shrinks as cmp_block grows so the selected keys per
+    // query stay ~2048 — the whole forward is then ~linear in N and the
+    // fwd/s column is a real scaling curve. The streaming attention
+    // path is what makes the large points *possible* at all: the
+    // compression branch at N=1M attends nb=4096 keys per query, which
+    // materialized would be a 1M x 4096 f32 score matrix (~16 GB);
+    // streamed it is one 64-float tile per worker.
+    //
+    // rss_mb is the process peak (VmHWM), which only ever grows — so
+    // the f16 arm runs first and N ascends within each arm, making each
+    // reading the true high-water mark of its own point on any run
+    // where footprints are monotone (they are: f16 staging is strictly
+    // smaller than f32's at equal N).
+    let mut ns_t = Table::new(&["N", "arm", "fwd/s", "peak RSS MB"]);
+    let mut ns_arm_json = Vec::new();
+    let ns_kernel_ab_json;
+    let ns_cap: usize = if o.quick { 32_768 } else { 1_048_576 };
+    {
+        use bsa::backend::kernels;
+        use bsa::backend::native::Precision;
+
+        let ns_arch = |n: usize| {
+            let cmp = (n / 1024).clamp(1, 256);
+            ModelConfig {
+                dim: 32,
+                num_heads: 2,
+                num_blocks: 1,
+                ball_size: 256,
+                cmp_block: cmp,
+                sel_block: cmp,
+                top_k: (2048 / cmp).max(1),
+                group_size: 32,
+                seq_len: n,
+                ..Default::default()
+            }
+        };
+        for (label, precision) in
+            [("stream_f16", Precision::F16), ("stream_f32", Precision::F32)]
+        {
+            let mut pts = Vec::new();
+            for &n in &[4096usize, 32_768, 262_144, 1_048_576] {
+                if n > ns_cap {
+                    continue;
+                }
+                let mc = ns_arch(n);
+                mc.validate()?;
+                let be = NativeBackend::init(0, &mc, 6, 1, 1)?.with_precision(precision);
+                let x = {
+                    let mut rng = bsa::prng::Rng::new(n as u64 + 101);
+                    Tensor::new(vec![1, n, 6], rng.normals(n * 6))
+                };
+                // the big points are minutes of single-core work: one
+                // timed pass, no warmup (steady-state jitter is small
+                // next to a multi-second forward)
+                let timed = if n >= 262_144 { 1 } else { reps };
+                if n < 262_144 {
+                    let _ = be.forward(&x)?;
+                }
+                let t0 = Instant::now();
+                for _ in 0..timed {
+                    let out = be.forward(&x)?;
+                    std::hint::black_box(&out);
+                }
+                let fwd_per_s = timed as f64 / t0.elapsed().as_secs_f64();
+                let rss_mb = peak_rss_mb();
+                ns_t.row(&[
+                    n.to_string(),
+                    label.to_string(),
+                    format!("{fwd_per_s:.3}"),
+                    format!("{rss_mb:.0}"),
+                ]);
+                pts.push(format!(
+                    "{{\"n\": {n}, \"fwd_per_s\": {fwd_per_s:.4}, \"rss_mb\": {rss_mb:.1}}}"
+                ));
+            }
+            ns_arm_json.push(format!(
+                "{{\"label\": \"{label}\", \"points\": [{}]}}",
+                pts.join(", ")
+            ));
+        }
+
+        // fixed-shape kernel A/B: the production streaming attend vs the
+        // retained materialize-then-softmax pipeline, same inputs, both
+        // against their scratch footprint (the streaming side's whole
+        // point: a tile, not an nq x nk matrix)
+        let (nq, nk, d) = (1024usize, 1024usize, 16usize);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = bsa::prng::Rng::new(61).normals(nq * d);
+        let k = bsa::prng::Rng::new(62).normals(nk * d);
+        let v = bsa::prng::Rng::new(63).normals(nk * d);
+        let mut stream_out = vec![0.0f32; nq * d];
+        let mut stream_scratch = Vec::new();
+        let mut mat_out = vec![0.0f32; nq * d];
+        let mut mat_scratch = Vec::new();
+        let ab_calls = (3 * reps).max(3);
+        kernels::attend(&q, &k, &v, nq, nk, d, scale, 1, &mut stream_out, &mut stream_scratch);
+        kernels::attend_materialized(&q, &k, &v, nq, nk, d, scale, 1, &mut mat_out, &mut mat_scratch);
+        for (i, (a, b)) in stream_out.iter().zip(&mat_out).enumerate() {
+            assert!((a - b).abs() <= 1e-5, "stream vs materialized diverged at [{i}]");
+        }
+        let t0 = Instant::now();
+        for _ in 0..ab_calls {
+            kernels::attend(&q, &k, &v, nq, nk, d, scale, 1, &mut stream_out, &mut stream_scratch);
+            std::hint::black_box(&stream_out);
+        }
+        let stream_us = t0.elapsed().as_secs_f64() * 1e6 / ab_calls as f64;
+        let t0 = Instant::now();
+        for _ in 0..ab_calls {
+            kernels::attend_materialized(
+                &q, &k, &v, nq, nk, d, scale, 1, &mut mat_out, &mut mat_scratch,
+            );
+            std::hint::black_box(&mat_out);
+        }
+        let mat_us = t0.elapsed().as_secs_f64() * 1e6 / ab_calls as f64;
+        let stream_kb = stream_scratch.capacity() * 4 / 1024;
+        let mat_kb = mat_scratch.capacity() * 4 / 1024;
+        ns_kernel_ab_json = format!(
+            "{{\"nq\": {nq}, \"nk\": {nk}, \"d\": {d}, \
+             \"streaming_us\": {stream_us:.2}, \"materialized_us\": {mat_us:.2}, \
+             \"streaming_scratch_kb\": {stream_kb}, \"materialized_scratch_kb\": {mat_kb}}}"
+        );
+        ns_t.row(&[
+            format!("attend {nq}x{nk}"),
+            "stream vs mat".into(),
+            format!("{stream_us:.0} vs {mat_us:.0} us"),
+            format!("scratch {stream_kb} vs {mat_kb} KB"),
+        ]);
+    }
+
+    // --- level 7: native vs pjrt at the tiny config ----------------------
     let mut pjrt_json = String::from("{\"available\": false}");
     let mut pjrt_line = String::from(
         "pjrt comparison: artifacts unavailable (native-only run)\n",
@@ -1278,7 +1445,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         }
     }
 
-    // --- level 7: end-to-end native router (artifact-free serving) ------
+    // --- level 8: end-to-end native router (artifact-free serving) ------
     let mc = arch(256);
     let backend = Arc::new(NativeBackend::init(0, &mc, 6, 1, 1)?);
     let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
@@ -1316,6 +1483,9 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
          \"head_parallel\": {{\"arch\": {{\"dim\": {}, \"heads\": {}, \"blocks\": {}, \
          \"ball\": {}, \"n\": {}, \"batch\": {hp_batch}}}, \"units\": {hp_units}, \
          \"points\": [{}]}},\n  \
+         \"n_sweep\": {{\"max_n\": {ns_cap}, \"arch\": {{\"dim\": 32, \"heads\": 2, \
+         \"blocks\": 1, \"ball\": 256}}, \"arms\": [{}], \
+         \"kernel_ab\": {ns_kernel_ab_json}}},\n  \
          \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
         fwd_json.join(", "),
         sweep_json.join(", "),
@@ -1326,7 +1496,8 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         hp_mc.num_blocks,
         hp_mc.ball_size,
         hp_mc.seq_len,
-        hp_json.join(", ")
+        hp_json.join(", "),
+        ns_arm_json.join(", ")
     );
     // BENCH_native.json lives next to ROADMAP.md (the per-PR perf
     // trajectory); cargo runs benches from rust/, so look one level up.
@@ -1361,6 +1532,11 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         hp_mc.dim, hp_mc.num_heads, hp_mc.seq_len
     ));
     content.push_str(&hp_t.render());
+    content.push_str(&format!(
+        "\n### n_sweep — streaming forward scaling to N={ns_cap} \
+         (dim 32, 1 block, ball 256; f16 arm first, N ascending)\n\n"
+    ));
+    content.push_str(&ns_t.render());
     content.push('\n');
     content.push_str(&pjrt_line);
     content.push_str(&format!(

@@ -1,22 +1,37 @@
 //! Native CPU ports of the BSA attention kernels — parallel blocked
 //! versions plus `*_reference` scalar twins.
 //!
-//! Each `*_reference` function mirrors its pure-jnp oracle in
-//! `python/compile/kernels/ref.py` — same shapes, same masking
-//! constants, same top-k tie-breaking. The un-suffixed functions are the
-//! production kernels: they split their output over
-//! [`pool::par_rows`](super::pool::par_rows) chunks (balls for ball
-//! attention, blocks for compression, groups for selection/top-k) —
-//! executed by the persistent worker pool, not per-call threads — and
-//! compute each unit on the [`super::simd`] microkernels
-//! ([`attend_unit`]'s dot / max / exp-sum / axpy panels, the
-//! compression add/scale panels). With SIMD active the attention-family
-//! kernels match their twins to the documented **1e-5** differential
-//! bound (horizontal reductions reorder accumulation);
-//! [`compress_mean`] and [`topk_indices`] stay bitwise, and with
-//! `BSA_NATIVE_SIMD=off` every kernel runs the twin's exact scalar
-//! loops. In all modes, outputs are **bitwise stable across thread
-//! counts** — chunking never changes what a unit computes.
+//! The attention family is **streaming** (flash-style, the recipe of
+//! `python/compile/kernels/flash_attention.py`): keys are consumed in
+//! fixed [`STREAM_TILE`]-wide tiles with an online softmax (running
+//! max / exp-sum / rescaled output accumulator), so no kernel ever
+//! materializes an `nq * nk` score matrix — the only score storage is
+//! one stack tile per worker. [`attend_streaming`] has a scalar twin
+//! [`attend_streaming_reference`] (the same tiled loop pinned at the
+//! scalar SIMD level), and the old materialize-then-softmax composition
+//! survives as [`attend_materialized`] / [`attend_reference`] — the
+//! latter still mirrors the pure-jnp oracle in
+//! `python/compile/kernels/ref.py` bit-for-bit and serves as the
+//! *materialized oracle* the streaming kernels are differentially
+//! tested against (streaming reorders the softmax reduction, so that
+//! comparison carries the documented 1e-5 tier, not bitwise).
+//!
+//! The remaining `*_reference` twins mirror ref.py's shapes, masking
+//! constants, and top-k tie-breaking; the ball/selection references run
+//! the scalar streaming loop per unit since the streaming kernel
+//! landed. The un-suffixed functions are the production kernels: they
+//! split their output over [`pool::par_rows`](super::pool::par_rows)
+//! chunks (balls for ball attention, blocks for compression, groups
+//! for selection/top-k) — executed by the persistent worker pool, not
+//! per-call threads — and compute each unit on the [`super::simd`]
+//! microkernels ([`stream_row`]'s tile-score / max / exp-sum / rescale
+//! / axpy panels, the compression add/scale panels). With SIMD active
+//! the attention-family kernels match their twins to the documented
+//! **1e-5** differential bound (horizontal reductions reorder
+//! accumulation); [`compress_mean`] and [`topk_indices`] stay bitwise,
+//! and with `BSA_NATIVE_SIMD=off` every kernel runs the twin's exact
+//! scalar loops. In all modes, outputs are **bitwise stable across
+//! thread counts** — chunking never changes what a unit computes.
 //! `rust/tests/conformance.rs` sweeps all of this across randomized
 //! shapes and thread counts (see "Kernel conformance" in [`super`]).
 //! The head-parallel attention in [`super::native`] calls these kernels
@@ -31,7 +46,7 @@
 //! `l`, selection group `g`, `k*` selected blocks.
 
 use super::linalg::{
-    matmul, matmul_nt, matmul_nt_reference, matmul_reference, softmax_row_simd, softmax_rows,
+    matmul, matmul_nt, matmul_nt_reference, matmul_reference, softmax_rows,
     softmax_rows_reference,
 };
 use super::{pool, simd};
@@ -40,12 +55,138 @@ use super::{pool, simd};
 /// all-masked row softmaxes to uniform instead of NaN.
 pub const NEG_INF: f32 = -1e30;
 
-/// Dense scaled-dot-product attention: `out = softmax(q k^T * scale) v`,
-/// parallel over query rows (the compression branch calls this with
-/// `nq = N`). `q` is `(nq, d)`, `k`/`v` are `(nk, d)`, `out` is
-/// `(nq, d)`. `scores` is caller-owned scratch, resized to `nq * nk`.
+/// Key-tile width of the streaming attention kernels: per query row,
+/// keys are consumed in fixed tiles of this many scores — the *only*
+/// score storage the streaming path ever holds (one stack buffer per
+/// worker), vs the `nq * nk` matrix the materialized path allocates.
+pub const STREAM_TILE: usize = 64;
+
+/// Dense scaled-dot-product attention: `out = softmax(q k^T * scale) v`.
+/// `q` is `(nq, d)`, `k`/`v` are `(nk, d)`, `out` is `(nq, d)`.
+///
+/// Since the fused streaming kernel landed this is an alias for
+/// [`attend_streaming`] — one pass over the keys, online softmax, no
+/// `nq * nk` score buffer. The caller-owned `scores` scratch is kept
+/// for call-compatibility and *shrunk* (see [`attend_streaming`]); the
+/// old materialize-then-softmax composition survives as
+/// [`attend_materialized`] for benches and differential tests.
 #[allow(clippy::too_many_arguments)]
 pub fn attend(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    threads: usize,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    attend_streaming(q, k, v, nq, nk, d, scale, threads, out, scores)
+}
+
+/// Fused streaming attention (flash-style, ROADMAP item 3): a single
+/// pass over the keys in [`STREAM_TILE`]-wide tiles, each query row
+/// maintaining a running max `m`, exp-sum `l`, and output accumulator
+/// with the standard online-softmax rescale `acc *= exp(m_old - m_new)`
+/// — the recipe of `python/compile/kernels/flash_attention.py`.
+/// Parallel over query rows; per-row work runs on the [`super::simd`]
+/// streaming panels (`tile_scores` / `row_max` / `exp_sum` / `exp_one`
+/// / `rescale` / `axpy`), with all accumulation in f32.
+///
+/// Memory: no `nq * nk` score matrix is ever allocated — each worker
+/// keeps one [`STREAM_TILE`] score tile on its stack. The caller-owned
+/// `scores` scratch (signature-compatible with [`attend_materialized`])
+/// is cleared and shrunk to at most [`STREAM_TILE`] capacity, so
+/// pooled scratch free-lists (e.g. `native::HeadScratch`) stop pinning
+/// one large unit's `nq * nk` peak for the process lifetime.
+///
+/// Numerics (the documented tiers — see "Kernel conformance" in
+/// [`super`]): vs the scalar twin [`attend_streaming_reference`] this
+/// is a 1e-5 differential twin at SIMD levels and **bitwise** under
+/// `BSA_NATIVE_SIMD=off`; vs the materialized oracle
+/// [`attend_reference`] the streaming reordering of the softmax
+/// reduction also stays within the same 1e-5 sweep bound. A query row
+/// whose whole tile sweep has `max == -inf` produces the uniform value
+/// mean, mirroring `softmax_rows`' documented uniform-instead-of-NaN
+/// behavior for all-masked rows (see [`stream_row`]).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_streaming(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    threads: usize,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    debug_assert_eq!(out.len(), nq * d, "attend out len");
+    // Streaming-mode scratch is tile-sized by contract: release any
+    // nq*nk capacity a previous materialized call left behind.
+    scores.clear();
+    if scores.capacity() > STREAM_TILE {
+        scores.shrink_to(STREAM_TILE);
+    }
+    let lvl = simd::active();
+    pool::par_rows(out, d, threads, |q0, ochunk| {
+        let mut tile = [0.0f32; STREAM_TILE];
+        for (i, orow) in ochunk.chunks_exact_mut(d).enumerate() {
+            let p = q0 + i;
+            stream_row(lvl, &q[p * d..(p + 1) * d], k, v, nk, d, scale, orow, &mut tile);
+        }
+    });
+}
+
+/// Scalar twin of [`attend_streaming`]: the same tiled online-softmax
+/// loop pinned at [`simd::Level::Scalar`] (libm exp, left-to-right
+/// reduction chains), serial. Bitwise-equal to the fast kernel under
+/// `BSA_NATIVE_SIMD=off` at every thread count; differs from the
+/// materialized [`attend_reference`] only by the streaming reduction
+/// order (the 1e-5 tier).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_streaming_reference(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    debug_assert_eq!(out.len(), nq * d, "attend out len");
+    scores.clear();
+    if scores.capacity() > STREAM_TILE {
+        scores.shrink_to(STREAM_TILE);
+    }
+    let mut tile = [0.0f32; STREAM_TILE];
+    for i in 0..nq {
+        stream_row(
+            simd::Level::Scalar,
+            &q[i * d..(i + 1) * d],
+            k,
+            v,
+            nk,
+            d,
+            scale,
+            &mut out[i * d..(i + 1) * d],
+            &mut tile,
+        );
+    }
+}
+
+/// The pre-streaming composition (materialize `nq * nk` scores, scale,
+/// row softmax, dense matmul with the values), kept as the bench A/B
+/// comparator and a second differential oracle. `scores` is resized to
+/// `nq * nk` — this is the path whose peak memory the streaming kernel
+/// exists to avoid.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_materialized(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -64,8 +205,11 @@ pub fn attend(
     matmul(scores, v, nq, nk, d, threads, out);
 }
 
-/// Scalar twin of [`attend`] (and the building block the parallel ball /
-/// selection kernels run per unit on their own thread).
+/// Scalar materialized oracle: mirrors the pure-jnp
+/// `ref.py::ref_attend` composition bit-for-bit (full score matrix,
+/// reference softmax, reference matmul). The streaming kernels are
+/// differentially tested against this at the 1e-5 tier; the scalar
+/// *streaming* twin is [`attend_streaming_reference`].
 #[allow(clippy::too_many_arguments)]
 pub fn attend_reference(
     q: &[f32],
@@ -87,17 +231,85 @@ pub fn attend_reference(
     matmul_reference(scores, v, nq, nk, d, out);
 }
 
-/// One serial attention unit on the [`super::simd`] microkernels: per
-/// query row, `simd::dot` scores against every key, the row softmax
-/// panels, and an ascending-key `simd::axpy` accumulation of the
-/// values — the same per-element op sequence as the parallel
-/// [`attend`] composition, so a ball/selection unit computed here is a
-/// 1e-5 twin of [`attend_reference`] when SIMD is active. When SIMD is
-/// off this delegates to the scalar twin verbatim, keeping the
-/// `BSA_NATIVE_SIMD=off` path bitwise. The ball and selection kernels
-/// run this per chunk unit; thread counts never change what a unit
-/// computes.
+/// One query row of the streaming kernel at an explicit SIMD level:
+/// walk the keys in [`STREAM_TILE`]-wide tiles keeping the running max
+/// `m`, exp-sum `l`, and the value accumulator in `orow` (always f32 —
+/// reduced-precision *storage* happens a layer up, in
+/// `native`'s forward staging). Per tile: scaled scores
+/// ([`simd::tile_scores_at`]), the tile max, an
+/// `alpha = exp(m - m_new)` rescale of `orow` and `l` when the max
+/// rises ([`simd::exp_one_at`] + [`simd::rescale_at`] — same exp
+/// rounding as the weights, element-parallel rescale), in-place
+/// exponentials summed into `l` ([`simd::exp_sum_at`]), and an
+/// ascending-key [`simd::axpy_at`] of the weights into `orow`. The
+/// final `1/l` normalization replaces the softmax division.
+///
+/// All-masked semantics: a tile whose max is `-inf` (true infinities —
+/// the finite [`NEG_INF`] never triggers this) contributes nothing and
+/// is skipped, because `exp(-inf - -inf)` is NaN. If the *whole* sweep
+/// was skipped (`l == 0` at the end) the row degrades to the uniform
+/// value mean — the same "uniform instead of NaN" contract
+/// `softmax_rows` documents for all-masked rows. Rows masked with the
+/// finite [`NEG_INF`] take the ordinary path and land on the same
+/// uniform row, exactly like the materialized kernel.
 #[allow(clippy::too_many_arguments)]
+fn stream_row(
+    lvl: simd::Level,
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nk: usize,
+    d: usize,
+    scale: f32,
+    orow: &mut [f32],
+    tile: &mut [f32; STREAM_TILE],
+) {
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    orow.fill(0.0);
+    let mut j0 = 0usize;
+    while j0 < nk {
+        let tl = STREAM_TILE.min(nk - j0);
+        let t = &mut tile[..tl];
+        simd::tile_scores_at(lvl, qrow, &k[j0 * d..(j0 + tl) * d], d, scale, t);
+        let tmax = simd::row_max_at(lvl, t);
+        if tmax == f32::NEG_INFINITY {
+            j0 += tl;
+            continue;
+        }
+        if tmax > m {
+            if l > 0.0 {
+                let alpha = simd::exp_one_at(lvl, m - tmax);
+                simd::rescale_at(lvl, orow, alpha);
+                l *= alpha;
+            }
+            m = tmax;
+        }
+        l += simd::exp_sum_at(lvl, t, m);
+        for (jj, &w) in t.iter().enumerate() {
+            let j = j0 + jj;
+            simd::axpy_at(lvl, w, &v[j * d..(j + 1) * d], orow);
+        }
+        j0 += tl;
+    }
+    if l > 0.0 {
+        simd::scale_at(lvl, orow, 1.0 / l);
+    } else {
+        // every tile was -inf-masked (or nk == 0): uniform value mean
+        let w = 1.0 / nk as f32;
+        for j in 0..nk {
+            simd::axpy_at(lvl, w, &v[j * d..(j + 1) * d], orow);
+        }
+    }
+}
+
+/// One streaming attention unit on the caller's thread — the per-ball /
+/// per-group body of [`ball_attention`] and [`select_attention`]:
+/// [`stream_row`] per query at the active SIMD level, one stack tile as
+/// the only score storage. Under `BSA_NATIVE_SIMD=off` this runs
+/// [`attend_streaming_reference`]'s exact loop, which keeps the ball
+/// and selection kernels bitwise twins of their references in scalar
+/// mode; thread counts never change what a unit computes.
 fn attend_unit(
     q: &[f32],
     k: &[f32],
@@ -107,26 +319,21 @@ fn attend_unit(
     d: usize,
     scale: f32,
     out: &mut [f32],
-    scores: &mut Vec<f32>,
 ) {
     let lvl = simd::active();
-    if lvl == simd::Level::Scalar {
-        attend_reference(q, k, v, nq, nk, d, scale, out, scores);
-        return;
-    }
-    scores.resize(nq * nk, 0.0);
+    let mut tile = [0.0f32; STREAM_TILE];
     for i in 0..nq {
-        let qrow = &q[i * d..(i + 1) * d];
-        let srow = &mut scores[i * nk..(i + 1) * nk];
-        for (j, s) in srow.iter_mut().enumerate() {
-            *s = simd::dot_at(lvl, qrow, &k[j * d..(j + 1) * d]) * scale;
-        }
-        softmax_row_simd(lvl, srow);
-        let orow = &mut out[i * d..(i + 1) * d];
-        orow.fill(0.0);
-        for (j, &w) in srow.iter().enumerate() {
-            simd::axpy_at(lvl, w, &v[j * d..(j + 1) * d], orow);
-        }
+        stream_row(
+            lvl,
+            &q[i * d..(i + 1) * d],
+            k,
+            v,
+            nk,
+            d,
+            scale,
+            &mut out[i * d..(i + 1) * d],
+            &mut tile,
+        );
     }
 }
 
@@ -150,26 +357,17 @@ pub fn ball_attention(
     let scale = 1.0 / (d as f32).sqrt();
     let chunk = ball_size * d;
     pool::par_rows(out, chunk, threads, |ball0, ochunk| {
-        let mut scores = Vec::new();
         for (bi, oball) in ochunk.chunks_exact_mut(chunk).enumerate() {
             let r = (ball0 + bi) * chunk..(ball0 + bi + 1) * chunk;
-            attend_unit(
-                &q[r.clone()],
-                &k[r.clone()],
-                &v[r],
-                ball_size,
-                ball_size,
-                d,
-                scale,
-                oball,
-                &mut scores,
-            );
+            attend_unit(&q[r.clone()], &k[r.clone()], &v[r], ball_size, ball_size, d, scale, oball);
         }
     });
 }
 
-/// Scalar twin of [`ball_attention`] (caller-owned `scores` scratch,
-/// like the original serial kernel).
+/// Scalar twin of [`ball_attention`]: the scalar streaming loop
+/// ([`attend_streaming_reference`]) per ball, serial. The `scores`
+/// scratch is kept for call-compatibility with the original serial
+/// kernel and stays tile-sized under the streaming contract.
 #[allow(clippy::too_many_arguments)]
 pub fn ball_attention_reference(
     q: &[f32],
@@ -186,7 +384,7 @@ pub fn ball_attention_reference(
     let chunk = ball_size * d;
     for b in 0..n / ball_size {
         let r = b * chunk..(b + 1) * chunk;
-        attend_reference(
+        attend_streaming_reference(
             &q[r.clone()],
             &k[r.clone()],
             &v[r.clone()],
@@ -391,7 +589,6 @@ pub fn select_attention(
     pool::par_rows(out, gd, threads, |p0, ochunk| {
         let mut ksel = vec![0.0f32; top_k * blk];
         let mut vsel = vec![0.0f32; top_k * blk];
-        let mut scores = Vec::new();
         for (pi, ogroup) in ochunk.chunks_exact_mut(gd).enumerate() {
             let p = p0 + pi;
             for (j, &bi) in idx[p * top_k..(p + 1) * top_k].iter().enumerate() {
@@ -399,23 +596,14 @@ pub fn select_attention(
                 ksel[j * blk..(j + 1) * blk].copy_from_slice(&k[bi * blk..(bi + 1) * blk]);
                 vsel[j * blk..(j + 1) * blk].copy_from_slice(&v[bi * blk..(bi + 1) * blk]);
             }
-            attend_unit(
-                &q[p * gd..(p + 1) * gd],
-                &ksel,
-                &vsel,
-                group,
-                top_k * sel_block,
-                d,
-                scale,
-                ogroup,
-                &mut scores,
-            );
+            attend_unit(&q[p * gd..(p + 1) * gd], &ksel, &vsel, group, top_k * sel_block, d, scale, ogroup);
         }
     });
 }
 
 /// Scalar twin of [`select_attention`] (caller-owned gather scratch,
-/// like the original serial kernel).
+/// like the original serial kernel; the per-group attention is the
+/// scalar streaming loop, so `scores` stays tile-sized).
 #[allow(clippy::too_many_arguments)]
 pub fn select_attention_reference(
     q: &[f32],
@@ -446,7 +634,7 @@ pub fn select_attention_reference(
             vsel[j * blk..(j + 1) * blk].copy_from_slice(&v[bi * blk..(bi + 1) * blk]);
         }
         let qr = p * group * d..(p + 1) * group * d;
-        attend_reference(
+        attend_streaming_reference(
             &q[qr.clone()],
             ksel,
             vsel,
@@ -482,9 +670,136 @@ mod tests {
         for &o in &out {
             assert!((o - 3.0).abs() < 1e-6);
         }
+        // Bitwise vs the scalar streaming twin even with SIMD active:
+        // identical keys give identical per-row logits at every level,
+        // so max-subtraction yields exp(0) == 1.0 exactly everywhere and
+        // only element-parallel (bitwise-tier) panels touch the data.
         let mut refr = vec![0.0f32; d];
-        attend_reference(&q, &k, &v, 1, 2, d, 0.5, &mut refr, &mut s);
+        let mut s2 = Vec::new();
+        attend_streaming_reference(&q, &k, &v, 1, 2, d, 0.5, &mut refr, &mut s2);
         assert_eq!(out, refr);
+        // ...and within the documented 1e-5 tier of the materialized oracle.
+        let mut oracle = vec![0.0f32; d];
+        attend_reference(&q, &k, &v, 1, 2, d, 0.5, &mut oracle, &mut s);
+        for (a, b) in out.iter().zip(&oracle) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn attend_streaming_matches_materialized_across_tile_boundaries() {
+        // nk straddling STREAM_TILE: below, exactly one tile, one over,
+        // and a two-tile-plus-tail width. The streaming result must stay
+        // within the documented 1e-5 tier of the materialized oracle and
+        // the scratch must stay tile-sized.
+        let (nq, d) = (3usize, 5usize);
+        for &nk in &[1usize, 2, STREAM_TILE - 1, STREAM_TILE, STREAM_TILE + 1, 2 * STREAM_TILE + 2] {
+            let q = rand(nq * d, 40 + nk as u64);
+            let k = rand(nk * d, 41 + nk as u64);
+            let v = rand(nk * d, 42 + nk as u64);
+            let scale = 1.0 / (d as f32).sqrt();
+            let mut fast = vec![0.0f32; nq * d];
+            let mut s1 = Vec::new();
+            attend_streaming(&q, &k, &v, nq, nk, d, scale, 2, &mut fast, &mut s1);
+            assert!(
+                s1.capacity() <= STREAM_TILE,
+                "streaming scratch grew to {} for nk={nk}",
+                s1.capacity()
+            );
+            let mut oracle = vec![0.0f32; nq * d];
+            let mut s2 = Vec::new();
+            attend_reference(&q, &k, &v, nq, nk, d, scale, &mut oracle, &mut s2);
+            for (a, b) in fast.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-5, "nk={nk}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn attend_streaming_shrinks_inherited_materialized_scratch() {
+        // The satellite bugfix: a large materialized call grows the
+        // caller-owned scratch to nq*nk; the next streaming call through
+        // the same scratch must release that capacity, not pin it.
+        let (nq, nk, d) = (6usize, STREAM_TILE, 4usize);
+        let q = rand(nq * d, 50);
+        let k = rand(nk * d, 51);
+        let v = rand(nk * d, 52);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut s = Vec::new();
+        let mut a = vec![0.0f32; nq * d];
+        attend_materialized(&q, &k, &v, nq, nk, d, scale, 2, &mut a, &mut s);
+        assert!(s.capacity() >= nq * nk, "materialized path should grow scratch");
+        let mut b = vec![0.0f32; nq * d];
+        attend(&q, &k, &v, nq, nk, d, scale, 2, &mut b, &mut s);
+        assert!(
+            s.capacity() <= STREAM_TILE,
+            "streaming call left {} capacity pinned",
+            s.capacity()
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn attend_streaming_all_masked_rows_are_uniform_not_nan() {
+        // Finite NEG_INF masking takes the ordinary path and softmaxes
+        // to uniform; true -inf masking (every tile skipped) must hit
+        // the l == 0 fallback and produce the same uniform mean, never
+        // NaN. nk spans one full tile plus a tail so both the skip and
+        // the tail interact.
+        let (nq, d) = (2usize, 3usize);
+        let nk = STREAM_TILE + 6;
+        let mut q = vec![0.0f32; nq * d];
+        for i in 0..nq {
+            q[i * d] = 1.0; // rows [1, 0, 0]
+        }
+        let v = rand(nk * d, 60);
+        let scale = 1.0;
+        let mean: Vec<f32> = (0..d)
+            .map(|c| (0..nk).map(|j| v[j * d + c]).sum::<f32>() / nk as f32)
+            .collect();
+
+        // finite mask: k rows [NEG_INF, 0, 0] => every logit NEG_INF
+        let mut k = vec![0.0f32; nk * d];
+        for j in 0..nk {
+            k[j * d] = NEG_INF;
+        }
+        let mut out = vec![0.0f32; nq * d];
+        let mut s = Vec::new();
+        attend_streaming(&q, &k, &v, nq, nk, d, scale, 2, &mut out, &mut s);
+        let mut oracle = vec![0.0f32; nq * d];
+        let mut so = Vec::new();
+        attend_reference(&q, &k, &v, nq, nk, d, scale, &mut oracle, &mut so);
+        for i in 0..nq {
+            for c in 0..d {
+                let o = out[i * d + c];
+                assert!(o.is_finite(), "finite-mask row {i} produced {o}");
+                assert!((o - oracle[i * d + c]).abs() < 1e-5);
+                assert!((o - mean[c]).abs() < 1e-4, "{o} vs mean {}", mean[c]);
+            }
+        }
+
+        // true -inf mask: every tile max is -inf, whole sweep skipped
+        for j in 0..nk {
+            k[j * d] = f32::NEG_INFINITY;
+        }
+        let mut out2 = vec![0.0f32; nq * d];
+        attend_streaming(&q, &k, &v, nq, nk, d, scale, 2, &mut out2, &mut s);
+        // The masked path touches only element-parallel panels, so this
+        // holds bitwise vs the scalar twin even with SIMD active.
+        let mut refr = vec![0.0f32; nq * d];
+        let mut sr = Vec::new();
+        attend_streaming_reference(&q, &k, &v, nq, nk, d, scale, &mut refr, &mut sr);
+        for (i, (&o, &r)) in out2.iter().zip(&refr).enumerate() {
+            assert!(o.is_finite(), "-inf-mask element {i} produced {o}");
+            assert_eq!(o, r);
+        }
+        for i in 0..nq {
+            for c in 0..d {
+                assert!((out2[i * d + c] - mean[c]).abs() < 1e-4);
+            }
+        }
     }
 
     #[test]

@@ -21,7 +21,11 @@
 //! (`BSA_NATIVE_SIMD=off`). The differential harness in
 //! `rust/tests/conformance.rs` sweeps randomized shapes and thread
 //! counts against the twins; see the "Kernel conformance" section of
-//! [`super`]'s docs before touching either side of a pair.
+//! [`super`]'s docs before touching either side of a pair. (The
+//! attention hot path in [`super::kernels`] now streams its softmax
+//! tile-by-tile and no longer materializes score rows through
+//! [`softmax_rows`]; the full-row softmax here serves the materialized
+//! comparator and any dense-row callers.)
 //!
 //! The GEMM is a panel-blocked kernel: B is packed one `KC x NC` panel
 //! at a time into a dense per-thread buffer (so the inner loops stream a
@@ -208,10 +212,12 @@ pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize, threads: usize) {
     });
 }
 
-/// One softmax row on the SIMD panels at a pre-resolved level (shared
-/// with the per-unit attention kernels in [`super::kernels`]).
+/// One softmax row on the SIMD panels at a pre-resolved level. (The
+/// attention kernels in [`super::kernels`] no longer share this — the
+/// streaming path folds the softmax into its online tile loop; this is
+/// now only the materialized path's row body.)
 #[inline]
-pub(super) fn softmax_row_simd(lvl: simd::Level, row: &mut [f32]) {
+fn softmax_row_simd(lvl: simd::Level, row: &mut [f32]) {
     let max = simd::row_max_at(lvl, row);
     let sum = simd::exp_sum_at(lvl, row, max);
     // All-(-inf) rows cannot occur here (the own-ball mask uses a large

@@ -22,7 +22,10 @@
 //! `NativeBackend` loads weights from the same flat-binary named-array
 //! container the trainer already checkpoints (`.bsackpt`, see
 //! [`checkpoint`](crate::coordinator::checkpoint)): `magic "BSAC" |
-//! version | step | count | (name, dims, f32 data)*`. Array names are the
+//! version | step | count | (name, dims, dtype, data)*`. Since format
+//! version 2 each array carries a storage-dtype byte (0 = f32, 1 = IEEE
+//! binary16 via [`crate::half`]); version-1 files have no dtype byte and
+//! the loader up-converts them as all-f32. Array names are the
 //! dotted pytree paths the AOT manifest uses (`blocks.0.attn.wq`,
 //! `embed_w`, …); optimizer-moment arrays (`m.*` / `v.*`) in a full
 //! training checkpoint are ignored, so a trainer checkpoint *is* a valid
@@ -44,7 +47,12 @@
 //! [`linalg::matmul_nt`]/[`linalg::matmul_nt_reference`],
 //! [`linalg::softmax_rows`]/[`linalg::softmax_rows_reference`],
 //! [`linalg::rms_norm`]/[`linalg::rms_norm_reference`],
-//! [`kernels::attend`]/[`kernels::attend_reference`],
+//! [`kernels::attend_streaming`]/[`kernels::attend_streaming_reference`]
+//! (with [`kernels::attend`] as the production alias of the streaming
+//! path, [`kernels::attend_materialized`] keeping the old
+//! materialize-then-softmax pipeline as a comparator, and
+//! [`kernels::attend_reference`] the scalar materialized oracle both
+//! variants are swept against),
 //! [`kernels::ball_attention`]/[`kernels::ball_attention_reference`],
 //! [`kernels::compress_mean`]/[`kernels::compress_mean_reference`],
 //! [`kernels::group_scores`]/[`kernels::group_scores_reference`],
@@ -53,7 +61,8 @@
 //! (`kernels::mask_own_ball` is elementwise and serves as its own
 //! reference).
 //!
-//! The twin contract has two tiers since the SIMD layer landed:
+//! The twin contract has four tiers since the streaming/f16 layer
+//! landed:
 //!
 //! * **1e-5 differential** — the acceptance bound every fast kernel
 //!   meets against its twin at every SIMD level, shape, and thread
@@ -62,6 +71,23 @@
 //!   `matmul_nt`, `softmax_rows`, `rms_norm`, and the attention family
 //!   genuinely differ from their twins in the last bits when SIMD is
 //!   active.
+//! * **streaming vs materialized (1e-5)** — the online-softmax
+//!   [`kernels::attend_streaming`] path visits keys tile by tile and
+//!   rescales its running accumulator, a different summation order from
+//!   the materialize-then-softmax pipeline; conformance sweeps hold it
+//!   to the same 1e-5 bound against [`kernels::attend_reference`] (the
+//!   materialized scalar oracle) across tile-tail widths, thread
+//!   counts, and SIMD levels. Against its *own* scalar twin
+//!   ([`kernels::attend_streaming_reference`]) the usual tier rules
+//!   apply: 1e-5 with SIMD active, bitwise with `BSA_NATIVE_SIMD=off`.
+//! * **f16 forward (5e-2 relative)** — with `--precision f16` the
+//!   native forward stores parameters and attention staging buffers as
+//!   IEEE binary16 ([`crate::half`], per-element relative error ≤ 2⁻¹¹)
+//!   while accumulating in f32; on unit-scale activations the forward
+//!   outputs stay within `5e-2 · (1 + |a|)` of the f32 forward
+//!   (asserted by `native::tests` and conformance). This is a storage
+//!   tier, not a kernel tier — every kernel still runs the f32 contract
+//!   above on the decoded values.
 //! * **bitwise** — retained in three places: (1) with
 //!   `BSA_NATIVE_SIMD=off` (or `--simd off`) every kernel runs the
 //!   twin's exact scalar loops, so fast == reference bit for bit
@@ -72,7 +98,8 @@
 //!   chunks are contiguous whole output rows and a unit's computation
 //!   never depends on which chunk or worker runs it, so the thread
 //!   budget stays a pure latency knob and the forward pass is bitwise
-//!   deterministic for any fixed SIMD level.
+//!   deterministic for any fixed SIMD level (f16 mode included: encode
+//!   and decode are deterministic per element).
 //!
 //! Dispatch runs on [`pool`]'s **persistent worker pool** (lazy-init,
 //! work queue, parked workers, at most [`pool::MAX_THREADS`] threads per
@@ -88,8 +115,10 @@
 //! `rust/tests/conformance.rs` is the differential harness that enforces
 //! all of this: randomized shape sweeps (uneven ball sizes, degenerate
 //! single-point balls, tie-heavy top-k rows, panel-boundary-crossing
-//! GEMMs, lane-tail lengths N%8 in 1..=7, single-row panels,
-//! subnormal/huge logits) comparing fast vs reference within 1e-5,
+//! GEMMs, lane-tail lengths N%8 in 1..=7, streaming tile tails
+//! nk % [`kernels::STREAM_TILE`] in 1..=7, single-key units, all-masked
+//! rows, single-row panels, subnormal/huge logits) comparing fast vs
+//! reference within 1e-5,
 //! pool-reuse and pool-lifecycle checks, a concurrent bit-determinism
 //! check on a shared `Arc<dyn Backend>`, and the native-vs-pjrt fixture
 //! gate; `rust/tests/simd_off.rs` pins the `BSA_NATIVE_SIMD=off`

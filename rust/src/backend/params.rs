@@ -134,15 +134,29 @@ impl NativeParams {
             .map_err(|e| anyhow::anyhow!("loading native params from {}: {e}", path.display()))
     }
 
-    /// Save as a `.bsackpt` param file (round-trips through
-    /// [`load`](Self::load)).
+    /// Save as a `.bsackpt` param file with f32 storage (round-trips
+    /// through [`load`](Self::load) exactly).
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.save_with_dtype(path, crate::coordinator::checkpoint::Dtype::F32)
+    }
+
+    /// Save with an explicit storage dtype (the checkpoint v2 dtype
+    /// axis). [`Dtype::F16`](crate::coordinator::checkpoint::Dtype)
+    /// halves the file; each element is rounded to the nearest binary16
+    /// value on write and up-converted exactly on load, so a reload
+    /// returns the f16-grid quantization of these params — the same
+    /// values `--precision f16` serving computes with.
+    pub fn save_with_dtype(
+        &self,
+        path: &Path,
+        dtype: crate::coordinator::checkpoint::Dtype,
+    ) -> anyhow::Result<()> {
         let arrays = self
             .named_arrays()
             .into_iter()
             .map(|(n, t)| (n, t.clone()))
             .collect();
-        crate::coordinator::checkpoint::Checkpoint { step: 0, arrays }.save(path)
+        crate::coordinator::checkpoint::Checkpoint { step: 0, arrays }.save_with_dtype(path, dtype)
     }
 
     /// Deterministic random initialization matching the jax init's
@@ -363,6 +377,25 @@ mod tests {
         let q = NativeParams::load(&path).unwrap();
         assert_eq!(p.embed_w, q.embed_w);
         assert_eq!(p.blocks[1].mlp.w2, q.blocks[1].mlp.w2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_f16_loads_as_half_grid_quantization() {
+        let p = tiny();
+        let path = std::env::temp_dir().join("bsa_native_params_f16_test.bsackpt");
+        p.save_with_dtype(&path, crate::coordinator::checkpoint::Dtype::F16)
+            .unwrap();
+        let q = NativeParams::load(&path).unwrap();
+        q.validate().unwrap();
+        let mut want = p.embed_w.data().to_vec();
+        crate::half::quantize_slice(&mut want);
+        assert_eq!(q.embed_w.data(), &want[..]);
+        // Glorot-scaled init values sit well inside the f16 normal
+        // range, so quantization error obeys the 2^-11 relative bound.
+        for (a, b) in p.embed_w.data().iter().zip(q.embed_w.data()) {
+            assert!((a - b).abs() <= a.abs() / 2048.0 + 1e-7, "{a} vs {b}");
+        }
         std::fs::remove_file(path).ok();
     }
 }

@@ -52,7 +52,16 @@
 //! on them — `matmul_nt`, `softmax_rows`, `rms_norm`, and the
 //! attention family — therefore match their `*_reference` twins to the
 //! documented **1e-5 differential bound** rather than bitwise (see
-//! "Kernel conformance" in [`super`]). Two properties survive
+//! "Kernel conformance" in [`super`]).
+//!
+//! The streaming-attention panels follow the same split:
+//! [`tile_scores`] is a reduction (per-key [`dot`], so the 1e-5 tier),
+//! [`exp_one`] uses the level's `exp` numerics (libm at
+//! [`Level::Scalar`], [`exp_sum`]'s polynomial otherwise — the
+//! online-softmax rescale factor must round exactly like the tile
+//! weights or the running sum drifts from the one-pass softmax it
+//! mirrors), and [`rescale`] is element-parallel and **bitwise at
+//! every level** like [`scale`]. Two properties survive
 //! unconditionally:
 //!
 //! 1. **bitwise across thread counts** — the level is fixed
@@ -690,6 +699,79 @@ pub fn scale(x: &mut [f32], s: f32) {
     scale_at(active(), x, s)
 }
 
+// ---------------------------------------------------------------------------
+// streaming-attention panels (tile scores, single exp, accumulator rescale)
+//
+// The building blocks of kernels::attend_streaming's online softmax:
+// per key tile, scores = q·Kᵀ * scale (tile_scores), the tile max and
+// exponentials reuse row_max / exp_sum, the running-max correction
+// needs one exp with the *same* rounding as the tile weights (exp_one)
+// and an element-parallel accumulator rescale (rescale).
+// ---------------------------------------------------------------------------
+
+/// Scaled `q · Kᵀ` scores for one key tile at an explicit level:
+/// `out[j] = dot(q, keys[j*d..][..d]) * scale`. Built on [`dot_at`], so
+/// it inherits the reduction tier — 1e-5 vs the scalar chain, exact at
+/// [`Level::Scalar`]. `keys` holds `out.len()` contiguous rows of `d`
+/// floats.
+#[inline]
+pub fn tile_scores_at(
+    level: Level,
+    q: &[f32],
+    keys: &[f32],
+    d: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(keys.len(), out.len() * d, "tile_scores key tile shape");
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dot_at(level, q, &keys[j * d..(j + 1) * d]) * scale;
+    }
+}
+
+/// [`tile_scores_at`] at the [`active`] level.
+#[inline]
+pub fn tile_scores(q: &[f32], keys: &[f32], d: usize, scale: f32, out: &mut [f32]) {
+    tile_scores_at(active(), q, keys, d, scale, out)
+}
+
+/// One exponential with the level's `exp` numerics: libm at
+/// [`Level::Scalar`], the polynomial [`exp_lane`] everywhere else. The
+/// online-softmax rescale factor `alpha = exp(m_old - m_new)` must
+/// round exactly like the tile weights ([`exp_sum_at`]) at the same
+/// level, or the streaming running sum drifts from the one-pass
+/// softmax it reproduces — hence a dedicated dispatcher instead of
+/// `f32::exp` at the call site.
+#[inline]
+pub fn exp_one_at(level: Level, x: f32) -> f32 {
+    match level {
+        Level::Scalar => x.exp(),
+        _ => exp_lane(x),
+    }
+}
+
+/// [`exp_one_at`] at the [`active`] level.
+#[inline]
+pub fn exp_one(x: f32) -> f32 {
+    exp_one_at(active(), x)
+}
+
+/// Streaming-accumulator rescale `acc *= alpha` — the online softmax's
+/// correction step when the running max rises. Element-parallel (the
+/// [`scale_at`] panels), so it is **bitwise identical at every level**,
+/// which is what keeps the streaming kernel's `BSA_NATIVE_SIMD=off`
+/// path bitwise-equal to its scalar twin.
+#[inline]
+pub fn rescale_at(level: Level, acc: &mut [f32], alpha: f32) {
+    scale_at(level, acc, alpha)
+}
+
+/// [`rescale_at`] at the [`active`] level.
+#[inline]
+pub fn rescale(acc: &mut [f32], alpha: f32) {
+    rescale_at(active(), acc, alpha)
+}
+
 #[cfg(test)]
 mod tests {
     // These tests never call set_force: the dispatch level is process
@@ -808,6 +890,62 @@ mod tests {
                 *v *= a;
             }
             assert_eq!(fast, refr, "scale n={n}");
+        }
+    }
+
+    #[test]
+    fn tile_scores_are_scaled_per_key_dots() {
+        for nk in [1usize, 2, 5, 8, 11] {
+            for d in [1usize, 3, 8, 17] {
+                let q = Rng::new((nk * 31 + d) as u64).normals(d);
+                let keys = Rng::new((nk * 37 + d) as u64).normals(nk * d);
+                let scale = 0.31f32;
+                let mut out = vec![0.0f32; nk];
+                tile_scores(&q, &keys, d, scale, &mut out);
+                for j in 0..nk {
+                    let expect = dot_scalar(&q, &keys[j * d..(j + 1) * d]) * scale;
+                    let tol = sum_tol(
+                        q.iter().zip(&keys[j * d..(j + 1) * d]).map(|(a, b)| a * b),
+                        d,
+                    );
+                    assert!((out[j] - expect).abs() <= tol, "nk={nk} d={d} j={j}");
+                }
+                // explicit Scalar level is the exact reference chain
+                let mut exact = vec![0.0f32; nk];
+                tile_scores_at(Level::Scalar, &q, &keys, d, scale, &mut exact);
+                for j in 0..nk {
+                    assert_eq!(exact[j], dot_scalar(&q, &keys[j * d..(j + 1) * d]) * scale);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exp_one_matches_the_levels_exp_sum_numerics() {
+        // the rescale factor and the tile weights must round identically
+        // at a fixed level, or the streaming sum drifts
+        for &x in &[-0.5f32, -3.0, -20.0, 0.0, -1e30] {
+            assert_eq!(exp_one_at(Level::Scalar, x), x.exp(), "scalar twin is libm");
+            let mut row = [x];
+            let s = exp_sum_at(Level::Portable, &mut row, 0.0);
+            assert_eq!(exp_one_at(Level::Portable, x), row[0], "x={x}");
+            assert_eq!(s, row[0]);
+        }
+        assert_eq!(exp_one_at(Level::Portable, 0.0), 1.0);
+    }
+
+    #[test]
+    fn rescale_is_bitwise_scale_at_every_length() {
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let base = Rng::new(n as u64 + 21).normals(n);
+            let alpha = 0.731f32;
+            let mut fast = base.clone();
+            rescale(&mut fast, alpha);
+            let mut refr = base;
+            for v in refr.iter_mut() {
+                *v *= alpha;
+            }
+            assert_eq!(fast, refr, "rescale n={n}");
         }
     }
 

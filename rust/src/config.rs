@@ -399,6 +399,12 @@ pub struct ServeConfig {
     /// `backend::simd` for the 1e-5 twin rule SIMD levels operate
     /// under.
     pub native_simd: String,
+    /// Storage precision of the native backend's attention staging
+    /// buffers and (via load-time quantization) parameters: `"f32"`
+    /// (default) or `"f16"` (IEEE binary16 storage, f32 accumulation —
+    /// halves staging memory at a documented accuracy cost; see
+    /// `backend::native::Precision`).
+    pub precision: String,
 }
 
 impl Default for ServeConfig {
@@ -413,6 +419,7 @@ impl Default for ServeConfig {
             tree_cache: 64,
             native_threads: 0,
             native_simd: "auto".into(),
+            precision: "f32".into(),
         }
     }
 }
@@ -431,6 +438,7 @@ impl ServeConfig {
             native_threads: doc.int_or("serve", "native_threads", d.native_threads as i64)
                 as usize,
             native_simd: doc.str_or("serve", "native_simd", &d.native_simd),
+            precision: doc.str_or("serve", "precision", &d.precision),
         }
     }
 }
@@ -577,6 +585,13 @@ empty = []
         assert_eq!(ServeConfig::default().native_simd, "auto", "default = auto");
         let doc = Document::parse("[serve]\nnative_simd = \"off\"\n").unwrap();
         assert_eq!(ServeConfig::from_doc(&doc).native_simd, "off");
+    }
+
+    #[test]
+    fn serve_config_precision_knob() {
+        assert_eq!(ServeConfig::default().precision, "f32", "default = f32");
+        let doc = Document::parse("[serve]\nprecision = \"f16\"\n").unwrap();
+        assert_eq!(ServeConfig::from_doc(&doc).precision, "f16");
     }
 
     #[test]

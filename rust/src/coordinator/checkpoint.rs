@@ -1,16 +1,55 @@
-//! Checkpoint format (`.bsackpt`): named f32 arrays + training step.
+//! Checkpoint format (`.bsackpt`): named arrays + training step, with a
+//! per-array storage dtype since version 2.
 //!
 //! Layout (little-endian):
 //!   magic "BSAC" | version u32 | step u64 | count u32
-//!   per array: name_len u32 | name bytes | ndims u32 | dims u32... | f32 data
+//!   per array: name_len u32 | name bytes | ndims u32 | dims u32...
+//!              | dtype u8 (v2+) | data
+//!
+//! The dtype byte selects the on-disk element encoding: `0` = f32
+//! (4-byte LE), `1` = IEEE binary16 (2-byte LE, see [`crate::half`]).
+//! In-memory tensors are always f32 — f16 arrays are up-converted on
+//! load (exact) and rounded to nearest-even on save. **Version 1 files
+//! have no dtype byte** (every array is f32); the loader still accepts
+//! them, so checkpoints written before the dtype axis keep loading
+//! forever. See `docs/FORMATS.md` §1 for the normative spec.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::half;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"BSAC";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// On-disk element encoding of one checkpoint array (the v2 dtype byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    /// 4-byte little-endian IEEE single precision (dtype byte 0).
+    #[default]
+    F32,
+    /// 2-byte little-endian IEEE binary16 (dtype byte 1); up-converted
+    /// to f32 on load, rounded to nearest-even on save.
+    F16,
+}
+
+impl Dtype {
+    fn byte(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F16 => 1,
+        }
+    }
+
+    fn from_byte(b: u8) -> anyhow::Result<Dtype> {
+        match b {
+            0 => Ok(Dtype::F32),
+            1 => Ok(Dtype::F16),
+            _ => anyhow::bail!("corrupt checkpoint: unknown dtype byte {b}"),
+        }
+    }
+}
 
 /// A named tensor collection with a step counter.
 #[derive(Debug, Clone, PartialEq)]
@@ -20,7 +59,16 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Save with f32 storage for every array (the default dtype).
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.save_with_dtype(path, Dtype::F32)
+    }
+
+    /// Save every array with the given storage dtype. [`Dtype::F16`]
+    /// halves the file and rounds each element to the nearest binary16
+    /// value (relative error <= 2^-11 in the normal range; the load is
+    /// then exact).
+    pub fn save_with_dtype(&self, path: &Path, dtype: Dtype) -> anyhow::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -37,11 +85,23 @@ impl Checkpoint {
             for &d in t.shape() {
                 w.write_all(&(d as u32).to_le_bytes())?;
             }
-            let mut buf = Vec::with_capacity(t.len() * 4);
-            for x in t.data() {
-                buf.extend_from_slice(&x.to_le_bytes());
+            w.write_all(&[dtype.byte()])?;
+            match dtype {
+                Dtype::F32 => {
+                    let mut buf = Vec::with_capacity(t.len() * 4);
+                    for x in t.data() {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                    w.write_all(&buf)?;
+                }
+                Dtype::F16 => {
+                    let mut buf = Vec::with_capacity(t.len() * 2);
+                    for &x in t.data() {
+                        buf.extend_from_slice(&half::f32_to_f16_bits(x).to_le_bytes());
+                    }
+                    w.write_all(&buf)?;
+                }
             }
-            w.write_all(&buf)?;
         }
         Ok(())
     }
@@ -52,7 +112,10 @@ impl Checkpoint {
         r.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "not a .bsackpt file: {}", path.display());
         let version = read_u32(&mut r)?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        anyhow::ensure!(
+            version == 1 || version == VERSION,
+            "unsupported checkpoint version {version}"
+        );
         let mut step_b = [0u8; 8];
         r.read_exact(&mut step_b)?;
         let step = u64::from_le_bytes(step_b);
@@ -73,12 +136,30 @@ impl Checkpoint {
             }
             let n: usize = dims.iter().product();
             anyhow::ensure!(n < (1 << 28), "corrupt dims {dims:?}");
-            let mut buf = vec![0u8; n * 4];
-            r.read_exact(&mut buf)?;
-            let data = buf
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
+            // v1 records carry no dtype byte: legacy files are all-f32.
+            let dtype = if version == 1 {
+                Dtype::F32
+            } else {
+                let mut b = [0u8; 1];
+                r.read_exact(&mut b)?;
+                Dtype::from_byte(b[0])?
+            };
+            let data: Vec<f32> = match dtype {
+                Dtype::F32 => {
+                    let mut buf = vec![0u8; n * 4];
+                    r.read_exact(&mut buf)?;
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect()
+                }
+                Dtype::F16 => {
+                    let mut buf = vec![0u8; n * 2];
+                    r.read_exact(&mut buf)?;
+                    buf.chunks_exact(2)
+                        .map(|c| half::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                        .collect()
+                }
+            };
             arrays.push((name, Tensor::new(dims, data)));
         }
         Ok(Checkpoint { step, arrays })
@@ -108,6 +189,78 @@ mod tests {
         ck.save(&path).unwrap();
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(loaded, ck);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn f16_roundtrip_quantizes_to_half_grid() {
+        // Values exactly representable in f16 survive bit-for-bit; a
+        // value off the grid comes back as its nearest-even rounding.
+        let ck = Checkpoint {
+            step: 9,
+            arrays: vec![(
+                "w".into(),
+                Tensor::new(vec![4], vec![0.5, -1.25, 1.0 + 0.000_488_281_25, 3.0e-5]),
+            )],
+        };
+        let path = std::env::temp_dir().join("bsa_ckpt_f16_test.bsackpt");
+        ck.save_with_dtype(&path, Dtype::F16).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 9);
+        let got = loaded.arrays[0].1.data();
+        let want: Vec<f32> = ck.arrays[0]
+            .1
+            .data()
+            .iter()
+            .map(|&x| half::f16_bits_to_f32(half::f32_to_f16_bits(x)))
+            .collect();
+        assert_eq!(got, &want[..]);
+        // and the f16 file is smaller than its f32 twin
+        let f16_len = std::fs::metadata(&path).unwrap().len();
+        ck.save(&path).unwrap();
+        let f32_len = std::fs::metadata(&path).unwrap().len();
+        assert!(f16_len < f32_len, "{f16_len} vs {f32_len}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loads_legacy_v1_files_without_dtype_byte() {
+        // Hand-write a v1 file: no per-array dtype byte, f32 data.
+        let path = std::env::temp_dir().join("bsa_ckpt_v1_test.bsackpt");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"BSAC");
+        buf.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        buf.extend_from_slice(&77u64.to_le_bytes()); // step
+        buf.extend_from_slice(&1u32.to_le_bytes()); // count
+        buf.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        buf.push(b'w');
+        buf.extend_from_slice(&1u32.to_le_bytes()); // ndims
+        buf.extend_from_slice(&2u32.to_le_bytes()); // dims = [2]
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        buf.extend_from_slice(&(-2.5f32).to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 77);
+        assert_eq!(loaded.arrays[0].0, "w");
+        assert_eq!(loaded.arrays[0].1.data(), &[1.5, -2.5]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_dtype_byte() {
+        let ck = Checkpoint {
+            step: 0,
+            arrays: vec![("w".into(), Tensor::new(vec![1], vec![1.0]))],
+        };
+        let path = std::env::temp_dir().join("bsa_ckpt_baddtype.bsackpt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // dtype byte sits right before the final 4 data bytes
+        let pos = bytes.len() - 5;
+        bytes[pos] = 7;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("dtype"), "unexpected error: {err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -1,0 +1,219 @@
+//! Software IEEE 754 binary16 ("half") conversion — no hardware f16
+//! support or external crates required.
+//!
+//! The native backend uses f16 as a **storage** format only (checkpoint
+//! arrays with the v2 dtype byte, activation staging buffers in
+//! `backend::native` under `--precision f16`); every arithmetic kernel
+//! still accumulates in f32. These routines are therefore the entire
+//! f16 "ALU": encode f32 → u16 bits with round-to-nearest-even, decode
+//! u16 bits → f32 exactly.
+//!
+//! Semantics (validated bit-for-bit against `numpy.float16` by
+//! `python/tests/test_streaming_mirror.py`):
+//!
+//! * round-to-nearest-even on encode, including the subnormal range;
+//! * overflow (|x| ≥ 65520 after rounding) encodes ±inf;
+//! * underflow below half the smallest subnormal (≈ 2.98e-8) encodes ±0;
+//! * NaN encodes to a quiet NaN that preserves the sign bit;
+//! * decode is exact — every f16 value is representable in f32 — so
+//!   `decode(encode(x))` is the nearest-even f16 rounding of `x`, with
+//!   relative error ≤ 2⁻¹¹ for results in the normal range
+//!   (the tolerance-tier bound documented in `backend`'s
+//!   "Kernel conformance").
+
+/// Encode one f32 as IEEE binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / NaN: keep NaN-ness (set a mantissa bit so a signalling
+        // payload never collapses to inf), keep the sign.
+        return if mant == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+
+    // Unbiased exponent; f16 bias is 15, f32 bias is 127.
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        // Overflows the f16 exponent range: ±inf. (The largest finite
+        // f16 is 65504; anything that would round beyond it lands here
+        // via the rounding carry below or this branch directly.)
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        // Subnormal (or zero) in f16. Shift the implicit-1 mantissa so
+        // the result has no implicit bit, then round to nearest even.
+        if e < -10 {
+            return sign; // below half the smallest subnormal: ±0
+        }
+        let m = mant | 0x0080_0000; // implicit 1
+        let shift = (14 - e) as u32; // 14..=24
+        let half_ulp = 1u32 << (shift - 1);
+        let mut half = m >> shift;
+        let rem = m & ((1 << shift) - 1);
+        if rem > half_ulp || (rem == half_ulp && (half & 1) == 1) {
+            half += 1; // may carry into the smallest normal — still valid
+        }
+        return sign | half as u16;
+    }
+
+    // Normal range: keep the top 10 mantissa bits, round to nearest even.
+    let mut half = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half += 1; // mantissa carry may bump the exponent; 0x7c00 == inf is correct
+    }
+    sign | half as u16
+}
+
+/// Decode IEEE binary16 bits to f32 (exact — f32 covers all of f16).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: value = mant * 2^-24. Normalize into f32.
+            let shift = mant.leading_zeros() - 21; // bring MSB to bit 10
+            let m = (mant << shift) & 0x03ff;
+            let e = 127 - 15 - shift + 1;
+            sign | (e << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        if mant == 0 {
+            sign | 0x7f80_0000 // ±inf
+        } else {
+            sign | 0x7fc0_0000 | (mant << 13) // NaN, payload preserved
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a slice into a caller-owned bit buffer (resized to match).
+pub fn encode_slice(src: &[f32], dst: &mut Vec<u16>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&x| f32_to_f16_bits(x)));
+}
+
+/// Decode a bit slice into a caller-owned f32 buffer (resized to match).
+pub fn decode_slice(src: &[u16], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&h| f16_bits_to_f32(h)));
+}
+
+/// Round every element to the nearest f16 value in place — the f32 view
+/// of f16 storage. `backend::native` uses this to quantize parameters
+/// once at load time under `--precision f16`, so the arithmetic sees
+/// exactly the values a true half-precision store would hold.
+pub fn quantize_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(x: f32) -> f32 {
+        f16_bits_to_f32(f32_to_f16_bits(x))
+    }
+
+    #[test]
+    fn known_encodings() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // largest finite
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001); // smallest subnormal
+        assert_eq!(f32_to_f16_bits(6.103_515_6e-5), 0x0400); // smallest normal
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn overflow_saturates_to_infinity() {
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // rounds past 65504
+        assert_eq!(f32_to_f16_bits(1e30), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e30), 0xfc00);
+        // 65519.996 rounds down to 65504, not inf
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7bff);
+    }
+
+    #[test]
+    fn underflow_flushes_to_signed_zero() {
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-10), 0x8000);
+        // exactly half the smallest subnormal ties to even (zero)
+        assert_eq!(f32_to_f16_bits(2.980_232_2e-8), 0x0000);
+    }
+
+    #[test]
+    fn round_to_nearest_even_on_ties() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10); nearest-even keeps the even mantissa (1.0).
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_488_281_25), 0x3c00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9; nearest-even
+        // rounds up to the even mantissa 0x3c02.
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 0.000_488_281_25), 0x3c02);
+    }
+
+    #[test]
+    fn decode_covers_every_bit_pattern() {
+        // Exhaustive: decode all 65536 patterns, re-encode the finite
+        // ones; the round-trip must be the identity (f16 -> f32 is exact
+        // and the nearest f16 to an exact f16 value is itself).
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+                continue;
+            }
+            let back = f32_to_f16_bits(x);
+            assert_eq!(back, h, "pattern {h:#06x} decoded to {x} re-encoded to {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bound_holds_for_normals() {
+        // |roundtrip(x) - x| <= 2^-11 * |x| for x in the f16 normal range
+        let mut rng = crate::prng::Rng::new(7);
+        for u in rng.normals(10_000) {
+            let x = u * 100.0;
+            if x.abs() < 6.2e-5 || x.abs() > 65000.0 {
+                continue;
+            }
+            let r = roundtrip(x);
+            assert!(
+                (r - x).abs() <= x.abs() * (1.0 / 2048.0),
+                "x={x} roundtrip={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_helpers_roundtrip() {
+        let src = vec![0.5f32, -1.25, 3.75e-5, 1e30, -0.0];
+        let mut bits = Vec::new();
+        encode_slice(&src, &mut bits);
+        let mut back = Vec::new();
+        decode_slice(&bits, &mut back);
+        assert_eq!(back.len(), src.len());
+        assert_eq!(back[0], 0.5);
+        assert_eq!(back[1], -1.25);
+        assert_eq!(back[3], f32::INFINITY);
+        assert_eq!(back[4].to_bits(), (-0.0f32).to_bits());
+        let mut q = src.clone();
+        quantize_slice(&mut q);
+        assert_eq!(q, back);
+    }
+}

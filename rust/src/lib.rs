@@ -33,6 +33,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod flops;
+pub mod half;
 pub mod hlostats;
 pub mod metrics;
 pub mod prng;

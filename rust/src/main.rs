@@ -44,6 +44,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "threads", help: "native-backend kernel threads per forward pass, i.e. the demand each forward registers with the shared persistent worker pool (0 = auto: BSA_NATIVE_THREADS env var, else hardware parallelism; default: [serve] native_threads or 0); outputs are bitwise identical for every setting", takes_value: true, default: None },
         // no baked-in default: absent flag falls back to [serve] native_simd
         FlagSpec { name: "simd", help: "native-backend SIMD microkernels: auto (BSA_NATIVE_SIMD env var, else runtime AVX2/NEON detection) | on (best detected level) | off (scalar loops, bitwise *_reference numerics); default: [serve] native_simd or auto", takes_value: true, default: None },
+        // no baked-in default: absent flag falls back to [serve] precision
+        FlagSpec { name: "precision", help: "native-backend storage precision: f32 | f16 (half-precision parameters + attention staging buffers, f32 accumulation everywhere; outputs within the documented f16 tolerance tier); default: [serve] precision or f32", takes_value: true, default: None },
         FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
         FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
         FlagSpec { name: "out", help: "output path", takes_value: true, default: None },
@@ -183,6 +185,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     sc.workers = args.usize_flag("workers", sc.workers)?;
     sc.native_threads = args.usize_flag("threads", sc.native_threads)?;
     sc.native_simd = args.str_flag("simd", &sc.native_simd);
+    sc.precision = args.str_flag("precision", &sc.precision);
     // Resolve the process-wide SIMD dispatch level before any kernel
     // runs (`--simd` / [serve] native_simd; "auto" defers to the
     // BSA_NATIVE_SIMD env var and hardware detection).
@@ -208,12 +211,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         BackendKind::Native => {
             let backend = native_backend(args, &doc, &sc)?;
             println!(
-                "serving {} (native, artifact-free) on {} with {} workers, {} kernel threads, simd {}",
+                "serving {} (native, artifact-free) on {} with {} workers, {} kernel threads, simd {}, precision {}",
                 backend.spec().name,
                 sc.addr,
                 sc.workers,
                 backend.threads(),
-                bsa::backend::simd::active().name()
+                bsa::backend::simd::active().name(),
+                backend.precision()
             );
             Arc::new(bsa::coordinator::Router::start(Arc::new(backend), sc.clone())?)
         }
@@ -258,7 +262,11 @@ fn native_backend(
     }?;
     // `--threads` / [serve] native_threads; 0 defers to the
     // BSA_NATIVE_THREADS env override, then hardware parallelism.
-    Ok(backend.with_threads(sc.native_threads))
+    // `--precision f16` quantizes the weights once and switches the
+    // attention staging buffers to half-precision storage.
+    Ok(backend
+        .with_threads(sc.native_threads)
+        .with_precision(sc.precision.parse()?))
 }
 
 /// Load params from --checkpoint, or run an init graph for random weights.

@@ -6,8 +6,9 @@
 //! The server is backend-agnostic: the router it fronts may execute
 //! compiled HLO artifacts or the pure-Rust
 //! [`NativeBackend`](crate::backend::NativeBackend) (`bsa serve
-//! --backend native`) — the wire protocol and stats surface are
-//! identical either way.
+//! --backend native`, optionally with `--precision f16` half-storage
+//! forwards) — the wire protocol (always f32 on the wire) and stats
+//! surface are identical either way.
 //!
 //! Frame layout (little-endian):
 //!   request:  magic "BSRQ" | n u32 | d u32 | f u32 | coords n*d f32 | feats n*f f32

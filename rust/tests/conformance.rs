@@ -6,8 +6,16 @@
 //! pairs equivalent: randomized shape sweeps — uneven ball sizes,
 //! degenerate single-point balls, panel-boundary-crossing GEMMs,
 //! tie-heavy top-k rows, SIMD lane-tail lengths (N%8 in 1..=7),
-//! single-row panels, subnormal/huge logits — across randomized thread
-//! counts, asserting fast == reference within 1e-5. That tolerance is
+//! streaming tile tails (nk % STREAM_TILE in 1..=7), single-key units,
+//! all-masked rows, single-row panels, subnormal/huge logits — across
+//! randomized thread counts, asserting fast == reference within 1e-5.
+//! The streaming attention path (`attend_streaming`, the production
+//! `attend` since the online-softmax rewrite) is additionally held to
+//! the same bound against `attend_reference` — the *materialized*
+//! scalar oracle — so the tile-by-tile rescale numerics can never
+//! drift from the full-softmax math; and its tile-sized scratch
+//! contract (capacity never exceeds STREAM_TILE, i.e. no nq×nk score
+//! buffer exists) is asserted directly. That tolerance is
 //! the contract since the `backend::simd` microkernel layer landed:
 //! SIMD horizontal reductions reorder accumulation, so the fast kernels
 //! genuinely differ from their scalar twins in the last bits when SIMD
@@ -185,6 +193,143 @@ fn conf_attend_matches_reference() {
         kernels::attend_reference(&q, &k, &v, nq, nk, d, scale, &mut refr, &mut s2);
         assert_close(&fast, &refr, "attend");
     });
+}
+
+#[test]
+fn conf_attend_streaming_matches_both_references() {
+    // The streaming kernel against BOTH twins: its own scalar streaming
+    // reference (the usual pair contract) and the materialized scalar
+    // oracle (so online-softmax rescaling can never drift from the
+    // full-softmax math). nk is built as whole tiles plus a residue so
+    // every tail width 0..=7 around the STREAM_TILE boundary sweeps
+    // through, including the multi-tile rescale chains.
+    forall(30, |g| {
+        let tiles = g.usize_in(0..4);
+        let tail = g.usize_in(0..8);
+        let nk = (tiles * kernels::STREAM_TILE + tail).max(1);
+        let nq = g.usize_in(1..12);
+        let d = g.usize_in(1..12);
+        let threads = pick_threads(g);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = g.normals(nq * d);
+        let k = g.normals(nk * d);
+        let v = g.normals(nk * d);
+        let mut fast = vec![0.0f32; nq * d];
+        let mut s1 = Vec::new();
+        kernels::attend_streaming(&q, &k, &v, nq, nk, d, scale, threads, &mut fast, &mut s1);
+        let mut tw = vec![0.0f32; nq * d];
+        let mut s2 = Vec::new();
+        kernels::attend_streaming_reference(&q, &k, &v, nq, nk, d, scale, &mut tw, &mut s2);
+        assert_close(&fast, &tw, "attend_streaming vs scalar streaming twin");
+        let mut oracle = vec![0.0f32; nq * d];
+        let mut s3 = Vec::new();
+        kernels::attend_reference(&q, &k, &v, nq, nk, d, scale, &mut oracle, &mut s3);
+        assert_close(&fast, &oracle, "attend_streaming vs materialized oracle");
+        // the no-nq×nk-buffer contract, on every swept shape
+        assert!(
+            s1.capacity() <= kernels::STREAM_TILE,
+            "streaming scratch grew to {} (> STREAM_TILE)",
+            s1.capacity()
+        );
+    });
+}
+
+#[test]
+fn conf_attend_streaming_single_key_is_value_passthrough() {
+    // nk = 1: one tile, one key, softmax weight exactly 1.0 — out == v
+    // row-for-row, the degenerate unit a tiled kernel mishandles first.
+    forall(12, |g| {
+        let nq = g.usize_in(1..9);
+        let d = g.usize_in(1..10);
+        let threads = pick_threads(g);
+        let q = g.normals(nq * d);
+        let k = g.normals(d);
+        let v = g.normals(d);
+        let mut out = vec![0.0f32; nq * d];
+        let mut s = Vec::new();
+        kernels::attend_streaming(&q, &k, &v, nq, 1, d, 0.7, threads, &mut out, &mut s);
+        for (i, row) in out.chunks_exact(d).enumerate() {
+            assert_close(row, &v, &format!("single-key row {i}"));
+        }
+    });
+}
+
+#[test]
+fn conf_attend_streaming_huge_and_subnormal_logits() {
+    // Logit magnitudes that stress the online rescale: huge positives
+    // (later tiles force alpha ~ exp(-big) underflow of earlier mass),
+    // huge negatives, subnormal-scale values, and NEG_INF-masked keys
+    // mixed in. Must stay finite and within the oracle bound.
+    let d = 4usize;
+    let nk = kernels::STREAM_TILE * 2 + 3;
+    let mut rng = bsa::prng::Rng::new(42);
+    let q: Vec<f32> = rng.normals(3 * d).iter().map(|x| x * 40.0).collect();
+    let mut k: Vec<f32> = rng.normals(nk * d);
+    let v = rng.normals(nk * d);
+    // plant extremes: one huge-logit key in a late tile, one subnormal
+    // key, one row of NEG_INF-style mask magnitude
+    for j in 0..d {
+        k[(nk - 1) * d + j] = 30.0; // with |q| ~ 40 this drives ~1e3 logits
+        k[d + j] = 1.0e-39;
+        k[2 * d + j] = -35.0;
+    }
+    for threads in [1usize, 3, 8] {
+        let mut fast = vec![0.0f32; 3 * d];
+        let mut s1 = Vec::new();
+        kernels::attend_streaming(&q, &k, &v, 3, nk, d, 1.0, threads, &mut fast, &mut s1);
+        assert!(fast.iter().all(|x| x.is_finite()), "non-finite streaming output");
+        let mut oracle = vec![0.0f32; 3 * d];
+        let mut s2 = Vec::new();
+        kernels::attend_reference(&q, &k, &v, 3, nk, d, 1.0, &mut oracle, &mut s2);
+        assert_close(&fast, &oracle, "huge/subnormal logits");
+    }
+}
+
+#[test]
+fn conf_attend_all_masked_rows_are_uniform_not_nan() {
+    // Regression (PR 6): a query whose every key is masked (all logits
+    // NEG_INF — or even true -inf) must produce the documented uniform
+    // average of the values, not NaN, through the streaming tile sweep.
+    let (nq, d) = (2usize, 3usize);
+    let nk = kernels::STREAM_TILE + 9; // tile boundary + tail, all masked
+    let mut rng = bsa::prng::Rng::new(77);
+    let q = rng.normals(nq * d);
+    let v = rng.normals(nk * d);
+    let mut mean = vec![0.0f32; d];
+    for row in v.chunks_exact(d) {
+        for (m, &x) in mean.iter_mut().zip(row) {
+            *m += x / nk as f32;
+        }
+    }
+    for kval in [kernels::NEG_INF, f32::NEG_INFINITY] {
+        // drive every logit to exactly kval: q rows are [kval, 0, ...],
+        // k rows are [1, 0, ...], so q·k == kval for every pair
+        let mut q_masked = q.clone();
+        for row in q_masked.chunks_exact_mut(d) {
+            row.fill(0.0);
+            row[0] = kval;
+        }
+        let mut k_masked = vec![0.0f32; nk * d];
+        for row in k_masked.chunks_exact_mut(d) {
+            row[0] = 1.0;
+        }
+        for threads in [1usize, 4] {
+            let mut out = vec![0.0f32; nq * d];
+            let mut s = Vec::new();
+            kernels::attend_streaming(
+                &q_masked, &k_masked, &v, nq, nk, d, 1.0, threads, &mut out, &mut s,
+            );
+            assert!(out.iter().all(|x| x.is_finite()), "masked rows produced non-finite");
+            for (i, row) in out.chunks_exact(d).enumerate() {
+                for (j, (&a, &b)) in row.iter().zip(&mean).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-4,
+                        "masked row {i}[{j}]: {a} vs uniform mean {b} (kval={kval})"
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]
@@ -560,6 +705,45 @@ fn conf_forward_bitwise_across_threads() {
 }
 
 #[test]
+fn conf_f16_forward_holds_the_tolerance_tier() {
+    // The f16 storage tier from the backend docs: on unit-scale
+    // activations the half-storage forward stays within
+    // 5e-2 * (1 + |a|) of the f32 forward, and remains bitwise
+    // deterministic across thread counts (encode/decode are
+    // deterministic per element).
+    use bsa::backend::native::Precision;
+    let x = fixture_input(256, 6, 71);
+    let full = NativeBackend::init(5, &tiny_config(), 6, 1, 1)
+        .unwrap()
+        .with_threads(2)
+        .forward(&x)
+        .unwrap();
+    let half = NativeBackend::init(5, &tiny_config(), 6, 1, 1)
+        .unwrap()
+        .with_threads(2)
+        .with_precision(Precision::F16)
+        .forward(&x)
+        .unwrap();
+    assert_eq!(full.shape(), half.shape());
+    for (i, (a, b)) in full.data().iter().zip(half.data()).enumerate() {
+        assert!(b.is_finite(), "f16 forward[{i}] non-finite");
+        assert!(
+            (a - b).abs() <= 5e-2 * (1.0 + a.abs()),
+            "f16 tier violated at [{i}]: f32 {a} vs f16 {b}"
+        );
+    }
+    for t in [1usize, 3, 8] {
+        let again = NativeBackend::init(5, &tiny_config(), 6, 1, 1)
+            .unwrap()
+            .with_threads(t)
+            .with_precision(Precision::F16)
+            .forward(&x)
+            .unwrap();
+        assert_eq!(again, half, "f16 forward not bitwise at threads={t}");
+    }
+}
+
+#[test]
 fn conf_forward_randomized_shapes_match_serial() {
     // Randomized small architectures: parallel forward == serial forward
     // within tolerance (bitwise, in fact) across shape combinations the
@@ -662,6 +846,10 @@ fn conf_pool_reuse_bitwise_across_dispatches() {
     kernels::ball_attention(&q, &kk, &v, bn, bd, ball, 1, &mut ball_expect);
     assert_close(&ball_expect, &ball_ref, "ball vs scalar twin");
 
+    let mut at_expect = vec![0.0f32; bn * bd];
+    let mut at_scratch = Vec::new();
+    kernels::attend(&q, &kk, &v, bn, bn, bd, 0.5, 1, &mut at_expect, &mut at_scratch);
+
     for i in 0..120 {
         let threads = [1usize, 2, 3, 4, 8][i % 5];
         let mut mm = vec![0.0f32; m * n];
@@ -670,6 +858,17 @@ fn conf_pool_reuse_bitwise_across_dispatches() {
         let mut bo = vec![0.0f32; bn * bd];
         kernels::ball_attention(&q, &kk, &v, bn, bd, ball, threads, &mut bo);
         assert_eq!(bo, ball_expect, "ball dispatch {i} (threads {threads}) diverged");
+        // the scores scratch is reused across every dispatch; streaming
+        // attend must keep it tile-sized forever (no nq×nk growth, and
+        // an inherited bigger allocation is shrunk, never kept)
+        let mut ao = vec![0.0f32; bn * bd];
+        kernels::attend(&q, &kk, &v, bn, bn, bd, 0.5, threads, &mut ao, &mut at_scratch);
+        assert_eq!(ao, at_expect, "attend dispatch {i} (threads {threads}) diverged");
+        assert!(
+            at_scratch.capacity() <= kernels::STREAM_TILE,
+            "dispatch {i}: streaming scratch grew to {} (> STREAM_TILE)",
+            at_scratch.capacity()
+        );
     }
 }
 

@@ -60,6 +60,30 @@ fn simd_off_is_bitwise_equal_to_scalar_references() {
     let q = bsa::prng::Rng::new(7).normals(bn * bd);
     let kk = bsa::prng::Rng::new(8).normals(bn * bd);
     let v = bsa::prng::Rng::new(9).normals(bn * bd);
+
+    // streaming attention: with SIMD off the fast path runs the exact
+    // scalar loops of attend_streaming_reference tile-for-tile, so the
+    // match is bitwise — including a nk that straddles the tile boundary
+    let snk = kernels::STREAM_TILE + 5;
+    let sq = bsa::prng::Rng::new(17).normals(4 * bd);
+    let sk = bsa::prng::Rng::new(18).normals(snk * bd);
+    let sv = bsa::prng::Rng::new(19).normals(snk * bd);
+    let mut stream_ref = vec![0.0f32; 4 * bd];
+    let mut sref_scratch = Vec::new();
+    kernels::attend_streaming_reference(
+        &sq, &sk, &sv, 4, snk, bd, 0.4, &mut stream_ref, &mut sref_scratch,
+    );
+    for threads in [1usize, 4] {
+        let mut fast = vec![0.0f32; 4 * bd];
+        let mut s = Vec::new();
+        kernels::attend(&sq, &sk, &sv, 4, snk, bd, 0.4, threads, &mut fast, &mut s);
+        assert_eq!(fast, stream_ref, "attend streaming (threads {threads})");
+        let mut fast2 = vec![0.0f32; 4 * bd];
+        let mut s2 = Vec::new();
+        kernels::attend_streaming(&sq, &sk, &sv, 4, snk, bd, 0.4, threads, &mut fast2, &mut s2);
+        assert_eq!(fast2, stream_ref, "attend_streaming (threads {threads})");
+    }
+
     for threads in [1usize, 4] {
         let mut fast = vec![0.0f32; bn * bd];
         kernels::ball_attention(&q, &kk, &v, bn, bd, ball, threads, &mut fast);

@@ -79,8 +79,8 @@ trap '[[ -z "${BASELINE_NATIVE}" ]] || rm -f "${BASELINE_NATIVE}"; [[ -z "${BASE
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
   echo "== serve_hot_path bench (smoke, --reps ${REPS})"
   cargo bench --bench paper -- serve_hot_path --reps "${REPS}"
-  echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e + threads/simd sweeps)"
-  cargo bench --bench paper -- bsa_native --reps "${REPS}"
+  echo "== bsa_native bench (smoke, --reps ${REPS}; artifact-free e2e + threads/simd sweeps; n_sweep capped at 32k)"
+  cargo bench --bench paper -- bsa_native --reps "${REPS}" --quick
 )
 
 # rebar-style per-metric deltas vs the committed baselines
