@@ -63,6 +63,7 @@ def test_direction_classification():
     assert benchdiff.direction("preprocess.cached.p95_us") == "lower"
     assert benchdiff.direction("router.tree_hits") == "higher"
     assert benchdiff.direction("router.tree_misses") == "lower"
+    assert benchdiff.direction("trace_overhead.overhead_pct") == "lower"
     assert benchdiff.direction("arch.depth") is None
 
 

@@ -11,6 +11,10 @@
 //!          --out DIR (results directory, default bench_results)
 //!          --quick   (cap bsa_native's n_sweep at N=32768 — the
 //!                     CI/check.sh mode; the full sweep reaches N=1M)
+//!          --trace-out FILE (enable span tracing for the whole run and
+//!                     write a Chrome trace-event JSON at exit — load it
+//!                     in chrome://tracing or Perfetto to see where a
+//!                     bench target spends its time)
 //!
 //! `serve_hot_path` measures the host-side serving hot path (cold
 //! ball-tree build vs BallTreeCache hit, plus end-to-end router latency
@@ -56,6 +60,7 @@ struct Opts {
     max_n: usize,
     quick: bool,
     out: PathBuf,
+    trace_out: Option<PathBuf>,
 }
 
 fn parse_opts() -> Opts {
@@ -70,6 +75,7 @@ fn parse_opts() -> Opts {
         max_n: 8192,
         quick: false,
         out: PathBuf::from("bench_results"),
+        trace_out: None,
     };
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
@@ -83,6 +89,11 @@ fn parse_opts() -> Opts {
                     o.out = PathBuf::from(v);
                 }
             }
+            "--trace-out" => {
+                if let Some(v) = it.next() {
+                    o.trace_out = Some(PathBuf::from(v));
+                }
+            }
             "--bench" | "--test" => {} // flags cargo bench may pass through
             t if !t.starts_with('-') => o.target = t.to_string(),
             _ => {}
@@ -94,6 +105,13 @@ fn parse_opts() -> Opts {
 fn main() -> anyhow::Result<()> {
     let o = parse_opts();
     std::fs::create_dir_all(&o.out)?;
+    if o.trace_out.is_some() {
+        // span-trace the whole run and dump a Chrome trace at exit; the
+        // trace_overhead A/B inside bsa_native toggles the level itself
+        // and restores this setting when it finishes
+        bsa::trace::set_level(bsa::trace::TraceLevel::Spans);
+        bsa::trace::enable_chrome();
+    }
     // Engine creation is best-effort: host-side targets (table4, fig2,
     // serve_hot_path's preprocessing half) have no artifact dependency
     // and must produce their perf record on any machine.
@@ -180,6 +198,10 @@ fn main() -> anyhow::Result<()> {
     }
     if all || o.target == "bsa_native" {
         bsa_native(engine.as_ref(), &o)?;
+    }
+    if let Some(path) = &o.trace_out {
+        bsa::trace::write_chrome_trace(path)?;
+        println!("# chrome trace written to {} (load in chrome://tracing or Perfetto)", path.display());
     }
     Ok(())
 }
@@ -893,7 +915,7 @@ fn peak_rss_mb() -> f64 {
 
 /// Measure the native BSA forward pass the way `serve_hot_path` measures
 /// preprocessing: machine-readable p50/p95 so the next PR can regress
-/// against it, on *any* host. Eight levels:
+/// against it, on *any* host. Nine levels:
 ///
 /// 1. forward p50/p95 vs N for the demo-scale architecture (dim 32,
 ///    2 blocks — the native twin of the tiny core artifact);
@@ -930,7 +952,12 @@ fn peak_rss_mb() -> f64 {
 /// 7. native vs pjrt on the demo architecture at N=256 when the compiled
 ///    `fwd_bsa_syn_n256_b1` graph is present;
 /// 8. end-to-end through the native `Router` (batching + ball-tree
-///    cache + forward) — proof the serving stack runs artifact-free.
+///    cache + forward) — proof the serving stack runs artifact-free;
+/// 9. tracing-overhead A/B: the demo forward at N=256 single-threaded
+///    with `trace` spans off vs on — the `trace_overhead` record of
+///    `BENCH_native.json` that `scripts/check.sh` gates (<3% when
+///    spans are *on*; the off arm is the production default and its
+///    per-site cost is one relaxed atomic load).
 fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     use bsa::backend::{Backend, NativeBackend};
     use bsa::config::ServeConfig;
@@ -1469,6 +1496,54 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         st.tree_misses
     );
 
+    // --- level 9: tracing overhead, spans off vs on -----------------------
+    // The trace layer's contract is near-zero cost when disabled and a
+    // bounded (<3%, gated by scripts/check.sh) cost with full span
+    // timing on. Demo arch at N=256, single thread: small forwards
+    // maximize the *relative* cost of the per-stage span guards, so
+    // this is the pessimistic arm of the contract.
+    let trace_overhead_json;
+    let trace_overhead_pct;
+    {
+        let prior = bsa::trace::level();
+        let mc = arch(256);
+        let be = NativeBackend::init(0, &mc, 6, 1, 1)?.with_threads(1);
+        let x = {
+            let mut rng = bsa::prng::Rng::new(257);
+            Tensor::new(vec![1, 256, 6], rng.normals(256 * 6))
+        };
+        let calls = (40 * reps).max(40);
+        let mut fwd_per_s = [0.0f64; 2];
+        for (slot, level) in
+            [(0usize, bsa::trace::TraceLevel::Off), (1, bsa::trace::TraceLevel::Spans)]
+        {
+            bsa::trace::set_level(level);
+            let _ = be.forward(&x)?; // warmup at this level
+            let t0 = Instant::now();
+            for _ in 0..calls {
+                let out = be.forward(&x)?;
+                std::hint::black_box(&out);
+            }
+            fwd_per_s[slot] = calls as f64 / t0.elapsed().as_secs_f64();
+        }
+        bsa::trace::set_level(prior);
+        trace_overhead_pct = if fwd_per_s[1] > 0.0 {
+            (fwd_per_s[0] / fwd_per_s[1] - 1.0) * 100.0
+        } else {
+            0.0
+        };
+        trace_overhead_json = format!(
+            "{{\"calls\": {calls}, \"fwd_per_s_off\": {:.3}, \"fwd_per_s_spans\": {:.3}, \
+             \"overhead_pct\": {trace_overhead_pct:.3}}}",
+            fwd_per_s[0], fwd_per_s[1]
+        );
+        println!(
+            "  trace overhead (spans on vs off, demo N=256, 1 thread): {:.2} vs {:.2} fwd/s \
+             ({trace_overhead_pct:+.2}%)",
+            fwd_per_s[1], fwd_per_s[0]
+        );
+    }
+
     // --- artifact assembly ------------------------------------------------
     let json = format!(
         "{{\n  \"bench\": \"bsa_native\",\n  \"reps\": {reps},\n  \
@@ -1486,6 +1561,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
          \"n_sweep\": {{\"max_n\": {ns_cap}, \"arch\": {{\"dim\": 32, \"heads\": 2, \
          \"blocks\": 1, \"ball\": 256}}, \"arms\": [{}], \
          \"kernel_ab\": {ns_kernel_ab_json}}},\n  \
+         \"trace_overhead\": {trace_overhead_json},\n  \
          \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
         fwd_json.join(", "),
         sweep_json.join(", "),
@@ -1538,6 +1614,9 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     ));
     content.push_str(&ns_t.render());
     content.push('\n');
+    content.push_str(&format!(
+        "trace overhead (spans on vs off, demo N=256, 1 thread): {trace_overhead_pct:+.2}%\n"
+    ));
     content.push_str(&pjrt_line);
     content.push_str(&format!(
         "native router e2e: {total} reqs, {:.2} req/s, p50={rp50:.0}us p95={rp95:.0}us, \

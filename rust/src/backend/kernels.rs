@@ -38,6 +38,15 @@
 //! from inside pool jobs; nested dispatches are safe (the pool's waiters
 //! help run queued work) and thread-count-neutral by the same invariant.
 //!
+//! **No tracing instrumentation lives in this module.** Per-stage spans
+//! (`forward.layer.ball_attention` / `compression` / `selection`, see
+//! [`crate::trace`]) are recorded at the per-unit call sites in
+//! [`super::native`]: kernels are the bitwise-contract surface, and a
+//! span guard inside a chunk loop would both perturb the hot loops and
+//! record at the wrong grain (per chunk, not per stage). Timing here is
+//! observable but never numeric — instrumentation cannot change what a
+//! unit computes.
+//!
 //! All operands are flat row-major `(N, d)` slices for one attention
 //! head; the model layer folds batch and heads before calling in here,
 //! exactly like the jax side folds `(B, N, C)` to `(B*H, N, dh)`.

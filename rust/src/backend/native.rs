@@ -334,6 +334,7 @@ impl NativeBackend {
         // and immediately encoded into its half-word staging buffer, so
         // only one f32 (rows, C) buffer exists alongside the three
         // 2-byte ones.
+        let qkv_span = crate::trace::span("qkv_proj");
         match self.precision {
             Precision::F32 => {
                 linalg::matmul(a, blk.attn.wq.data(), rows, c, c, th, q);
@@ -350,6 +351,7 @@ impl NativeBackend {
             }
         }
         linalg::matmul(a, blk.attn.wg.data(), rows, c, 3 * h_cnt, th, gates);
+        drop(qkv_span);
 
         let units = b * h_cnt;
         // Surplus thread budget (th > units) flows to the kernels inside
@@ -395,26 +397,45 @@ impl NativeBackend {
                 }
             }
 
+            // Stage spans live here (not inside kernels.rs): the timing
+            // instrumentation must not perturb the bitwise fast==reference
+            // kernel contract, and a unit is the natural per-stage grain.
+            // Pool jobs adopt the dispatcher's path, so these record as
+            // e.g. `forward.layer.ball_attention`.
+
             // ball branch (eq. 3)
-            kernels::ball_attention(&hs.qs, &hs.ks, &hs.vs, n, dh, m, inner, &mut hs.o_ball);
+            {
+                let _s = crate::trace::span("ball_attention");
+                kernels::ball_attention(&hs.qs, &hs.ks, &hs.vs, n, dh, m, inner, &mut hs.o_ball);
+            }
 
             // compression branch (eq. 5): mean phi + streaming attention
-            kernels::compress_mean(&hs.ks, n, dh, l, inner, &mut hs.kc);
-            kernels::compress_mean(&hs.vs, n, dh, l, inner, &mut hs.vc);
-            kernels::attend(
-                &hs.qs, &hs.kc, &hs.vc, n, nb, dh, scale, inner, &mut hs.o_cmp, &mut hs.scores,
-            );
+            {
+                let _s = crate::trace::span("compression");
+                kernels::compress_mean(&hs.ks, n, dh, l, inner, &mut hs.kc);
+                kernels::compress_mean(&hs.vs, n, dh, l, inner, &mut hs.vc);
+                kernels::attend(
+                    &hs.qs, &hs.kc, &hs.vc, n, nb, dh, scale, inner, &mut hs.o_cmp,
+                    &mut hs.scores,
+                );
+            }
 
             // selection branch (eqs. 6-8, 10-12): grouped top-k over
             // compressed keys, own-ball blocks masked out
-            kernels::group_scores(&hs.qs, &hs.kc, n, dh, g, nb, inner, &mut hs.qg, &mut hs.gscores);
-            kernels::mask_own_ball(&mut hs.gscores, groups, nb, g, l, m);
-            kernels::topk_indices(&hs.gscores, groups, nb, top_k, inner, &mut hs.idx);
-            kernels::select_attention(
-                &hs.qs, &hs.ks, &hs.vs, &hs.idx, n, dh, l, g, top_k, inner, &mut hs.o_slc,
-            );
+            {
+                let _s = crate::trace::span("selection");
+                kernels::group_scores(
+                    &hs.qs, &hs.kc, n, dh, g, nb, inner, &mut hs.qg, &mut hs.gscores,
+                );
+                kernels::mask_own_ball(&mut hs.gscores, groups, nb, g, l, m);
+                kernels::topk_indices(&hs.gscores, groups, nb, top_k, inner, &mut hs.idx);
+                kernels::select_attention(
+                    &hs.qs, &hs.ks, &hs.vs, &hs.idx, n, dh, l, g, top_k, inner, &mut hs.o_slc,
+                );
+            }
 
             // gated fusion (eq. 9): per-token per-head sigmoid gates
+            let _s = crate::trace::span("gated_merge");
             for t in 0..n {
                 let grow = (bi * n + t) * 3 * h_cnt;
                 let gb = linalg::sigmoid(gates[grow + hd]);
@@ -478,6 +499,7 @@ impl NativeBackend {
         // fold heads: (B, H, N, dh) head-major -> (B*N, C) token-major
         // (a pure copy — f16 decode is deterministic per element — so
         // bitwise-neutral; row-parallel over tokens)
+        let _output_proj = crate::trace::span("output_proj");
         match self.precision {
             Precision::F32 => {
                 let merged_hm = &merged_hm[..];
@@ -664,11 +686,23 @@ impl Backend for NativeBackend {
         let rows = b * n;
         let th = self.threads;
         let mut s = Scratch::new(rows, c, h_cnt, self.precision);
+        let _fwd = crate::trace::span("forward");
 
         // embed
         let mut h = vec![0.0f32; rows * c];
-        linalg::matmul(x.data(), self.params.embed_w.data(), rows, spec.in_features, c, th, &mut h);
-        linalg::add_bias(&mut h, self.params.embed_b.data(), rows, c);
+        {
+            let _s = crate::trace::span("embed");
+            linalg::matmul(
+                x.data(),
+                self.params.embed_w.data(),
+                rows,
+                spec.in_features,
+                c,
+                th,
+                &mut h,
+            );
+            linalg::add_bias(&mut h, self.params.embed_b.data(), rows, c);
+        }
 
         // trunk
         let hid = self.params.blocks[0].mlp.w1.cols();
@@ -677,6 +711,7 @@ impl Backend for NativeBackend {
         let mut h1 = vec![0.0f32; rows * hid];
         let mut h3 = vec![0.0f32; rows * hid];
         for blk in &self.params.blocks {
+            let _layer = crate::trace::span("layer");
             // x = x + attn(rms_norm(x))
             linalg::rms_norm(&h, blk.norm1.data(), rows, c, th, &mut norm);
             self.attention(blk, &norm, &mut branch, &mut s);
@@ -684,6 +719,7 @@ impl Backend for NativeBackend {
                 *hv += av;
             }
             // x = x + swiglu(rms_norm(x))
+            let _swiglu = crate::trace::span("swiglu");
             linalg::rms_norm(&h, blk.norm2.data(), rows, c, th, &mut norm);
             linalg::matmul(&norm, blk.mlp.w1.data(), rows, c, hid, th, &mut h1);
             linalg::matmul(&norm, blk.mlp.w3.data(), rows, c, hid, th, &mut h3);
@@ -697,6 +733,7 @@ impl Backend for NativeBackend {
         }
 
         // head
+        let _head = crate::trace::span("head");
         linalg::rms_norm(&h, self.params.norm_out.data(), rows, c, th, &mut norm);
         let of = spec.out_features;
         let mut out = vec![0.0f32; rows * of];

@@ -124,6 +124,9 @@ struct PoolState {
 struct PoolShared {
     state: Mutex<PoolState>,
     work_ready: Condvar,
+    /// Workers currently executing a job (excludes help-while-waiting
+    /// callers — this gauges the worker population, not total progress).
+    busy: AtomicUsize,
 }
 
 /// Completion latch for one `par_rows` dispatch. Modeled on
@@ -239,6 +242,14 @@ fn worker_main(shared: Arc<PoolShared>, live: Arc<AtomicUsize>) {
         // Keep the worker alive across any panicking job (par_rows jobs
         // catch their own panics and report through the latch; this is
         // the backstop for everything else).
+        struct Busy<'a>(&'a AtomicUsize);
+        impl Drop for Busy<'_> {
+            fn drop(&mut self) {
+                self.0.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        shared.busy.fetch_add(1, Ordering::Relaxed);
+        let _busy = Busy(&shared.busy);
         let _ = std::panic::catch_unwind(AssertUnwindSafe(job));
     }
 }
@@ -252,6 +263,7 @@ impl WorkerPool {
             shared: Arc::new(PoolShared {
                 state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
                 work_ready: Condvar::new(),
+                busy: AtomicUsize::new(0),
             }),
             live: Arc::new(AtomicUsize::new(0)),
             inflight: AtomicUsize::new(0),
@@ -300,6 +312,23 @@ impl WorkerPool {
         self.live.clone()
     }
 
+    /// Jobs currently queued and not yet picked up (instantaneous).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().jobs.len()
+    }
+
+    /// Workers currently executing a job (instantaneous; excludes
+    /// help-while-waiting callers running jobs on their own threads).
+    pub fn busy_workers(&self) -> usize {
+        self.shared.busy.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate worker demand (`threads - 1` per dispatch) of every
+    /// `par_rows` call currently in flight.
+    pub fn inflight_demand(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
     fn push_job(&self, job: Job) {
         let mut st = self.shared.state.lock().unwrap();
         st.jobs.push_back(job);
@@ -346,6 +375,17 @@ impl WorkerPool {
         let total = self.inflight.fetch_add(want, Ordering::Relaxed) + want;
         let _inflight = InflightGuard(&self.inflight, want);
         self.ensure_workers(total);
+        // Span-path inheritance: queued jobs adopt the dispatcher's
+        // current trace path so per-stage spans recorded inside kernels
+        // nest under the caller (e.g. `forward.layer.ball_attention`)
+        // regardless of which worker runs the chunk. Owned String, so
+        // the lifetime erasure below stays sound; None when tracing is
+        // off or the caller has no open span (zero cost either way).
+        let parent = if crate::trace::spans_enabled() {
+            crate::trace::current_path()
+        } else {
+            None
+        };
         let chunks = chunk_rows(rows, t);
         let last = chunks.len() - 1;
         let latch = Latch::new(last);
@@ -364,7 +404,9 @@ impl WorkerPool {
                 let fr = &f;
                 let latch_ref = &latch;
                 let row0 = range.start;
+                let job_parent = parent.clone();
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let _adopt = job_parent.map(crate::trace::adopt_parent);
                     let r = std::panic::catch_unwind(AssertUnwindSafe(|| fr(row0, chunk)));
                     latch_ref.complete(r.err());
                 });
@@ -419,7 +461,39 @@ impl Drop for WorkerPool {
 /// [`WorkerPool`]s join on drop.
 pub fn global_pool() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
-    POOL.get_or_init(|| WorkerPool::new(0))
+    static GAUGES: OnceLock<()> = OnceLock::new();
+    let pool = POOL.get_or_init(|| WorkerPool::new(0));
+    // Register the saturation gauges exactly once. The callbacks capture
+    // the &'static pool and are evaluated lazily at BSST/`bsa stats`
+    // snapshot time — registration itself never reads pool state.
+    GAUGES.get_or_init(|| {
+        let p: &'static WorkerPool = POOL.get().expect("pool initialized above");
+        crate::trace::register_gauge("pool.queue_depth", Box::new(move || p.queue_depth() as f64));
+        crate::trace::register_gauge(
+            "pool.live_workers",
+            Box::new(move || p.live_workers() as f64),
+        );
+        crate::trace::register_gauge(
+            "pool.busy_workers",
+            Box::new(move || p.busy_workers() as f64),
+        );
+        crate::trace::register_gauge(
+            "pool.inflight_demand",
+            Box::new(move || p.inflight_demand() as f64),
+        );
+        crate::trace::register_gauge(
+            "pool.utilization",
+            Box::new(move || {
+                let live = p.live_workers();
+                if live == 0 {
+                    0.0
+                } else {
+                    p.busy_workers() as f64 / live as f64
+                }
+            }),
+        );
+    });
+    pool
 }
 
 /// Dispatch on the [`global_pool`] — the entry point every kernel in
@@ -458,6 +532,11 @@ where
     }
     let chunks = chunk_rows(rows, t);
     let last = chunks.len() - 1;
+    let parent = if crate::trace::spans_enabled() {
+        crate::trace::current_path()
+    } else {
+        None
+    };
     std::thread::scope(|s| {
         let mut rest = out;
         for (ci, range) in chunks.iter().enumerate() {
@@ -472,7 +551,11 @@ where
             } else {
                 let fr = &f;
                 let row0 = range.start;
-                s.spawn(move || fr(row0, chunk));
+                let job_parent = parent.clone();
+                s.spawn(move || {
+                    let _adopt = job_parent.map(crate::trace::adopt_parent);
+                    fr(row0, chunk)
+                });
             }
         }
     });

@@ -405,6 +405,12 @@ pub struct ServeConfig {
     /// halves staging memory at a documented accuracy cost; see
     /// `backend::native::Precision`).
     pub precision: String,
+    /// Trace level for the observability subsystem: `"off"`,
+    /// `"counters"`, or `"spans"` (`"on"` is accepted as an alias for
+    /// `"spans"`). Empty (the default) defers to the `BSA_TRACE`
+    /// environment variable; the `--trace` CLI flag overrides both. See
+    /// `trace` (module docs) for the cost model at each level.
+    pub trace: String,
 }
 
 impl Default for ServeConfig {
@@ -420,6 +426,7 @@ impl Default for ServeConfig {
             native_threads: 0,
             native_simd: "auto".into(),
             precision: "f32".into(),
+            trace: String::new(),
         }
     }
 }
@@ -439,6 +446,7 @@ impl ServeConfig {
                 as usize,
             native_simd: doc.str_or("serve", "native_simd", &d.native_simd),
             precision: doc.str_or("serve", "precision", &d.precision),
+            trace: doc.str_or("serve", "trace", &d.trace),
         }
     }
 }

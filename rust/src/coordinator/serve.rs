@@ -98,6 +98,20 @@ pub struct RouterStats {
     /// Ball-tree cache misses (tree built from scratch).
     pub tree_misses: u64,
     pub latency_summary: String,
+    /// Number of samples inside `latency_summary`. Taken under the same
+    /// lock as `served`, so `latency_samples == served` in every snapshot
+    /// (the regression test for the old torn read, where `served` could
+    /// run ahead of its latency sample).
+    pub latency_samples: u64,
+}
+
+/// Completion state: the served counter and the latency histogram move
+/// together under one lock, so `stats()` can never observe a request
+/// counted as served before (or after) its latency sample landed.
+#[derive(Default)]
+struct Done {
+    served: u64,
+    latency: LatencyHistogram,
 }
 
 struct Shared {
@@ -107,11 +121,10 @@ struct Shared {
     backend: Arc<dyn Backend>,
     /// Content-addressed LRU of built ball trees (see module docs).
     tree_cache: BallTreeCache,
-    served: AtomicU64,
+    done: Mutex<Done>,
     rejected: AtomicU64,
     batches: AtomicU64,
     batch_sum: AtomicU64,
-    latency: Mutex<LatencyHistogram>,
     stop: AtomicBool,
 }
 
@@ -137,11 +150,10 @@ impl Router {
         let shared = Arc::new(Shared {
             backend,
             tree_cache: BallTreeCache::new(cfg.tree_cache),
-            served: AtomicU64::new(0),
+            done: Mutex::new(Done::default()),
             rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_sum: AtomicU64::new(0),
-            latency: Mutex::new(LatencyHistogram::new()),
             stop: AtomicBool::new(false),
         });
 
@@ -202,8 +214,14 @@ impl Router {
 
     pub fn stats(&self) -> RouterStats {
         let batches = self.shared.batches.load(Ordering::Relaxed);
+        // One lock acquisition covers served + latency: both were updated
+        // together, so the snapshot is internally consistent.
+        let (served, latency_summary, latency_samples) = {
+            let done = self.shared.done.lock().unwrap();
+            (done.served, done.latency.summary(), done.latency.count() as u64)
+        };
         RouterStats {
-            served: self.shared.served.load(Ordering::Relaxed),
+            served,
             rejected: self.shared.rejected.load(Ordering::Relaxed),
             batches,
             mean_batch: if batches == 0 {
@@ -213,13 +231,14 @@ impl Router {
             },
             tree_hits: self.shared.tree_cache.hits(),
             tree_misses: self.shared.tree_cache.misses(),
-            latency_summary: self.shared.latency.lock().unwrap().summary(),
+            latency_summary,
+            latency_samples,
         }
     }
 
     /// p50/p95 request latency in microseconds.
     pub fn latency_us(&self, pct: f64) -> f64 {
-        self.shared.latency.lock().unwrap().percentile_us(pct)
+        self.shared.done.lock().unwrap().latency.percentile_us(pct)
     }
 
     /// Stop workers and wait for them.
@@ -272,6 +291,8 @@ fn worker_loop(rx: Arc<Mutex<Receiver<ServeRequest>>>, shared: Arc<Shared>, cfg:
 
         shared.batches.fetch_add(1, Ordering::Relaxed);
         shared.batch_sum.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        crate::trace::incr("router.batches");
+        crate::trace::incr_by("router.batch_requests", batch.len() as u64);
         process_batch(&shared, batch, &mut scratch);
     }
 }
@@ -314,6 +335,7 @@ fn build_gather_group(
 ) -> Vec<(usize, anyhow::Result<Arc<BallTree>>)> {
     let indices: Vec<usize> = members.iter().map(|(bi, _)| *bi).collect();
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _s = crate::trace::span("tree_build");
         let first = members[0].0;
         let tree = shared
             .tree_cache
@@ -344,6 +366,17 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
     debug_assert!(batch.len() <= graph_batch);
     debug_assert_eq!(xt.len(), graph_batch * n * f);
 
+    // Queue wait = submit -> batch pickup, measured from the request's
+    // enqueue timestamp (a guard can't straddle the channel hop).
+    if crate::trace::spans_enabled() {
+        for req in &batch {
+            crate::trace::record_us(
+                "router.queue_wait",
+                req.enqueued.elapsed().as_secs_f64() * 1e6,
+            );
+        }
+    }
+
     // Preprocess into disjoint slots of the shared buffer. Stage 1 runs
     // inline: validation and cache *hits* — a hit is a hash + gather,
     // cheaper than a thread spawn. Stage 2 dedupes the cache *misses* by
@@ -353,6 +386,7 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
     let mut preps: Vec<Option<anyhow::Result<Arc<BallTree>>>> =
         (0..batch.len()).map(|_| None).collect();
     {
+        let _preprocess = crate::trace::span("router.preprocess");
         let (used, pad) = xt.data_mut().split_at_mut(batch.len() * n * f);
         let mut pending: Vec<(usize, u64, &mut [f32])> = Vec::new();
         for (bi, (req, slot)) in batch.iter().zip(used.chunks_mut(n * f)).enumerate() {
@@ -362,6 +396,7 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
                 preps[bi] = Some(Err(e));
                 continue;
             }
+            let cache_span = crate::trace::span("tree_cache");
             match shared.tree_cache.try_get(&req.coords, n) {
                 Ok(tree) => {
                     tree.permute_features_into(&req.features, slot);
@@ -369,6 +404,7 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
                 }
                 Err(hash) => pending.push((bi, hash, slot)),
             }
+            drop(cache_span);
         }
         // Group the misses by geometry: identical clouds in one batch
         // (same-mesh burst on a cold cache) build their tree exactly once.
@@ -390,12 +426,27 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
                 preps[bi] = Some(r);
             }
         } else if !groups.is_empty() {
+            // Scoped build threads start with an empty span stack; adopt
+            // the worker's path so `tree_build` nests under
+            // `router.preprocess` like the inline branch does.
+            let parent = if crate::trace::spans_enabled() {
+                crate::trace::current_path()
+            } else {
+                None
+            };
             std::thread::scope(|s| {
                 let handles: Vec<_> = groups
                     .into_iter()
                     .map(|((hash, _, _), members)| {
                         let idxs: Vec<usize> = members.iter().map(|(bi, _)| *bi).collect();
-                        (idxs, s.spawn(move || build_gather_group(shared, breq, hash, members)))
+                        let job_parent = parent.clone();
+                        (
+                            idxs,
+                            s.spawn(move || {
+                                let _adopt = job_parent.map(crate::trace::adopt_parent);
+                                build_gather_group(shared, breq, hash, members)
+                            }),
+                        )
                     })
                     .collect();
                 for (idxs, h) in handles {
@@ -445,8 +496,14 @@ fn process_batch(shared: &Shared, batch: Vec<ServeRequest>, xt: &mut Tensor) {
                     // the reply tensor is the only allocation here.
                     tree.unpermute_predictions_view(pred.slice_rows_view(bi * n, n), of)
                 });
-                shared.latency.lock().unwrap().record(latency);
-                shared.served.fetch_add(1, Ordering::Relaxed);
+                {
+                    // One lock: served and its latency sample land
+                    // atomically with respect to `stats()` (the old
+                    // separate AtomicU64 + Mutex pair could tear).
+                    let mut done = shared.done.lock().unwrap();
+                    done.latency.record(latency);
+                    done.served += 1;
+                }
                 let _ = req.reply.try_send(ServeResponse { id: req.id, result, latency });
             }
         }

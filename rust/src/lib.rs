@@ -42,7 +42,18 @@ pub mod rfield;
 pub mod runtime;
 pub mod server;
 pub mod tensor;
+pub mod trace;
 pub mod viz;
 
 /// Crate version string (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Open a trace span on the current thread: `let _s = span!("forward");`.
+/// Sugar for [`trace::span`]; inert unless `--trace spans` / `BSA_TRACE=spans`
+/// is active (one relaxed atomic load when disabled).
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::trace::span($name)
+    };
+}

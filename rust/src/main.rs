@@ -13,6 +13,17 @@
 //!   flops     print the analytic FLOPs table (Table 3 GFLOPS column)
 //!   config    show the resolved configuration (Table 4)
 //!   info      list artifacts and platform info
+//!   stats     query a live server's BSST stats frame and pretty-print
+//!             the router counters, per-stage span histograms, and
+//!             worker-pool gauges (see `bsa::trace`; `--probe` sends one
+//!             synthetic prediction first so span histograms are warm)
+//!
+//! Logging goes to stderr through a minimal built-in logger; filter with
+//! `BSA_LOG=error|warn|info|debug` (default `info`). Tracing is separate
+//! (`--trace` / `BSA_TRACE`, see `bsa::trace`): `bsa serve --trace spans
+//! --trace-out trace.json` additionally writes a Chrome trace-event file
+//! loadable in `chrome://tracing` / Perfetto on exit (Ctrl-C is caught so
+//! the file is flushed).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -46,6 +57,11 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "simd", help: "native-backend SIMD microkernels: auto (BSA_NATIVE_SIMD env var, else runtime AVX2/NEON detection) | on (best detected level) | off (scalar loops, bitwise *_reference numerics); default: [serve] native_simd or auto", takes_value: true, default: None },
         // no baked-in default: absent flag falls back to [serve] precision
         FlagSpec { name: "precision", help: "native-backend storage precision: f32 | f16 (half-precision parameters + attention staging buffers, f32 accumulation everywhere; outputs within the documented f16 tolerance tier); default: [serve] precision or f32", takes_value: true, default: None },
+        // no baked-in default: absent flag falls back to [serve] trace,
+        // then the BSA_TRACE env var, then off
+        FlagSpec { name: "trace", help: "observability level: off | counters | spans (on = spans); spans record per-stage latency histograms served over BSST and `bsa stats` (default: [serve] trace, else BSA_TRACE, else off)", takes_value: true, default: None },
+        FlagSpec { name: "trace-out", help: "write a Chrome trace-event JSON (chrome://tracing / Perfetto) to this path on exit; implies --trace spans", takes_value: true, default: None },
+        FlagSpec { name: "probe", help: "for `bsa stats`: send one synthetic prediction first so span histograms are populated", takes_value: false, default: None },
         FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
         FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
         FlagSpec { name: "out", help: "output path", takes_value: true, default: None },
@@ -62,6 +78,7 @@ fn main() {
     unsafe {
         libc::signal(libc::SIGPIPE, libc::SIG_DFL);
     }
+    init_logger();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let specs = flag_specs();
     let args = match Args::parse(&argv, &specs) {
@@ -84,6 +101,7 @@ fn main() {
         "flops" => cmd_flops(&args),
         "config" => cmd_config(&args),
         "info" => cmd_info(&args),
+        "stats" => cmd_stats(&args),
         other => {
             eprintln!("unknown command {other:?}\n");
             print_usage(&specs);
@@ -93,6 +111,59 @@ fn main() {
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// Minimal stderr logger behind the `log` facade (nothing called
+/// `log::set_logger` before this — every `log::info!` in the crate was a
+/// silent no-op). Timestamped UTC lines, filtered by the `BSA_LOG` env
+/// var (`error|warn|info|debug|trace|off`, default `info`).
+struct StderrLogger {
+    max: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        eprintln!(
+            "{} {:<5} [{}] {}",
+            bsa::trace::format_utc(std::time::SystemTime::now()),
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+fn init_logger() {
+    let max = match std::env::var("BSA_LOG")
+        .map(|v| v.trim().to_ascii_lowercase())
+        .as_deref()
+    {
+        Ok("off") | Ok("none") => log::LevelFilter::Off,
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("info") | Err(_) => log::LevelFilter::Info,
+        Ok(other) => {
+            eprintln!("warning: unknown BSA_LOG level {other:?}; using info");
+            log::LevelFilter::Info
+        }
+    };
+    // Leak one small allocation for the process lifetime; set_logger
+    // wants a &'static. A second init (impossible here) is a no-op.
+    let logger: &'static StderrLogger = Box::leak(Box::new(StderrLogger { max }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(max);
     }
 }
 
@@ -108,7 +179,8 @@ fn print_usage(specs: &[FlagSpec]) {
          balltree  inspect ball-tree statistics\n  \
          flops     print the analytic FLOPs table\n  \
          config    show the resolved configuration (Table 4)\n  \
-         info      list artifacts and platform\n",
+         info      list artifacts and platform\n  \
+         stats     query a live server's stats/trace breakdown (bsa stats <addr>)\n",
         bsa::VERSION
     );
     println!("{}", render_help("<command>", "shared flags", specs));
@@ -186,6 +258,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     sc.native_threads = args.usize_flag("threads", sc.native_threads)?;
     sc.native_simd = args.str_flag("simd", &sc.native_simd);
     sc.precision = args.str_flag("precision", &sc.precision);
+    sc.trace = args.str_flag("trace", &sc.trace);
+    // Trace level: --trace flag > [serve] trace > BSA_TRACE env (the
+    // lazy default inside bsa::trace::level()). --trace-out needs span
+    // events, so it upgrades the level if necessary.
+    let mut trace_level = if sc.trace.is_empty() {
+        bsa::trace::level()
+    } else {
+        sc.trace.parse()?
+    };
+    let trace_out = args.flag("trace-out").map(PathBuf::from);
+    if trace_out.is_some() && trace_level != bsa::trace::TraceLevel::Spans {
+        log::info!("--trace-out implies --trace spans (was {trace_level})");
+        trace_level = bsa::trace::TraceLevel::Spans;
+    }
+    bsa::trace::set_level(trace_level);
+    if trace_out.is_some() {
+        bsa::trace::enable_chrome();
+    }
     // Resolve the process-wide SIMD dispatch level before any kernel
     // runs (`--simd` / [serve] native_simd; "auto" defers to the
     // BSA_NATIVE_SIMD env var and hardware detection).
@@ -223,7 +313,48 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     };
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-    bsa::server::serve(&sc.addr, router, stop)
+    install_stop_handler(stop.clone());
+    if trace_level != bsa::trace::TraceLevel::Off {
+        log::info!("tracing {trace_level} (query with `bsa stats {}`)", sc.addr);
+    }
+    let served = bsa::server::serve(&sc.addr, router, stop);
+    if let Some(path) = &trace_out {
+        bsa::trace::write_chrome_trace(path)?;
+        log::info!(
+            "wrote Chrome trace to {} (open in chrome://tracing or Perfetto)",
+            path.display()
+        );
+    }
+    served
+}
+
+/// The serve-loop stop flag, reachable from the signal handler.
+static SERVE_STOP: std::sync::OnceLock<Arc<std::sync::atomic::AtomicBool>> =
+    std::sync::OnceLock::new();
+
+/// Async-signal-safe stop: one relaxed atomic store (OnceLock::get is a
+/// lock-free read). The serve loop polls the flag every 5ms.
+extern "C" fn handle_stop_signal(_sig: libc::c_int) {
+    if let Some(stop) = SERVE_STOP.get() {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// Catch SIGINT/SIGTERM so `bsa serve` shuts down cleanly — connection
+/// handlers join, the router drains, and `--trace-out` gets written —
+/// instead of the process dying mid-frame.
+fn install_stop_handler(stop: Arc<std::sync::atomic::AtomicBool>) {
+    let _ = SERVE_STOP.set(stop);
+    unsafe {
+        libc::signal(
+            libc::SIGINT,
+            handle_stop_signal as extern "C" fn(libc::c_int) as libc::sighandler_t,
+        );
+        libc::signal(
+            libc::SIGTERM,
+            handle_stop_signal as extern "C" fn(libc::c_int) as libc::sighandler_t,
+        );
+    }
 }
 
 /// Build the pure-Rust backend: architecture from `[model]` config (+
@@ -402,6 +533,111 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
             "  {name:<34} kind={:?} N={} B={} params={}",
             g.kind, g.n, g.batch, g.nparams
         );
+    }
+    Ok(())
+}
+
+/// `bsa stats <addr>`: query a live server's BSST frame and pretty-print
+/// the router counters, per-stage span histograms, trace counters, and
+/// worker-pool gauges. `--probe` first sends one synthetic prediction
+/// (`--task`/`--points` shape it) so span histograms are populated even
+/// against a freshly started server.
+fn cmd_stats(args: &Args) -> anyhow::Result<()> {
+    use bsa::trace::Json;
+    let addr = match args.positional.first() {
+        Some(a) => a.clone(),
+        None => args.str_flag("addr", "127.0.0.1:7077"),
+    };
+    let mut client = bsa::server::Client::connect(&addr)?;
+    if args.has("probe") {
+        let task = args.str_flag("task", "air");
+        let points = args.usize_flag("points", 896)?;
+        let seed = args.u64_flag("seed", 0)?;
+        let gen = bsa::data::generator_for(&task, seed)?;
+        let sample = gen.generate(0, points);
+        client.predict(&sample.coords, &sample.features)?;
+    }
+    let raw = client.stats()?;
+    let doc = bsa::trace::parse_json(&raw)
+        .map_err(|e| anyhow::anyhow!("stats frame is not valid JSON: {e}"))?;
+
+    println!("server {addr}");
+    println!("-- router");
+    for key in [
+        "served",
+        "rejected",
+        "batches",
+        "mean_batch",
+        "tree_hits",
+        "tree_misses",
+        "latency",
+        "latency_n",
+    ] {
+        if let Some(v) = doc.get(key) {
+            match v {
+                Json::Str(s) => println!("  {key:<14} {s}"),
+                Json::Num(x) if x.fract() == 0.0 => println!("  {key:<14} {x:.0}"),
+                Json::Num(x) => println!("  {key:<14} {x:.3}"),
+                other => println!("  {key:<14} {other:?}"),
+            }
+        }
+    }
+
+    let level = doc
+        .get("trace_level")
+        .and_then(Json::as_str)
+        .unwrap_or("off");
+    println!("-- trace (level {level})");
+    if let Some(spans) = doc.get("spans").and_then(Json::entries) {
+        if spans.is_empty() {
+            println!("  no spans recorded (run with --trace spans and serve traffic)");
+        } else {
+            let mut t = Table::new(&["span", "n", "mean us", "p50 us", "p95 us", "p99 us", "max us"]);
+            for (path, hist) in spans {
+                let g = |k: &str| {
+                    hist.get(k)
+                        .and_then(Json::as_f64)
+                        .map(|v| format!("{v:.1}"))
+                        .unwrap_or_else(|| "-".into())
+                };
+                let n = hist
+                    .get("n")
+                    .and_then(Json::as_f64)
+                    .map(|v| format!("{v:.0}"))
+                    .unwrap_or_else(|| "-".into());
+                t.row(&[
+                    path.clone(),
+                    n,
+                    g("mean_us"),
+                    g("p50_us"),
+                    g("p95_us"),
+                    g("p99_us"),
+                    g("max_us"),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+    }
+    if let Some(counters) = doc.get("counters").and_then(Json::entries) {
+        if !counters.is_empty() {
+            println!("-- counters");
+            for (name, v) in counters {
+                if let Some(x) = v.as_f64() {
+                    println!("  {name:<24} {x:.0}");
+                }
+            }
+        }
+    }
+    if let Some(gauges) = doc.get("gauges").and_then(Json::entries) {
+        if !gauges.is_empty() {
+            println!("-- gauges");
+            for (name, v) in gauges {
+                match v {
+                    Json::Num(x) => println!("  {name:<24} {x:.3}"),
+                    _ => println!("  {name:<24} null"),
+                }
+            }
+        }
     }
     Ok(())
 }

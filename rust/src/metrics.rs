@@ -132,15 +132,33 @@ impl LatencyHistogram {
         self.samples.len() + self.overflow.count() as usize
     }
 
-    /// Exact percentile over recorded samples (0.0..=100.0).
-    pub fn percentile_us(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
+    /// Recorded samples, sorted ascending. One clone+sort serves every
+    /// percentile in a batch query (the trace registry renders dozens of
+    /// histograms per BSST snapshot — per-percentile sorting was O(k·n log n)).
+    fn sorted(&self) -> Vec<f64> {
         let mut xs = self.samples.clone();
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs
+    }
+
+    fn rank(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
         let rank = (p / 100.0 * (xs.len() - 1) as f64).round() as usize;
         xs[rank.min(xs.len() - 1)]
+    }
+
+    /// Exact percentile over recorded samples (0.0..=100.0).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        Self::rank(&self.sorted(), p)
+    }
+
+    /// Exact percentiles for several `p` values over ONE sort of the
+    /// samples. Returns one value per requested percentile, in order.
+    pub fn percentiles_us(&self, ps: &[f64]) -> Vec<f64> {
+        let xs = self.sorted();
+        ps.iter().map(|p| Self::rank(&xs, *p)).collect()
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -151,14 +169,15 @@ impl LatencyHistogram {
     }
 
     pub fn summary(&self) -> String {
+        let p = self.percentiles_us(&[50.0, 95.0, 99.0, 100.0]);
         format!(
             "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
             self.count(),
             self.mean_us(),
-            self.percentile_us(50.0),
-            self.percentile_us(95.0),
-            self.percentile_us(99.0),
-            self.percentile_us(100.0),
+            p[0],
+            p[1],
+            p[2],
+            p[3],
         )
     }
 
@@ -166,14 +185,15 @@ impl LatencyHistogram {
     /// `BENCH_*.json` perf-trajectory artifacts are built from, so
     /// successive PRs can regress against recorded numbers.
     pub fn json(&self) -> String {
+        let p = self.percentiles_us(&[50.0, 95.0, 99.0, 100.0]);
         format!(
             "{{\"n\": {}, \"mean_us\": {:.2}, \"p50_us\": {:.2}, \"p95_us\": {:.2}, \"p99_us\": {:.2}, \"max_us\": {:.2}}}",
             self.count(),
             self.mean_us(),
-            self.percentile_us(50.0),
-            self.percentile_us(95.0),
-            self.percentile_us(99.0),
-            self.percentile_us(100.0),
+            p[0],
+            p[1],
+            p[2],
+            p[3],
         )
     }
 }
@@ -296,6 +316,10 @@ mod tests {
         assert_eq!(h.count(), 100);
         assert!((h.percentile_us(50.0) - 50.0).abs() <= 1.0);
         assert!((h.percentile_us(99.0) - 99.0).abs() <= 1.0);
+        let batch = h.percentiles_us(&[50.0, 99.0, 100.0]);
+        assert_eq!(batch[0], h.percentile_us(50.0));
+        assert_eq!(batch[1], h.percentile_us(99.0));
+        assert_eq!(batch[2], 100.0);
         assert!((h.mean_us() - 50.5).abs() < 1e-9);
         assert!(h.summary().contains("n=100"));
     }

@@ -121,8 +121,15 @@ fn handle_conn(mut stream: TcpStream, router: &Router, stop: &AtomicBool) -> any
             stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
             continue;
         }
-        anyhow::ensure!(&magic == REQ_MAGIC, "bad request magic {magic:?}");
-        let result = read_request_body(&mut stream);
+        if &magic != REQ_MAGIC {
+            crate::trace::incr("server.error_frames");
+            anyhow::bail!("bad request magic {magic:?}");
+        }
+        crate::trace::incr("server.requests");
+        let result = {
+            let _s = crate::trace::span("serve.decode");
+            read_request_body(&mut stream)
+        };
         stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
         let (coords, feats) = match result {
             Ok(x) => x,
@@ -133,11 +140,20 @@ fn handle_conn(mut stream: TcpStream, router: &Router, stop: &AtomicBool) -> any
             {
                 return Ok(()); // clean close mid-frame
             }
-            Err(e) => return Err(e),
+            Err(e) => {
+                crate::trace::incr("server.error_frames");
+                return Err(e);
+            }
         };
         match router.infer(coords, feats) {
-            Ok(pred) => write_ok(&mut stream, &pred)?,
-            Err(e) => write_err(&mut stream, &e.to_string())?,
+            Ok(pred) => {
+                let _s = crate::trace::span("serve.encode");
+                write_ok(&mut stream, &pred)?
+            }
+            Err(e) => {
+                crate::trace::incr("server.error_frames");
+                write_err(&mut stream, &e.to_string())?
+            }
         }
     }
 }
@@ -172,11 +188,23 @@ fn write_ok(stream: &mut TcpStream, pred: &Tensor) -> anyhow::Result<()> {
 
 fn write_stats(stream: &mut TcpStream, router: &Router) -> anyhow::Result<()> {
     let st = router.stats();
+    // Keys are append-only (docs/FORMATS.md §2.3): the tracing sections
+    // (`trace_version`/`trace_level`/`spans`/`counters`/`gauges`, schema
+    // §2.3.1) ride after the original router counters. Span aggregation
+    // is per stage path (not per layer index), so the payload stays far
+    // below the client's 64KiB stats bound at any model depth.
     let json = format!(
         "{{\"served\": {}, \"rejected\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
-         \"tree_hits\": {}, \"tree_misses\": {}, \"latency\": \"{}\"}}",
-        st.served, st.rejected, st.batches, st.mean_batch, st.tree_hits, st.tree_misses,
+         \"tree_hits\": {}, \"tree_misses\": {}, \"latency\": \"{}\", \"latency_n\": {}, {}}}",
+        st.served,
+        st.rejected,
+        st.batches,
+        st.mean_batch,
+        st.tree_hits,
+        st.tree_misses,
         st.latency_summary,
+        st.latency_samples,
+        crate::trace::stats_sections_json(),
     );
     let mut buf = Vec::with_capacity(12 + json.len());
     buf.extend_from_slice(RESP_MAGIC);

@@ -1,0 +1,1100 @@
+//! Zero-dependency hierarchical span tracing + metrics registry.
+//!
+//! This is the observability substrate for the serve path and the native
+//! backend: thread-local span stacks with RAII guards record wall-time into
+//! a global lock-sharded registry of [`metrics::LatencyHistogram`]s keyed by
+//! the dotted span path (`forward.layer.ball_attention`), plus named
+//! counters and callback gauges. Everything is std-only — no serde, no
+//! tracing crate — matching the repo's zero-dependency discipline.
+//!
+//! # Levels
+//!
+//! The subsystem has three levels, settable via `--trace off|counters|spans`
+//! on `bsa serve` / the benches, or the `BSA_TRACE` environment variable
+//! (`on` is accepted as an alias for `spans`):
+//!
+//! * `off` — nothing is recorded. Every instrumentation site costs one
+//!   relaxed atomic load and a branch; there is no allocation, no lock, no
+//!   clock read. This is the default.
+//! * `counters` — named counters ([`incr`]) are recorded; spans stay inert.
+//! * `spans` — counters plus full span timing: every [`span`] guard reads
+//!   the monotonic clock twice and records the duration under its
+//!   hierarchical path.
+//!
+//! # Span paths
+//!
+//! Span names are static strings; the recorded key is the dot-joined chain
+//! of the active thread-local stack, e.g. a `span("ball_attention")` inside
+//! `span("layer")` inside `span("forward")` records under
+//! `forward.layer.ball_attention`. Spans cross [`WorkerPool`] job
+//! boundaries via parent adoption: the dispatcher captures
+//! [`current_path`] and each queued job installs it with [`adopt_parent`],
+//! which swaps the worker's entire stack in and restores it on drop — so a
+//! help-while-waiting thread running another dispatch's job cannot leak its
+//! own path into the adopted one.
+//!
+//! [`WorkerPool`]: crate::backend::pool::WorkerPool
+//!
+//! # Chrome trace export
+//!
+//! When the chrome sink is enabled ([`enable_chrome`], wired to
+//! `--trace-out <file>`), every closed span additionally appends a complete
+//! ("ph":"X") trace event with a per-thread tid, and
+//! [`write_chrome_trace`] serializes the buffer in Chrome trace-event
+//! format — loadable directly in `chrome://tracing` or Perfetto. See
+//! docs/FORMATS.md §2.3.1 for the BSST JSON schema these stats ride on.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::metrics::LatencyHistogram;
+
+/// Environment variable consulted for the initial trace level.
+pub const TRACE_ENV: &str = "BSA_TRACE";
+
+/// Schema version of the BSST `spans`/`gauges`/`counters` sections
+/// (docs/FORMATS.md §2.3.1). Bump only on incompatible shape changes;
+/// key additions are append-only and do not bump it.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Level
+// ---------------------------------------------------------------------------
+
+/// How much the trace subsystem records. Ordered: each level includes the
+/// previous one's recording.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// Record nothing (default). One relaxed load per instrumentation site.
+    Off = 0,
+    /// Record named counters only.
+    Counters = 1,
+    /// Record counters and span timings.
+    Spans = 2,
+}
+
+impl TraceLevel {
+    /// Parse a user-facing level string. `"on"` is an alias for `"spans"`.
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "none" | "" => Some(TraceLevel::Off),
+            "counters" | "1" => Some(TraceLevel::Counters),
+            "spans" | "on" | "2" => Some(TraceLevel::Spans),
+            _ => None,
+        }
+    }
+
+    /// The canonical name (`off` / `counters` / `spans`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Counters => "counters",
+            TraceLevel::Spans => "spans",
+        }
+    }
+}
+
+impl std::fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for TraceLevel {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<TraceLevel> {
+        TraceLevel::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown trace level {s:?} (expected off|counters|spans)")
+        })
+    }
+}
+
+/// Global level. 255 = uninitialized sentinel: the first read resolves
+/// `BSA_TRACE` lazily so library users get env control without any init
+/// call, while `bsa serve --trace ...` overrides it explicitly.
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+#[cold]
+fn init_level_from_env() -> u8 {
+    let lvl = std::env::var(TRACE_ENV)
+        .ok()
+        .and_then(|v| TraceLevel::parse(&v))
+        .unwrap_or(TraceLevel::Off) as u8;
+    // Racing initializers agree (env is stable), so a plain store is fine.
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// The active trace level.
+#[inline]
+pub fn level() -> TraceLevel {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == 255 { init_level_from_env() } else { raw };
+    match raw {
+        1 => TraceLevel::Counters,
+        2 => TraceLevel::Spans,
+        _ => TraceLevel::Off,
+    }
+}
+
+/// Override the trace level for the whole process (flag > config > env).
+pub fn set_level(lvl: TraceLevel) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// True when counters (or more) are being recorded.
+#[inline]
+pub fn counters_enabled() -> bool {
+    level() >= TraceLevel::Counters
+}
+
+/// True when span timings are being recorded.
+#[inline]
+pub fn spans_enabled() -> bool {
+    level() == TraceLevel::Spans
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local span stack
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct SpanStack {
+    /// Adopted prefix installed by [`adopt_parent`] (dispatcher's path).
+    parent: Option<String>,
+    /// Names of the spans currently open on this thread, outermost first.
+    names: Vec<&'static str>,
+}
+
+impl SpanStack {
+    fn path(&self) -> Option<String> {
+        if self.parent.is_none() && self.names.is_empty() {
+            return None;
+        }
+        let mut out = String::with_capacity(48);
+        if let Some(p) = &self.parent {
+            out.push_str(p);
+        }
+        for name in &self.names {
+            if !out.is_empty() {
+                out.push('.');
+            }
+            out.push_str(name);
+        }
+        Some(out)
+    }
+}
+
+thread_local! {
+    static STACK: RefCell<SpanStack> = RefCell::new(SpanStack::default());
+}
+
+/// The dotted path of the innermost open span on this thread (including any
+/// adopted parent prefix), or `None` when no span is open. Dispatchers
+/// capture this to hand to [`adopt_parent`] inside pool jobs.
+pub fn current_path() -> Option<String> {
+    STACK.with(|s| s.borrow().path())
+}
+
+/// RAII guard returned by [`span`]. On drop it records the elapsed wall
+/// time under the full dotted path, then pops itself from the stack.
+pub struct SpanGuard {
+    start: Option<Instant>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let elapsed = start.elapsed();
+        let path = STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            let path = st.path();
+            st.names.pop();
+            path
+        });
+        if let Some(path) = path {
+            record_span(&path, elapsed, start);
+        }
+    }
+}
+
+/// Open a span named `name` on this thread. Inert (no clock read, no stack
+/// push) unless the level is `spans`. Use via the [`span!`] macro or
+/// directly; the guard closes the span when dropped.
+///
+/// [`span!`]: crate::span
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !spans_enabled() {
+        return SpanGuard { start: None };
+    }
+    STACK.with(|s| s.borrow_mut().names.push(name));
+    SpanGuard {
+        start: Some(Instant::now()),
+    }
+}
+
+/// Guard installed by [`adopt_parent`]: holds the worker thread's previous
+/// span stack and restores it on drop.
+pub struct ParentGuard {
+    saved: SpanStack,
+}
+
+impl Drop for ParentGuard {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            *s.borrow_mut() = std::mem::take(&mut self.saved);
+        });
+    }
+}
+
+/// Install `parent` as this thread's span prefix for the duration of the
+/// returned guard. The *entire* current stack is swapped out (not just a
+/// prefix): a help-while-waiting caller thread may execute another
+/// dispatch's job with its own spans still open, and those must not leak
+/// into the adopted path. Restored exactly on drop.
+pub fn adopt_parent(parent: String) -> ParentGuard {
+    let saved = STACK.with(|s| {
+        std::mem::replace(
+            &mut *s.borrow_mut(),
+            SpanStack {
+                parent: Some(parent),
+                names: Vec::new(),
+            },
+        )
+    });
+    ParentGuard { saved }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded registry
+// ---------------------------------------------------------------------------
+
+const SHARDS: usize = 8;
+
+#[derive(Default)]
+struct Shard {
+    spans: Mutex<BTreeMap<String, LatencyHistogram>>,
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+struct Registry {
+    shards: [Shard; SHARDS],
+    gauges: Mutex<BTreeMap<&'static str, Box<dyn Fn() -> f64 + Send + Sync>>>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry {
+        shards: Default::default(),
+        gauges: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// FNV-1a over the key bytes, folded to a shard index. Deterministic and
+/// dependency-free; collisions only cost lock contention, never data.
+fn shard_index(key: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) % SHARDS
+}
+
+fn record_span(path: &str, elapsed: Duration, start: Instant) {
+    let reg = registry();
+    {
+        let shard = &reg.shards[shard_index(path)];
+        let mut spans = shard.spans.lock().unwrap();
+        match spans.get_mut(path) {
+            Some(h) => h.record(elapsed),
+            None => {
+                let mut h = LatencyHistogram::new();
+                h.record(elapsed);
+                spans.insert(path.to_string(), h);
+            }
+        }
+    }
+    chrome_push(path, start, elapsed);
+}
+
+/// Record a pre-measured duration (in microseconds) under `path`, for call
+/// sites that can't hold a guard across the measured region (e.g. router
+/// queue wait measured from an enqueue timestamp). No-op unless spans are
+/// enabled.
+pub fn record_us(path: &'static str, us: f64) {
+    if !spans_enabled() {
+        return;
+    }
+    let reg = registry();
+    let shard = &reg.shards[shard_index(path)];
+    let mut spans = shard.spans.lock().unwrap();
+    match spans.get_mut(path) {
+        Some(h) => h.record_us(us),
+        None => {
+            let mut h = LatencyHistogram::new();
+            h.record_us(us);
+            spans.insert(path.to_string(), h);
+        }
+    }
+}
+
+/// Increment counter `name` by 1. No-op below the `counters` level.
+#[inline]
+pub fn incr(name: &'static str) {
+    incr_by(name, 1);
+}
+
+/// Increment counter `name` by `n`. No-op below the `counters` level.
+pub fn incr_by(name: &'static str, n: u64) {
+    if !counters_enabled() {
+        return;
+    }
+    let reg = registry();
+    let shard = &reg.shards[shard_index(name)];
+    let mut counters = shard.counters.lock().unwrap();
+    *counters.entry(name).or_insert(0) += n;
+}
+
+/// Register a named gauge: `f` is called at snapshot time (BSST stats /
+/// `bsa stats`). Re-registering a name replaces the previous callback, so
+/// idempotent init paths (e.g. `global_pool`) are safe.
+pub fn register_gauge(name: &'static str, f: Box<dyn Fn() -> f64 + Send + Sync>) {
+    registry().gauges.lock().unwrap().insert(name, f);
+}
+
+/// Snapshot of every span histogram, keyed by dotted path.
+pub fn spans_snapshot() -> BTreeMap<String, LatencyHistogram> {
+    let mut out = BTreeMap::new();
+    for shard in &registry().shards {
+        for (k, v) in shard.spans.lock().unwrap().iter() {
+            out.insert(k.clone(), v.clone());
+        }
+    }
+    out
+}
+
+/// Snapshot of every counter.
+pub fn counters_snapshot() -> BTreeMap<&'static str, u64> {
+    let mut out = BTreeMap::new();
+    for shard in &registry().shards {
+        for (k, v) in shard.counters.lock().unwrap().iter() {
+            out.insert(*k, *v);
+        }
+    }
+    out
+}
+
+/// Evaluate every registered gauge.
+pub fn gauges_snapshot() -> BTreeMap<&'static str, f64> {
+    let gauges = registry().gauges.lock().unwrap();
+    gauges.iter().map(|(k, f)| (*k, f())).collect()
+}
+
+/// Clear all recorded spans and counters (gauges keep their callbacks).
+/// Test hook; also useful before an A/B overhead measurement.
+pub fn reset() {
+    for shard in &registry().shards {
+        shard.spans.lock().unwrap().clear();
+        shard.counters.lock().unwrap().clear();
+    }
+    let sink = chrome_sink();
+    sink.events.lock().unwrap().clear();
+}
+
+/// The tracing sections of the BSST stats JSON, as `"key": value` pairs
+/// without the enclosing braces (spliced into `server::write_stats`'s
+/// hand-built object). Shape documented in docs/FORMATS.md §2.3.1.
+pub fn stats_sections_json() -> String {
+    let mut out = String::with_capacity(1024);
+    let _ = write!(
+        out,
+        "\"trace_version\": {TRACE_SCHEMA_VERSION}, \"trace_level\": \"{}\"",
+        level()
+    );
+    out.push_str(", \"spans\": {");
+    let mut first = true;
+    for (path, hist) in spans_snapshot() {
+        if !first {
+            out.push_str(", ");
+        }
+        first = false;
+        let _ = write!(out, "\"{path}\": {}", hist.json());
+    }
+    out.push_str("}, \"counters\": {");
+    let mut first = true;
+    for (name, v) in counters_snapshot() {
+        if !first {
+            out.push_str(", ");
+        }
+        first = false;
+        let _ = write!(out, "\"{name}\": {v}");
+    }
+    out.push_str("}, \"gauges\": {");
+    let mut first = true;
+    for (name, v) in gauges_snapshot() {
+        if !first {
+            out.push_str(", ");
+        }
+        first = false;
+        let _ = write!(out, "\"{name}\": {}", fmt_f64(v));
+    }
+    out.push('}');
+    out
+}
+
+/// JSON-safe float formatting: finite values print as-is, non-finite as
+/// null (hand-rolled JSON has no Infinity/NaN literals).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event sink
+// ---------------------------------------------------------------------------
+
+struct ChromeEvent {
+    path: String,
+    ts_us: f64,
+    dur_us: f64,
+    tid: u64,
+}
+
+struct ChromeSink {
+    enabled: AtomicBool,
+    events: Mutex<Vec<ChromeEvent>>,
+    epoch: OnceLock<Instant>,
+}
+
+static CHROME: OnceLock<ChromeSink> = OnceLock::new();
+
+/// Cap on buffered chrome events: a runaway spans-on serve run must not
+/// grow without bound. ~1M events is ~100MB of JSON — past any useful
+/// Perfetto load anyway.
+const CHROME_EVENT_CAP: usize = 1 << 20;
+
+fn chrome_sink() -> &'static ChromeSink {
+    CHROME.get_or_init(|| ChromeSink {
+        enabled: AtomicBool::new(false),
+        events: Mutex::new(Vec::new()),
+        epoch: OnceLock::new(),
+    })
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Start buffering chrome trace events (wired to `--trace-out`). The epoch
+/// for timestamps is fixed at the first enable.
+pub fn enable_chrome() {
+    let sink = chrome_sink();
+    sink.epoch.get_or_init(Instant::now);
+    sink.enabled.store(true, Ordering::Relaxed);
+}
+
+/// True when the chrome sink is buffering events.
+pub fn chrome_enabled() -> bool {
+    chrome_sink().enabled.load(Ordering::Relaxed)
+}
+
+fn chrome_push(path: &str, start: Instant, dur: Duration) {
+    let sink = chrome_sink();
+    if !sink.enabled.load(Ordering::Relaxed) {
+        return;
+    }
+    let Some(epoch) = sink.epoch.get() else { return };
+    // Saturating: a span that started before the epoch clamps to ts=0.
+    let ts_us = start.duration_since(*epoch).as_secs_f64() * 1e6;
+    let tid = TID.with(|t| *t);
+    let mut events = sink.events.lock().unwrap();
+    if events.len() >= CHROME_EVENT_CAP {
+        return;
+    }
+    events.push(ChromeEvent {
+        path: path.to_string(),
+        ts_us,
+        dur_us: dur.as_secs_f64() * 1e6,
+        tid,
+    });
+}
+
+/// Serialize the buffered events as Chrome trace-event-format JSON
+/// (complete "X" events, pid=1, tid = per-thread counter). Loadable in
+/// `chrome://tracing` and Perfetto.
+pub fn chrome_trace_json() -> String {
+    let sink = chrome_sink();
+    let events = sink.events.lock().unwrap();
+    let mut out = String::with_capacity(events.len() * 96 + 64);
+    out.push_str("{\"traceEvents\": [");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(
+            out,
+            "{{\"name\": \"{}\", \"cat\": \"bsa\", \"ph\": \"X\", \"ts\": {:.3}, \
+             \"dur\": {:.3}, \"pid\": 1, \"tid\": {}}}",
+            ev.path, ev.ts_us, ev.dur_us, ev.tid
+        );
+    }
+    out.push_str("], \"displayTimeUnit\": \"ms\"}");
+    out
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json())
+}
+
+// ---------------------------------------------------------------------------
+// Mini JSON parser (for `bsa stats` — the client must read back the BSST
+// payload the server hand-writes; still zero-dependency)
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Objects preserve insertion order via `Vec` so
+/// `bsa stats` prints sections in server order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Look up a key in an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Object entries, if this is an object.
+    pub fn entries(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document. Recursive descent with a depth limit; supports
+/// the subset this codebase emits (no unicode escapes beyond `\uXXXX`,
+/// which are decoded for the BMP and replaced with U+FFFD outside it).
+pub fn parse_json(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.i != bytes.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+const MAX_DEPTH: usize = 64;
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err("nesting too deep".into());
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected {:?} at byte {}", c as char, self.i)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number {s:?}: {e}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|e| e.to_string())?;
+                            let code =
+                                u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str, so valid).
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|e| e.to_string())?;
+                    let ch = rest.chars().next().ok_or("unexpected end in string")?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value(depth + 1)?;
+            out.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// UTC timestamp formatting (for the stderr logger — still zero-dependency)
+// ---------------------------------------------------------------------------
+
+/// Format a [`SystemTime`] as `YYYY-MM-DDTHH:MM:SS.mmmZ` using Howard
+/// Hinnant's `civil_from_days` algorithm — no chrono, no libc localtime.
+pub fn format_utc(t: SystemTime) -> String {
+    let dur = t
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .unwrap_or(Duration::ZERO);
+    let secs = dur.as_secs();
+    let millis = dur.subsec_millis();
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (h, m, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+
+    // civil_from_days (Hinnant): days since 1970-01-01 -> (y, m, d).
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let mo = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if mo <= 2 { y + 1 } else { y };
+
+    format!("{y:04}-{mo:02}-{d:02}T{h:02}:{m:02}:{s:02}.{millis:03}Z")
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The trace level is process-global and lib tests run concurrently in
+    /// one binary — every test that mutates the level serializes here.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(TraceLevel::parse("off"), Some(TraceLevel::Off));
+        assert_eq!(TraceLevel::parse("counters"), Some(TraceLevel::Counters));
+        assert_eq!(TraceLevel::parse("spans"), Some(TraceLevel::Spans));
+        assert_eq!(TraceLevel::parse("on"), Some(TraceLevel::Spans));
+        assert_eq!(TraceLevel::parse("SPANS"), Some(TraceLevel::Spans));
+        assert_eq!(TraceLevel::parse(""), Some(TraceLevel::Off));
+        assert_eq!(TraceLevel::parse("bogus"), None);
+        assert_eq!(TraceLevel::Spans.as_str(), "spans");
+    }
+
+    #[test]
+    fn spans_nest_into_dotted_paths() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Spans);
+        {
+            let _a = span("t_nest_outer");
+            {
+                let _b = span("t_nest_inner");
+                assert_eq!(
+                    current_path().as_deref(),
+                    Some("t_nest_outer.t_nest_inner")
+                );
+            }
+            assert_eq!(current_path().as_deref(), Some("t_nest_outer"));
+        }
+        set_level(prev);
+        let snap = spans_snapshot();
+        assert!(snap.contains_key("t_nest_outer"));
+        assert!(snap.contains_key("t_nest_outer.t_nest_inner"));
+        assert_eq!(snap["t_nest_outer.t_nest_inner"].count(), 1);
+    }
+
+    #[test]
+    fn disabled_mode_records_nothing() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Off);
+        {
+            let _a = span("t_disabled_span");
+            incr("t_disabled_counter");
+        }
+        set_level(prev);
+        assert!(!spans_snapshot().contains_key("t_disabled_span"));
+        assert!(!counters_snapshot().contains_key("t_disabled_counter"));
+    }
+
+    #[test]
+    fn counters_level_counts_but_does_not_time() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Counters);
+        {
+            let _a = span("t_counters_span");
+            incr("t_counters_counter");
+            incr_by("t_counters_counter", 4);
+        }
+        set_level(prev);
+        assert_eq!(counters_snapshot().get("t_counters_counter"), Some(&5));
+        assert!(!spans_snapshot().contains_key("t_counters_span"));
+    }
+
+    #[test]
+    fn adopt_parent_swaps_and_restores_whole_stack() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Spans);
+        {
+            let _mine = span("t_adopt_mine");
+            assert_eq!(current_path().as_deref(), Some("t_adopt_mine"));
+            {
+                let _p = adopt_parent("t_adopt_parent.dispatch".to_string());
+                // The caller's own open span must NOT leak into the
+                // adopted path (help-while-waiting correctness).
+                assert_eq!(
+                    current_path().as_deref(),
+                    Some("t_adopt_parent.dispatch")
+                );
+                let _child = span("t_adopt_child");
+                assert_eq!(
+                    current_path().as_deref(),
+                    Some("t_adopt_parent.dispatch.t_adopt_child")
+                );
+                drop(_child);
+            }
+            assert_eq!(current_path().as_deref(), Some("t_adopt_mine"));
+        }
+        set_level(prev);
+        assert!(spans_snapshot().contains_key("t_adopt_parent.dispatch.t_adopt_child"));
+    }
+
+    #[test]
+    fn spans_cross_pool_job_boundaries() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Spans);
+        {
+            let _outer = span("t_pool_outer");
+            assert_eq!(current_path().as_deref(), Some("t_pool_outer"));
+            let mut data = vec![0u64; 64];
+            // Adoption is built into par_rows: queued jobs inherit the
+            // dispatcher's path with no per-call plumbing.
+            crate::backend::pool::par_rows(&mut data, 1, 8, |row0, chunk| {
+                let _s = span("t_pool_job");
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (row0 + i) as u64;
+                }
+            });
+            // Caller's own stack intact after helping with jobs.
+            assert_eq!(current_path().as_deref(), Some("t_pool_outer"));
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as u64);
+            }
+        }
+        set_level(prev);
+        let snap = spans_snapshot();
+        assert!(snap.contains_key("t_pool_outer.t_pool_job"));
+        assert!(snap["t_pool_outer.t_pool_job"].count() >= 1);
+    }
+
+    #[test]
+    fn gauges_evaluate_at_snapshot_time() {
+        let _g = lock();
+        register_gauge("t_gauge", Box::new(|| 42.5));
+        let snap = gauges_snapshot();
+        assert_eq!(snap.get("t_gauge"), Some(&42.5));
+        // Re-registering replaces.
+        register_gauge("t_gauge", Box::new(|| 7.0));
+        assert_eq!(gauges_snapshot().get("t_gauge"), Some(&7.0));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_matched_events() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Spans);
+        enable_chrome();
+        {
+            let _a = span("t_chrome_outer");
+            let _b = span("t_chrome_inner");
+        }
+        set_level(prev);
+        let text = chrome_trace_json();
+        let doc = parse_json(&text).expect("chrome trace must be valid JSON");
+        let events = doc
+            .get("traceEvents")
+            .and_then(|v| match v {
+                Json::Arr(a) => Some(a),
+                _ => None,
+            })
+            .expect("traceEvents array");
+        let mut seen_outer = false;
+        let mut seen_inner = false;
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+            assert!(ev.get("tid").and_then(Json::as_f64).is_some());
+            match ev.get("name").and_then(Json::as_str) {
+                Some("t_chrome_outer") => seen_outer = true,
+                Some("t_chrome_outer.t_chrome_inner") => seen_inner = true,
+                _ => {}
+            }
+        }
+        assert!(seen_outer && seen_inner, "both spans present as X events");
+    }
+
+    #[test]
+    fn stats_sections_shape() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Spans);
+        {
+            let _a = span("t_stats_span");
+            incr("t_stats_counter");
+        }
+        set_level(prev);
+        let wrapped = format!("{{{}}}", stats_sections_json());
+        let doc = parse_json(&wrapped).expect("stats sections must parse");
+        assert_eq!(
+            doc.get("trace_version").and_then(Json::as_f64),
+            Some(f64::from(TRACE_SCHEMA_VERSION))
+        );
+        assert!(doc.get("trace_level").and_then(Json::as_str).is_some());
+        let spans = doc.get("spans").expect("spans object");
+        let hist = spans.get("t_stats_span").expect("recorded span present");
+        for key in ["n", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"] {
+            assert!(hist.get(key).is_some(), "span histogram missing {key}");
+        }
+        assert_eq!(
+            doc.get("counters")
+                .and_then(|c| c.get("t_stats_counter"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert!(doc.get("gauges").is_some());
+    }
+
+    #[test]
+    fn record_us_aggregates_without_guard() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Spans);
+        record_us("t_record_us", 100.0);
+        record_us("t_record_us", 300.0);
+        set_level(prev);
+        let snap = spans_snapshot();
+        let h = &snap["t_record_us"];
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_us() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_parser_round_trips() {
+        let doc = parse_json(
+            r#"{"a": 1.5, "b": [true, false, null], "c": {"nested": "str\n\"q\""}, "d": -2e3}"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("a").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(
+            doc.get("b"),
+            Some(&Json::Arr(vec![
+                Json::Bool(true),
+                Json::Bool(false),
+                Json::Null
+            ]))
+        );
+        assert_eq!(
+            doc.get("c").and_then(|c| c.get("nested")).and_then(Json::as_str),
+            Some("str\n\"q\"")
+        );
+        assert_eq!(doc.get("d").and_then(Json::as_f64), Some(-2000.0));
+        assert!(parse_json("{\"unterminated\": ").is_err());
+        assert!(parse_json("[1, 2,]").is_err());
+        assert!(parse_json("{} trailing").is_err());
+    }
+
+    #[test]
+    fn format_utc_known_dates() {
+        assert_eq!(
+            format_utc(SystemTime::UNIX_EPOCH),
+            "1970-01-01T00:00:00.000Z"
+        );
+        // 2000-02-29T12:34:56.789Z == 951827696.789 (leap day crossing).
+        let t = SystemTime::UNIX_EPOCH + Duration::from_millis(951_827_696_789);
+        assert_eq!(format_utc(t), "2000-02-29T12:34:56.789Z");
+        // 2026-08-08T00:00:00Z == 1786147200.
+        let t = SystemTime::UNIX_EPOCH + Duration::from_secs(1_786_147_200);
+        assert_eq!(format_utc(t), "2026-08-08T00:00:00.000Z");
+    }
+}

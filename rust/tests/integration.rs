@@ -620,6 +620,153 @@ fn native_tcp_connection_churn_reaps_handlers() {
 }
 
 #[test]
+fn native_tcp_stats_spans_roundtrip() {
+    // With tracing at `spans`, the BSST stats frame must carry the
+    // versioned trace sections with per-stage histograms aggregated
+    // across the whole serve path — decode, router preprocess, every
+    // backend stage, encode — and the payload must still round-trip
+    // through the ordinary TCP client (i.e. stay under the client's
+    // 64 KiB stats bound).
+    let prior = bsa::trace::level();
+    bsa::trace::set_level(bsa::trace::TraceLevel::Spans);
+
+    let backend = Arc::new(tiny_native_backend(8));
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Arc::new(Router::start(backend, sc).unwrap());
+
+    let addr = "127.0.0.1:17185";
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let srv = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || bsa::server::serve(&addr, router, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let gen = generator_for("syn", 12).unwrap();
+    let sample = gen.generate(0, 190);
+    let mut client = bsa::server::Client::connect(addr).unwrap();
+    for _ in 0..2 {
+        let pred = client.predict(&sample.coords, &sample.features).unwrap();
+        assert_eq!(pred.shape(), &[190, 1]);
+        assert!(pred.all_finite());
+    }
+
+    let stats = client.stats().unwrap();
+    // versioned schema marker + level echo
+    assert!(stats.contains("\"trace_version\": 1"), "stats json: {stats}");
+    assert!(stats.contains("\"spans\""), "stats json: {stats}");
+    // serve-path endpoints
+    assert!(stats.contains("\"serve.decode\""), "stats json: {stats}");
+    assert!(stats.contains("\"serve.encode\""), "stats json: {stats}");
+    // router preprocess + tree cache
+    assert!(stats.contains("\"router.preprocess\""), "stats json: {stats}");
+    assert!(
+        stats.contains("\"router.preprocess.tree_cache\""),
+        "stats json: {stats}"
+    );
+    // backend stages (aggregated per stage path, not per layer index)
+    assert!(stats.contains("\"forward.layer\""), "stats json: {stats}");
+    assert!(
+        stats.contains("\"forward.layer.ball_attention\""),
+        "stats json: {stats}"
+    );
+    assert!(
+        stats.contains("\"forward.layer.compression\""),
+        "stats json: {stats}"
+    );
+    assert!(
+        stats.contains("\"forward.layer.selection\""),
+        "stats json: {stats}"
+    );
+    assert!(
+        stats.contains("\"forward.layer.gated_merge\""),
+        "stats json: {stats}"
+    );
+    assert!(stats.contains("\"forward.layer.swiglu\""), "stats json: {stats}");
+    // pool gauges registered by the global pool
+    assert!(stats.contains("\"gauges\""), "stats json: {stats}");
+    // the frame must parse as JSON end-to-end
+    let parsed = bsa::trace::parse_json(&stats).expect("stats frame is valid JSON");
+    let spans = parsed.get("spans").expect("spans object present");
+    assert!(
+        spans.entries().map(|e| e.len()).unwrap_or(0) >= 8,
+        "expected a rich span set, got: {stats}"
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    bsa::trace::set_level(prior);
+}
+
+#[test]
+fn router_stats_latency_count_is_consistent_with_served() {
+    // Regression for a torn read in RouterStats: `served` and the
+    // latency histogram used to live behind separate synchronisation
+    // (an AtomicU64 and a Mutex), so a stats() call racing a completion
+    // could observe served == k with only k-1 latency samples. Both now
+    // commit under one lock; every snapshot must satisfy the invariant
+    // latency_samples == served, no matter when it is taken.
+    let backend = Arc::new(tiny_native_backend(9));
+    let sc = ServeConfig { workers: 2, flush_us: 100, ..Default::default() };
+    let router = Arc::new(Router::start(backend, sc).unwrap());
+
+    let gen = generator_for("syn", 13).unwrap();
+    let requests_per_thread = 6usize;
+    let threads = 3usize;
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let router = router.clone();
+            let sample = gen.generate(t as u64, 170 + 10 * t);
+            s.spawn(move || {
+                for _ in 0..requests_per_thread {
+                    let pred = router
+                        .infer(sample.coords.clone(), sample.features.clone())
+                        .unwrap();
+                    assert!(pred.all_finite());
+                }
+            });
+        }
+        // poll snapshots while completions land: the invariant must hold
+        // on every one, not just the final quiescent read
+        let poller = {
+            let router = router.clone();
+            let done = done.clone();
+            s.spawn(move || {
+                let mut snapshots = 0u32;
+                while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                    let st = router.stats();
+                    assert_eq!(
+                        st.latency_samples, st.served,
+                        "torn stats snapshot: served={} latency_samples={}",
+                        st.served, st.latency_samples
+                    );
+                    snapshots += 1;
+                    std::thread::yield_now();
+                }
+                snapshots
+            })
+        };
+        // release the poller only once every request has completed, so
+        // it samples snapshots throughout the contended window
+        let target = (threads * requests_per_thread) as u64;
+        while router.stats().served < target {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+        let polls = poller.join().expect("poller");
+        assert!(polls > 0, "poller never sampled");
+    });
+
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.served, (threads * requests_per_thread) as u64);
+    assert_eq!(st.latency_samples, st.served);
+}
+
+#[test]
 fn native_backend_loads_param_file() {
     // Param-file round trip through the backend constructor: weights
     // saved to a .bsackpt file serve identically to the in-memory ones.

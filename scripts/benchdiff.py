@@ -14,7 +14,7 @@ index otherwise), matched across the two documents, and reported with
 its percent delta and a direction-aware verdict:
 
     lower-is-better   keys ending in _us / _ms / _mb (peak RSS), p50/p95
-                      latencies, misses
+                      latencies, misses, overhead_pct (tracing overhead)
     higher-is-better  keys ending in per_s / speedup / hits, saved_us
 
 Keys that are run descriptors rather than measurements (reps, threads,
@@ -42,7 +42,7 @@ SKIP_KEYS = {
 }
 
 HIGHER_SUFFIXES = ("per_s", "speedup", "speedup_vs_1t", "hits", "saved_us")
-LOWER_SUFFIXES = ("_us", "_ms", "_mb", "misses")
+LOWER_SUFFIXES = ("_us", "_ms", "_mb", "misses", "overhead_pct")
 
 
 def direction(path: str) -> str | None:

@@ -20,6 +20,10 @@
 # (threads_sweep, threads=1, fwd_per_s) and both the baseline and the
 # fresh run sampled with reps >= 3 (single-sample smoke runs are noise),
 # the fresh run must stay within 10% of the baseline or the gate fails.
+# The full gate also smoke-tests the tracing subsystem end to end (a
+# traced serve answered by `bsa stats`, plus Chrome-trace validation of
+# the --trace-out file) and fails if the bench-measured spans-on
+# overhead (BENCH_native.json trace_overhead.overhead_pct) exceeds 3%.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -83,6 +87,44 @@ trap '[[ -z "${BASELINE_NATIVE}" ]] || rm -f "${BASELINE_NATIVE}"; [[ -z "${BASE
   cargo bench --bench paper -- bsa_native --reps "${REPS}" --quick
 )
 
+# Trace-layer smoke: a short traced native serve must answer `bsa stats`
+# with per-stage span histograms, and --trace-out must produce a
+# Perfetto-loadable Chrome trace on shutdown. trace.json is left in the
+# repo root so CI can upload it as a build artifact.
+echo "== trace smoke (serve --trace spans -> bsa stats -> chrome trace)"
+TRACE_ADDR="127.0.0.1:17891"
+rm -f trace.json
+rust/target/release/bsa serve --backend native --task syn --n 256 \
+  --trace spans --trace-out trace.json --addr "$TRACE_ADDR" &
+SERVE_PID=$!
+sleep 2
+STATS_OUT="$(rust/target/release/bsa stats "$TRACE_ADDR" --probe --task syn --points 200)" || {
+  echo "check.sh: bsa stats failed against the traced server" >&2
+  kill "$SERVE_PID" 2>/dev/null || true
+  exit 1
+}
+for span in serve.decode router.preprocess forward.layer.ball_attention; do
+  if ! grep -q "$span" <<<"$STATS_OUT"; then
+    echo "check.sh: traced stats output is missing the ${span} span:" >&2
+    echo "$STATS_OUT" >&2
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+  fi
+done
+kill -INT "$SERVE_PID"
+wait "$SERVE_PID" || true
+python3 - trace.json <<'PYEOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+events = doc.get("traceEvents")
+assert isinstance(events, list) and events, "trace.json has no traceEvents"
+assert all(e.get("ph") == "X" for e in events), "expected complete ('X') events"
+names = {e.get("name") for e in events}
+assert any(n and n.startswith("forward") for n in names), f"no forward spans in {sorted(names)[:10]}"
+print(f"check.sh: chrome trace ok ({len(events)} events, {len(names)} distinct spans)")
+PYEOF
+
 # rebar-style per-metric deltas vs the committed baselines
 # (informational here; CI can add --fail-over for a hard threshold)
 if command -v python3 >/dev/null 2>&1; then
@@ -117,6 +159,35 @@ def sweep_point(path):
         if row.get("threads") == 1 and isinstance(fps, (int, float)) and not isinstance(fps, bool):
             return float(fps), reps
     return None, reps
+
+def trace_overhead(path):
+    """(overhead_pct, reps) from the trace_overhead record, or (None, reps)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except Exception:
+        return None, 0
+    reps = doc.get("reps") if isinstance(doc.get("reps"), int) else 0
+    rec = doc.get("trace_overhead") or {}
+    pct = rec.get("overhead_pct")
+    if isinstance(pct, (int, float)) and not isinstance(pct, bool):
+        return float(pct), reps
+    return None, reps
+
+# Spans-on tracing overhead gate: the fresh run's measured overhead must
+# stay under 3% (single-sample smoke runs are too noisy to arm it).
+MAX_TRACE_OVERHEAD_PCT = 3.0
+pct, pct_reps = trace_overhead(sys.argv[2])
+if pct is None:
+    print("check.sh: fresh BENCH_native.json has no trace_overhead record; overhead gate skipped")
+elif pct_reps < MIN_REPS:
+    print(f"check.sh: trace overhead gate skipped — needs reps >= {MIN_REPS} "
+          f"(current reps={pct_reps}); measured {pct:+.2f}% informationally")
+elif pct > MAX_TRACE_OVERHEAD_PCT:
+    sys.exit(f"check.sh: span-tracing overhead {pct:.2f}% exceeds "
+             f"{MAX_TRACE_OVERHEAD_PCT:.1f}% (spans must stay near-free)")
+else:
+    print(f"check.sh: span-tracing overhead ok ({pct:+.2f}% <= {MAX_TRACE_OVERHEAD_PCT:.1f}%)")
 
 base, base_reps = sweep_point(sys.argv[1])
 cur, cur_reps = sweep_point(sys.argv[2])
