@@ -17,9 +17,10 @@
 //!                     bench target spends its time)
 //!
 //! `serve_hot_path` measures the host-side serving hot path (cold
-//! ball-tree build vs BallTreeCache hit, plus end-to-end router latency
-//! when artifacts are present) and writes the machine-readable
-//! `BENCH_serve.json` perf-trajectory artifact. `bsa_native` measures
+//! ball-tree build vs BallTreeCache hit, the poll-core TCP server under
+//! concurrent pipelined clients + 256 idle connections, plus end-to-end
+//! router latency when artifacts are present) and writes the
+//! machine-readable `BENCH_serve.json` perf-trajectory artifact. `bsa_native` measures
 //! the pure-Rust BSA forward pass (p50/p95 vs N, a threads-in-{1,2,4,8}
 //! throughput sweep on the paper-config forward, native vs pjrt at the
 //! tiny config when artifacts exist, end-to-end native router) and
@@ -849,12 +850,25 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
         }
     }
 
+    // --- level 3: the poll-core server itself (artifact-free) ------------
+    let conc_json = match serve_concurrency(o) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("  (serve_concurrency skipped: {e})");
+            format!(
+                "{{\"available\": false, \"reason\": \"{}\"}}",
+                json_escape(&e.to_string())
+            )
+        }
+    };
+
     // --- artifact assembly ------------------------------------------------
     let json = format!(
         "{{\n  \"bench\": \"serve_hot_path\",\n  \"reps\": {reps},\n  \"geometries\": {geoms},\n  \
          \"n_points\": {n_points},\n  \"target_len\": {target},\n  \"preprocess\": {{\n    \
          \"cold\": {},\n    \"cached\": {},\n    \"p50_speedup\": {p50_speedup:.2},\n    \
-         \"cache_hits\": {},\n    \"cache_misses\": {}\n  }},\n  \"e2e\": {e2e_json}\n}}\n",
+         \"cache_hits\": {},\n    \"cache_misses\": {}\n  }},\n  \
+         \"concurrency\": {conc_json},\n  \"e2e\": {e2e_json}\n}}\n",
         cold.json(),
         cached.json(),
         cache.hits(),
@@ -884,11 +898,129 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
         cached.percentile_us(50.0),
         cached.percentile_us(95.0)
     ));
+    content.push_str(
+        "poll-core concurrency record (pipelined req/s, sheds, idle-conn thread \
+         delta) embedded under the `concurrency` key of the JSON artifact\n",
+    );
     content.push_str(&format!(
         "machine-readable trajectory written to {}\n",
         dest.display()
     ));
     emit(&o.out, "serve_hot_path", &content)
+}
+
+/// Live thread count from `/proc/self/status` (0 where procfs is
+/// unavailable).
+fn live_threads() -> usize {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Measure the poll-core server itself, artifact-free on the native
+/// backend: (a) pipelined throughput over concurrent TCP clients —
+/// every frame is answered, status-0 or status-3, and both are
+/// counted; (b) the thread cost of holding 256 idle connections,
+/// which is the scaling contract of the single-thread poll core
+/// (thread-per-connection would show +256 here). Returns the
+/// `concurrency` JSON fragment of `BENCH_serve.json`.
+fn serve_concurrency(o: &Opts) -> anyhow::Result<String> {
+    use bsa::backend::NativeBackend;
+    use bsa::config::ServeConfig;
+    use bsa::coordinator::Router;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let addr = "127.0.0.1:17893";
+    let clients = if o.quick { 8usize } else { 32 };
+    let frames = if o.quick { 4usize } else { 8 };
+    let idle_target = if o.quick { 64usize } else { 256 };
+
+    let mc = ModelConfig {
+        dim: 32,
+        num_heads: 2,
+        num_blocks: 2,
+        ball_size: 64,
+        seq_len: 256,
+        ..Default::default()
+    };
+    let backend = Arc::new(NativeBackend::init(7, &mc, 6, 1, 1)?);
+    let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
+    let router = Arc::new(Router::start(backend, sc)?);
+    let stop = Arc::new(AtomicBool::new(false));
+    let srv = {
+        let (router, stop) = (router.clone(), stop.clone());
+        std::thread::spawn(move || bsa::server::serve(addr, router, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let gen = generator_for("syn", 7)?;
+    let sample = Arc::new(gen.generate(0, 200));
+
+    // --- pipelined throughput: C clients x K frames in flight ------------
+    let t0 = Instant::now();
+    let (ok, shed): (usize, usize) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let sample = sample.clone();
+                s.spawn(move || {
+                    let mut c = bsa::server::Client::connect(addr).unwrap();
+                    for _ in 0..frames {
+                        c.send(&sample.coords, &sample.features).unwrap();
+                    }
+                    let (mut ok, mut shed) = (0usize, 0usize);
+                    for _ in 0..frames {
+                        match c.recv_predict() {
+                            Ok(_) => ok += 1,
+                            Err(e) if e.downcast_ref::<bsa::server::ShedError>().is_some() => {
+                                shed += 1
+                            }
+                            Err(e) => panic!("bench client error: {e}"),
+                        }
+                    }
+                    (ok, shed)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |a, b| (a.0 + b.0, a.1 + b.1))
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let req_per_s = (ok + shed) as f64 / wall.max(1e-9);
+    let (p50, p95) = (router.latency_us(50.0), router.latency_us(95.0));
+
+    // --- idle-connection scaling: threads must stay flat -----------------
+    let before = live_threads();
+    let idle: Vec<std::net::TcpStream> = (0..idle_target)
+        .filter_map(|_| std::net::TcpStream::connect(addr).ok())
+        .collect();
+    let idle_held = idle.len();
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let thread_delta = live_threads().saturating_sub(before);
+    drop(idle);
+
+    stop.store(true, Ordering::SeqCst);
+    srv.join().unwrap()?;
+    let st = Arc::try_unwrap(router).ok().expect("sole router owner").shutdown();
+
+    println!(
+        "  concurrency: {clients} clients x {frames} pipelined frames -> {req_per_s:.1} req/s \
+         (router p50={p50:.0}us p95={p95:.0}us), shed {shed}, \
+         {idle_held} idle conns -> +{thread_delta} threads"
+    );
+    Ok(format!(
+        "{{\"clients\": {clients}, \"frames_per_client\": {frames}, \"ok\": {ok}, \
+         \"shed\": {shed}, \"req_per_s\": {req_per_s:.3}, \"router_p50_us\": {p50:.1}, \
+         \"router_p95_us\": {p95:.1}, \"rejected\": {}, \"idle_conns\": {idle_held}, \
+         \"idle_thread_delta\": {thread_delta}}}",
+        st.rejected
+    ))
 }
 
 // ---------------------------------------------------------------------------

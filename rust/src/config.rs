@@ -411,6 +411,29 @@ pub struct ServeConfig {
     /// environment variable; the `--trace` CLI flag overrides both. See
     /// `trace` (module docs) for the cost model at each level.
     pub trace: String,
+    /// Admission control — open-connection cap for the poll core
+    /// (`server::ServeLimits`): connections past it are answered with a
+    /// status-3 shed frame at accept time and closed.
+    pub max_conns: usize,
+    /// Admission control — largest declared request body (coords +
+    /// feats bytes) accepted. Enforced at header time: bigger requests
+    /// get a status-1 error frame before a single payload byte is
+    /// buffered.
+    pub max_payload_bytes: u64,
+    /// Admission control — global budget over admitted-but-unanswered
+    /// request bytes; past it, new requests are shed with status 3 and
+    /// the connection stays usable.
+    pub max_inflight_bytes: u64,
+    /// Admission control — per-connection in-flight frame cap, applied
+    /// as read backpressure (no shed frame; TCP flow control pushes
+    /// back on the client).
+    pub conn_quota: usize,
+    /// Retry-after hint (milliseconds) carried by status-3 shed frames.
+    pub retry_after_ms: u64,
+    /// Drain budget after SIGINT/SIGTERM: in-flight requests get this
+    /// many milliseconds to complete and flush before the server closes
+    /// their connections.
+    pub drain_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -427,6 +450,12 @@ impl Default for ServeConfig {
             native_simd: "auto".into(),
             precision: "f32".into(),
             trace: String::new(),
+            max_conns: 4096,
+            max_payload_bytes: 64 << 20,
+            max_inflight_bytes: 256 << 20,
+            conn_quota: 32,
+            retry_after_ms: 50,
+            drain_ms: 2000,
         }
     }
 }
@@ -447,6 +476,15 @@ impl ServeConfig {
             native_simd: doc.str_or("serve", "native_simd", &d.native_simd),
             precision: doc.str_or("serve", "precision", &d.precision),
             trace: doc.str_or("serve", "trace", &d.trace),
+            max_conns: doc.int_or("serve", "max_conns", d.max_conns as i64) as usize,
+            max_payload_bytes: doc.int_or("serve", "max_payload_bytes", d.max_payload_bytes as i64)
+                as u64,
+            max_inflight_bytes: doc
+                .int_or("serve", "max_inflight_bytes", d.max_inflight_bytes as i64)
+                as u64,
+            conn_quota: doc.int_or("serve", "conn_quota", d.conn_quota as i64) as usize,
+            retry_after_ms: doc.int_or("serve", "retry_after_ms", d.retry_after_ms as i64) as u64,
+            drain_ms: doc.int_or("serve", "drain_ms", d.drain_ms as i64) as u64,
         }
     }
 }
@@ -600,6 +638,29 @@ empty = []
         assert_eq!(ServeConfig::default().precision, "f32", "default = f32");
         let doc = Document::parse("[serve]\nprecision = \"f16\"\n").unwrap();
         assert_eq!(ServeConfig::from_doc(&doc).precision, "f16");
+    }
+
+    #[test]
+    fn serve_config_admission_knobs() {
+        let d = ServeConfig::default();
+        assert_eq!(d.max_conns, 4096);
+        assert_eq!(d.max_payload_bytes, 64 << 20);
+        assert_eq!(d.max_inflight_bytes, 256 << 20);
+        assert_eq!(d.conn_quota, 32);
+        assert_eq!(d.retry_after_ms, 50);
+        assert_eq!(d.drain_ms, 2000);
+        let doc = Document::parse(
+            "[serve]\nmax_conns = 128\nmax_payload_bytes = 1048576\n\
+             max_inflight_bytes = 4194304\nconn_quota = 4\nretry_after_ms = 75\ndrain_ms = 500\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_doc(&doc);
+        assert_eq!(sc.max_conns, 128);
+        assert_eq!(sc.max_payload_bytes, 1 << 20);
+        assert_eq!(sc.max_inflight_bytes, 4 << 20);
+        assert_eq!(sc.conn_quota, 4);
+        assert_eq!(sc.retry_after_ms, 75);
+        assert_eq!(sc.drain_ms, 500);
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod checkpoint;
 pub mod serve;
 pub mod train;
 
-pub use serve::{Router, ServeRequest, ServeResponse};
+pub use serve::{Router, ServeRequest, ServeResponse, SubmitError};
 pub use train::Trainer;

@@ -58,7 +58,7 @@
 //! the trajectory.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -103,6 +103,19 @@ pub struct RouterStats {
     /// (the regression test for the old torn read, where `served` could
     /// run ahead of its latency sample).
     pub latency_samples: u64,
+}
+
+/// Why a submit was refused without reaching a worker. The TCP
+/// front-end maps `QueueFull` to the typed status-3 shed frame
+/// (docs/FORMATS.md §2.2) instead of a generic status-1 error, so
+/// clients can distinguish "back off and retry" from "your request is
+/// wrong".
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("router queue full")]
+    QueueFull,
+    #[error("router is shutting down")]
+    ShuttingDown,
 }
 
 /// Completion state: the served counter and the latency histogram move
@@ -185,22 +198,48 @@ impl Router {
         Self::start(Arc::new(backend), cfg)
     }
 
-    /// Submit a request; returns the receiver for its response, or an
-    /// error immediately if the queue is full (backpressure).
+    /// Submit a request; returns the receiver for its response, or a
+    /// typed [`SubmitError`] immediately if the queue is full
+    /// (backpressure) or the router is shutting down. Both refusals
+    /// count toward the `rejected` stat.
+    pub fn try_submit(
+        &self,
+        coords: Tensor,
+        features: Tensor,
+    ) -> Result<Receiver<ServeResponse>, SubmitError> {
+        let (reply, rx) = sync_channel(1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = ServeRequest { id, coords, features, reply, enqueued: Instant::now() };
+        let tx = self.tx.as_ref().expect("router accepts requests until shutdown");
+        match tx.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                match e {
+                    TrySendError::Full(_) => Err(SubmitError::QueueFull),
+                    TrySendError::Disconnected(_) => Err(SubmitError::ShuttingDown),
+                }
+            }
+        }
+    }
+
+    /// Submit a request; anyhow-typed convenience over
+    /// [`Router::try_submit`] for callers that don't branch on the
+    /// refusal kind.
     pub fn submit(
         &self,
         coords: Tensor,
         features: Tensor,
     ) -> anyhow::Result<Receiver<ServeResponse>> {
-        let (reply, rx) = sync_channel(1);
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = ServeRequest { id, coords, features, reply, enqueued: Instant::now() };
-        let tx = self.tx.as_ref().expect("router accepts requests until shutdown");
-        tx.try_send(req).map_err(|e| {
-            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow::anyhow!("queue full: {e}")
-        })?;
-        Ok(rx)
+        self.try_submit(coords, features).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Count a request refused *upstream* of the queue — the TCP
+    /// front-end's admission control (connection cap, inflight-bytes
+    /// budget) — so the BSST `rejected` stat covers every refused
+    /// request no matter where it was refused.
+    pub fn note_rejected(&self) {
+        self.shared.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Convenience: submit and block for the response.

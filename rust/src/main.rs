@@ -61,6 +61,11 @@ fn flag_specs() -> Vec<FlagSpec> {
         // then the BSA_TRACE env var, then off
         FlagSpec { name: "trace", help: "observability level: off | counters | spans (on = spans); spans record per-stage latency histograms served over BSST and `bsa stats` (default: [serve] trace, else BSA_TRACE, else off)", takes_value: true, default: None },
         FlagSpec { name: "trace-out", help: "write a Chrome trace-event JSON (chrome://tracing / Perfetto) to this path on exit; implies --trace spans", takes_value: true, default: None },
+        FlagSpec { name: "max-conns", help: "admission: open-connection cap; excess connections get a status-3 shed frame and are closed (default: [serve] max_conns or 4096)", takes_value: true, default: None },
+        FlagSpec { name: "max-payload-bytes", help: "admission: largest declared request body accepted; bigger headers are answered with a status-1 error frame before any payload is buffered (default: [serve] max_payload_bytes or 67108864)", takes_value: true, default: None },
+        FlagSpec { name: "max-inflight-bytes", help: "admission: global budget over admitted-but-unanswered request bytes; past it requests are shed with status 3 + retry-after (default: [serve] max_inflight_bytes or 268435456)", takes_value: true, default: None },
+        FlagSpec { name: "conn-quota", help: "admission: per-connection in-flight frame cap, applied as read backpressure (default: [serve] conn_quota or 32)", takes_value: true, default: None },
+        FlagSpec { name: "drain-ms", help: "drain budget on SIGINT/SIGTERM: in-flight requests get this long to complete and flush before connections close (default: [serve] drain_ms or 2000)", takes_value: true, default: None },
         FlagSpec { name: "probe", help: "for `bsa stats`: send one synthetic prediction first so span histograms are populated", takes_value: false, default: None },
         FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
         FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
@@ -259,6 +264,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     sc.native_simd = args.str_flag("simd", &sc.native_simd);
     sc.precision = args.str_flag("precision", &sc.precision);
     sc.trace = args.str_flag("trace", &sc.trace);
+    sc.max_conns = args.usize_flag("max-conns", sc.max_conns)?;
+    sc.max_payload_bytes = args.u64_flag("max-payload-bytes", sc.max_payload_bytes)?;
+    sc.max_inflight_bytes = args.u64_flag("max-inflight-bytes", sc.max_inflight_bytes)?;
+    sc.conn_quota = args.usize_flag("conn-quota", sc.conn_quota)?;
+    sc.drain_ms = args.u64_flag("drain-ms", sc.drain_ms)?;
     // Trace level: --trace flag > [serve] trace > BSA_TRACE env (the
     // lazy default inside bsa::trace::level()). --trace-out needs span
     // events, so it upgrades the level if necessary.
@@ -317,7 +327,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if trace_level != bsa::trace::TraceLevel::Off {
         log::info!("tracing {trace_level} (query with `bsa stats {}`)", sc.addr);
     }
-    let served = bsa::server::serve(&sc.addr, router, stop);
+    println!(
+        "admission: max_conns {}, max_payload {} B, max_inflight {} B, conn_quota {}",
+        sc.max_conns, sc.max_payload_bytes, sc.max_inflight_bytes, sc.conn_quota
+    );
+    let limits = bsa::server::ServeLimits::from(&sc);
+    let served = bsa::server::serve_with(&sc.addr, router, stop, limits);
     if let Some(path) = &trace_out {
         bsa::trace::write_chrome_trace(path)?;
         log::info!(
@@ -333,16 +348,17 @@ static SERVE_STOP: std::sync::OnceLock<Arc<std::sync::atomic::AtomicBool>> =
     std::sync::OnceLock::new();
 
 /// Async-signal-safe stop: one relaxed atomic store (OnceLock::get is a
-/// lock-free read). The serve loop polls the flag every 5ms.
+/// lock-free read). The poll core observes the flag on its next tick
+/// (<= 25 ms) and begins draining.
 extern "C" fn handle_stop_signal(_sig: libc::c_int) {
     if let Some(stop) = SERVE_STOP.get() {
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
     }
 }
 
-/// Catch SIGINT/SIGTERM so `bsa serve` shuts down cleanly — connection
-/// handlers join, the router drains, and `--trace-out` gets written —
-/// instead of the process dying mid-frame.
+/// Catch SIGINT/SIGTERM so `bsa serve` shuts down cleanly — the poll
+/// core drains in-flight requests (bounded by `--drain-ms`) and
+/// `--trace-out` gets written — instead of the process dying mid-frame.
 fn install_stop_handler(stop: Arc<std::sync::atomic::AtomicBool>) {
     let _ = SERVE_STOP.set(stop);
     unsafe {

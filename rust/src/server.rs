@@ -3,17 +3,45 @@
 //! vendored offline; the protocol is documented here and implemented for
 //! both server and client).
 //!
-//! The server is backend-agnostic: the router it fronts may execute
-//! compiled HLO artifacts or the pure-Rust
-//! [`NativeBackend`](crate::backend::NativeBackend) (`bsa serve
-//! --backend native`, optionally with `--precision f16` half-storage
-//! forwards) — the wire protocol (always f32 on the wire) and stats
-//! surface are identical either way.
+//! The server is a **single-threaded nonblocking poll core**: one thread
+//! owns the listener and every connection, multiplexed with
+//! `libc::poll` over `TcpStream::set_nonblocking` sockets. Each
+//! connection is a small state machine (magic → header → body →
+//! respond) decoding frames incrementally into a reusable per-connection
+//! buffer; completed requests are handed to the router and their
+//! replies flow back through a per-connection FIFO, so many BSRQ frames
+//! can be in flight on one connection (true pipelining) while responses
+//! stay in request order. Idle connections cost one `pollfd` entry and
+//! no thread, so the core holds thousands of open sockets.
+//!
+//! Admission control ([`ServeLimits`]) bounds what the core accepts:
+//!
+//! * `max_conns` — connections past the cap are answered with a shed
+//!   frame at accept time and closed;
+//! * `max_payload_bytes` — enforced at *header* time: an oversized
+//!   declared body is answered with a status-1 error frame before a
+//!   single payload byte is buffered (no attacker-controlled
+//!   allocation);
+//! * `max_inflight_bytes` — a global budget over admitted-but-unanswered
+//!   request bytes; past it, requests are *shed*: the body is drained in
+//!   a fixed scratch buffer and a typed status-3 frame with a
+//!   retry-after hint is returned, the connection stays usable;
+//! * `conn_quota` — per-connection in-flight frame cap, applied as
+//!   backpressure (the core simply stops reading that socket until
+//!   responses drain; TCP flow control pushes back on the client).
+//!
+//! Router queue-full is also surfaced as a status-3 shed frame (instead
+//! of a generic error), and every shed increments the router's
+//! `rejected` counter so BSST stats account for refused work wherever
+//! it was refused. On `stop` (SIGINT) the core drains: it stops
+//! accepting, finishes frames already past their magic, flushes every
+//! pending response, and exits within `drain_ms`.
 //!
 //! Frame layout (little-endian):
 //!   request:  magic "BSRQ" | n u32 | d u32 | f u32 | coords n*d f32 | feats n*f f32
 //!   response: magic "BSRS" | status u32 (0 = ok) | n u32 | o u32 | preds n*o f32
 //!             on error: status 1 | msg_len u32 | msg bytes
+//!             on shed:  status 3 | retry_after_ms u32 | msg_len u32 | msg bytes
 //!   stats:    magic "BSST" (no body) → "BSRS" | status 2 | len u32 | json bytes
 //!             (router counters incl. ball-tree cache hits/misses — the
 //!             serving hot path's observability surface)
@@ -23,12 +51,17 @@
 //! is `docs/FORMATS.md` at the repo root; keep this module and that
 //! document in sync.
 
-use std::io::{Read, Write};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Once};
+use std::time::{Duration, Instant};
 
-use crate::coordinator::Router;
+use crate::config::ServeConfig;
+use crate::coordinator::{Router, ServeResponse, SubmitError};
 use crate::tensor::Tensor;
 
 const REQ_MAGIC: &[u8; 4] = b"BSRQ";
@@ -36,166 +69,219 @@ const RESP_MAGIC: &[u8; 4] = b"BSRS";
 const STATS_MAGIC: &[u8; 4] = b"BSST";
 /// Hard cap on points per request (sanity bound for the wire format).
 const MAX_POINTS: u32 = 1 << 22;
+/// Hard cap on coordinate dims per point.
+const MAX_COORD_DIMS: u32 = 16;
+/// Hard cap on feature dims per point.
+const MAX_FEAT_DIMS: u32 = 64;
+/// Largest error/shed message the server writes; the reference client
+/// rejects status-1/2/3 payloads >= 64 KiB, so the server truncates to
+/// stay decodable (docs/FORMATS.md §2.2).
+const MAX_MSG_BYTES: usize = 65535;
+/// Largest stats (status-2) payload; same client bound as above.
+const MAX_STATS_BYTES: usize = 65535;
+/// Client-side plausibility bound on `o` in an ok frame.
+const MAX_OUT_FEATURES: u32 = 1 << 16;
+/// Client-side bound on a whole ok-frame payload (matches the protocol's
+/// ~1 GiB theoretical request ceiling).
+const MAX_RESP_BYTES: u64 = 1 << 30;
+/// Body bytes are read in steps of at most this, so a connection's read
+/// buffer grows with data actually received, never with the declared
+/// frame size.
+const READ_CHUNK: usize = 256 * 1024;
+/// Scratch size used to drain (discard) the body of a shed request.
+const DISCARD_CHUNK: usize = 64 * 1024;
+/// Backoff after a transient `accept()` error (EMFILE, ECONNABORTED, …)
+/// before the listener is polled again.
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(10);
 
-/// Serve loop: accept connections and answer prediction requests until
-/// `stop` is set. Each connection may pipeline many requests. Finished
-/// connection handlers are reaped (joined and dropped) on every accept
-/// iteration, so a long-lived server holds one `JoinHandle` per *live*
-/// connection rather than one per connection ever accepted; only the
-/// still-live handlers are joined at shutdown.
-pub fn serve(addr: &str, router: Arc<Router>, stop: Arc<AtomicBool>) -> anyhow::Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    listener.set_nonblocking(true)?;
-    log::info!("bsa server listening on {addr}");
-    let mut conns: Vec<std::thread::JoinHandle<()>> = vec![];
-    while !stop.load(Ordering::Relaxed) {
-        reap_finished(&mut conns);
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                log::debug!("connection from {peer}");
-                let router = router.clone();
-                let stop = stop.clone();
-                conns.push(std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, &router, &stop) {
-                        log::debug!("connection ended: {e}");
-                    }
-                }));
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-    for c in conns {
-        let _ = c.join();
-    }
-    Ok(())
+const STATUS_OK: u32 = 0;
+const STATUS_ERR: u32 = 1;
+const STATUS_STATS: u32 = 2;
+const STATUS_SHED: u32 = 3;
+
+// ---------------------------------------------------------------------------
+// admission limits
+// ---------------------------------------------------------------------------
+
+/// Admission-control knobs for the poll core. Mirrors the `[serve]`
+/// limits in [`ServeConfig`]; [`serve`] uses the defaults, `bsa serve`
+/// builds one from its config/flags and calls [`serve_with`].
+#[derive(Debug, Clone)]
+pub struct ServeLimits {
+    /// Open-connection cap; connections past it get a shed frame at
+    /// accept time and are closed.
+    pub max_conns: usize,
+    /// Largest declared request body (coords + feats bytes) accepted;
+    /// bigger headers are answered with a status-1 error frame and the
+    /// connection is closed (the body is never buffered).
+    pub max_payload_bytes: u64,
+    /// Global budget over admitted-but-unanswered request bytes; past
+    /// it, new requests are shed (status 3) but the connection lives.
+    pub max_inflight_bytes: u64,
+    /// Per-connection in-flight frame cap (backpressure: the core stops
+    /// reading the socket, no shed frame).
+    pub conn_quota: usize,
+    /// Retry-after hint carried by status-3 shed frames, milliseconds.
+    pub retry_after_ms: u32,
+    /// Drain budget after `stop` is set: in-flight requests get this
+    /// long to complete and flush before connections are closed.
+    pub drain_ms: u64,
 }
 
-/// Join and drop every connection handler that has already exited
-/// (`is_finished` is a cheap atomic read; join on a finished thread
-/// returns immediately). Order is irrelevant, so `swap_remove` keeps
-/// the reap O(live).
-fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
-    let mut i = 0;
-    while i < conns.len() {
-        if conns[i].is_finished() {
-            let _ = conns.swap_remove(i).join();
-        } else {
-            i += 1;
-        }
-    }
-}
-
-fn handle_conn(mut stream: TcpStream, router: &Router, stop: &AtomicBool) -> anyhow::Result<()> {
-    stream.set_nodelay(true)?;
-    // Frame headers are read with a timeout so idle connections observe
-    // `stop` (otherwise a blocked read would wedge server shutdown while a
-    // client keeps the socket open). Once a frame has started, the rest is
-    // read blocking — frames are short and written atomically.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
-    loop {
-        // wait for the 4-byte magic, polling stop on timeout
-        let mut magic = [0u8; 4];
-        loop {
-            if stop.load(Ordering::Relaxed) {
-                return Ok(());
-            }
-            match stream.read(&mut magic[..1]) {
-                Ok(0) => return Ok(()), // clean close
-                Ok(_) => break,
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    continue;
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-        stream.set_read_timeout(None)?;
-        stream.read_exact(&mut magic[1..])?;
-        if &magic == STATS_MAGIC {
-            write_stats(&mut stream, router)?;
-            stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
-            continue;
-        }
-        if &magic != REQ_MAGIC {
-            crate::trace::incr("server.error_frames");
-            anyhow::bail!("bad request magic {magic:?}");
-        }
-        crate::trace::incr("server.requests");
-        let result = {
-            let _s = crate::trace::span("serve.decode");
-            read_request_body(&mut stream)
-        };
-        stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
-        let (coords, feats) = match result {
-            Ok(x) => x,
-            Err(e)
-                if e.downcast_ref::<std::io::Error>()
-                    .map(|io| io.kind() == std::io::ErrorKind::UnexpectedEof)
-                    == Some(true) =>
-            {
-                return Ok(()); // clean close mid-frame
-            }
-            Err(e) => {
-                crate::trace::incr("server.error_frames");
-                return Err(e);
-            }
-        };
-        match router.infer(coords, feats) {
-            Ok(pred) => {
-                let _s = crate::trace::span("serve.encode");
-                write_ok(&mut stream, &pred)?
-            }
-            Err(e) => {
-                crate::trace::incr("server.error_frames");
-                write_err(&mut stream, &e.to_string())?
-            }
+impl Default for ServeLimits {
+    fn default() -> Self {
+        ServeLimits {
+            max_conns: 4096,
+            max_payload_bytes: 64 << 20,
+            max_inflight_bytes: 256 << 20,
+            conn_quota: 32,
+            retry_after_ms: 50,
+            drain_ms: 2000,
         }
     }
 }
 
-/// Read the request after its magic has been consumed.
-fn read_request_body(stream: &mut TcpStream) -> anyhow::Result<(Tensor, Tensor)> {
-    let n = read_u32(stream)?;
-    let d = read_u32(stream)?;
-    let f = read_u32(stream)?;
-    anyhow::ensure!(n > 0 && n <= MAX_POINTS, "bad point count {n}");
-    anyhow::ensure!(d <= 16 && f <= 64, "bad dims d={d} f={f}");
-    let coords = read_f32s(stream, (n * d) as usize)?;
-    let feats = read_f32s(stream, (n * f) as usize)?;
-    Ok((
-        Tensor::new(vec![n as usize, d as usize], coords),
-        Tensor::new(vec![n as usize, f as usize], feats),
-    ))
+impl From<&ServeConfig> for ServeLimits {
+    fn from(sc: &ServeConfig) -> Self {
+        ServeLimits {
+            max_conns: sc.max_conns,
+            max_payload_bytes: sc.max_payload_bytes,
+            max_inflight_bytes: sc.max_inflight_bytes,
+            conn_quota: sc.conn_quota,
+            retry_after_ms: sc.retry_after_ms as u32,
+            drain_ms: sc.drain_ms,
+        }
+    }
 }
 
-fn write_ok(stream: &mut TcpStream, pred: &Tensor) -> anyhow::Result<()> {
+impl ServeLimits {
+    /// Clamp degenerate values that would wedge the core (a zero
+    /// connection or frame quota can never make progress).
+    fn sanitized(mut self) -> Self {
+        self.max_conns = self.max_conns.max(1);
+        self.conn_quota = self.conn_quota.max(1);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gauges (process-global; aggregated across servers in one process)
+// ---------------------------------------------------------------------------
+
+struct ServerGauges {
+    open_conns: AtomicI64,
+    inflight_frames: AtomicI64,
+    inflight_bytes: AtomicI64,
+    shed_total: AtomicU64,
+}
+
+static GAUGES: ServerGauges = ServerGauges {
+    open_conns: AtomicI64::new(0),
+    inflight_frames: AtomicI64::new(0),
+    inflight_bytes: AtomicI64::new(0),
+    shed_total: AtomicU64::new(0),
+};
+static GAUGE_REG: Once = Once::new();
+
+/// The server's live gauges, registered with the trace registry on
+/// first use so BSST frames report them (`server.*` in the `gauges`
+/// section). Like `pool.*`, they are process-global: several in-process
+/// servers (the test suite) aggregate into one set, and the
+/// inflight-bytes admission budget is shared accordingly.
+fn gauges() -> &'static ServerGauges {
+    GAUGE_REG.call_once(|| {
+        crate::trace::register_gauge(
+            "server.open_conns",
+            Box::new(|| GAUGES.open_conns.load(Ordering::Relaxed) as f64),
+        );
+        crate::trace::register_gauge(
+            "server.inflight_frames",
+            Box::new(|| GAUGES.inflight_frames.load(Ordering::Relaxed) as f64),
+        );
+        crate::trace::register_gauge(
+            "server.inflight_bytes",
+            Box::new(|| GAUGES.inflight_bytes.load(Ordering::Relaxed) as f64),
+        );
+        crate::trace::register_gauge(
+            "server.shed_total",
+            Box::new(|| GAUGES.shed_total.load(Ordering::Relaxed) as f64),
+        );
+    });
+    &GAUGES
+}
+
+// ---------------------------------------------------------------------------
+// frame encoding
+// ---------------------------------------------------------------------------
+
+/// Truncate a message to the client's 64 KiB payload cap on a UTF-8
+/// character boundary (a longer message would make the client fail with
+/// "oversized error message" instead of surfacing the real one).
+fn truncate_msg(msg: &str) -> &str {
+    if msg.len() <= MAX_MSG_BYTES {
+        return msg;
+    }
+    let mut end = MAX_MSG_BYTES;
+    while !msg.is_char_boundary(end) {
+        end -= 1;
+    }
+    &msg[..end]
+}
+
+fn encode_ok(pred: &Tensor) -> Vec<u8> {
     let mut buf = Vec::with_capacity(16 + pred.len() * 4);
     buf.extend_from_slice(RESP_MAGIC);
-    buf.extend_from_slice(&0u32.to_le_bytes());
+    buf.extend_from_slice(&STATUS_OK.to_le_bytes());
     buf.extend_from_slice(&(pred.rows() as u32).to_le_bytes());
     buf.extend_from_slice(&(pred.cols() as u32).to_le_bytes());
     for x in pred.data() {
         buf.extend_from_slice(&x.to_le_bytes());
     }
-    stream.write_all(&buf)?;
-    Ok(())
+    buf
 }
 
-fn write_stats(stream: &mut TcpStream, router: &Router) -> anyhow::Result<()> {
+fn encode_err(msg: &str) -> Vec<u8> {
+    let msg = truncate_msg(msg);
+    let mut buf = Vec::with_capacity(12 + msg.len());
+    buf.extend_from_slice(RESP_MAGIC);
+    buf.extend_from_slice(&STATUS_ERR.to_le_bytes());
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+fn encode_shed(retry_after_ms: u32, msg: &str) -> Vec<u8> {
+    let msg = truncate_msg(msg);
+    let mut buf = Vec::with_capacity(16 + msg.len());
+    buf.extend_from_slice(RESP_MAGIC);
+    buf.extend_from_slice(&STATUS_SHED.to_le_bytes());
+    buf.extend_from_slice(&retry_after_ms.to_le_bytes());
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Assemble the stats JSON under the client's 64 KiB status-2 bound.
+/// `core` and `sections` are brace-less `"k": v, ...` fragments. Span
+/// aggregation keeps the payload far below the bound in practice; if the
+/// tracing sections ever blow it, they are dropped (flagged with
+/// `"trace_truncated": true`) rather than shipping a frame the client
+/// must reject.
+fn bounded_stats_json(core: &str, sections: &str) -> String {
+    let full = format!("{{{core}, {sections}}}");
+    if full.len() <= MAX_STATS_BYTES {
+        return full;
+    }
+    format!("{{{core}, \"trace_truncated\": true}}")
+}
+
+/// Brace-less router-counter fragment of the stats payload
+/// (docs/FORMATS.md §2.3).
+fn core_stats_json(router: &Router) -> String {
     let st = router.stats();
-    // Keys are append-only (docs/FORMATS.md §2.3): the tracing sections
-    // (`trace_version`/`trace_level`/`spans`/`counters`/`gauges`, schema
-    // §2.3.1) ride after the original router counters. Span aggregation
-    // is per stage path (not per layer index), so the payload stays far
-    // below the client's 64KiB stats bound at any model depth.
-    let json = format!(
-        "{{\"served\": {}, \"rejected\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
-         \"tree_hits\": {}, \"tree_misses\": {}, \"latency\": \"{}\", \"latency_n\": {}, {}}}",
+    format!(
+        "\"served\": {}, \"rejected\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
+         \"tree_hits\": {}, \"tree_misses\": {}, \"latency\": \"{}\", \"latency_n\": {}",
         st.served,
         st.rejected,
         st.batches,
@@ -204,30 +290,670 @@ fn write_stats(stream: &mut TcpStream, router: &Router) -> anyhow::Result<()> {
         st.tree_misses,
         st.latency_summary,
         st.latency_samples,
-        crate::trace::stats_sections_json(),
-    );
-    let mut buf = Vec::with_capacity(12 + json.len());
-    buf.extend_from_slice(RESP_MAGIC);
-    buf.extend_from_slice(&2u32.to_le_bytes());
-    buf.extend_from_slice(&(json.len() as u32).to_le_bytes());
-    buf.extend_from_slice(json.as_bytes());
-    stream.write_all(&buf)?;
-    Ok(())
+    )
 }
 
-fn write_err(stream: &mut TcpStream, msg: &str) -> anyhow::Result<()> {
-    let mut buf = Vec::with_capacity(12 + msg.len());
+fn stats_frame(router: &Router) -> Vec<u8> {
+    // Keys are append-only (docs/FORMATS.md §2.3): the tracing sections
+    // (`trace_version`/`trace_level`/`spans`/`counters`/`gauges`, schema
+    // §2.3.1) ride after the original router counters.
+    let json = bounded_stats_json(&core_stats_json(router), &crate::trace::stats_sections_json());
+    let mut buf = Vec::with_capacity(12 + json.len());
     buf.extend_from_slice(RESP_MAGIC);
-    buf.extend_from_slice(&1u32.to_le_bytes());
-    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
-    buf.extend_from_slice(msg.as_bytes());
-    stream.write_all(&buf)?;
+    buf.extend_from_slice(&STATUS_STATS.to_le_bytes());
+    buf.extend_from_slice(&(json.len() as u32).to_le_bytes());
+    buf.extend_from_slice(json.as_bytes());
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// header admission
+// ---------------------------------------------------------------------------
+
+enum Admission {
+    /// Header accepted; `bytes` is the declared body size to read.
+    Admit { bytes: u64 },
+    /// Protocol violation: status-1 error frame, then close (the
+    /// declared body length can't be trusted, so the stream is dead).
+    Reject(String),
+    /// Over the inflight budget: drain `bytes` of body, answer with a
+    /// status-3 shed frame, keep the connection.
+    Shed { bytes: u64, why: &'static str },
+}
+
+/// Decide what to do with a decoded BSRQ header, *before* any body byte
+/// is read or buffered. `inflight` is the current global
+/// admitted-but-unanswered byte count.
+fn admit_header(n: u32, d: u32, f: u32, inflight: u64, limits: &ServeLimits) -> Admission {
+    if n == 0 || n > MAX_POINTS {
+        return Admission::Reject(format!("bad point count n={n} (expected 1..={MAX_POINTS})"));
+    }
+    if d == 0 || d > MAX_COORD_DIMS {
+        return Admission::Reject(format!(
+            "bad coordinate dims d={d} (expected 1..={MAX_COORD_DIMS})"
+        ));
+    }
+    if f == 0 || f > MAX_FEAT_DIMS {
+        return Admission::Reject(format!(
+            "bad feature dims f={f} (expected 1..={MAX_FEAT_DIMS})"
+        ));
+    }
+    let bytes = 4 * (n as u64) * (d as u64 + f as u64);
+    if bytes > limits.max_payload_bytes {
+        return Admission::Reject(format!(
+            "request body {bytes} B exceeds max_payload_bytes {} (n={n} d={d} f={f})",
+            limits.max_payload_bytes
+        ));
+    }
+    if inflight.saturating_add(bytes) > limits.max_inflight_bytes {
+        return Admission::Shed { bytes, why: "server over its inflight-bytes budget" };
+    }
+    Admission::Admit { bytes }
+}
+
+/// Classify an `accept()` error: `None` means "no pending connection,
+/// just poll again" (WouldBlock); `Some(backoff)` means a transient
+/// fault (EMFILE fd exhaustion, ECONNABORTED races, …) — log, back off
+/// briefly, keep serving. No accept error is ever fatal: the old serve
+/// loop returned `Err` here and one fd-exhaustion blip killed the
+/// listener for every connected client.
+fn accept_error_backoff(e: &std::io::Error) -> Option<Duration> {
+    if e.kind() == ErrorKind::WouldBlock {
+        None
+    } else {
+        Some(ACCEPT_BACKOFF)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-connection state machine
+// ---------------------------------------------------------------------------
+
+enum ReadState {
+    /// Waiting for a 4-byte frame magic.
+    Magic,
+    /// BSRQ magic seen; waiting for the 12-byte n/d/f header.
+    Header,
+    /// Header admitted; reading `bytes` body bytes into `rbuf`.
+    Body { n: usize, d: usize, f: usize, bytes: u64 },
+    /// Shed: discarding `remaining` body bytes through a shared scratch
+    /// buffer, then queueing the prepared `reply` frame.
+    Discard { remaining: u64, reply: Vec<u8> },
+}
+
+/// A response slot in a connection's FIFO: either an already-encoded
+/// frame or a router receiver still owed its result. Responses leave in
+/// FIFO order, which is what keeps pipelining in request order.
+enum Pending {
+    Ready(Vec<u8>),
+    Waiting { rx: Receiver<ServeResponse>, bytes: u64 },
+}
+
+enum ReadProgress {
+    Complete,
+    Blocked,
+    Eof,
+}
+
+/// Read toward `need` total bytes in `buf`, growing it in bounded
+/// `READ_CHUNK` steps (so buffer growth tracks bytes actually received,
+/// never the declared frame size).
+fn read_into(stream: &mut TcpStream, buf: &mut Vec<u8>, need: usize) -> std::io::Result<ReadProgress> {
+    while buf.len() < need {
+        let target = need.min(buf.len() + READ_CHUNK);
+        let start = buf.len();
+        buf.resize(target, 0);
+        match stream.read(&mut buf[start..]) {
+            Ok(0) => {
+                buf.truncate(start);
+                return Ok(ReadProgress::Eof);
+            }
+            Ok(k) => buf.truncate(start + k),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                buf.truncate(start);
+                return Ok(ReadProgress::Blocked);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => buf.truncate(start),
+            Err(e) => {
+                buf.truncate(start);
+                return Err(e);
+            }
+        }
+    }
+    Ok(ReadProgress::Complete)
+}
+
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    rstate: ReadState,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pending: VecDeque<Pending>,
+    /// Set on EOF or a fatal protocol error: stop reading, flush every
+    /// queued response, then close.
+    close_when_drained: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true)?;
+        gauges().open_conns.fetch_add(1, Ordering::Relaxed);
+        Ok(Conn {
+            stream,
+            rbuf: Vec::new(),
+            rstate: ReadState::Magic,
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            close_when_drained: false,
+        })
+    }
+
+    fn mid_frame(&self) -> bool {
+        !matches!(self.rstate, ReadState::Magic)
+    }
+
+    /// Should the poll set include POLLIN for this socket? False under
+    /// per-connection quota backpressure (TCP flow control then pushes
+    /// back on the client) and, while draining, for anything but
+    /// finishing a frame already past its magic.
+    fn wants_read(&self, draining: bool, quota: usize) -> bool {
+        if self.close_when_drained || self.pending.len() >= quota {
+            return false;
+        }
+        if draining {
+            return self.mid_frame();
+        }
+        true
+    }
+
+    fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    fn queue_frame(&mut self, frame: Vec<u8>) {
+        self.pending.push_back(Pending::Ready(frame));
+    }
+
+    /// One scheduling pass: read/parse what's available, move completed
+    /// responses into the write buffer, flush. Returns `false` when the
+    /// connection should be dropped.
+    fn drive(
+        &mut self,
+        router: &Router,
+        limits: &ServeLimits,
+        draining: bool,
+        can_read: bool,
+        scratch: &mut [u8],
+    ) -> bool {
+        if can_read && !self.pump_reads(router, limits, draining, scratch) {
+            return false;
+        }
+        self.pump_responses();
+        if !self.flush() {
+            return false;
+        }
+        let idle = self.pending.is_empty() && !self.wants_write();
+        if self.close_when_drained && idle {
+            return false;
+        }
+        // Draining: a connection with nothing owed and no frame underway
+        // is closed; mid-frame connections get to finish (bounded by the
+        // caller's drain deadline).
+        if draining && idle && !self.mid_frame() {
+            return false;
+        }
+        true
+    }
+
+    /// Decode as many frames as the socket has bytes for, respecting
+    /// quota backpressure. Returns `false` on a socket error (drop the
+    /// connection without ceremony).
+    fn pump_reads(
+        &mut self,
+        router: &Router,
+        limits: &ServeLimits,
+        draining: bool,
+        scratch: &mut [u8],
+    ) -> bool {
+        loop {
+            if !self.wants_read(draining, limits.conn_quota) {
+                return true;
+            }
+            match std::mem::replace(&mut self.rstate, ReadState::Magic) {
+                ReadState::Magic => match read_into(&mut self.stream, &mut self.rbuf, 4) {
+                    Err(_) => return false,
+                    Ok(ReadProgress::Blocked) => return true,
+                    Ok(ReadProgress::Eof) => {
+                        // Clean close at (or inside) a frame boundary.
+                        self.close_when_drained = true;
+                        return true;
+                    }
+                    Ok(ReadProgress::Complete) => {
+                        let magic = [self.rbuf[0], self.rbuf[1], self.rbuf[2], self.rbuf[3]];
+                        self.rbuf.clear();
+                        if &magic == STATS_MAGIC {
+                            self.queue_frame(stats_frame(router));
+                        } else if &magic == REQ_MAGIC {
+                            self.rstate = ReadState::Header;
+                        } else {
+                            // Answer before closing: the old server
+                            // bailed without a frame and clients hung
+                            // until TCP teardown.
+                            crate::trace::incr("server.error_frames");
+                            self.queue_frame(encode_err(&format!(
+                                "bad request magic {magic:?} (expected BSRQ or BSST)"
+                            )));
+                            self.close_when_drained = true;
+                            return true;
+                        }
+                    }
+                },
+                ReadState::Header => match read_into(&mut self.stream, &mut self.rbuf, 12) {
+                    Err(_) => return false,
+                    Ok(ReadProgress::Blocked) => {
+                        self.rstate = ReadState::Header;
+                        return true;
+                    }
+                    Ok(ReadProgress::Eof) => {
+                        self.close_when_drained = true;
+                        return true;
+                    }
+                    Ok(ReadProgress::Complete) => {
+                        let n = u32::from_le_bytes(self.rbuf[0..4].try_into().unwrap());
+                        let d = u32::from_le_bytes(self.rbuf[4..8].try_into().unwrap());
+                        let f = u32::from_le_bytes(self.rbuf[8..12].try_into().unwrap());
+                        self.rbuf.clear();
+                        let g = gauges();
+                        let inflight = g.inflight_bytes.load(Ordering::Relaxed).max(0) as u64;
+                        match admit_header(n, d, f, inflight, limits) {
+                            Admission::Admit { bytes } => {
+                                g.inflight_bytes.fetch_add(bytes as i64, Ordering::Relaxed);
+                                self.rstate = ReadState::Body {
+                                    n: n as usize,
+                                    d: d as usize,
+                                    f: f as usize,
+                                    bytes,
+                                };
+                            }
+                            Admission::Reject(msg) => {
+                                crate::trace::incr("server.error_frames");
+                                self.queue_frame(encode_err(&msg));
+                                self.close_when_drained = true;
+                                return true;
+                            }
+                            Admission::Shed { bytes, why } => {
+                                router.note_rejected();
+                                g.shed_total.fetch_add(1, Ordering::Relaxed);
+                                crate::trace::incr("server.shed");
+                                self.rstate = ReadState::Discard {
+                                    remaining: bytes,
+                                    reply: encode_shed(limits.retry_after_ms, why),
+                                };
+                            }
+                        }
+                    }
+                },
+                ReadState::Body { n, d, f, bytes } => {
+                    match read_into(&mut self.stream, &mut self.rbuf, bytes as usize) {
+                        Err(_) => {
+                            gauges().inflight_bytes.fetch_sub(bytes as i64, Ordering::Relaxed);
+                            return false;
+                        }
+                        Ok(ReadProgress::Blocked) => {
+                            self.rstate = ReadState::Body { n, d, f, bytes };
+                            return true;
+                        }
+                        Ok(ReadProgress::Eof) => {
+                            gauges().inflight_bytes.fetch_sub(bytes as i64, Ordering::Relaxed);
+                            self.close_when_drained = true;
+                            return true;
+                        }
+                        Ok(ReadProgress::Complete) => self.submit_request(router, limits, n, d, f, bytes),
+                    }
+                }
+                ReadState::Discard { mut remaining, reply } => {
+                    while remaining > 0 {
+                        let want = (remaining as usize).min(scratch.len());
+                        match self.stream.read(&mut scratch[..want]) {
+                            Ok(0) => {
+                                self.close_when_drained = true;
+                                return true;
+                            }
+                            Ok(k) => remaining -= k as u64,
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                                self.rstate = ReadState::Discard { remaining, reply };
+                                return true;
+                            }
+                            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                            Err(_) => return false,
+                        }
+                    }
+                    self.queue_frame(reply);
+                }
+            }
+        }
+    }
+
+    /// A fully buffered body: decode, hand to the router, remember the
+    /// reply receiver in FIFO order.
+    fn submit_request(
+        &mut self,
+        router: &Router,
+        limits: &ServeLimits,
+        n: usize,
+        d: usize,
+        f: usize,
+        bytes: u64,
+    ) {
+        let g = gauges();
+        let (coords, feats) = {
+            let _s = crate::trace::span("serve.decode");
+            let nd = n * d * 4;
+            let coords: Vec<f32> = self.rbuf[..nd]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let feats: Vec<f32> = self.rbuf[nd..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            (Tensor::new(vec![n, d], coords), Tensor::new(vec![n, f], feats))
+        };
+        self.rbuf.clear();
+        crate::trace::incr("server.requests");
+        match router.try_submit(coords, feats) {
+            Ok(rx) => {
+                g.inflight_frames.fetch_add(1, Ordering::Relaxed);
+                self.pending.push_back(Pending::Waiting { rx, bytes });
+            }
+            Err(SubmitError::QueueFull) => {
+                g.inflight_bytes.fetch_sub(bytes as i64, Ordering::Relaxed);
+                g.shed_total.fetch_add(1, Ordering::Relaxed);
+                crate::trace::incr("server.shed");
+                self.queue_frame(encode_shed(
+                    limits.retry_after_ms,
+                    "router queue full; retry shortly",
+                ));
+            }
+            Err(SubmitError::ShuttingDown) => {
+                g.inflight_bytes.fetch_sub(bytes as i64, Ordering::Relaxed);
+                crate::trace::incr("server.error_frames");
+                self.queue_frame(encode_err("router is shutting down"));
+                self.close_when_drained = true;
+            }
+        }
+    }
+
+    /// Encode completed router replies into the write buffer, strictly
+    /// FIFO: a Waiting head whose result isn't in yet blocks everything
+    /// behind it, which is exactly the in-order pipelining contract.
+    fn pump_responses(&mut self) {
+        while let Some(front) = self.pending.front_mut() {
+            let frame = match front {
+                Pending::Ready(_) => match self.pending.pop_front() {
+                    Some(Pending::Ready(f)) => f,
+                    _ => unreachable!("front was Ready"),
+                },
+                Pending::Waiting { rx, bytes } => {
+                    let bytes = *bytes;
+                    let frame = match rx.try_recv() {
+                        Ok(resp) => {
+                            let _s = crate::trace::span("serve.encode");
+                            match resp.result {
+                                Ok(pred) => encode_ok(&pred),
+                                Err(e) => {
+                                    crate::trace::incr("server.error_frames");
+                                    encode_err(&e.to_string())
+                                }
+                            }
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            crate::trace::incr("server.error_frames");
+                            encode_err("worker dropped the request")
+                        }
+                    };
+                    let g = gauges();
+                    g.inflight_bytes.fetch_sub(bytes as i64, Ordering::Relaxed);
+                    g.inflight_frames.fetch_sub(1, Ordering::Relaxed);
+                    self.pending.pop_front();
+                    frame
+                }
+            };
+            if self.wbuf.is_empty() {
+                self.wpos = 0;
+            }
+            self.wbuf.extend_from_slice(&frame);
+        }
+    }
+
+    /// Write as much of the buffered output as the socket accepts.
+    /// Returns `false` on a socket error.
+    fn flush(&mut self) -> bool {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return false,
+                Ok(k) => self.wpos += k,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        true
+    }
+}
+
+impl Drop for Conn {
+    /// Gauge/budget bookkeeping survives any exit path: bytes still
+    /// admitted (mid-body or awaiting a router reply) are refunded here.
+    fn drop(&mut self) {
+        let g = gauges();
+        if let ReadState::Body { bytes, .. } = self.rstate {
+            g.inflight_bytes.fetch_sub(bytes as i64, Ordering::Relaxed);
+        }
+        for p in &self.pending {
+            if let Pending::Waiting { bytes, .. } = p {
+                g.inflight_bytes.fetch_sub(*bytes as i64, Ordering::Relaxed);
+                g.inflight_frames.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        g.open_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// poll loop
+// ---------------------------------------------------------------------------
+
+/// Readiness flags for the connections that existed when `poll` ran.
+/// Connections accepted afterwards default to ready (their first drive
+/// pass costs one cheap WouldBlock read at worst).
+fn poll_readiness(
+    listener: &TcpListener,
+    conns: &[Conn],
+    accepting: bool,
+    draining: bool,
+    quota: usize,
+    timeout_ms: i32,
+) -> Vec<bool> {
+    let mut fds: Vec<libc::pollfd> = Vec::with_capacity(conns.len() + 1);
+    let mut idx: Vec<usize> = Vec::with_capacity(conns.len());
+    if accepting {
+        fds.push(libc::pollfd { fd: listener.as_raw_fd(), events: libc::POLLIN, revents: 0 });
+    }
+    for (i, c) in conns.iter().enumerate() {
+        let mut ev: libc::c_short = 0;
+        if c.wants_read(draining, quota) {
+            ev |= libc::POLLIN;
+        }
+        if c.wants_write() {
+            ev |= libc::POLLOUT;
+        }
+        if ev != 0 {
+            idx.push(i);
+            fds.push(libc::pollfd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+        }
+    }
+    let mut ready = vec![false; conns.len()];
+    if fds.is_empty() {
+        // Nothing pollable (e.g. every connection is quota-backpressured
+        // or waiting on the router): just sleep the tick.
+        std::thread::sleep(Duration::from_millis(timeout_ms.max(0) as u64));
+        return ready;
+    }
+    let rc = unsafe { libc::poll(fds.as_mut_ptr(), fds.len() as libc::nfds_t, timeout_ms) };
+    if rc <= 0 {
+        return ready; // timeout or EINTR: nothing newly ready
+    }
+    let base = usize::from(accepting);
+    for (k, fd) in fds.iter().enumerate().skip(base) {
+        // POLLHUP/POLLERR count as ready too: the next read surfaces the
+        // close/error and the connection is dropped.
+        if fd.revents != 0 {
+            ready[idx[k - base]] = true;
+        }
+    }
+    ready
+}
+
+/// Accept everything pending. Past `max_conns`, the new socket gets a
+/// best-effort shed frame and is closed (typed refusal, not a silent
+/// RST). Returns a backoff deadline after a transient accept error.
+fn accept_pending(
+    listener: &TcpListener,
+    conns: &mut Vec<Conn>,
+    router: &Router,
+    limits: &ServeLimits,
+) -> Option<Instant> {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if conns.len() >= limits.max_conns {
+                    log::warn!("connection cap {} hit; shedding {peer}", limits.max_conns);
+                    router.note_rejected();
+                    gauges().shed_total.fetch_add(1, Ordering::Relaxed);
+                    crate::trace::incr("server.shed");
+                    let mut stream = stream;
+                    let _ = stream
+                        .write(&encode_shed(limits.retry_after_ms, "server at connection cap"));
+                    continue; // stream drops → close
+                }
+                log::debug!("connection from {peer}");
+                match Conn::new(stream) {
+                    Ok(c) => conns.push(c),
+                    Err(e) => log::warn!("failed to set up connection from {peer}: {e}"),
+                }
+            }
+            Err(e) => {
+                return accept_error_backoff(&e).map(|backoff| {
+                    crate::trace::incr("server.accept_errors");
+                    log::warn!("transient accept error ({e}); backing off {backoff:?}");
+                    Instant::now() + backoff
+                });
+            }
+        }
+    }
+}
+
+/// Serve with default [`ServeLimits`]: accept connections and answer
+/// prediction requests until `stop` is set. Each connection may
+/// pipeline many requests; responses are returned in request order.
+pub fn serve(addr: &str, router: Arc<Router>, stop: Arc<AtomicBool>) -> anyhow::Result<()> {
+    serve_with(addr, router, stop, ServeLimits::default())
+}
+
+/// The poll core (see module docs). One thread drives the listener and
+/// every connection; no per-connection threads exist. On `stop`, drains
+/// in-flight work for up to `limits.drain_ms` before returning.
+pub fn serve_with(
+    addr: &str,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    limits: ServeLimits,
+) -> anyhow::Result<()> {
+    let limits = limits.sanitized();
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    log::info!(
+        "bsa server listening on {addr} (poll core: max_conns={}, max_payload={} B, \
+         max_inflight={} B, conn_quota={})",
+        limits.max_conns,
+        limits.max_payload_bytes,
+        limits.max_inflight_bytes,
+        limits.conn_quota
+    );
+    gauges();
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = vec![0u8; DISCARD_CHUNK];
+    let mut accept_backoff: Option<Instant> = None;
+    let mut drain_started: Option<Instant> = None;
+
+    loop {
+        let draining = stop.load(Ordering::Relaxed);
+        if draining {
+            let t0 = *drain_started.get_or_insert_with(|| {
+                log::info!("stop requested; draining {} connection(s)", conns.len());
+                Instant::now()
+            });
+            if conns.is_empty() {
+                break;
+            }
+            if t0.elapsed() >= Duration::from_millis(limits.drain_ms) {
+                log::warn!(
+                    "drain deadline ({} ms) reached with {} connection(s) still busy; closing",
+                    limits.drain_ms,
+                    conns.len()
+                );
+                break;
+            }
+        }
+
+        let accepting =
+            !draining && accept_backoff.is_none_or(|until| Instant::now() >= until);
+        // Busy (responses owed or buffered output) → short tick so router
+        // replies are picked up promptly; idle → longer tick bounded only
+        // by stop-observation latency.
+        let busy = conns.iter().any(|c| !c.pending.is_empty() || c.wants_write());
+        let timeout_ms = if busy { 1 } else { 25 };
+        let ready = poll_readiness(&listener, &conns, accepting, draining, limits.conn_quota, timeout_ms);
+
+        if accepting {
+            accept_backoff = accept_pending(&listener, &mut conns, &router, &limits);
+        }
+
+        let mut kept: Vec<Conn> = Vec::with_capacity(conns.len());
+        for (i, mut c) in conns.drain(..).enumerate() {
+            let can_read = ready.get(i).copied().unwrap_or(true);
+            if c.drive(&router, &limits, draining, can_read, &mut scratch) {
+                kept.push(c);
+            }
+            // dropped connections refund their admission budget in Drop
+        }
+        conns = kept;
+    }
     Ok(())
 }
 
 // ---------------------------------------------------------------------------
 // client
 // ---------------------------------------------------------------------------
+
+/// Typed status-3 refusal: the server shed the request under overload
+/// and suggests retrying after `retry_after_ms`. Downcast from the
+/// anyhow error chain ([`Client::predict`] / [`Client::recv_predict`]).
+#[derive(Debug, thiserror::Error)]
+#[error("server shed the request (retry after {retry_after_ms} ms): {msg}")]
+pub struct ShedError {
+    pub retry_after_ms: u32,
+    pub msg: String,
+}
 
 /// Blocking client for the frame protocol.
 pub struct Client {
@@ -243,6 +969,14 @@ impl Client {
 
     /// Send one point cloud, receive predictions (N, out_features).
     pub fn predict(&mut self, coords: &Tensor, feats: &Tensor) -> anyhow::Result<Tensor> {
+        self.send(coords, feats)?;
+        self.recv_predict()
+    }
+
+    /// Send one request frame without waiting for its response. Pair
+    /// with [`Client::recv_predict`]; the server answers pipelined
+    /// frames in request order.
+    pub fn send(&mut self, coords: &Tensor, feats: &Tensor) -> anyhow::Result<()> {
         let n = coords.rows();
         let mut buf = Vec::with_capacity(16 + (coords.len() + feats.len()) * 4);
         buf.extend_from_slice(REQ_MAGIC);
@@ -256,22 +990,49 @@ impl Client {
             buf.extend_from_slice(&x.to_le_bytes());
         }
         self.stream.write_all(&buf)?;
+        Ok(())
+    }
 
+    /// Receive the next prediction response (in request order).
+    pub fn recv_predict(&mut self) -> anyhow::Result<Tensor> {
         let mut magic = [0u8; 4];
         self.stream.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == RESP_MAGIC, "bad response magic");
-        let status = read_u32(&mut self.stream)?;
-        if status != 0 {
-            let mlen = read_u32(&mut self.stream)? as usize;
-            anyhow::ensure!(mlen < 65536, "oversized error message");
-            let mut m = vec![0u8; mlen];
-            self.stream.read_exact(&mut m)?;
-            anyhow::bail!("server error: {}", String::from_utf8_lossy(&m));
+        match read_u32(&mut self.stream)? {
+            STATUS_OK => {
+                let rn = read_u32(&mut self.stream)?;
+                let ro = read_u32(&mut self.stream)?;
+                // Bound server-reported dims before allocating: a
+                // malicious or corrupt peer must not drive the client
+                // into a huge allocation (the old client multiplied the
+                // raw u32s straight into vec![0u8; ..]).
+                let bytes = (rn as u64) * (ro as u64) * 4;
+                anyhow::ensure!(
+                    rn <= MAX_POINTS && ro <= MAX_OUT_FEATURES && bytes <= MAX_RESP_BYTES,
+                    "implausible response shape {rn}x{ro} ({bytes} B)"
+                );
+                let data = read_f32s(&mut self.stream, rn as usize * ro as usize)?;
+                Ok(Tensor::new(vec![rn as usize, ro as usize], data))
+            }
+            STATUS_SHED => {
+                let retry_after_ms = read_u32(&mut self.stream)?;
+                let msg = self.read_short_payload()?;
+                Err(ShedError { retry_after_ms, msg }.into())
+            }
+            STATUS_ERR => {
+                let msg = self.read_short_payload()?;
+                anyhow::bail!("server error: {msg}");
+            }
+            s => anyhow::bail!("unexpected response status {s}"),
         }
-        let rn = read_u32(&mut self.stream)? as usize;
-        let ro = read_u32(&mut self.stream)? as usize;
-        let data = read_f32s(&mut self.stream, rn * ro)?;
-        Ok(Tensor::new(vec![rn, ro], data))
+    }
+
+    fn read_short_payload(&mut self) -> anyhow::Result<String> {
+        let mlen = read_u32(&mut self.stream)? as usize;
+        anyhow::ensure!(mlen < 65536, "oversized error message");
+        let mut m = vec![0u8; mlen];
+        self.stream.read_exact(&mut m)?;
+        Ok(String::from_utf8_lossy(&m).into_owned())
     }
 
     /// Query router statistics (JSON string; see the frame docs above).
@@ -281,7 +1042,7 @@ impl Client {
         self.stream.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == RESP_MAGIC, "bad response magic");
         let status = read_u32(&mut self.stream)?;
-        anyhow::ensure!(status == 2, "expected stats frame, got status {status}");
+        anyhow::ensure!(status == STATUS_STATS, "expected stats frame, got status {status}");
         let len = read_u32(&mut self.stream)? as usize;
         anyhow::ensure!(len < 65536, "oversized stats payload");
         let mut buf = vec![0u8; len];
@@ -307,44 +1068,113 @@ fn read_f32s<R: Read>(r: &mut R, n: usize) -> anyhow::Result<Vec<f32>> {
 
 #[cfg(test)]
 mod tests {
-    // Wire-format framing is covered end-to-end by rust/tests/integration.rs
-    // (server + client over a compiled graph). The handle-reaping logic is
-    // unit-tested here because the leak it prevents (a Vec<JoinHandle>
-    // growing per connection ever accepted) is invisible from outside the
-    // process: exited-but-unjoined threads leave the OS thread count on
-    // their own, so only inspecting the vec itself can catch a regression.
-    use super::reap_finished;
+    // End-to-end framing (pipelining, shed under load, drain, the
+    // idle-connection scaling contract) lives in
+    // rust/tests/integration.rs over a real NativeBackend router. The
+    // pure decision functions — header admission, accept-error
+    // classification, message truncation, the stats bound — are pinned
+    // here because their failure modes (1 GiB preallocation from a
+    // 16-byte header, a listener killed by EMFILE, a client rejecting
+    // the error meant to explain the problem) are exactly the bug
+    // classes this module exists to keep out.
+    use super::*;
+
+    fn limits() -> ServeLimits {
+        ServeLimits::default()
+    }
 
     #[test]
-    fn reap_finished_drops_only_exited_handlers() {
-        let (tx, rx) = std::sync::mpsc::channel::<()>();
-        let mut conns = Vec::new();
-        for _ in 0..8 {
-            conns.push(std::thread::spawn(|| {}));
+    fn accept_errors_are_never_fatal() {
+        // The old serve loop returned Err on any non-WouldBlock accept
+        // error: one EMFILE blip tore down the listener. Every such
+        // error must now map to a finite backoff, never a teardown.
+        for code in [libc::EMFILE, libc::ENFILE, libc::ECONNABORTED, libc::EINTR] {
+            let e = std::io::Error::from_raw_os_error(code);
+            assert!(
+                accept_error_backoff(&e).is_some(),
+                "os error {code} must back off, not kill the listener"
+            );
         }
-        // one still-live handler, blocked like an idle connection
-        conns.push(std::thread::spawn(move || {
-            rx.recv().ok();
-        }));
+        let wb = std::io::Error::from(ErrorKind::WouldBlock);
+        assert!(accept_error_backoff(&wb).is_none(), "WouldBlock is not an error");
+    }
 
-        // wait (bounded) for the 8 trivial handlers to exit
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
-        while conns.iter().take(8).any(|h| !h.is_finished()) {
-            assert!(std::time::Instant::now() < deadline, "handlers never exited");
-            std::thread::sleep(std::time::Duration::from_millis(2));
+    #[test]
+    fn header_bomb_is_rejected_before_any_allocation() {
+        // n=2^22, f=64 is the header that used to preallocate ~1 GiB.
+        let a = admit_header(1 << 22, 3, 64, 0, &limits());
+        match a {
+            Admission::Reject(msg) => {
+                assert!(msg.contains("max_payload_bytes"), "must name the bound: {msg}")
+            }
+            _ => panic!("oversized declared body must be rejected at header time"),
         }
+    }
 
-        reap_finished(&mut conns);
-        assert_eq!(conns.len(), 1, "reap must drop every exited handler, keep the live one");
-
-        // release the live handler; a second reap empties the vec
-        tx.send(()).unwrap();
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
-        while !conns[0].is_finished() {
-            assert!(std::time::Instant::now() < deadline, "live handler never exited");
-            std::thread::sleep(std::time::Duration::from_millis(2));
+    #[test]
+    fn zero_width_dims_are_rejected() {
+        for (n, d, f) in [(16u32, 0u32, 8u32), (16, 3, 0), (0, 3, 8)] {
+            match admit_header(n, d, f, 0, &limits()) {
+                Admission::Reject(msg) => {
+                    assert!(msg.starts_with("bad "), "typed message, got: {msg}")
+                }
+                _ => panic!("n={n} d={d} f={f} must be rejected"),
+            }
         }
-        reap_finished(&mut conns);
-        assert!(conns.is_empty(), "second reap must join the released handler");
+    }
+
+    #[test]
+    fn inflight_budget_sheds_not_rejects() {
+        let mut l = limits();
+        l.max_inflight_bytes = 1024;
+        match admit_header(16, 3, 8, 1000, &l) {
+            Admission::Shed { bytes, .. } => assert_eq!(bytes, 4 * 16 * (3 + 8)),
+            _ => panic!("over-budget admission must shed, keeping the connection"),
+        }
+        // under budget: admitted with the exact byte count
+        match admit_header(16, 3, 8, 0, &l) {
+            Admission::Admit { bytes } => assert_eq!(bytes, 4 * 16 * (3 + 8)),
+            _ => panic!("in-budget request must be admitted"),
+        }
+    }
+
+    #[test]
+    fn error_messages_truncate_to_client_cap_on_char_boundary() {
+        // 'é' is 2 bytes; an odd cap would split it without the boundary
+        // walk-back. The client rejects payloads >= 64 KiB, so the frame
+        // must declare < 65536 bytes.
+        let long: String = "é".repeat(60_000); // 120_000 bytes
+        let frame = encode_err(&long);
+        let mlen = u32::from_le_bytes(frame[8..12].try_into().unwrap()) as usize;
+        assert!(mlen < 65536, "declared msg_len {mlen} still oversized");
+        assert_eq!(frame.len(), 12 + mlen);
+        assert!(std::str::from_utf8(&frame[12..]).is_ok(), "truncation split a UTF-8 char");
+        // short messages pass through untouched
+        let short = encode_err("nope");
+        assert_eq!(&short[12..], b"nope");
+    }
+
+    #[test]
+    fn shed_frame_layout_roundtrips() {
+        let frame = encode_shed(75, "busy");
+        assert_eq!(&frame[0..4], RESP_MAGIC);
+        assert_eq!(u32::from_le_bytes(frame[4..8].try_into().unwrap()), STATUS_SHED);
+        assert_eq!(u32::from_le_bytes(frame[8..12].try_into().unwrap()), 75);
+        assert_eq!(u32::from_le_bytes(frame[12..16].try_into().unwrap()), 4);
+        assert_eq!(&frame[16..], b"busy");
+    }
+
+    #[test]
+    fn stats_json_is_bounded_and_stays_valid() {
+        let core = "\"served\": 1, \"rejected\": 0";
+        let small = bounded_stats_json(core, "\"x\": 1");
+        assert_eq!(small, "{\"served\": 1, \"rejected\": 0, \"x\": 1}");
+        // A pathological sections blob (e.g. unbounded span paths) must
+        // not produce a frame the client rejects: drop sections, flag it.
+        let huge = format!("\"blob\": \"{}\"", "y".repeat(80_000));
+        let bounded = bounded_stats_json(core, &huge);
+        assert!(bounded.len() <= MAX_STATS_BYTES);
+        assert!(bounded.contains("\"trace_truncated\": true"));
+        assert!(bounded.starts_with('{') && bounded.ends_with('}'));
     }
 }

@@ -380,6 +380,17 @@ pub fn spans_snapshot() -> BTreeMap<String, LatencyHistogram> {
     out
 }
 
+/// Current value of one counter (0 if never incremented). One shard
+/// lock instead of the full [`counters_snapshot`] walk — for tests and
+/// the serve bench, which assert on individual `server.*` counts
+/// without parsing a stats frame.
+pub fn counter_value(name: &str) -> u64 {
+    let reg = registry();
+    let shard = &reg.shards[shard_index(name)];
+    let counters = shard.counters.lock().unwrap();
+    counters.get(name).copied().unwrap_or(0)
+}
+
 /// Snapshot of every counter.
 pub fn counters_snapshot() -> BTreeMap<&'static str, u64> {
     let mut out = BTreeMap::new();
@@ -907,6 +918,22 @@ mod tests {
         set_level(prev);
         assert_eq!(counters_snapshot().get("t_counters_counter"), Some(&5));
         assert!(!spans_snapshot().contains_key("t_counters_span"));
+    }
+
+    #[test]
+    fn counter_value_reads_one_counter() {
+        let _g = lock();
+        let prev = level();
+        set_level(TraceLevel::Counters);
+        assert_eq!(counter_value("t_counter_value_probe"), 0, "unknown counter reads 0");
+        incr_by("t_counter_value_probe", 3);
+        set_level(prev);
+        assert_eq!(counter_value("t_counter_value_probe"), 3);
+        assert_eq!(
+            counters_snapshot().get("t_counter_value_probe"),
+            Some(&counter_value("t_counter_value_probe")),
+            "point read agrees with the full snapshot"
+        );
     }
 
     #[test]

@@ -548,14 +548,11 @@ fn live_threads() -> usize {
 
 #[test]
 fn native_tcp_connection_churn_reaps_handlers() {
-    // serve() reaps finished connection handlers in the accept loop (it
-    // used to push one JoinHandle per connection and only join at
-    // shutdown). The reap logic itself is unit-tested in
-    // server.rs::tests::reap_finished_drops_only_exited_handlers — the
-    // handle-vec growth is not observable from outside the process
-    // (exited threads leave the OS thread count without a join). This
-    // end-to-end churn covers the serving behaviour around it: every
-    // request answered across many short-lived connections, the thread
+    // The poll core owns every connection on one thread, so connection
+    // churn must never move the process thread count: each short-lived
+    // client adds a pollfd entry, not a thread, and its close (EOF) just
+    // drops the entry. This end-to-end churn pins that: every request
+    // answered across many short-lived connections, the thread
     // population staying flat, and shutdown staying clean.
     let backend = Arc::new(tiny_native_backend(6));
     let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
@@ -589,11 +586,10 @@ fn native_tcp_connection_churn_reaps_handlers() {
         let p = c.predict(&sample.coords, &sample.features).unwrap();
         assert_eq!(p.shape(), &[160, 1], "churn round {round}");
         assert!(p.all_finite());
-        // client drops here: the handler sees EOF and exits; the accept
-        // loop's reap joins it on a later iteration
+        // client drops here: the poll core sees EOF on its next tick and
+        // drops the connection entry (no thread ever existed for it)
     }
-    // handlers poll their sockets on a 100ms timeout; give the EOFs and
-    // the accept-loop reap time to land before counting
+    // give the EOFs a few poll ticks to land before counting
     std::thread::sleep(std::time::Duration::from_millis(500));
     let after = live_threads();
     assert!(
@@ -698,6 +694,360 @@ fn native_tcp_stats_spans_roundtrip() {
     stop.store(true, std::sync::atomic::Ordering::SeqCst);
     srv.join().unwrap().unwrap();
     bsa::trace::set_level(prior);
+}
+
+// ---------------------------------------------------------------------------
+// poll core: pipelining, admission control, shedding, drain
+// ---------------------------------------------------------------------------
+
+/// Start a native-backend router + poll-core server on `addr` with the
+/// given admission limits (`None` = defaults).
+fn spawn_native_server(
+    seed: u64,
+    sc: ServeConfig,
+    addr: &'static str,
+    limits: Option<bsa::server::ServeLimits>,
+) -> (
+    Arc<Router>,
+    Arc<std::sync::atomic::AtomicBool>,
+    std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    let backend = Arc::new(tiny_native_backend(seed));
+    let router = Arc::new(Router::start(backend, sc).unwrap());
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let srv = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let limits = limits.unwrap_or_default();
+        std::thread::spawn(move || bsa::server::serve_with(addr, router, stop, limits))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    (router, stop, srv)
+}
+
+fn raw_request_header(n: u32, d: u32, f: u32) -> Vec<u8> {
+    let mut b = Vec::with_capacity(16);
+    b.extend_from_slice(b"BSRQ");
+    b.extend_from_slice(&n.to_le_bytes());
+    b.extend_from_slice(&d.to_le_bytes());
+    b.extend_from_slice(&f.to_le_bytes());
+    b
+}
+
+/// Read one BSRS frame that must be a status-1 error; return its message.
+fn read_error_frame(s: &mut std::net::TcpStream) -> String {
+    use std::io::Read;
+    let mut head = [0u8; 12];
+    s.read_exact(&mut head).unwrap();
+    assert_eq!(&head[0..4], b"BSRS", "bad response magic");
+    let status = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    assert_eq!(status, 1, "expected a status-1 error frame");
+    let len = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+    assert!(len < 65536, "oversized error message ({len} B)");
+    let mut msg = vec![0u8; len];
+    s.read_exact(&mut msg).unwrap();
+    String::from_utf8(msg).unwrap()
+}
+
+#[test]
+fn native_tcp_pipelined_frames_roundtrip_in_order() {
+    // True pipelining: many BSRQ frames written before any response is
+    // read, each with a *different* point count. Responses must come
+    // back strictly in request order — each reply's row count is the
+    // fingerprint of its request.
+    let sc = ServeConfig { workers: 2, flush_us: 200, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(20, sc, "127.0.0.1:17187", None);
+
+    let gen = generator_for("syn", 20).unwrap();
+    let sizes: Vec<usize> = (0..6).map(|i| 140 + 10 * i).collect();
+    let samples: Vec<_> = sizes.iter().map(|&p| gen.generate(p as u64, p)).collect();
+
+    let mut client = bsa::server::Client::connect("127.0.0.1:17187").unwrap();
+    for s in &samples {
+        client.send(&s.coords, &s.features).unwrap();
+    }
+    for (i, &p) in sizes.iter().enumerate() {
+        let pred = client.recv_predict().unwrap();
+        assert_eq!(pred.shape(), &[p, 1], "response {i} out of order");
+        assert!(pred.all_finite());
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.served, sizes.len() as u64);
+}
+
+#[test]
+fn native_tcp_queue_full_sheds_with_status3() {
+    // Overload via a tiny router queue: a rapid pipelined burst must be
+    // answered frame-for-frame — some status-0, the overflow status-3
+    // (typed ShedError with a retry hint), never a dropped socket — and
+    // every shed must land in the router's `rejected` stat.
+    let sc = ServeConfig { workers: 1, queue_cap: 1, flush_us: 100, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(21, sc, "127.0.0.1:17189", None);
+
+    let gen = generator_for("syn", 21).unwrap();
+    let sample = gen.generate(0, 200);
+    let burst = 32usize;
+    let mut client = bsa::server::Client::connect("127.0.0.1:17189").unwrap();
+    for _ in 0..burst {
+        client.send(&sample.coords, &sample.features).unwrap();
+    }
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for i in 0..burst {
+        match client.recv_predict() {
+            Ok(pred) => {
+                assert_eq!(pred.shape(), &[200, 1], "frame {i}");
+                ok += 1;
+            }
+            Err(e) => {
+                let s = e
+                    .downcast_ref::<bsa::server::ShedError>()
+                    .unwrap_or_else(|| panic!("frame {i}: expected ShedError, got: {e}"));
+                assert!(s.retry_after_ms > 0, "shed frame must carry a retry hint");
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(ok + shed, burst, "every frame must be answered");
+    assert!(shed >= 1, "queue_cap=1 under a 32-frame burst must shed");
+    assert!(ok >= 1, "some requests must still be served under overload");
+    // the connection survived shedding: it still serves
+    let pred = client.predict(&sample.coords, &sample.features).unwrap();
+    assert_eq!(pred.shape(), &[200, 1]);
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.rejected as usize, shed, "every shed counts as rejected");
+    assert_eq!(st.served as usize, ok + 1);
+}
+
+#[test]
+fn native_tcp_inflight_budget_sheds_and_keeps_connection() {
+    // With a 1-byte inflight budget every request sheds deterministically:
+    // the body is drained (not buffered), a status-3 frame with the
+    // configured retry hint comes back, and the same connection keeps
+    // working — both for more requests and for stats frames.
+    let limits = bsa::server::ServeLimits {
+        max_inflight_bytes: 1,
+        retry_after_ms: 7,
+        ..Default::default()
+    };
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(22, sc, "127.0.0.1:17191", Some(limits));
+
+    let gen = generator_for("syn", 22).unwrap();
+    let sample = gen.generate(0, 150);
+    let mut client = bsa::server::Client::connect("127.0.0.1:17191").unwrap();
+    for round in 0..3 {
+        let e = client.predict(&sample.coords, &sample.features).unwrap_err();
+        let s = e
+            .downcast_ref::<bsa::server::ShedError>()
+            .unwrap_or_else(|| panic!("round {round}: expected ShedError, got: {e}"));
+        assert_eq!(s.retry_after_ms, 7, "configured retry hint must survive the wire");
+    }
+    // shed kept the stream framed: a stats query on the same connection
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("\"rejected\": 3"), "stats json: {stats}");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.rejected, 3);
+    assert_eq!(st.served, 0, "nothing reached a worker");
+}
+
+#[test]
+fn native_tcp_drain_completes_inflight_on_stop() {
+    // Stop with responses still owed: the core must finish and flush
+    // every in-flight request before closing (bounded by drain_ms), then
+    // close the connection — the client sees all its answers, then EOF.
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(23, sc, "127.0.0.1:17193", None);
+
+    let gen = generator_for("syn", 23).unwrap();
+    let sample = gen.generate(0, 180);
+    let mut client = bsa::server::Client::connect("127.0.0.1:17193").unwrap();
+    let inflight = 4usize;
+    for _ in 0..inflight {
+        client.send(&sample.coords, &sample.features).unwrap();
+    }
+    // one poll tick: enough for the core to take the frames in-flight
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+
+    for i in 0..inflight {
+        let pred = client.recv_predict().unwrap_or_else(|e| {
+            panic!("drain dropped in-flight request {i}: {e}")
+        });
+        assert_eq!(pred.shape(), &[180, 1]);
+    }
+    // after the drain the server closes the connection: clean EOF
+    assert!(client.recv_predict().is_err(), "connection must close after drain");
+    srv.join().unwrap().unwrap();
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.served as usize, inflight);
+}
+
+#[test]
+fn native_tcp_poll_core_holds_many_idle_connections() {
+    // The scaling contract: >= 256 concurrent idle connections on one
+    // poll thread. Thread-per-connection would add ~256 threads here;
+    // the poll core adds zero (the slack absorbs unrelated concurrent
+    // test threads, orders of magnitude below 256). The server must
+    // stay responsive while holding them all.
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(24, sc, "127.0.0.1:17195", None);
+
+    let gen = generator_for("syn", 24).unwrap();
+    let sample = gen.generate(0, 160);
+    {
+        // warm the lazy worker-pool growth so the baseline is steady-state
+        let mut c = bsa::server::Client::connect("127.0.0.1:17195").unwrap();
+        c.predict(&sample.coords, &sample.features).unwrap();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let before = live_threads();
+
+    let idle: Vec<std::net::TcpStream> = (0..256)
+        .map(|i| {
+            std::net::TcpStream::connect("127.0.0.1:17195")
+                .unwrap_or_else(|e| panic!("idle connection {i} refused: {e}"))
+        })
+        .collect();
+    // several poll ticks with all 256 held open
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let after = live_threads();
+    assert!(
+        after <= before + 16,
+        "256 idle connections grew the thread population: {before} -> {after}"
+    );
+
+    // still serving while holding them all
+    let mut c = bsa::server::Client::connect("127.0.0.1:17195").unwrap();
+    let pred = c.predict(&sample.coords, &sample.features).unwrap();
+    assert_eq!(pred.shape(), &[160, 1]);
+
+    drop(idle);
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    let st = Arc::try_unwrap(router).ok().unwrap().shutdown();
+    assert_eq!(st.served, 2);
+}
+
+#[test]
+fn native_tcp_zero_width_dims_rejected_with_typed_error() {
+    // Conformance for the d == 0 / f == 0 header holes: zero-width
+    // coords/features used to flow into preprocessing and panic a
+    // worker; now each draws a typed status-1 error frame naming the
+    // offending field, before any body byte is read.
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(25, sc, "127.0.0.1:17197", None);
+
+    for (n, d, f, needle) in
+        [(16u32, 0u32, 8u32, "coordinate dims"), (16, 3, 0, "feature dims")]
+    {
+        let mut s = std::net::TcpStream::connect("127.0.0.1:17197").unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        std::io::Write::write_all(&mut s, &raw_request_header(n, d, f)).unwrap();
+        let msg = read_error_frame(&mut s);
+        assert!(msg.contains(needle), "n={n} d={d} f={f}: unhelpful error: {msg}");
+    }
+
+    // the server survived both protocol errors
+    let gen = generator_for("syn", 25).unwrap();
+    let sample = gen.generate(0, 170);
+    let mut c = bsa::server::Client::connect("127.0.0.1:17197").unwrap();
+    assert_eq!(c.predict(&sample.coords, &sample.features).unwrap().shape(), &[170, 1]);
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    drop(router);
+}
+
+#[test]
+fn native_tcp_header_bomb_answered_without_allocation() {
+    // The allocation-bomb regression: a 16-byte header declaring a
+    // ~1 GiB body (n=2^22, f=64) used to be preallocated before any
+    // payload arrived. Now the bound is enforced at header time: the
+    // error frame must come back immediately — no body was sent, so a
+    // server that tries to read (or allocate) the declared payload
+    // would hang past the read timeout instead.
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(26, sc, "127.0.0.1:17199", None);
+
+    let mut s = std::net::TcpStream::connect("127.0.0.1:17199").unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    std::io::Write::write_all(&mut s, &raw_request_header(1 << 22, 3, 64)).unwrap();
+    let t0 = std::time::Instant::now();
+    let msg = read_error_frame(&mut s);
+    assert!(msg.contains("max_payload_bytes"), "error must name the bound: {msg}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(2),
+        "rejection must not wait for (or buffer) the declared body"
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    drop(router);
+}
+
+#[test]
+fn native_tcp_bad_magic_answered_with_error_frame() {
+    // A client speaking the wrong protocol used to get a silent socket
+    // drop (anyhow::bail! with no frame) and hang until TCP teardown.
+    // Now it gets a status-1 error frame naming the magic, then close.
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let (router, stop, srv) = spawn_native_server(27, sc, "127.0.0.1:17201", None);
+
+    let mut s = std::net::TcpStream::connect("127.0.0.1:17201").unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    std::io::Write::write_all(&mut s, b"GET / HTTP/1.1\r\n").unwrap();
+    let msg = read_error_frame(&mut s);
+    assert!(msg.contains("magic"), "error must explain the framing problem: {msg}");
+    // then a clean close, not a hang
+    let mut rest = Vec::new();
+    let n = std::io::Read::read_to_end(&mut s, &mut rest).unwrap();
+    assert_eq!(n, 0, "connection must close after the error frame");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    drop(router);
+}
+
+#[test]
+fn client_rejects_implausible_response_shape() {
+    // Client-side hardening twin: a malicious/corrupt server reporting
+    // rn=ro=u32::MAX must draw a typed error, not a ~64 EiB allocation
+    // attempt. A fake server answers one request with the bogus header.
+    let listener = std::net::TcpListener::bind("127.0.0.1:17203").unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        // consume the request header so the client's write can't block
+        let mut hdr = [0u8; 16];
+        std::io::Read::read_exact(&mut s, &mut hdr).unwrap();
+        let mut resp = Vec::new();
+        resp.extend_from_slice(b"BSRS");
+        resp.extend_from_slice(&0u32.to_le_bytes());
+        resp.extend_from_slice(&u32::MAX.to_le_bytes());
+        resp.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::io::Write::write_all(&mut s, &resp).unwrap();
+        // hold the socket open: a client that trusted the header would
+        // now try to read ~64 EiB from us
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    });
+
+    let mut client = bsa::server::Client::connect("127.0.0.1:17203").unwrap();
+    let coords = Tensor::zeros(vec![4, 3]);
+    let feats = Tensor::zeros(vec![4, 6]);
+    let e = client.predict(&coords, &feats).unwrap_err();
+    assert!(
+        e.to_string().contains("implausible response shape"),
+        "expected the shape bound to fire, got: {e}"
+    );
+    fake.join().unwrap();
 }
 
 #[test]

@@ -9,7 +9,8 @@
 # toolchain is pinned by rust-toolchain.toml so local and CI runs agree.
 #
 #   scripts/check.sh                # full gate
-#   scripts/check.sh --quick        # fmt + build + conformance tests only
+#   scripts/check.sh --quick        # fmt + build + conformance + poll-core
+#                                   # server tests (native_tcp_*) only
 #   BENCH_REPS=5 scripts/check.sh   # heavier perf sampling
 #
 # After the benches refresh the artifacts, scripts/benchdiff.py prints a
@@ -48,8 +49,10 @@ if [[ "$QUICK" == 1 ]]; then
     cargo test -q --release --test conformance
     echo "== cargo test -q --release --test simd_off (BSA_NATIVE_SIMD=off bitwise gate)"
     cargo test -q --release --test simd_off
+    echo "== cargo test -q --release --test integration native_tcp (poll-core server gate: pipelining, shedding, 256 idle conns)"
+    cargo test -q --release --test integration native_tcp
   )
-  echo "check.sh --quick: fmt + build + kernel conformance passed"
+  echo "check.sh --quick: fmt + build + kernel conformance + poll-core server gate passed"
   exit 0
 fi
 
