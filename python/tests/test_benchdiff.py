@@ -45,6 +45,34 @@ def new_doc(fwd1=10.0, p50=1000.0):
     return doc
 
 
+# the `shard` section `bsa loadgen` merges into BENCH_serve.json
+SHARD_OLD = {
+    "bench": "serve_hot_path",
+    "reps": 3,
+    "shard": {
+        "requests": 200,
+        "geometries": 8,
+        "offered_per_s": 100.0,
+        "achieved_per_s": 98.0,
+        "shed_rate": 0.02,
+        "p50_us": 900.0,
+        "p99_us": 4000.0,
+        "workers": {
+            "w0": {"tree_hits": 90, "tree_misses": 4, "hit_ratio": 0.957},
+            "w1": {"tree_hits": 88, "tree_misses": 4, "hit_ratio": 0.956},
+        },
+    },
+}
+
+
+def shard_doc(shed=0.02, hit0=0.957, p99=4000.0):
+    doc = json.loads(json.dumps(SHARD_OLD))
+    doc["shard"]["shed_rate"] = shed
+    doc["shard"]["workers"]["w0"]["hit_ratio"] = hit0
+    doc["shard"]["p99_us"] = p99
+    return doc
+
+
 def test_flatten_keys_lists_by_identity_field():
     flat = benchdiff.flatten(OLD)
     assert flat["threads_sweep[threads=1].fwd_per_s"] == 10.0
@@ -103,6 +131,55 @@ def test_regressions_respect_direction_and_threshold():
 def test_section_filter():
     rows, _ = benchdiff.diff(OLD, new_doc(fwd1=8.0), section="simd")
     assert rows and all(r[0].startswith("simd") for r in rows)
+
+
+def test_shard_section_directions():
+    assert benchdiff.direction("shard.shed_rate") == "lower"
+    assert benchdiff.direction("shard.workers.w0.hit_ratio") == "higher"
+    assert benchdiff.direction("shard.offered_per_s") == "higher"
+    assert benchdiff.direction("shard.p99_us") == "lower"
+    assert benchdiff.direction("shard.workers.w0.tree_hits") == "higher"
+
+
+def test_shard_section_flattens_with_descriptors_skipped():
+    flat = benchdiff.flatten(SHARD_OLD)
+    assert flat["shard.shed_rate"] == 0.02
+    assert flat["shard.workers.w0.hit_ratio"] == 0.957
+    # run descriptors stay out of the metric set
+    assert "shard.requests" not in flat
+    assert "shard.geometries" not in flat
+
+
+def test_shard_regressions_shed_up_and_hit_ratio_down_are_worse():
+    rows, _ = benchdiff.diff(SHARD_OLD, shard_doc(shed=0.08))
+    regs = benchdiff.regressions(rows, 10.0)
+    assert [r[0] for r in regs] == ["shard.shed_rate"]
+
+    rows, _ = benchdiff.diff(SHARD_OLD, shard_doc(hit0=0.50))
+    regs = benchdiff.regressions(rows, 10.0)
+    assert [r[0] for r in regs] == ["shard.workers.w0.hit_ratio"]
+
+    # a shed-rate *drop* is an improvement, never a regression
+    rows, _ = benchdiff.diff(SHARD_OLD, shard_doc(shed=0.001))
+    assert benchdiff.regressions(rows, 10.0) == []
+
+
+def test_shard_null_placeholder_is_skipped():
+    # paper.rs seeds `"shard": null` until the first loadgen run; the
+    # differ must treat that as absent, not as a comparison
+    placeholder = json.loads(json.dumps(SHARD_OLD))
+    placeholder["shard"] = None
+    rows, _ = benchdiff.diff(placeholder, SHARD_OLD)
+    assert all(not r[0].startswith("shard") for r in rows)
+    rows, _ = benchdiff.diff(SHARD_OLD, placeholder)
+    assert all(not r[0].startswith("shard") for r in rows)
+
+
+def test_shard_section_filter_isolates_serving_tier():
+    rows, _ = benchdiff.diff(SHARD_OLD, shard_doc(p99=8000.0), section="shard")
+    assert rows and all(r[0].startswith("shard") for r in rows)
+    by_path = {r[0]: r for r in rows}
+    assert by_path["shard.p99_us"][4] == "worse"
 
 
 def test_cli_exit_codes(tmp_path):

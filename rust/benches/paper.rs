@@ -881,6 +881,15 @@ fn serve_hot_path(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> 
     } else {
         PathBuf::from("BENCH_serve.json")
     };
+    // The `shard` section belongs to `bsa loadgen`, which merges it
+    // into this artifact out of band: carry an existing section across
+    // the rewrite, else seed the null placeholder (benchdiff skips
+    // null leaves, so a placeholder never trips the regression gate).
+    let shard = std::fs::read_to_string(&dest)
+        .ok()
+        .and_then(|old| bsa::shard::loadgen::extract_section(&old, "shard"))
+        .unwrap_or_else(|| "null".to_string());
+    let json = bsa::shard::loadgen::merge_section(&json, "shard", &shard);
     std::fs::write(&dest, &json)?;
     std::fs::write(o.out.join("serve_hot_path.json"), &json)?;
 

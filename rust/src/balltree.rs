@@ -268,7 +268,39 @@ pub fn content_hash(t: &Tensor) -> u64 {
     if let [last] = chunks.remainder() {
         h = (h ^ last.to_bits() as u64).wrapping_mul(PRIME);
     }
-    // splitmix64 finalizer
+    finalize_hash(h)
+}
+
+/// [`content_hash`] over the raw little-endian wire encoding of an f32
+/// array — the coordinate payload of a `BSRQ` frame, exactly as it sits
+/// in the shard front door's relay buffer. Bit-identical to hashing the
+/// decoded `Tensor` (pinned by `content_hash_bytes_matches_tensor`), so
+/// the front door can derive the shard key without materializing a
+/// tensor per forwarded request. `bytes.len()` must be a multiple of 4.
+pub fn content_hash_le_bytes(bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    debug_assert_eq!(bytes.len() % 4, 0, "f32 wire payload is 4-byte aligned");
+    let len = bytes.len() / 4;
+    let mut h: u64 = 0xcbf29ce484222325 ^ (len as u64).wrapping_mul(0x9e3779b97f4a7c15);
+    let mut chunks = bytes.chunks_exact(8);
+    for pair in &mut chunks {
+        // Two LE f32 bit patterns packed low-then-high — the same word
+        // `content_hash` builds from `f32::to_bits` pairs.
+        let word = u64::from_le_bytes([
+            pair[0], pair[1], pair[2], pair[3], pair[4], pair[5], pair[6], pair[7],
+        ]);
+        h = (h ^ word).wrapping_mul(PRIME);
+    }
+    let rem = chunks.remainder();
+    if rem.len() == 4 {
+        let last = u32::from_le_bytes([rem[0], rem[1], rem[2], rem[3]]);
+        h = (h ^ last as u64).wrapping_mul(PRIME);
+    }
+    finalize_hash(h)
+}
+
+/// splitmix64 finalizer shared by the two `content_hash` flavours.
+fn finalize_hash(mut h: u64) -> u64 {
     h ^= h >> 30;
     h = h.wrapping_mul(0xbf58476d1ce4e5b9);
     h ^= h >> 27;
@@ -425,6 +457,21 @@ mod tests {
     fn cloud(n: usize, d: usize, seed: u64) -> Tensor {
         let mut rng = Rng::new(seed);
         Tensor::new(vec![n, d], rng.normals(n * d))
+    }
+
+    #[test]
+    fn content_hash_bytes_matches_tensor() {
+        // The shard front door hashes the raw BSRQ coordinate bytes; the
+        // router hashes the decoded tensor. Both must produce the same
+        // shard key or affinity placement silently degrades to random.
+        for (n, d, seed) in [(1, 1, 0u64), (5, 3, 1), (64, 3, 2), (101, 7, 3)] {
+            let t = cloud(n, d, seed);
+            let mut wire = Vec::with_capacity(t.len() * 4);
+            for x in t.data() {
+                wire.extend_from_slice(&x.to_le_bytes());
+            }
+            assert_eq!(content_hash_le_bytes(&wire), content_hash(&t), "n={n} d={d}");
+        }
     }
 
     #[test]

@@ -117,6 +117,18 @@ impl Args {
                 .map_err(|_| CliError::BadValue(name.into(), v.into())),
         }
     }
+
+    /// Comma-separated list flag (`--worker-addrs a:1,b:2`): trimmed,
+    /// empty items dropped. `None` when the flag is absent; `Some`
+    /// never contains an empty vec unless the value was all commas.
+    pub fn list_flag(&self, name: &str) -> Option<Vec<String>> {
+        self.flag(name).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
 }
 
 fn find<'a>(specs: &'a [FlagSpec], name: &str) -> Option<&'a FlagSpec> {
@@ -196,6 +208,15 @@ mod tests {
     fn bad_value_errors() {
         let a = Args::parse(&sv(&["t", "--steps", "abc"]), &specs()).unwrap();
         assert!(matches!(a.usize_flag("steps", 0), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn list_flag_splits_and_trims() {
+        let a = Args::parse(&sv(&["t", "--task", "a:1, b:2 ,,c:3"]), &specs()).unwrap();
+        assert_eq!(a.list_flag("task").unwrap(), vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(a.list_flag("steps").unwrap(), vec!["100"], "defaults flow through");
+        let b = Args::parse(&sv(&["t"]), &specs()).unwrap();
+        assert!(b.list_flag("verbose").is_none(), "absent flag is None");
     }
 
     #[test]

@@ -489,6 +489,94 @@ impl ServeConfig {
     }
 }
 
+/// Shard-tier configuration: the front-door router process plus its
+/// worker fleet (`bsa shard`, `crate::shard`). Settable in a `[shard]`
+/// TOML section; the front door forwards frames over the same BSRQ/BSRS
+/// protocol the single-process server speaks, so per-worker admission
+/// limits stay in `[serve]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardConfig {
+    /// Front-door bind address (what clients connect to).
+    pub addr: String,
+    /// Number of workers to spawn or attach.
+    pub workers: usize,
+    /// First worker port when the front door spawns its own fleet
+    /// (worker `i` binds `base_port + i` on 127.0.0.1).
+    pub worker_base_port: u16,
+    /// Health-probe cadence: the front door sends each worker a BSST
+    /// stats probe this often (docs/FORMATS.md §3.2).
+    pub probe_interval_ms: u64,
+    /// Probe deadline: a probe that hasn't answered within this budget
+    /// counts as a miss.
+    pub probe_timeout_ms: u64,
+    /// Consecutive probe misses before a worker is marked down and its
+    /// shard range re-placed.
+    pub probe_misses: usize,
+    /// Base respawn/reattach backoff after a worker death; doubles per
+    /// consecutive failure.
+    pub backoff_ms: u64,
+    /// Backoff ceiling (the doubling stops here).
+    pub max_backoff_ms: u64,
+    /// Bounded respawn budget per worker death: after this many failed
+    /// respawn/reattach attempts the worker stays down until an operator
+    /// intervenes (its keys remain re-placed on the survivors).
+    pub respawn_max: usize,
+    /// Per-worker in-flight request cap past which the rendezvous-affine
+    /// worker counts as saturated and the request spills to the
+    /// least-loaded live worker instead.
+    pub spill_inflight: usize,
+    /// Retry-after hint (ms) on front-door-originated shed frames (no
+    /// live worker, fleet saturated). Worker-originated sheds forward
+    /// the worker's own hint unchanged.
+    pub retry_after_ms: u64,
+    /// Drain budget on SIGINT/SIGTERM: stop accepting, then give
+    /// in-flight forwards this long to complete (same contract as the
+    /// single-process server's `[serve] drain_ms`).
+    pub drain_ms: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            addr: "127.0.0.1:7070".into(),
+            workers: 2,
+            worker_base_port: 7100,
+            probe_interval_ms: 500,
+            probe_timeout_ms: 1000,
+            probe_misses: 2,
+            backoff_ms: 200,
+            max_backoff_ms: 5000,
+            respawn_max: 5,
+            spill_inflight: 32,
+            retry_after_ms: 50,
+            drain_ms: 2000,
+        }
+    }
+}
+
+impl ShardConfig {
+    pub fn from_doc(doc: &Document) -> Self {
+        let d = ShardConfig::default();
+        ShardConfig {
+            addr: doc.str_or("shard", "addr", &d.addr),
+            workers: doc.int_or("shard", "workers", d.workers as i64) as usize,
+            worker_base_port: doc.int_or("shard", "worker_base_port", d.worker_base_port as i64)
+                as u16,
+            probe_interval_ms: doc.int_or("shard", "probe_interval_ms", d.probe_interval_ms as i64)
+                as u64,
+            probe_timeout_ms: doc.int_or("shard", "probe_timeout_ms", d.probe_timeout_ms as i64)
+                as u64,
+            probe_misses: doc.int_or("shard", "probe_misses", d.probe_misses as i64) as usize,
+            backoff_ms: doc.int_or("shard", "backoff_ms", d.backoff_ms as i64) as u64,
+            max_backoff_ms: doc.int_or("shard", "max_backoff_ms", d.max_backoff_ms as i64) as u64,
+            respawn_max: doc.int_or("shard", "respawn_max", d.respawn_max as i64) as usize,
+            spill_inflight: doc.int_or("shard", "spill_inflight", d.spill_inflight as i64) as usize,
+            retry_after_ms: doc.int_or("shard", "retry_after_ms", d.retry_after_ms as i64) as u64,
+            drain_ms: doc.int_or("shard", "drain_ms", d.drain_ms as i64) as u64,
+        }
+    }
+}
+
 /// Benchmark harness configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchConfig {
@@ -661,6 +749,42 @@ empty = []
         assert_eq!(sc.conn_quota, 4);
         assert_eq!(sc.retry_after_ms, 75);
         assert_eq!(sc.drain_ms, 500);
+    }
+
+    #[test]
+    fn shard_config_knobs() {
+        let d = ShardConfig::default();
+        assert_eq!(d.workers, 2);
+        assert_eq!(d.worker_base_port, 7100);
+        assert_eq!(d.probe_interval_ms, 500);
+        assert_eq!(d.probe_timeout_ms, 1000);
+        assert_eq!(d.probe_misses, 2);
+        assert_eq!(d.backoff_ms, 200);
+        assert_eq!(d.max_backoff_ms, 5000);
+        assert_eq!(d.respawn_max, 5);
+        assert_eq!(d.spill_inflight, 32);
+        assert_eq!(d.retry_after_ms, 50);
+        assert_eq!(d.drain_ms, 2000);
+        let doc = Document::parse(
+            "[shard]\naddr = \"127.0.0.1:9100\"\nworkers = 4\nworker_base_port = 9200\n\
+             probe_interval_ms = 100\nprobe_timeout_ms = 250\nprobe_misses = 3\n\
+             backoff_ms = 50\nmax_backoff_ms = 400\nrespawn_max = 2\nspill_inflight = 8\n\
+             retry_after_ms = 20\ndrain_ms = 750\n",
+        )
+        .unwrap();
+        let sc = ShardConfig::from_doc(&doc);
+        assert_eq!(sc.addr, "127.0.0.1:9100");
+        assert_eq!(sc.workers, 4);
+        assert_eq!(sc.worker_base_port, 9200);
+        assert_eq!(sc.probe_interval_ms, 100);
+        assert_eq!(sc.probe_timeout_ms, 250);
+        assert_eq!(sc.probe_misses, 3);
+        assert_eq!(sc.backoff_ms, 50);
+        assert_eq!(sc.max_backoff_ms, 400);
+        assert_eq!(sc.respawn_max, 2);
+        assert_eq!(sc.spill_inflight, 8);
+        assert_eq!(sc.retry_after_ms, 20);
+        assert_eq!(sc.drain_ms, 750);
     }
 
     #[test]

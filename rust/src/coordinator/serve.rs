@@ -103,6 +103,17 @@ pub struct RouterStats {
     /// (the regression test for the old torn read, where `served` could
     /// run ahead of its latency sample).
     pub latency_samples: u64,
+    /// Milliseconds since this router instance started. A value that
+    /// *decreased* between two probes of the same address means the
+    /// process (or in-process router) restarted in between.
+    pub uptime_ms: u64,
+    /// Process-global monotonic router incarnation. Every
+    /// [`Router::start`] draws the next value, so a respawned worker is
+    /// distinguishable from a healthy one even when both probes land in
+    /// the same low-uptime window — without it, the shard front door's
+    /// affinity bookkeeping would keep crediting a restarted worker with
+    /// a tree cache it no longer holds.
+    pub epoch: u64,
 }
 
 /// Why a submit was refused without reaching a worker. The TCP
@@ -139,7 +150,15 @@ struct Shared {
     batches: AtomicU64,
     batch_sum: AtomicU64,
     stop: AtomicBool,
+    /// Router start time; `stats()` reports it as `uptime_ms`.
+    started: Instant,
+    /// This router's incarnation number (see [`RouterStats::epoch`]).
+    epoch: u64,
 }
+
+/// Source of [`RouterStats::epoch`]: strictly increasing across every
+/// [`Router::start`] in the process, starting at 1.
+static ROUTER_EPOCH: AtomicU64 = AtomicU64::new(1);
 
 /// The serving front: spawn with [`Router::start`], submit with
 /// [`Router::submit`], stop with [`Router::shutdown`].
@@ -168,6 +187,8 @@ impl Router {
             batches: AtomicU64::new(0),
             batch_sum: AtomicU64::new(0),
             stop: AtomicBool::new(false),
+            started: Instant::now(),
+            epoch: ROUTER_EPOCH.fetch_add(1, Ordering::Relaxed),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
@@ -272,6 +293,8 @@ impl Router {
             tree_misses: self.shared.tree_cache.misses(),
             latency_summary,
             latency_samples,
+            uptime_ms: self.shared.started.elapsed().as_millis() as u64,
+            epoch: self.shared.epoch,
         }
     }
 

@@ -41,6 +41,7 @@ pub mod proptest_lite;
 pub mod rfield;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod tensor;
 pub mod trace;
 pub mod viz;

@@ -17,6 +17,12 @@
 //!             the router counters, per-stage span histograms, and
 //!             worker-pool gauges (see `bsa::trace`; `--probe` sends one
 //!             synthetic prediction first so span histograms are warm)
+//!   shard     start the sharded serving tier: one front-door router over
+//!             N workers with geometry-affinity placement, health probes,
+//!             and respawn (see `bsa::shard`; docs/FORMATS.md §3)
+//!   loadgen   open-loop load generator against a server or front door;
+//!             records p50/p95/p99 vs offered rate, shed rate, and
+//!             per-worker cache hit ratios into BENCH_serve.json
 //!
 //! Logging goes to stderr through a minimal built-in logger; filter with
 //! `BSA_LOG=error|warn|info|debug` (default `info`). Tracing is separate
@@ -67,6 +73,15 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "conn-quota", help: "admission: per-connection in-flight frame cap, applied as read backpressure (default: [serve] conn_quota or 32)", takes_value: true, default: None },
         FlagSpec { name: "drain-ms", help: "drain budget on SIGINT/SIGTERM: in-flight requests get this long to complete and flush before connections close (default: [serve] drain_ms or 2000)", takes_value: true, default: None },
         FlagSpec { name: "probe", help: "for `bsa stats`: send one synthetic prediction first so span histograms are populated", takes_value: false, default: None },
+        FlagSpec { name: "worker-addrs", help: "for `bsa shard`: comma-separated addresses of already-running workers to attach (skips spawning; the fleet probes and routes but does not own their lifecycle)", takes_value: true, default: None },
+        FlagSpec { name: "worker-base-port", help: "for `bsa shard`: spawned worker i binds 127.0.0.1:(base+i) (default: [shard] worker_base_port or 7100)", takes_value: true, default: None },
+        FlagSpec { name: "spill-inflight", help: "for `bsa shard`: in-flight requests per worker before a key spills off its affine worker (default: [shard] spill_inflight or 32)", takes_value: true, default: None },
+        FlagSpec { name: "rate", help: "for `bsa loadgen`: offered arrival rate, requests/s (open loop: the schedule never slows down for a lagging server)", takes_value: true, default: Some("50") },
+        FlagSpec { name: "duration-ms", help: "for `bsa loadgen`: run length in ms", takes_value: true, default: Some("10000") },
+        FlagSpec { name: "geoms", help: "for `bsa loadgen`: distinct geometries in the Zipf traffic mix", takes_value: true, default: Some("8") },
+        FlagSpec { name: "conns", help: "for `bsa loadgen`: client connections (arrivals dealt round-robin)", takes_value: true, default: Some("4") },
+        FlagSpec { name: "zipf", help: "for `bsa loadgen`: Zipf exponent of the geometry mix (0 = uniform)", takes_value: true, default: Some("1.0") },
+        FlagSpec { name: "quick", help: "for `bsa loadgen`: 2 s smoke preset (25 req/s, 2 conns), for CI", takes_value: false, default: None },
         FlagSpec { name: "samples", help: "samples for gen-data", takes_value: true, default: Some("32") },
         FlagSpec { name: "points", help: "points per sample", takes_value: true, default: Some("896") },
         FlagSpec { name: "out", help: "output path", takes_value: true, default: None },
@@ -107,6 +122,8 @@ fn main() {
         "config" => cmd_config(&args),
         "info" => cmd_info(&args),
         "stats" => cmd_stats(&args),
+        "shard" => cmd_shard(&args),
+        "loadgen" => cmd_loadgen(&args),
         other => {
             eprintln!("unknown command {other:?}\n");
             print_usage(&specs);
@@ -185,7 +202,12 @@ fn print_usage(specs: &[FlagSpec]) {
          flops     print the analytic FLOPs table\n  \
          config    show the resolved configuration (Table 4)\n  \
          info      list artifacts and platform\n  \
-         stats     query a live server's stats/trace breakdown (bsa stats <addr>)\n",
+         stats     query a live server's stats/trace breakdown (bsa stats <addr>)\n  \
+         shard     start the sharded serving tier: a front-door router over N\n            \
+         workers with geometry-affinity placement (spawns native workers,\n            \
+         or attaches to running ones via --worker-addrs)\n  \
+         loadgen   open-loop load generator (bsa loadgen <addr> --rate R);\n            \
+         writes the `shard` section of BENCH_serve.json\n",
         bsa::VERSION
     );
     println!("{}", render_help("<command>", "shared flags", specs));
@@ -549,6 +571,97 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
             "  {name:<34} kind={:?} N={} B={} params={}",
             g.kind, g.n, g.batch, g.nparams
         );
+    }
+    Ok(())
+}
+
+/// `bsa shard`: run the sharded serving tier (bsa::shard). Workers are
+/// either spawned as child `bsa serve --backend native` processes on
+/// consecutive ports, or attached with `--worker-addrs` (in which case
+/// their lifecycle stays external — the fleet probes and routes only).
+fn cmd_shard(args: &Args) -> anyhow::Result<()> {
+    use bsa::shard::{FaultPlan, Fleet, FrontDoor};
+    let doc = load_doc(args)?;
+    let mut cfg = bsa::config::ShardConfig::from_doc(&doc);
+    cfg.addr = args.str_flag("addr", &cfg.addr);
+    cfg.workers = args.usize_flag("workers", cfg.workers)?;
+    cfg.worker_base_port =
+        args.usize_flag("worker-base-port", cfg.worker_base_port as usize)? as u16;
+    cfg.spill_inflight = args.usize_flag("spill-inflight", cfg.spill_inflight)?;
+    cfg.drain_ms = args.u64_flag("drain-ms", cfg.drain_ms)?;
+    let faults = Arc::new(FaultPlan::default());
+    let fleet = match args.list_flag("worker-addrs") {
+        Some(addrs) => {
+            anyhow::ensure!(!addrs.is_empty(), "--worker-addrs has no addresses");
+            println!(
+                "shard front door on {} attaching {} workers: {}",
+                cfg.addr,
+                addrs.len(),
+                addrs.join(", ")
+            );
+            Fleet::attach(cfg.clone(), &addrs, faults)
+        }
+        None => {
+            // Spawned workers inherit the serve-shaping flags so the
+            // whole fleet runs one consistent model/backend config.
+            let mut extra = vec!["--backend".to_string(), "native".to_string()];
+            for f in ["task", "n", "seed", "threads", "simd", "precision", "params", "config"] {
+                if let Some(v) = args.flag(f) {
+                    extra.push(format!("--{f}"));
+                    extra.push(v.to_string());
+                }
+            }
+            println!(
+                "shard front door on {} spawning {} native workers from port {}",
+                cfg.addr, cfg.workers, cfg.worker_base_port
+            );
+            Fleet::spawn(cfg.clone(), &extra, faults)?
+        }
+    };
+    let fd = FrontDoor::start(fleet)?;
+    println!(
+        "shard tier up on {} (probe every {} ms, spill at {} in-flight, drain {} ms)",
+        fd.local_addr(),
+        cfg.probe_interval_ms,
+        cfg.spill_inflight,
+        cfg.drain_ms
+    );
+    install_stop_handler(fd.stop_flag());
+    fd.run_until_stopped();
+    Ok(())
+}
+
+/// `bsa loadgen <addr>`: open-loop load generator (bsa::shard::loadgen).
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use bsa::shard::loadgen;
+    let mut opts = loadgen::LoadgenOpts::default();
+    opts.addr = match args.positional.first() {
+        Some(a) => a.clone(),
+        None => args.str_flag("addr", &opts.addr),
+    };
+    opts.rate_per_s = args.f64_flag("rate", opts.rate_per_s)?;
+    opts.duration_ms = args.u64_flag("duration-ms", opts.duration_ms)?;
+    opts.geoms = args.usize_flag("geoms", opts.geoms)?;
+    opts.conns = args.usize_flag("conns", opts.conns)?;
+    opts.zipf_s = args.f64_flag("zipf", opts.zipf_s)?;
+    opts.task = args.str_flag("task", &opts.task);
+    opts.points = args.usize_flag("points", opts.points)?;
+    opts.seed = args.u64_flag("seed", opts.seed)?;
+    if args.has("quick") {
+        opts.rate_per_s = 25.0;
+        opts.duration_ms = 2_000;
+        opts.conns = 2;
+    }
+    println!(
+        "loadgen -> {}: {:.0} req/s for {} ms, {} geometries (zipf {}), {} conns, {} points",
+        opts.addr, opts.rate_per_s, opts.duration_ms, opts.geoms, opts.zipf_s, opts.conns,
+        opts.points
+    );
+    let report = loadgen::run(&opts)?;
+    report.print();
+    match loadgen::write_bench_section(&report)? {
+        Some(path) => println!("merged `shard` section into {path}"),
+        None => println!("(no ROADMAP.md nearby; BENCH_serve.json not written)"),
     }
     Ok(())
 }

@@ -37,6 +37,11 @@ impl Gen {
         self.rng.uniform() < 0.5
     }
 
+    /// Uniform random `u64` (hash keys, shard keys).
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
     /// Power of two in [lo, hi] (inclusive), both powers of two.
     pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);

@@ -64,15 +64,18 @@ use crate::config::ServeConfig;
 use crate::coordinator::{Router, ServeResponse, SubmitError};
 use crate::tensor::Tensor;
 
-const REQ_MAGIC: &[u8; 4] = b"BSRQ";
-const RESP_MAGIC: &[u8; 4] = b"BSRS";
-const STATS_MAGIC: &[u8; 4] = b"BSST";
+// Frame constants are `pub(crate)`: the shard front door (crate::shard)
+// speaks the same wire protocol when relaying frames between clients
+// and workers, and must agree on these bytes exactly.
+pub(crate) const REQ_MAGIC: &[u8; 4] = b"BSRQ";
+pub(crate) const RESP_MAGIC: &[u8; 4] = b"BSRS";
+pub(crate) const STATS_MAGIC: &[u8; 4] = b"BSST";
 /// Hard cap on points per request (sanity bound for the wire format).
-const MAX_POINTS: u32 = 1 << 22;
+pub(crate) const MAX_POINTS: u32 = 1 << 22;
 /// Hard cap on coordinate dims per point.
-const MAX_COORD_DIMS: u32 = 16;
+pub(crate) const MAX_COORD_DIMS: u32 = 16;
 /// Hard cap on feature dims per point.
-const MAX_FEAT_DIMS: u32 = 64;
+pub(crate) const MAX_FEAT_DIMS: u32 = 64;
 /// Largest error/shed message the server writes; the reference client
 /// rejects status-1/2/3 payloads >= 64 KiB, so the server truncates to
 /// stay decodable (docs/FORMATS.md §2.2).
@@ -94,10 +97,10 @@ const DISCARD_CHUNK: usize = 64 * 1024;
 /// before the listener is polled again.
 const ACCEPT_BACKOFF: Duration = Duration::from_millis(10);
 
-const STATUS_OK: u32 = 0;
-const STATUS_ERR: u32 = 1;
-const STATUS_STATS: u32 = 2;
-const STATUS_SHED: u32 = 3;
+pub(crate) const STATUS_OK: u32 = 0;
+pub(crate) const STATUS_ERR: u32 = 1;
+pub(crate) const STATUS_STATS: u32 = 2;
+pub(crate) const STATUS_SHED: u32 = 3;
 
 // ---------------------------------------------------------------------------
 // admission limits
@@ -240,7 +243,7 @@ fn encode_ok(pred: &Tensor) -> Vec<u8> {
     buf
 }
 
-fn encode_err(msg: &str) -> Vec<u8> {
+pub(crate) fn encode_err(msg: &str) -> Vec<u8> {
     let msg = truncate_msg(msg);
     let mut buf = Vec::with_capacity(12 + msg.len());
     buf.extend_from_slice(RESP_MAGIC);
@@ -250,7 +253,7 @@ fn encode_err(msg: &str) -> Vec<u8> {
     buf
 }
 
-fn encode_shed(retry_after_ms: u32, msg: &str) -> Vec<u8> {
+pub(crate) fn encode_shed(retry_after_ms: u32, msg: &str) -> Vec<u8> {
     let msg = truncate_msg(msg);
     let mut buf = Vec::with_capacity(16 + msg.len());
     buf.extend_from_slice(RESP_MAGIC);
@@ -267,7 +270,7 @@ fn encode_shed(retry_after_ms: u32, msg: &str) -> Vec<u8> {
 /// tracing sections ever blow it, they are dropped (flagged with
 /// `"trace_truncated": true`) rather than shipping a frame the client
 /// must reject.
-fn bounded_stats_json(core: &str, sections: &str) -> String {
+pub(crate) fn bounded_stats_json(core: &str, sections: &str) -> String {
     let full = format!("{{{core}, {sections}}}");
     if full.len() <= MAX_STATS_BYTES {
         return full;
@@ -276,12 +279,16 @@ fn bounded_stats_json(core: &str, sections: &str) -> String {
 }
 
 /// Brace-less router-counter fragment of the stats payload
-/// (docs/FORMATS.md §2.3).
+/// (docs/FORMATS.md §2.3). Keys are append-only: `uptime_ms` and
+/// `epoch` (router incarnation) ride after the original counters so the
+/// shard front door can tell a respawned worker from a healthy one
+/// (docs/FORMATS.md §3.2).
 fn core_stats_json(router: &Router) -> String {
     let st = router.stats();
     format!(
         "\"served\": {}, \"rejected\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
-         \"tree_hits\": {}, \"tree_misses\": {}, \"latency\": \"{}\", \"latency_n\": {}",
+         \"tree_hits\": {}, \"tree_misses\": {}, \"latency\": \"{}\", \"latency_n\": {}, \
+         \"uptime_ms\": {}, \"epoch\": {}",
         st.served,
         st.rejected,
         st.batches,
@@ -290,6 +297,8 @@ fn core_stats_json(router: &Router) -> String {
         st.tree_misses,
         st.latency_summary,
         st.latency_samples,
+        st.uptime_ms,
+        st.epoch,
     )
 }
 
@@ -357,7 +366,7 @@ fn admit_header(n: u32, d: u32, f: u32, inflight: u64, limits: &ServeLimits) -> 
 /// briefly, keep serving. No accept error is ever fatal: the old serve
 /// loop returned `Err` here and one fd-exhaustion blip killed the
 /// listener for every connected client.
-fn accept_error_backoff(e: &std::io::Error) -> Option<Duration> {
+pub(crate) fn accept_error_backoff(e: &std::io::Error) -> Option<Duration> {
     if e.kind() == ErrorKind::WouldBlock {
         None
     } else {
@@ -1051,7 +1060,7 @@ impl Client {
     }
 }
 
-fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+pub(crate) fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))

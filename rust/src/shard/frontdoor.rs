@@ -1,0 +1,567 @@
+//! The front-door router: public TCP endpoint, frame forwarding with
+//! geometry-affinity placement, shed propagation, graceful drain.
+//!
+//! The front door speaks the exact wire protocol of [`crate::server`]
+//! (docs/FORMATS.md §2) on both sides: clients talk to it as if it were
+//! a single server, and it talks to each worker as an ordinary client.
+//! Per accepted connection one handler thread reads BSRQ frames,
+//! computes the shard key with
+//! [`content_hash_le_bytes`](crate::balltree::content_hash_le_bytes)
+//! directly over the coordinate wire bytes (bit-identical to the hash
+//! the worker's tree cache keys on — no float decode on the routing
+//! path), places it via [`place`](crate::shard::placement::place), and
+//! relays the worker's reply. Replies leave in request order because a
+//! handler forwards one frame at a time; pipelined frames queue in the
+//! client socket.
+//!
+//! Failure contract (docs/FORMATS.md §3.3): a worker transport failure
+//! is retried on the surviving workers (the whole response is buffered
+//! before any reply byte reaches the client, so a mid-reply worker
+//! death is retried cleanly); when no live worker remains the client
+//! gets a typed status-3 shed, never silence. Worker status-3 sheds are
+//! relayed verbatim — the worker's own `retry_after_ms` propagates to
+//! the client. Worker status-1 errors are relayed and the connection is
+//! closed, mirroring the single-server contract.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use crate::balltree::content_hash_le_bytes;
+use crate::server::{
+    accept_error_backoff, bounded_stats_json, encode_err, encode_shed, MAX_COORD_DIMS,
+    MAX_FEAT_DIMS, MAX_POINTS, REQ_MAGIC, RESP_MAGIC, STATS_MAGIC, STATUS_ERR, STATUS_OK,
+    STATUS_SHED, STATUS_STATS,
+};
+use crate::shard::placement::{place, Placement};
+use crate::shard::worker::{run_prober, Fleet, InflightGuard};
+use crate::trace;
+
+/// Hard ceiling on one forwarded exchange (a worker that neither
+/// replies nor errors within this is treated as dead and retried).
+const FORWARD_TIMEOUT_MS: u64 = 30_000;
+/// Once a client has started a frame, the rest must arrive within this.
+const CLIENT_FRAME_TIMEOUT_MS: u64 = 10_000;
+/// Reply plausibility bounds, mirroring the client's own
+/// (docs/FORMATS.md §2.1): relayed `rn`/`ro` and total reply bytes.
+const RELAY_MAX_OUT_FEATURES: u32 = 1 << 16;
+const RELAY_MAX_RESP_BYTES: u64 = 1 << 30;
+/// Poll tick for all timeout-tolerant socket reads.
+const READ_TICK: Duration = Duration::from_millis(100);
+
+/// A running front door: accept loop + health prober over a [`Fleet`].
+pub struct FrontDoor {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+    fleet: Arc<Fleet>,
+}
+
+impl FrontDoor {
+    /// Bind `fleet.cfg.addr` and start routing. The prober starts with
+    /// the accept loop, so worker health converges within one probe
+    /// interval of startup.
+    pub fn start(fleet: Arc<Fleet>) -> anyhow::Result<FrontDoor> {
+        let listener = TcpListener::bind(&fleet.cfg.addr)
+            .with_context(|| format!("binding front door to {}", fleet.cfg.addr))?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let prober = run_prober(Arc::clone(&fleet), Arc::clone(&stop));
+        let accept = {
+            let fleet = Arc::clone(&fleet);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("shard-accept".into())
+                .spawn(move || accept_loop(listener, fleet, stop))
+                .expect("spawning shard accept thread")
+        };
+        Ok(FrontDoor { addr, stop, accept: Some(accept), prober: Some(prober), fleet })
+    }
+
+    /// The actually-bound address (resolves a `:0` port request).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Shared stop flag — signal handlers set this to begin the drain.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    pub fn fleet(&self) -> &Arc<Fleet> {
+        &self.fleet
+    }
+
+    /// Graceful shutdown, in drain order (docs/FORMATS.md §3.4): stop
+    /// accepting, let handlers finish their in-flight frame (bounded by
+    /// `drain_ms`), join the prober, then SIGTERM-drain spawned workers.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+        if let Some(h) = self.prober.take() {
+            h.join().ok();
+        }
+        self.fleet.shutdown();
+    }
+
+    /// Block until `stop` is set (CLI path: a SIGINT/SIGTERM handler
+    /// owns the flag), then drain.
+    pub fn run_until_stopped(self) {
+        let stop = self.stop_flag();
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.shutdown();
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        // Belt-and-braces for the non-`shutdown` path (panics, tests):
+        // stop the threads so the process can exit.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+        if let Some(h) = self.prober.take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, fleet: Arc<Fleet>, stop: Arc<AtomicBool>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                trace::incr("shard.conns");
+                let fleet = Arc::clone(&fleet);
+                let stop = Arc::clone(&stop);
+                let h = std::thread::Builder::new()
+                    .name("shard-handler".into())
+                    .spawn(move || handle_conn(stream, fleet, stop))
+                    .expect("spawning shard handler thread");
+                handlers.push(h);
+            }
+            Err(e) => match accept_error_backoff(&e) {
+                None => std::thread::sleep(Duration::from_millis(5)),
+                Some(backoff) => std::thread::sleep(backoff),
+            },
+        }
+        // Reap finished handlers each pass so the thread count stays
+        // flat under connection churn (same discipline as the worker's
+        // own poll core).
+        handlers.retain(|h| !h.is_finished());
+    }
+    // Drain: the listener drops here (no new connections); handlers
+    // observe `stop` at their next read tick, finish their in-flight
+    // frame (bounded inside the forward path), and exit.
+    drop(listener);
+    for h in handlers {
+        h.join().ok();
+    }
+}
+
+/// One client connection: BSRQ/BSST frames in, relayed replies out.
+fn handle_conn(mut client: TcpStream, fleet: Arc<Fleet>, stop: Arc<AtomicBool>) {
+    client.set_nodelay(true).ok();
+    if client.set_read_timeout(Some(READ_TICK)).is_err() {
+        return;
+    }
+    let mut req: Vec<u8> = Vec::new();
+    let mut resp: Vec<u8> = Vec::new();
+    loop {
+        let mut magic = [0u8; 4];
+        match read_client(&mut client, &mut magic, &stop) {
+            Ok(true) => {}
+            // Clean close, or drain while idle between frames.
+            Ok(false) | Err(_) => return,
+        }
+        if &magic == STATS_MAGIC {
+            let frame = fleet_stats_frame(&fleet);
+            if client.write_all(&frame).is_err() {
+                return;
+            }
+            continue;
+        }
+        if &magic != REQ_MAGIC {
+            let _ = client.write_all(&encode_err("bad frame magic (expected BSRQ or BSST)"));
+            return;
+        }
+        let mut hdr = [0u8; 12];
+        if read_started(&mut client, &mut hdr).is_err() {
+            return;
+        }
+        let n = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let d = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let f = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        // Same admission bounds as the worker (docs/FORMATS.md §2.1):
+        // status-1 then close, because the declared body length of a
+        // malformed header cannot be trusted.
+        if n == 0
+            || n > MAX_POINTS
+            || d == 0
+            || d > MAX_COORD_DIMS
+            || f == 0
+            || f > MAX_FEAT_DIMS
+        {
+            let _ = client.write_all(&encode_err(&format!("bad request header n={n} d={d} f={f}")));
+            return;
+        }
+        let coord_bytes = 4 * n as usize * d as usize;
+        let body_bytes = coord_bytes + 4 * n as usize * f as usize;
+        req.clear();
+        req.extend_from_slice(REQ_MAGIC);
+        req.extend_from_slice(&hdr);
+        let body_at = req.len();
+        req.resize(body_at + body_bytes, 0);
+        if read_started(&mut client, &mut req[body_at..]).is_err() {
+            return;
+        }
+        if fleet.faults.take_shed() {
+            trace::incr("shard.sheds_origin");
+            let frame =
+                encode_shed(fleet.cfg.retry_after_ms as u32, "shard front door: injected shed");
+            if client.write_all(&frame).is_err() {
+                return;
+            }
+            continue;
+        }
+        let key = content_hash_le_bytes(&req[body_at..body_at + coord_bytes]);
+        match forward(&fleet, key, &req, &mut resp, &mut client, &stop) {
+            Ok(true) => continue,
+            Ok(false) | Err(_) => return,
+        }
+    }
+}
+
+/// Route one frame: place, forward, relay; retry on surviving workers
+/// when the chosen one fails at the transport level. Returns
+/// `Ok(keep_connection)`.
+fn forward(
+    fleet: &Arc<Fleet>,
+    key: u64,
+    req: &[u8],
+    resp: &mut Vec<u8>,
+    client: &mut TcpStream,
+    stop: &AtomicBool,
+) -> anyhow::Result<bool> {
+    let mut tried: Vec<usize> = Vec::new();
+    for attempt in 0..=fleet.slots().len() {
+        let mut cands = fleet.candidates();
+        for c in cands.iter_mut() {
+            if tried.contains(&c.id) {
+                c.live = false;
+            }
+        }
+        let decision = place(key, &cands, fleet.cfg.spill_inflight);
+        let Some(target) = decision.target() else {
+            // Saturated everywhere or no live worker: typed shed, the
+            // connection stays usable (status-3 contract).
+            trace::incr("shard.sheds_origin");
+            let why = match decision {
+                Placement::Saturated { .. } => "all workers saturated",
+                _ => "no live worker available",
+            };
+            let frame = encode_shed(fleet.cfg.retry_after_ms as u32, why);
+            return Ok(client.write_all(&frame).is_ok());
+        };
+        let guard = InflightGuard::enter(Arc::clone(&fleet.slots()[target]));
+        let outcome = forward_once(fleet, target, req, resp, stop);
+        drop(guard);
+        match outcome {
+            Ok(reply) => {
+                let total = fleet.note_forwarded();
+                if let Some(victim) = fleet.faults.kill_due(total) {
+                    fleet.inject_kill(victim);
+                }
+                match (attempt, &decision) {
+                    (0, Placement::Affine(_)) => trace::incr("shard.affinity_hits"),
+                    (_, Placement::Spill { .. }) => trace::incr("shard.spills"),
+                    _ => {}
+                }
+                if matches!(reply, Reply::Shed) {
+                    trace::incr("shard.sheds_forwarded");
+                }
+                if client.write_all(resp).is_err() {
+                    return Ok(false);
+                }
+                // Status-1 closes the connection on both hops.
+                return Ok(!matches!(reply, Reply::ErrClose));
+            }
+            Err(_) => {
+                // Transport failure: mark the worker down immediately
+                // (the prober will confirm / revive it) and re-place the
+                // key among the survivors.
+                trace::incr("shard.retries");
+                fleet.mark_down(target);
+                tried.push(target);
+            }
+        }
+    }
+    trace::incr("shard.sheds_origin");
+    let frame = encode_shed(fleet.cfg.retry_after_ms as u32, "no live worker available");
+    Ok(client.write_all(&frame).is_ok())
+}
+
+/// What kind of frame the worker answered with (already buffered in
+/// `resp`, verbatim, ready to relay).
+enum Reply {
+    Ok,
+    Shed,
+    ErrClose,
+}
+
+/// One complete exchange with worker `id`: send the frame, buffer the
+/// entire validated reply into `resp`. Any error means the reply never
+/// reached us whole, so the caller may retry on another worker — the
+/// client has seen zero bytes of it. A failure on a *pooled* stream
+/// (which may simply be stale) gets one fresh-connection retry before
+/// the error counts against the worker; requests are pure inference, so
+/// the occasional duplicated send is harmless.
+fn forward_once(
+    fleet: &Arc<Fleet>,
+    id: usize,
+    req: &[u8],
+    resp: &mut Vec<u8>,
+    stop: &AtomicBool,
+) -> anyhow::Result<Reply> {
+    if let Some(w) = fleet.pooled(id) {
+        if let Ok(reply) = exchange(fleet, id, w, req, resp, stop) {
+            return Ok(reply);
+        }
+        trace::incr("shard.stale_pool_conns");
+    }
+    let w = fleet.connect_fresh(id)?;
+    exchange(fleet, id, w, req, resp, stop)
+}
+
+/// The actual wire exchange on an owned worker stream.
+fn exchange(
+    fleet: &Arc<Fleet>,
+    id: usize,
+    mut w: TcpStream,
+    req: &[u8],
+    resp: &mut Vec<u8>,
+    stop: &AtomicBool,
+) -> anyhow::Result<Reply> {
+    w.set_write_timeout(Some(Duration::from_millis(FORWARD_TIMEOUT_MS)))?;
+    w.set_read_timeout(Some(READ_TICK))?;
+    w.write_all(req)?;
+    let mut hdr = [0u8; 8];
+    read_deadline(&mut w, &mut hdr, FORWARD_TIMEOUT_MS, stop, fleet.cfg.drain_ms)?;
+    if &hdr[0..4] != RESP_MAGIC {
+        bail!("bad reply magic from worker {id}");
+    }
+    let status = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    resp.clear();
+    resp.extend_from_slice(&hdr);
+    match status {
+        STATUS_OK => {
+            let mut dims = [0u8; 8];
+            read_deadline(&mut w, &mut dims, FORWARD_TIMEOUT_MS, stop, fleet.cfg.drain_ms)?;
+            let rn = u32::from_le_bytes(dims[0..4].try_into().unwrap());
+            let ro = u32::from_le_bytes(dims[4..8].try_into().unwrap());
+            let bytes = 4 * rn as u64 * ro as u64;
+            if rn > MAX_POINTS || ro > RELAY_MAX_OUT_FEATURES || bytes > RELAY_MAX_RESP_BYTES {
+                bail!("implausible reply dims rn={rn} ro={ro} from worker {id}");
+            }
+            resp.extend_from_slice(&dims);
+            let at = resp.len();
+            resp.resize(at + bytes as usize, 0);
+            read_deadline(&mut w, &mut resp[at..], FORWARD_TIMEOUT_MS, stop, fleet.cfg.drain_ms)?;
+            fleet.checkin(id, w);
+            Ok(Reply::Ok)
+        }
+        STATUS_SHED => {
+            // retry_after_ms + message, relayed verbatim so the
+            // worker's own backpressure hint reaches the client.
+            let mut retry = [0u8; 4];
+            read_deadline(&mut w, &mut retry, FORWARD_TIMEOUT_MS, stop, fleet.cfg.drain_ms)?;
+            resp.extend_from_slice(&retry);
+            relay_message(&mut w, resp, fleet, stop)?;
+            fleet.checkin(id, w);
+            Ok(Reply::Shed)
+        }
+        STATUS_ERR => {
+            relay_message(&mut w, resp, fleet, stop)?;
+            // The worker closes after status-1; its stream is spent.
+            Ok(Reply::ErrClose)
+        }
+        other => bail!("unexpected reply status {other} from worker {id}"),
+    }
+}
+
+/// Buffer a bounded `mlen | msg` tail (status-1 and status-3 frames).
+fn relay_message(
+    w: &mut TcpStream,
+    resp: &mut Vec<u8>,
+    fleet: &Arc<Fleet>,
+    stop: &AtomicBool,
+) -> anyhow::Result<()> {
+    let mut mlen = [0u8; 4];
+    read_deadline(w, &mut mlen, FORWARD_TIMEOUT_MS, stop, fleet.cfg.drain_ms)?;
+    let len = u32::from_le_bytes(mlen) as usize;
+    if len >= 65536 {
+        bail!("worker message length {len} over bound");
+    }
+    resp.extend_from_slice(&mlen);
+    let at = resp.len();
+    resp.resize(at + len, 0);
+    read_deadline(w, &mut resp[at..], FORWARD_TIMEOUT_MS, stop, fleet.cfg.drain_ms)?;
+    Ok(())
+}
+
+/// Fleet-aggregate BSST reply (docs/FORMATS.md §3.3): front-door role
+/// marker, per-worker health/affinity snapshot, plus the process's
+/// tracing sections — all under the same 64 KiB status-2 bound.
+fn fleet_stats_frame(fleet: &Arc<Fleet>) -> Vec<u8> {
+    let mut workers = String::new();
+    for (i, s) in fleet.slots().iter().enumerate() {
+        if i > 0 {
+            workers.push_str(", ");
+        }
+        let (hits, misses) = s.tree_stats();
+        write!(
+            workers,
+            "{{\"id\": {}, \"addr\": \"{}\", \"up\": {}, \"epoch\": {}, \"restarts\": {}, \
+             \"inflight\": {}, \"tree_hits\": {}, \"tree_misses\": {}}}",
+            s.id,
+            s.addr,
+            s.is_up(),
+            s.epoch(),
+            s.restarts(),
+            s.inflight(),
+            hits,
+            misses,
+        )
+        .expect("writing to String cannot fail");
+    }
+    let up = fleet.slots().iter().filter(|s| s.is_up()).count();
+    let core = format!(
+        "\"role\": \"frontdoor\", \"workers_up\": {}, \"forwarded\": {}, \"workers\": [{}]",
+        up,
+        fleet.forwarded(),
+        workers,
+    );
+    let json = bounded_stats_json(&core, &trace::stats_sections_json());
+    let mut buf = Vec::with_capacity(12 + json.len());
+    buf.extend_from_slice(RESP_MAGIC);
+    buf.extend_from_slice(&STATUS_STATS.to_le_bytes());
+    buf.extend_from_slice(&(json.len() as u32).to_le_bytes());
+    buf.extend_from_slice(json.as_bytes());
+    buf
+}
+
+/// Read exactly `buf.len()` bytes from an idle client position.
+/// `Ok(false)` = no frame started and the connection closed cleanly (or
+/// the drain began) — the handler should exit without an error. Once
+/// the first byte arrives, the frame must complete within
+/// [`CLIENT_FRAME_TIMEOUT_MS`].
+fn read_client(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> anyhow::Result<bool> {
+    let mut pos = 0;
+    let mut deadline: Option<Instant> = None;
+    while pos < buf.len() {
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => {
+                if pos == 0 {
+                    return Ok(false);
+                }
+                bail!("client closed mid-frame");
+            }
+            Ok(m) => {
+                pos += m;
+                deadline
+                    .get_or_insert(Instant::now() + Duration::from_millis(CLIENT_FRAME_TIMEOUT_MS));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if pos == 0 && stop.load(Ordering::Relaxed) {
+                    return Ok(false);
+                }
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        bail!("client frame stalled");
+                    }
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// [`read_client`] for a frame already in progress: completion is
+/// mandatory, bounded by [`CLIENT_FRAME_TIMEOUT_MS`].
+fn read_started(stream: &mut TcpStream, buf: &mut [u8]) -> anyhow::Result<()> {
+    let deadline = Instant::now() + Duration::from_millis(CLIENT_FRAME_TIMEOUT_MS);
+    let mut pos = 0;
+    while pos < buf.len() {
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => bail!("client closed mid-frame"),
+            Ok(m) => pos += m,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= deadline {
+                    bail!("client frame stalled");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Timeout-tolerant exact read from a worker stream (whose read timeout
+/// is [`READ_TICK`]): bounded by `timeout_ms` overall, and — once the
+/// drain begins — additionally by `drain_ms`, so shutdown never waits
+/// the full forward timeout on a wedged worker.
+fn read_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    timeout_ms: u64,
+    stop: &AtomicBool,
+    drain_ms: u64,
+) -> anyhow::Result<()> {
+    let hard = Instant::now() + Duration::from_millis(timeout_ms);
+    let mut drain_deadline: Option<Instant> = None;
+    let mut pos = 0;
+    while pos < buf.len() {
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => bail!("worker closed mid-reply"),
+            Ok(m) => pos += m,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                let now = Instant::now();
+                if now >= hard {
+                    bail!("worker reply timed out");
+                }
+                if stop.load(Ordering::Relaxed) {
+                    let d = *drain_deadline
+                        .get_or_insert(now + Duration::from_millis(drain_ms.max(1)));
+                    if now >= d {
+                        bail!("drain deadline reached mid-reply");
+                    }
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,560 @@
+//! Open-loop load generator for the serving tier, plus the
+//! BENCH_serve.json `shard` section writer.
+//!
+//! **Open loop**: request arrival times are fixed up front from the
+//! offered rate and never adjust to observed latency — if the server
+//! falls behind, lateness shows up as latency instead of silently
+//! throttling the offered load (the classic closed-loop coordinated-
+//! omission trap). Latency is therefore measured from each request's
+//! *scheduled* arrival, not from when the socket write happened.
+//!
+//! Traffic shape: `geoms` distinct geometries drawn Zipf-style
+//! (weight of geometry `i` is `1/(i+1)^s`), so a few geometries are hot
+//! — exactly the regime where the front door's tree-cache affinity
+//! routing pays off — with a long cold tail. The whole schedule is a
+//! pure function of the seed: same seed, same arrivals, same geometry
+//! sequence (pinned by a unit test below).
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::data::generator_for;
+use crate::prng::Rng;
+use crate::server::{Client, ShedError};
+use crate::tensor::Tensor;
+use crate::trace;
+
+/// One scheduled request: when (µs after start) and which geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub offset_us: u64,
+    pub geom: usize,
+}
+
+/// The full open-loop schedule: `floor(rate · duration)` arrivals at
+/// fixed `1/rate` spacing, geometries drawn Zipf-style with exponent
+/// `zipf_s`. Deterministic in `seed`.
+pub fn arrival_schedule(
+    seed: u64,
+    rate_per_s: f64,
+    duration_ms: u64,
+    geoms: usize,
+    zipf_s: f64,
+) -> Vec<Arrival> {
+    if rate_per_s <= 0.0 || duration_ms == 0 || geoms == 0 {
+        return Vec::new();
+    }
+    let count = (rate_per_s * duration_ms as f64 / 1000.0).floor() as usize;
+    let gap_us = 1e6 / rate_per_s;
+    // Zipf-ish weights 1/(i+1)^s, sampled by inverse CDF.
+    let weights: Vec<f64> = (0..geoms).map(|i| 1.0 / ((i + 1) as f64).powf(zipf_s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            let mut u = rng.uniform() as f64 * total;
+            let mut geom = geoms - 1;
+            for (g, w) in weights.iter().enumerate() {
+                if u < *w {
+                    geom = g;
+                    break;
+                }
+                u -= w;
+            }
+            Arrival { offset_us: (i as f64 * gap_us) as u64, geom }
+        })
+        .collect()
+}
+
+/// Knobs for one loadgen run (CLI flags map 1:1 onto these).
+#[derive(Debug, Clone)]
+pub struct LoadgenOpts {
+    /// Front door (or single server) address.
+    pub addr: String,
+    pub rate_per_s: f64,
+    pub duration_ms: u64,
+    /// Distinct geometries in the traffic mix.
+    pub geoms: usize,
+    /// Client connections; arrivals are dealt round-robin across them.
+    pub conns: usize,
+    /// Zipf exponent for the geometry mix (0 = uniform).
+    pub zipf_s: f64,
+    /// Dataset task for geometry synthesis ("syn", "air", "ela").
+    pub task: String,
+    /// Points per geometry.
+    pub points: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts {
+            addr: "127.0.0.1:7070".into(),
+            rate_per_s: 50.0,
+            duration_ms: 10_000,
+            geoms: 8,
+            conns: 4,
+            zipf_s: 1.0,
+            task: "syn".into(),
+            points: 256,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-worker cache view scraped from the front door's BSST reply after
+/// the run (or from a single server's flat counters).
+#[derive(Debug, Clone)]
+pub struct WorkerCache {
+    pub id: u64,
+    pub tree_hits: u64,
+    pub tree_misses: u64,
+    pub hit_ratio: f64,
+}
+
+/// Everything one loadgen run measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub offered_per_s: f64,
+    pub achieved_per_s: f64,
+    pub requests: usize,
+    pub geometries: usize,
+    pub ok: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub shed_rate: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub workers: Vec<WorkerCache>,
+}
+
+/// Run the open-loop generator against `opts.addr`. Every scheduled
+/// arrival is accounted for exactly once — ok, shed, or error — so a
+/// dropped request is a visible number, never silence.
+pub fn run(opts: &LoadgenOpts) -> anyhow::Result<LoadgenReport> {
+    let schedule = arrival_schedule(
+        opts.seed,
+        opts.rate_per_s,
+        opts.duration_ms,
+        opts.geoms,
+        opts.zipf_s,
+    );
+    anyhow::ensure!(!schedule.is_empty(), "empty schedule (rate/duration/geoms all > 0?)");
+    anyhow::ensure!(opts.conns > 0, "need at least one connection");
+    let gen = generator_for(&opts.task, opts.seed)?;
+    let samples: Vec<(Tensor, Tensor)> = (0..opts.geoms)
+        .map(|g| {
+            let s = gen.generate(g as u64, opts.points);
+            (s.coords, s.features)
+        })
+        .collect();
+    let samples = Arc::new(samples);
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    // Start a beat in the future so every sender thread is up before
+    // the first scheduled arrival.
+    let t0 = Instant::now() + Duration::from_millis(50);
+    let mut lanes: Vec<Vec<Arrival>> = vec![Vec::new(); opts.conns];
+    for (i, a) in schedule.iter().enumerate() {
+        lanes[i % opts.conns].push(*a);
+    }
+    let started = Instant::now();
+    let mut threads = Vec::new();
+    for lane in lanes {
+        let addr = opts.addr.clone();
+        let samples = Arc::clone(&samples);
+        let (ok, shed, errors) = (Arc::clone(&ok), Arc::clone(&shed), Arc::clone(&errors));
+        threads.push(std::thread::spawn(move || {
+            let mut lat_us: Vec<u64> = Vec::with_capacity(lane.len());
+            let mut client: Option<Client> = Client::connect(&addr).ok();
+            for a in lane {
+                let due = t0 + Duration::from_micros(a.offset_us);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                if client.is_none() {
+                    client = Client::connect(&addr).ok();
+                }
+                let Some(c) = client.as_mut() else {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                };
+                let (coords, feats) = &samples[a.geom];
+                match c.predict(coords, feats) {
+                    Ok(_) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                        // Open loop: latency from the *scheduled* time.
+                        lat_us.push(due.elapsed().as_micros() as u64);
+                    }
+                    Err(e) if e.downcast_ref::<ShedError>().is_some() => {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        // Transport fault: reconnect before the next
+                        // arrival (worker churn must not wedge a lane).
+                        client = None;
+                    }
+                }
+            }
+            lat_us
+        }));
+    }
+    let mut lat_us: Vec<u64> = Vec::with_capacity(schedule.len());
+    for t in threads {
+        lat_us.extend(t.join().expect("loadgen sender thread panicked"));
+    }
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+    lat_us.sort_unstable();
+    let pct = |q: f64| -> u64 {
+        if lat_us.is_empty() {
+            return 0;
+        }
+        lat_us[((lat_us.len() - 1) as f64 * q).round() as usize]
+    };
+    let (ok, shed, errors) = (
+        ok.load(Ordering::Relaxed),
+        shed.load(Ordering::Relaxed),
+        errors.load(Ordering::Relaxed),
+    );
+    let total = schedule.len() as u64;
+    debug_assert_eq!(ok + shed + errors, total, "every arrival must be accounted for");
+    Ok(LoadgenReport {
+        offered_per_s: opts.rate_per_s,
+        achieved_per_s: ok as f64 / wall_s,
+        requests: schedule.len(),
+        geometries: opts.geoms,
+        ok,
+        shed,
+        errors,
+        shed_rate: shed as f64 / total.max(1) as f64,
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        workers: scrape_workers(&opts.addr),
+    })
+}
+
+/// Post-run BSST scrape: per-worker cache stats from a front door's
+/// `workers` array (docs/FORMATS.md §3.3), or the flat counters of a
+/// single server as a one-element fleet.
+fn scrape_workers(addr: &str) -> Vec<WorkerCache> {
+    let Ok(mut c) = Client::connect(addr) else { return Vec::new() };
+    let Ok(text) = c.stats() else { return Vec::new() };
+    let Ok(json) = trace::parse_json(&text) else { return Vec::new() };
+    let num = |j: &trace::Json, key: &str| j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let cache = |id: u64, hits: f64, misses: f64| WorkerCache {
+        id,
+        tree_hits: hits as u64,
+        tree_misses: misses as u64,
+        hit_ratio: hits / (hits + misses).max(1.0),
+    };
+    match json.get("workers") {
+        Some(trace::Json::Arr(ws)) => ws
+            .iter()
+            .map(|w| cache(num(w, "id") as u64, num(w, "tree_hits"), num(w, "tree_misses")))
+            .collect(),
+        _ => vec![cache(0, num(&json, "tree_hits"), num(&json, "tree_misses"))],
+    }
+}
+
+impl LoadgenReport {
+    /// Compact JSON object for the `shard` section of BENCH_serve.json.
+    /// `requests`/`geometries` are run descriptors (benchdiff skip
+    /// keys); metric keys carry their direction in the suffix
+    /// (`_us`/`_per_s`/`shed_rate`/`hit_ratio`).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut workers = String::new();
+        for (i, w) in self.workers.iter().enumerate() {
+            if i > 0 {
+                workers.push_str(", ");
+            }
+            write!(
+                workers,
+                "\"w{}\": {{\"tree_hits\": {}, \"tree_misses\": {}, \"hit_ratio\": {:.4}}}",
+                w.id, w.tree_hits, w.tree_misses, w.hit_ratio
+            )
+            .expect("writing to String cannot fail");
+        }
+        format!(
+            "{{\"requests\": {}, \"geometries\": {}, \"offered_per_s\": {:.2}, \
+             \"achieved_per_s\": {:.2}, \"ok\": {}, \"shed\": {}, \"errors\": {}, \
+             \"shed_rate\": {:.4}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \
+             \"workers\": {{{}}}}}",
+            self.requests,
+            self.geometries,
+            self.offered_per_s,
+            self.achieved_per_s,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.shed_rate,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            workers,
+        )
+    }
+
+    /// Human-readable summary for the terminal.
+    pub fn print(&self) {
+        println!(
+            "loadgen: offered {:.1}/s achieved {:.1}/s over {} requests ({} geometries)",
+            self.offered_per_s, self.achieved_per_s, self.requests, self.geometries
+        );
+        println!(
+            "  ok {}  shed {} ({:.1}%)  errors {}",
+            self.ok,
+            self.shed,
+            self.shed_rate * 100.0,
+            self.errors
+        );
+        println!(
+            "  latency from scheduled arrival: p50 {} us  p95 {} us  p99 {} us",
+            self.p50_us, self.p95_us, self.p99_us
+        );
+        for w in &self.workers {
+            println!(
+                "  worker {}: tree_hits {} tree_misses {} (hit ratio {:.1}%)",
+                w.id,
+                w.tree_hits,
+                w.tree_misses,
+                w.hit_ratio * 100.0
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_serve.json section splicing
+// ---------------------------------------------------------------------------
+
+/// Byte span of the JSON value starting at `start` in `doc`: either the
+/// literal `null` or a brace-balanced object (string-aware). `None` if
+/// neither parses.
+fn value_span(doc: &str, start: usize) -> Option<std::ops::Range<usize>> {
+    let bytes = doc.as_bytes();
+    if doc[start..].starts_with("null") {
+        return Some(start..start + 4);
+    }
+    if bytes.get(start) != Some(&b'{') {
+        return None;
+    }
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate().skip(start) {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match b {
+            b'"' => in_str = true,
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(start..i + 1);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Locate the top-level `"key": <value>` span in `doc` (the value's
+/// byte range), if present.
+fn section_span(doc: &str, key: &str) -> Option<std::ops::Range<usize>> {
+    let needle = format!("\"{key}\":");
+    let at = doc.find(&needle)?;
+    let mut start = at + needle.len();
+    let bytes = doc.as_bytes();
+    while start < bytes.len() && (bytes[start] as char).is_whitespace() {
+        start += 1;
+    }
+    value_span(doc, start)
+}
+
+/// The raw text of the top-level `"key"` section of a bench doc.
+pub fn extract_section(doc: &str, key: &str) -> Option<String> {
+    section_span(doc, key).map(|r| doc[r].to_string())
+}
+
+/// Splice `fragment` in as the top-level `"key"` section: replaces an
+/// existing value (object or `null` placeholder), else inserts before
+/// the document's final `}`. Pure text surgery so the rest of the doc —
+/// whoever wrote it — is preserved byte-for-byte.
+pub fn merge_section(doc: &str, key: &str, fragment: &str) -> String {
+    if let Some(span) = section_span(doc, key) {
+        let mut out = String::with_capacity(doc.len() + fragment.len());
+        out.push_str(&doc[..span.start]);
+        out.push_str(fragment);
+        out.push_str(&doc[span.end..]);
+        return out;
+    }
+    match doc.rfind('}') {
+        Some(close) => {
+            let mut out = String::with_capacity(doc.len() + fragment.len() + key.len() + 8);
+            out.push_str(doc[..close].trim_end());
+            out.push_str(&format!(",\n  \"{key}\": {fragment}\n"));
+            out.push_str(&doc[close..]);
+            out
+        }
+        None => format!("{{\n  \"{key}\": {fragment}\n}}\n"),
+    }
+}
+
+/// Merge the report into BENCH_serve.json next to ROADMAP.md (the same
+/// auto-detection the bench runner uses: repo root or `rust/`). Returns
+/// the path written, or `None` when no repo root was found (the report
+/// is print-only then).
+pub fn write_bench_section(report: &LoadgenReport) -> anyhow::Result<Option<String>> {
+    let path = if std::path::Path::new("ROADMAP.md").exists() {
+        "BENCH_serve.json"
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_serve.json"
+    } else {
+        return Ok(None);
+    };
+    let existing = std::fs::read_to_string(path).unwrap_or_else(|_| "{\n}\n".to_string());
+    let merged = merge_section(&existing, "shard", &report.to_json());
+    let mut f = std::fs::File::create(path).with_context(|| format!("writing {path}"))?;
+    f.write_all(merged.as_bytes())?;
+    Ok(Some(path.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- schedule determinism (ISSUE 9 satellite) -----------------------
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = arrival_schedule(7, 200.0, 2_000, 8, 1.0);
+        let b = arrival_schedule(7, 200.0, 2_000, 8, 1.0);
+        assert_eq!(a, b, "schedule must be a pure function of the seed");
+        assert_eq!(a.len(), 400);
+        let c = arrival_schedule(8, 200.0, 2_000, 8, 1.0);
+        assert_ne!(
+            a.iter().map(|x| x.geom).collect::<Vec<_>>(),
+            c.iter().map(|x| x.geom).collect::<Vec<_>>(),
+            "a different seed must draw a different geometry sequence"
+        );
+    }
+
+    #[test]
+    fn schedule_is_open_loop_fixed_spacing() {
+        let s = arrival_schedule(0, 1000.0, 100, 4, 1.0);
+        assert_eq!(s.len(), 100);
+        for w in s.windows(2) {
+            assert_eq!(w[1].offset_us - w[0].offset_us, 1000, "1 kHz = 1000 us spacing");
+        }
+        assert!(s.iter().all(|a| a.geom < 4));
+    }
+
+    #[test]
+    fn zipf_mix_skews_hot() {
+        let s = arrival_schedule(3, 500.0, 4_000, 8, 1.0);
+        let mut counts = [0usize; 8];
+        for a in &s {
+            counts[a.geom] += 1;
+        }
+        assert!(
+            counts[0] > counts[7] * 2,
+            "geometry 0 must be much hotter than the tail: {counts:?}"
+        );
+        assert!(counts.iter().all(|&c| c > 0), "every geometry appears: {counts:?}");
+    }
+
+    #[test]
+    fn degenerate_schedules_are_empty() {
+        assert!(arrival_schedule(0, 0.0, 1000, 4, 1.0).is_empty());
+        assert!(arrival_schedule(0, 100.0, 0, 4, 1.0).is_empty());
+        assert!(arrival_schedule(0, 100.0, 1000, 0, 1.0).is_empty());
+    }
+
+    // -- section splicing -----------------------------------------------
+
+    const DOC: &str = "{\n  \"bench\": \"serve_hot_path\",\n  \"reps\": 3,\n  \
+                       \"e2e\": {\"p50_us\": 10, \"tag\": \"a}b\"}\n}\n";
+
+    #[test]
+    fn merge_inserts_when_absent() {
+        let out = merge_section(DOC, "shard", "{\"shed_rate\": 0.1}");
+        assert_eq!(extract_section(&out, "shard").unwrap(), "{\"shed_rate\": 0.1}");
+        // the rest of the doc is untouched
+        assert_eq!(extract_section(&out, "e2e"), extract_section(DOC, "e2e"));
+        assert!(out.contains("\"bench\": \"serve_hot_path\""));
+    }
+
+    #[test]
+    fn merge_replaces_existing_and_null() {
+        let with_null = merge_section(DOC, "shard", "null");
+        assert_eq!(extract_section(&with_null, "shard").unwrap(), "null");
+        let filled = merge_section(&with_null, "shard", "{\"p99_us\": 42}");
+        assert_eq!(extract_section(&filled, "shard").unwrap(), "{\"p99_us\": 42}");
+        let refilled = merge_section(&filled, "shard", "{\"p99_us\": 43}");
+        assert_eq!(extract_section(&refilled, "shard").unwrap(), "{\"p99_us\": 43}");
+        assert_eq!(refilled.matches("\"shard\"").count(), 1, "no duplicate sections");
+    }
+
+    #[test]
+    fn brace_matching_ignores_braces_inside_strings() {
+        // `e2e` contains a string with a `}` in it; the span must still
+        // cover the whole object.
+        assert_eq!(
+            extract_section(DOC, "e2e").unwrap(),
+            "{\"p50_us\": 10, \"tag\": \"a}b\"}"
+        );
+    }
+
+    #[test]
+    fn report_json_is_parseable_and_merge_roundtrips() {
+        let report = LoadgenReport {
+            offered_per_s: 100.0,
+            achieved_per_s: 98.5,
+            requests: 200,
+            geometries: 8,
+            ok: 190,
+            shed: 8,
+            errors: 2,
+            shed_rate: 0.04,
+            p50_us: 900,
+            p95_us: 2100,
+            p99_us: 4000,
+            workers: vec![
+                WorkerCache { id: 0, tree_hits: 90, tree_misses: 4, hit_ratio: 90.0 / 94.0 },
+                WorkerCache { id: 1, tree_hits: 88, tree_misses: 4, hit_ratio: 88.0 / 92.0 },
+            ],
+        };
+        let json = report.to_json();
+        let parsed = trace::parse_json(&json).expect("report JSON must parse");
+        assert_eq!(parsed.get("ok").and_then(|v| v.as_f64()), Some(190.0));
+        assert!(parsed.get("workers").and_then(|w| w.get("w1")).is_some());
+        let merged = merge_section(DOC, "shard", &json);
+        let back = extract_section(&merged, "shard").unwrap();
+        assert_eq!(back, json, "splice must preserve the fragment byte-for-byte");
+        let reparsed = trace::parse_json(&merged).expect("merged doc must still be JSON");
+        assert_eq!(
+            reparsed.get("shard").and_then(|s| s.get("shed_rate")).and_then(|v| v.as_f64()),
+            Some(0.04)
+        );
+    }
+}

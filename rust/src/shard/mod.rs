@@ -1,0 +1,100 @@
+//! Sharded serving tier: a front-door router over N poll-core workers.
+//!
+//! One [`FrontDoor`] process owns the public TCP endpoint and speaks the
+//! exact BSRQ/BSRS wire protocol of [`crate::server`]; behind it sits a
+//! [`Fleet`] of workers, each a full `bsa serve` instance (batching
+//! [`Router`](crate::coordinator::serve::Router) + poll core) with its
+//! own [`NativeBackend`](crate::backend::native::NativeBackend) replica
+//! and [`BallTreeCache`](crate::balltree::BallTreeCache). Requests are
+//! routed by **geometry affinity**: the shard key is the ball-tree
+//! content hash of the request's coordinate bytes, placed by rendezvous
+//! hashing ([`placement`]), so repeat geometries keep landing on the
+//! worker whose tree cache is already warm.
+//!
+//! Layer map:
+//!
+//! * [`placement`] — pure routing math (rendezvous scores, spill,
+//!   saturation); no I/O, property-tested.
+//! * [`worker`] — fleet state: per-worker slots, connection pools, the
+//!   health prober (periodic BSST probes, epoch-based restart
+//!   detection), respawn with bounded exponential backoff.
+//! * [`frontdoor`] — the router process: accept loop, frame forwarding,
+//!   shed propagation, graceful drain (docs/FORMATS.md §3).
+//! * [`loadgen`] — open-loop load generator + BENCH_serve.json `shard`
+//!   section writer.
+//!
+//! Everything here is std-only, matching the rest of the crate: raw
+//! `TcpStream`s, `Arc` + atomics, no async runtime.
+
+pub mod frontdoor;
+pub mod loadgen;
+pub mod placement;
+pub mod worker;
+
+pub use frontdoor::FrontDoor;
+pub use loadgen::{arrival_schedule, Arrival, LoadgenOpts, LoadgenReport};
+pub use placement::{affine_worker, place, rendezvous_score, Candidate, Placement};
+pub use worker::{Fleet, ProbeReport, WorkerSlot};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Test-only fault-injection hook, threaded through the fleet and front
+/// door. In production every field stays in its default (inert) state;
+/// the chaos suite (`tests/shard_chaos.rs`) arms it to schedule worker
+/// kills mid-pipeline, stall health probes past their deadline, and
+/// force shed storms — all without reaching into the router's internals,
+/// so the code under test is exactly the code that ships.
+#[derive(Default)]
+pub struct FaultPlan {
+    /// `(worker_id, after_forwarded)`: hard-kill `worker_id` once the
+    /// front door has forwarded `after_forwarded` frames. Fires once.
+    kill_after: Mutex<Option<(usize, u64)>>,
+    /// Extra sleep injected into every prober cycle, in ms. Used to
+    /// push a probe past `probe_timeout_ms` and prove the miss counter
+    /// marks the worker down.
+    probe_delay_ms: AtomicU64,
+    /// Number of upcoming requests the front door must shed (status 3)
+    /// without forwarding — a synthetic shed storm.
+    shed_next: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Arm a one-shot kill of `worker` after `after` forwarded frames.
+    pub fn kill_worker_after(&self, worker: usize, after: u64) {
+        *self.kill_after.lock().unwrap() = Some((worker, after));
+    }
+
+    /// Consume the kill order if `forwarded_total` has reached it.
+    pub(crate) fn kill_due(&self, forwarded_total: u64) -> Option<usize> {
+        let mut slot = self.kill_after.lock().unwrap();
+        match *slot {
+            Some((worker, after)) if forwarded_total >= after => {
+                *slot = None;
+                Some(worker)
+            }
+            _ => None,
+        }
+    }
+
+    /// Stall every subsequent prober cycle by `ms` milliseconds.
+    pub fn delay_probes_ms(&self, ms: u64) {
+        self.probe_delay_ms.store(ms, Ordering::Relaxed);
+    }
+
+    pub(crate) fn probe_delay(&self) -> u64 {
+        self.probe_delay_ms.load(Ordering::Relaxed)
+    }
+
+    /// Shed the next `n` requests at the front door without forwarding.
+    pub fn shed_storm(&self, n: u64) {
+        self.shed_next.store(n, Ordering::Relaxed);
+    }
+
+    /// True when this request is claimed by an armed shed storm.
+    pub(crate) fn take_shed(&self) -> bool {
+        self.shed_next
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+    }
+}

@@ -1,0 +1,275 @@
+//! Geometry-affinity placement: rendezvous (highest-random-weight)
+//! hashing over the ball-tree content hash.
+//!
+//! The shard key is [`content_hash`](crate::balltree::content_hash) of a
+//! request's coordinates — the same value the per-worker
+//! [`BallTreeCache`](crate::balltree::BallTreeCache) keys on — so the
+//! worker a geometry rendezvous-hashes to is exactly the worker whose
+//! cache already holds its tree. Rendezvous hashing gives the two
+//! properties the fleet needs with no coordination state at all:
+//!
+//! * **determinism** — placement is a pure function of (key, live set),
+//!   so every front-door restart or concurrent decision agrees;
+//! * **minimal disruption** — when a worker dies, only the keys whose
+//!   argmax *was* that worker move (~1/N of them); everyone else keeps
+//!   their warm cache.
+//!
+//! Saturation is handled one layer up: when the affine worker's
+//! in-flight count is at the spill threshold, the request spills to the
+//! least-loaded live worker ([`place`] returns the spill target) rather
+//! than queueing unboundedly behind a hot shard. All three properties
+//! are pinned by proptest-style checks at the bottom of this file.
+
+/// One worker as the placement function sees it: identity plus the load
+/// signals routing needs. Built per-decision by the front door from the
+/// fleet's atomics (cheap: a couple of relaxed loads per worker).
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Stable worker index (slot position in the fleet, not a
+    /// generation counter — a respawned worker keeps its id so its keys
+    /// come home after recovery).
+    pub id: usize,
+    /// Healthy and accepting traffic (up, not draining).
+    pub live: bool,
+    /// Requests currently forwarded to this worker and not yet
+    /// answered.
+    pub inflight: usize,
+}
+
+/// Where a key goes, and why.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// The rendezvous-affine worker is live and has capacity.
+    Affine(usize),
+    /// The affine worker is saturated; the request spills to the
+    /// least-loaded live worker (`chosen != affine`).
+    Spill { affine: usize, chosen: usize },
+    /// Every live worker is at or over the spill threshold — the caller
+    /// should shed (status 3) rather than queue unboundedly.
+    Saturated { affine: usize },
+    /// No live worker at all.
+    NoWorker,
+}
+
+impl Placement {
+    /// The worker the request should be forwarded to, if any.
+    pub fn target(&self) -> Option<usize> {
+        match *self {
+            Placement::Affine(id) => Some(id),
+            Placement::Spill { chosen, .. } => Some(chosen),
+            Placement::Saturated { .. } | Placement::NoWorker => None,
+        }
+    }
+
+    /// True when the chosen target is the key's rendezvous-affine
+    /// worker (the tree-cache-warm path).
+    pub fn is_affine(&self) -> bool {
+        matches!(self, Placement::Affine(_))
+    }
+}
+
+/// Rendezvous weight of `worker` for `key`: a splitmix64-style mix of
+/// the two, so each (key, worker) pair draws an independent-looking
+/// 64-bit weight and the per-key argmax is uniform over workers.
+pub fn rendezvous_score(key: u64, worker: u64) -> u64 {
+    // Distinct odd multipliers keep (key, worker) and (worker, key)
+    // from colliding; the finisher is the same splitmix64 mix the
+    // content hash uses.
+    let mut h = key
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(worker.wrapping_mul(0xd1b54a32d192ed03))
+        ^ 0x2545f4914f6cdd1d;
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^ (h >> 31)
+}
+
+/// The rendezvous-affine worker for `key` among the live candidates:
+/// argmax of [`rendezvous_score`], ties broken toward the lower id
+/// (ties are a 2^-64 event; the break just keeps the function total).
+pub fn affine_worker(key: u64, candidates: &[Candidate]) -> Option<usize> {
+    candidates
+        .iter()
+        .filter(|c| c.live)
+        .max_by_key(|c| (rendezvous_score(key, c.id as u64), std::cmp::Reverse(c.id)))
+        .map(|c| c.id)
+}
+
+/// Full placement decision for one request: affine worker if it has
+/// capacity, spill to the least-loaded live worker when it is at or
+/// over `spill_inflight`, shed when every live worker is saturated.
+pub fn place(key: u64, candidates: &[Candidate], spill_inflight: usize) -> Placement {
+    let Some(affine) = affine_worker(key, candidates) else {
+        return Placement::NoWorker;
+    };
+    let spill_at = spill_inflight.max(1);
+    let affine_load =
+        candidates.iter().find(|c| c.id == affine).map(|c| c.inflight).unwrap_or(0);
+    if affine_load < spill_at {
+        return Placement::Affine(affine);
+    }
+    // Saturated affine worker: least-loaded live alternative (lowest id
+    // on ties, for determinism). The affine worker itself stays in the
+    // running — if it is still the least loaded there is nowhere better
+    // to spill, and the key at least lands on its warm cache.
+    let chosen = candidates
+        .iter()
+        .filter(|c| c.live)
+        .min_by_key(|c| (c.inflight, c.id))
+        .map(|c| (c.id, c.inflight))
+        .expect("affine_worker returned Some, so a live candidate exists");
+    if chosen.1 >= spill_at {
+        Placement::Saturated { affine }
+    } else if chosen.0 == affine {
+        Placement::Affine(affine)
+    } else {
+        Placement::Spill { affine, chosen: chosen.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+
+    fn live(n: usize) -> Vec<Candidate> {
+        (0..n).map(|id| Candidate { id, live: true, inflight: 0 }).collect()
+    }
+
+    // -- proptest-style placement properties (ISSUE 9 satellite) --------
+
+    #[test]
+    fn prop_rendezvous_is_deterministic() {
+        forall(200, |g| {
+            let n = g.usize_in(1..9);
+            let key = g.u64();
+            let c = live(n);
+            let a = affine_worker(key, &c);
+            let b = affine_worker(key, &c);
+            assert_eq!(a, b, "same (key, live set) must place identically");
+            // order of the candidate slice must not matter
+            let mut rev = c.clone();
+            rev.reverse();
+            assert_eq!(a, affine_worker(key, &rev), "candidate order must not matter");
+        });
+    }
+
+    #[test]
+    fn prop_balanced_within_20pct_over_10k_keys() {
+        // 10k random content hashes over N workers: every worker's share
+        // stays within ±20% of 10k/N. Run for several fleet sizes.
+        for n in [2usize, 3, 5, 8] {
+            let mut counts = vec![0usize; n];
+            let mut rng = crate::prng::Rng::new(0xB5A_5EED ^ n as u64);
+            let c = live(n);
+            for _ in 0..10_000 {
+                let id = affine_worker(rng.next_u64(), &c).unwrap();
+                counts[id] += 1;
+            }
+            let expect = 10_000.0 / n as f64;
+            for (id, &got) in counts.iter().enumerate() {
+                let dev = (got as f64 - expect).abs() / expect;
+                assert!(
+                    dev <= 0.20,
+                    "worker {id}/{n} got {got} keys, expected ~{expect:.0} (dev {:.1}%)",
+                    dev * 100.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_removal_remaps_about_one_nth() {
+        // Removing one of N workers must move only the keys that were on
+        // it (~1/N), and every surviving key must stay put.
+        forall(8, |g| {
+            let n = g.usize_in(2..7);
+            let victim = g.usize_in(0..n);
+            let full = live(n);
+            let mut reduced = full.clone();
+            reduced[victim].live = false;
+            let keys = 4_000usize;
+            let mut moved = 0usize;
+            for _ in 0..keys {
+                let key = g.u64();
+                let before = affine_worker(key, &full).unwrap();
+                let after = affine_worker(key, &reduced).unwrap();
+                if before == victim {
+                    moved += 1;
+                    assert_ne!(after, victim, "keys must leave the dead worker");
+                } else {
+                    assert_eq!(before, after, "survivor keys must not move");
+                }
+            }
+            // The moved fraction is binomial(keys, 1/n): allow a wide
+            // ±50% relative band so the property, not the noise, fails.
+            let expect = keys as f64 / n as f64;
+            let dev = (moved as f64 - expect).abs() / expect;
+            assert!(
+                dev <= 0.5,
+                "removing 1 of {n} moved {moved} of {keys} keys (expected ~{expect:.0})"
+            );
+        });
+    }
+
+    // -- spill behaviour -------------------------------------------------
+
+    #[test]
+    fn spills_to_least_loaded_when_affine_saturated() {
+        let key = 42u64;
+        let mut c = live(3);
+        let affine = affine_worker(key, &c).unwrap();
+        assert_eq!(place(key, &c, 4), Placement::Affine(affine));
+        // saturate the affine worker; the others are idle
+        c[affine].inflight = 4;
+        match place(key, &c, 4) {
+            Placement::Spill { affine: a, chosen } => {
+                assert_eq!(a, affine);
+                assert_ne!(chosen, affine);
+                assert_eq!(chosen, c.iter().filter(|x| x.id != affine).map(|x| x.id).min().unwrap());
+            }
+            other => panic!("expected spill, got {other:?}"),
+        }
+        // everyone saturated -> shed signal
+        for w in c.iter_mut() {
+            w.inflight = 9;
+        }
+        assert_eq!(place(key, &c, 4), Placement::Saturated { affine });
+        // no live worker at all
+        for w in c.iter_mut() {
+            w.live = false;
+        }
+        assert_eq!(place(key, &c, 4), Placement::NoWorker);
+    }
+
+    #[test]
+    fn saturated_affine_that_is_still_least_loaded_keeps_the_key() {
+        let key = 7u64;
+        let mut c = live(2);
+        let affine = affine_worker(key, &c).unwrap();
+        let other = 1 - affine;
+        // both over the threshold, affine less loaded: Saturated (shed),
+        // never a spill onto a *more* loaded worker
+        c[affine].inflight = 5;
+        c[other].inflight = 8;
+        assert_eq!(place(key, &c, 4), Placement::Saturated { affine });
+        // affine at threshold but other below it: spill
+        c[other].inflight = 1;
+        assert_eq!(place(key, &c, 4), Placement::Spill { affine, chosen: other });
+    }
+
+    #[test]
+    fn dead_affine_falls_through_to_survivors() {
+        forall(100, |g| {
+            let key = g.u64();
+            let mut c = live(4);
+            let first = affine_worker(key, &c).unwrap();
+            c[first].live = false;
+            let second = affine_worker(key, &c).unwrap();
+            assert_ne!(first, second);
+            assert!(place(key, &c, 8).target() == Some(second));
+        });
+    }
+}

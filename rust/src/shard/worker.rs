@@ -1,0 +1,551 @@
+//! Fleet state: per-worker slots, connection pools, the health prober,
+//! and respawn with bounded exponential backoff.
+//!
+//! A [`Fleet`] owns N [`WorkerSlot`]s. Each slot tracks one worker —
+//! either *attached* (an externally managed server, e.g. an in-process
+//! poll core in the chaos tests) or *spawned* (a child `bsa serve`
+//! process this fleet started and must also reap). All hot-path state is
+//! atomics so the front door's placement snapshot is a handful of
+//! relaxed loads; the only locks are the per-worker idle-connection pool
+//! and the spawn recipe, neither of which is touched per-request once a
+//! pooled connection exists.
+//!
+//! Health model (docs/FORMATS.md §3.2): the prober thread sends a BSST
+//! stats probe to every worker each `probe_interval_ms`. A worker that
+//! fails `probe_misses` consecutive probes is marked down, its pooled
+//! connections are severed, and — if spawned — it is respawned with
+//! exponential backoff (`backoff_ms` doubling up to `max_backoff_ms`,
+//! at most `respawn_max` attempts per outage). Restarts are detected
+//! from the probe payload itself: the router `epoch` changing, or
+//! `uptime_ms` moving backwards (a fresh process restarts both).
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::config::ShardConfig;
+use crate::server::{read_u32, RESP_MAGIC, STATS_MAGIC, STATUS_STATS};
+use crate::shard::placement::Candidate;
+use crate::shard::FaultPlan;
+use crate::trace;
+
+/// Idle connections kept per worker; more are opened on demand and the
+/// excess is dropped at check-in.
+const POOL_CAP: usize = 8;
+
+/// What one successful BSST probe told us about a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeReport {
+    /// Router incarnation (process-global counter in the worker, so it
+    /// only distinguishes routers *within* one process lifetime).
+    pub epoch: u64,
+    /// Milliseconds since the worker's router started. A respawned
+    /// process reports a smaller value than before — the cross-process
+    /// restart signal `epoch` alone cannot provide.
+    pub uptime_ms: u64,
+    /// Requests the worker has served.
+    pub served: u64,
+    /// Ball-tree cache hits / misses — the affinity signal the loadgen
+    /// report aggregates per worker.
+    pub tree_hits: u64,
+    pub tree_misses: u64,
+}
+
+/// How the fleet controls a worker's lifecycle.
+enum Kind {
+    /// Externally managed (tests attach in-process servers; ops can
+    /// attach already-running `bsa serve` instances). The fleet probes
+    /// and routes but never spawns or signals it.
+    Attached,
+    /// A child process this fleet spawned and respawns on death.
+    Spawned { argv: Vec<String>, child: Option<Child> },
+}
+
+/// One worker as the fleet tracks it. All counters are relaxed atomics:
+/// they are health/routing signals, not synchronization.
+pub struct WorkerSlot {
+    /// Stable slot index — survives respawn, so rendezvous placement
+    /// brings a recovered worker's keys back home.
+    pub id: usize,
+    pub addr: String,
+    kind: Mutex<Kind>,
+    up: AtomicBool,
+    inflight: AtomicUsize,
+    /// Consecutive failed probes (reset on any success).
+    misses: AtomicUsize,
+    /// Revival attempts since the worker went down (reset on recovery).
+    retries: AtomicUsize,
+    backoff_ms: AtomicU64,
+    /// Earliest next revival attempt, in ms since fleet start.
+    next_attempt_ms: AtomicU64,
+    /// Last seen router epoch (0 = never probed).
+    epoch: AtomicU64,
+    uptime_ms: AtomicU64,
+    /// Restarts detected via epoch change or uptime regression.
+    restarts: AtomicU64,
+    served: AtomicU64,
+    tree_hits: AtomicU64,
+    tree_misses: AtomicU64,
+    pool: Mutex<Vec<TcpStream>>,
+}
+
+impl WorkerSlot {
+    fn new(id: usize, addr: String, kind: Kind, cfg: &ShardConfig) -> WorkerSlot {
+        WorkerSlot {
+            id,
+            addr,
+            kind: Mutex::new(kind),
+            // Optimistic: the first probe (or first forward failure)
+            // corrects this within one probe interval.
+            up: AtomicBool::new(true),
+            inflight: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            retries: AtomicUsize::new(0),
+            backoff_ms: AtomicU64::new(cfg.backoff_ms),
+            next_attempt_ms: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
+            uptime_ms: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            tree_hits: AtomicU64::new(0),
+            tree_misses: AtomicU64::new(0),
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::Relaxed)
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    pub fn tree_stats(&self) -> (u64, u64) {
+        (self.tree_hits.load(Ordering::Relaxed), self.tree_misses.load(Ordering::Relaxed))
+    }
+}
+
+/// RAII in-flight marker: placement load signals stay correct on every
+/// exit path of the forward loop (success, worker error, client error).
+pub(crate) struct InflightGuard {
+    slot: Arc<WorkerSlot>,
+}
+
+impl InflightGuard {
+    pub(crate) fn enter(slot: Arc<WorkerSlot>) -> InflightGuard {
+        slot.inflight.fetch_add(1, Ordering::Relaxed);
+        InflightGuard { slot }
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.slot.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The worker fleet: slots plus the shard config and fault hook shared
+/// with the front door.
+pub struct Fleet {
+    pub(crate) slots: Vec<Arc<WorkerSlot>>,
+    pub(crate) cfg: ShardConfig,
+    pub(crate) faults: Arc<FaultPlan>,
+    t0: Instant,
+    forwarded: AtomicU64,
+}
+
+impl Fleet {
+    /// Attach to externally managed workers at `addrs` (no spawning, no
+    /// signalling — just probing and routing).
+    pub fn attach(cfg: ShardConfig, addrs: &[String], faults: Arc<FaultPlan>) -> Arc<Fleet> {
+        let slots = addrs
+            .iter()
+            .enumerate()
+            .map(|(id, addr)| Arc::new(WorkerSlot::new(id, addr.clone(), Kind::Attached, &cfg)))
+            .collect();
+        Fleet::finish(slots, cfg, faults)
+    }
+
+    /// Spawn `cfg.workers` child `bsa serve` processes on consecutive
+    /// ports from `cfg.worker_base_port`, each launched as
+    /// `<current_exe> serve --addr 127.0.0.1:<port> <extra_args...>`.
+    pub fn spawn(
+        cfg: ShardConfig,
+        extra_args: &[String],
+        faults: Arc<FaultPlan>,
+    ) -> anyhow::Result<Arc<Fleet>> {
+        let exe = std::env::current_exe().context("resolving worker executable")?;
+        let exe = exe.to_str().context("non-utf8 executable path")?.to_string();
+        let mut slots = Vec::with_capacity(cfg.workers);
+        for id in 0..cfg.workers {
+            let port = cfg
+                .worker_base_port
+                .checked_add(id as u16)
+                .context("worker_base_port + workers overflows u16")?;
+            let addr = format!("127.0.0.1:{port}");
+            let mut argv = vec![exe.clone(), "serve".into(), "--addr".into(), addr.clone()];
+            argv.extend(extra_args.iter().cloned());
+            let child = launch(&argv).with_context(|| format!("spawning worker {id} on {addr}"))?;
+            slots.push(Arc::new(WorkerSlot::new(
+                id,
+                addr,
+                Kind::Spawned { argv, child: Some(child) },
+                &cfg,
+            )));
+        }
+        Ok(Fleet::finish(slots, cfg, faults))
+    }
+
+    fn finish(slots: Vec<Arc<WorkerSlot>>, cfg: ShardConfig, faults: Arc<FaultPlan>) -> Arc<Fleet> {
+        let fleet =
+            Arc::new(Fleet { slots, cfg, faults, t0: Instant::now(), forwarded: AtomicU64::new(0) });
+        for slot in &fleet.slots {
+            let s = Arc::clone(slot);
+            trace::register_gauge_owned(
+                format!("shard.worker{}.inflight", slot.id),
+                Box::new(move || s.inflight() as f64),
+            );
+            let s = Arc::clone(slot);
+            trace::register_gauge_owned(
+                format!("shard.worker{}.up", slot.id),
+                Box::new(move || if s.is_up() { 1.0 } else { 0.0 }),
+            );
+        }
+        let all = fleet.slots.clone();
+        trace::register_gauge_owned(
+            "shard.workers_up".to_string(),
+            Box::new(move || all.iter().filter(|s| s.is_up()).count() as f64),
+        );
+        fleet
+    }
+
+    pub fn slots(&self) -> &[Arc<WorkerSlot>] {
+        &self.slots
+    }
+
+    fn since_start_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
+    /// Placement snapshot for one routing decision.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        self.slots
+            .iter()
+            .map(|s| Candidate { id: s.id, live: s.is_up(), inflight: s.inflight() })
+            .collect()
+    }
+
+    /// Count a forwarded frame; returns the new total (feeds the
+    /// fault plan's kill-after trigger).
+    pub(crate) fn note_forwarded(&self) -> u64 {
+        trace::incr("shard.forwarded");
+        self.forwarded.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn forwarded(&self) -> u64 {
+        self.forwarded.load(Ordering::Relaxed)
+    }
+
+    /// An idle pooled connection to worker `id`, if any. Pooled streams
+    /// can be stale (the worker restarted between probes), so the
+    /// forward path treats a failure on one as "try a fresh connection"
+    /// rather than "worker is down".
+    pub(crate) fn pooled(&self, id: usize) -> Option<TcpStream> {
+        self.slots[id].pool.lock().unwrap().pop()
+    }
+
+    /// A fresh connection to worker `id`; failure here is real evidence
+    /// the worker is unreachable.
+    pub(crate) fn connect_fresh(&self, id: usize) -> anyhow::Result<TcpStream> {
+        let timeout = Duration::from_millis(self.cfg.probe_timeout_ms.max(100));
+        let stream = connect_timeout(&self.slots[id].addr, timeout)?;
+        stream.set_nodelay(true).ok();
+        Ok(stream)
+    }
+
+    /// Return a healthy connection to the pool (dropped if full).
+    pub(crate) fn checkin(&self, id: usize, stream: TcpStream) {
+        let mut pool = self.slots[id].pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(stream);
+        }
+    }
+
+    /// Drop every pooled connection to worker `id` (its process died or
+    /// restarted; the old streams are poison).
+    pub(crate) fn sever(&self, id: usize) {
+        self.slots[id].pool.lock().unwrap().clear();
+    }
+
+    /// Transition worker `id` to down: sever its pool and arm the
+    /// revival schedule. Idempotent — only the up→down edge counts.
+    pub(crate) fn mark_down(&self, id: usize) {
+        let slot = &self.slots[id];
+        self.sever(id);
+        if slot.up.swap(false, Ordering::Relaxed) {
+            trace::incr("shard.worker_down");
+            slot.retries.store(0, Ordering::Relaxed);
+            slot.backoff_ms.store(self.cfg.backoff_ms, Ordering::Relaxed);
+            slot.next_attempt_ms
+                .store(self.since_start_ms() + self.cfg.backoff_ms, Ordering::Relaxed);
+        }
+    }
+
+    /// Fault injection: hard-kill worker `id` (SIGKILL for spawned
+    /// children; attached workers are killed by the test itself) and
+    /// mark it down.
+    pub(crate) fn inject_kill(&self, id: usize) {
+        trace::incr("shard.faults_injected");
+        if let Kind::Spawned { child: Some(c), .. } = &mut *self.slots[id].kind.lock().unwrap() {
+            c.kill().ok();
+        }
+        self.mark_down(id);
+    }
+
+    /// Fold a successful probe into the slot: restart detection, cache
+    /// stats, and the down→up transition.
+    fn apply_probe(&self, id: usize, r: ProbeReport) {
+        let slot = &self.slots[id];
+        let prev_epoch = slot.epoch.swap(r.epoch, Ordering::Relaxed);
+        let prev_uptime = slot.uptime_ms.swap(r.uptime_ms, Ordering::Relaxed);
+        // Restart = epoch changed (same-process router churn) or uptime
+        // went backwards (a fresh process restarts both counters).
+        let restarted = (prev_epoch != 0 && prev_epoch != r.epoch)
+            || (prev_epoch != 0 && r.uptime_ms < prev_uptime);
+        if restarted {
+            slot.restarts.fetch_add(1, Ordering::Relaxed);
+            trace::incr("shard.worker_restarts");
+            // Old pooled streams may predate the restart; sever so the
+            // forward path never talks to a ghost.
+            self.sever(id);
+        }
+        slot.served.store(r.served, Ordering::Relaxed);
+        slot.tree_hits.store(r.tree_hits, Ordering::Relaxed);
+        slot.tree_misses.store(r.tree_misses, Ordering::Relaxed);
+        slot.misses.store(0, Ordering::Relaxed);
+        if !slot.up.swap(true, Ordering::Relaxed) {
+            trace::incr("shard.worker_recovered");
+            slot.retries.store(0, Ordering::Relaxed);
+            slot.backoff_ms.store(self.cfg.backoff_ms, Ordering::Relaxed);
+        }
+    }
+
+    /// One prober pass over the fleet: probe up workers (miss counting),
+    /// revive down ones whose backoff has elapsed.
+    fn probe_pass(&self) {
+        let timeout = Duration::from_millis(self.cfg.probe_timeout_ms.max(1));
+        for slot in &self.slots {
+            if slot.is_up() {
+                match probe_addr(&slot.addr, timeout) {
+                    Ok(r) => self.apply_probe(slot.id, r),
+                    Err(_) => {
+                        trace::incr("shard.probe_misses");
+                        let misses = slot.misses.fetch_add(1, Ordering::Relaxed) + 1;
+                        if misses >= self.cfg.probe_misses {
+                            self.mark_down(slot.id);
+                        }
+                    }
+                }
+            } else {
+                self.try_revive(slot);
+            }
+        }
+    }
+
+    /// Revival attempt for a down worker, rate-limited by the backoff
+    /// schedule and capped at `respawn_max` attempts per outage.
+    fn try_revive(&self, slot: &Arc<WorkerSlot>) {
+        let now = self.since_start_ms();
+        if now < slot.next_attempt_ms.load(Ordering::Relaxed)
+            || slot.retries.load(Ordering::Relaxed) >= self.cfg.respawn_max
+        {
+            return;
+        }
+        // Spawned workers whose process is gone get a fresh process;
+        // attached workers (and still-running children that are merely
+        // unresponsive) are just re-probed.
+        if let Kind::Spawned { argv, child } = &mut *slot.kind.lock().unwrap() {
+            let dead = match child {
+                Some(c) => c.try_wait().map(|st| st.is_some()).unwrap_or(true),
+                None => true,
+            };
+            if dead {
+                trace::incr("shard.worker_respawns");
+                *child = launch(argv).ok();
+            }
+        }
+        let timeout = Duration::from_millis(self.cfg.probe_timeout_ms.max(1));
+        match probe_addr(&slot.addr, timeout) {
+            Ok(r) => self.apply_probe(slot.id, r),
+            Err(_) => {
+                slot.retries.fetch_add(1, Ordering::Relaxed);
+                let backoff = slot.backoff_ms.load(Ordering::Relaxed);
+                let next =
+                    backoff.saturating_mul(2).min(self.cfg.max_backoff_ms.max(self.cfg.backoff_ms));
+                slot.backoff_ms.store(next, Ordering::Relaxed);
+                slot.next_attempt_ms.store(self.since_start_ms() + backoff, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Graceful fleet shutdown: SIGTERM every spawned child (each drains
+    /// its own connections within its `drain_ms`, per docs/FORMATS.md
+    /// §2.4), wait boundedly, then SIGKILL stragglers. Attached workers
+    /// are untouched — whoever started them owns them.
+    pub fn shutdown(&self) {
+        for slot in &self.slots {
+            if let Kind::Spawned { child: Some(c), .. } = &*slot.kind.lock().unwrap() {
+                terminate(c);
+            }
+        }
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.drain_ms + 1000);
+        for slot in &self.slots {
+            let mut kind = slot.kind.lock().unwrap();
+            if let Kind::Spawned { child: Some(c), .. } = &mut *kind {
+                while c.try_wait().map(|st| st.is_none()).unwrap_or(false) {
+                    if Instant::now() >= deadline {
+                        c.kill().ok();
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                c.wait().ok();
+            }
+            if let Kind::Spawned { child, .. } = &mut *kind {
+                *child = None;
+            }
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        // Last-resort reaping so a panicking front door never leaks
+        // worker processes; the graceful path is `shutdown()`.
+        for slot in &self.slots {
+            if let Kind::Spawned { child: Some(c), .. } = &mut *slot.kind.lock().unwrap() {
+                c.kill().ok();
+                c.wait().ok();
+            }
+        }
+    }
+}
+
+fn launch(argv: &[String]) -> anyhow::Result<Child> {
+    let child = Command::new(&argv[0])
+        .args(&argv[1..])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()?;
+    Ok(child)
+}
+
+/// Ask a child to drain gracefully (SIGTERM → its own serve loop stops
+/// accepting and drains within `drain_ms`, docs/FORMATS.md §2.4).
+fn terminate(child: &Child) {
+    unsafe {
+        libc::kill(child.id() as libc::pid_t, libc::SIGTERM);
+    }
+}
+
+pub(crate) fn connect_timeout(addr: &str, timeout: Duration) -> anyhow::Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("worker address {addr} did not resolve"))?;
+    Ok(TcpStream::connect_timeout(&sa, timeout)?)
+}
+
+/// One BSST probe: connect, request stats, parse the health fields out
+/// of the status-2 JSON payload (docs/FORMATS.md §2.3 / §3.2). Any
+/// failure — connect, timeout, bad frame, missing key — is one miss.
+pub fn probe_addr(addr: &str, timeout: Duration) -> anyhow::Result<ProbeReport> {
+    let mut stream = connect_timeout(addr, timeout)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.write_all(STATS_MAGIC)?;
+    let mut magic = [0u8; 4];
+    stream.read_exact(&mut magic)?;
+    if &magic != RESP_MAGIC {
+        bail!("bad stats response magic {magic:?}");
+    }
+    let status = read_u32(&mut stream)?;
+    if status != STATUS_STATS {
+        bail!("expected status-2 stats frame, got status {status}");
+    }
+    let len = read_u32(&mut stream)? as usize;
+    if len >= 65536 {
+        bail!("stats payload {len} B over bound");
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    let text = String::from_utf8(payload).context("stats payload not utf-8")?;
+    let json = trace::parse_json(&text).map_err(|e| anyhow!("stats payload not JSON: {e}"))?;
+    let field = |key: &str| -> anyhow::Result<u64> {
+        json.get(key)
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow!("stats payload missing numeric {key:?}"))
+    };
+    Ok(ProbeReport {
+        epoch: field("epoch")?,
+        uptime_ms: field("uptime_ms")?,
+        served: field("served")?,
+        tree_hits: field("tree_hits")?,
+        tree_misses: field("tree_misses")?,
+    })
+}
+
+/// Run the health prober until `stop`: one [`Fleet::probe_pass`] per
+/// `probe_interval_ms`, sleeping in short ticks so shutdown is prompt.
+/// The fault plan's probe delay (chaos tests) stalls the *cycle*, which
+/// is how a test starves probes past the miss deadline.
+pub fn run_prober(
+    fleet: Arc<Fleet>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("shard-prober".into())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let delay = fleet.faults.probe_delay();
+                if delay > 0 {
+                    // Injected stall: up to `delay` ms, re-checked every
+                    // tick so a test can clear it and resume promptly.
+                    let until = Instant::now() + Duration::from_millis(delay);
+                    while !stop.load(Ordering::Relaxed)
+                        && Instant::now() < until
+                        && fleet.faults.probe_delay() > 0
+                    {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    continue;
+                }
+                fleet.probe_pass();
+                sleep_ticks(fleet.cfg.probe_interval_ms.max(1), &stop);
+            }
+        })
+        .expect("spawning shard prober thread")
+}
+
+fn sleep_ticks(ms: u64, stop: &std::sync::atomic::AtomicBool) {
+    let deadline = Instant::now() + Duration::from_millis(ms);
+    while Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(10.min(ms.max(1))));
+    }
+}

@@ -369,6 +369,27 @@ pub fn register_gauge(name: &'static str, f: Box<dyn Fn() -> f64 + Send + Sync>)
     registry().gauges.lock().unwrap().insert(name, f);
 }
 
+/// [`register_gauge`] for runtime-formatted names (the shard tier's
+/// per-worker gauges, `shard.worker<i>.*`). The registry keys on
+/// `&'static str`, so the name is interned once in a process-wide table
+/// and reused on re-registration — repeated fleet construction (tests,
+/// respawn churn) re-registers gauges without growing the intern table
+/// beyond the set of distinct names.
+pub fn register_gauge_owned(name: String, f: Box<dyn Fn() -> f64 + Send + Sync>) {
+    static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut interned = INTERNED.lock().unwrap();
+    let key = match interned.iter().find(|s| **s == name) {
+        Some(s) => *s,
+        None => {
+            let leaked: &'static str = Box::leak(name.into_boxed_str());
+            interned.push(leaked);
+            leaked
+        }
+    };
+    drop(interned);
+    register_gauge(key, f);
+}
+
 /// Snapshot of every span histogram, keyed by dotted path.
 pub fn spans_snapshot() -> BTreeMap<String, LatencyHistogram> {
     let mut out = BTreeMap::new();

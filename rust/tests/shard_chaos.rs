@@ -1,0 +1,484 @@
+//! Chaos tests for the shard tier: front-door routing under injected
+//! faults (worker kills mid-pipeline, starved health probes, shed
+//! storms) plus the restart-detection and thread-hygiene contracts.
+//!
+//! Every test runs real in-process workers — a native-backend
+//! [`Router`] behind the BSRQ/BSRS poll core — attached to a
+//! [`Fleet`] with a [`FaultPlan`], so the failure paths exercised here
+//! are the production code paths, not mocks. The invariant under test
+//! throughout: **no request is ever silently dropped** — every frame
+//! written to the front door is answered with a prediction or a typed
+//! status-3 shed, in order, regardless of what the fleet is doing.
+//!
+//! Ports: 17205–17226 (integration.rs owns 17177–17203, check.sh
+//! smokes own 1789x).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use bsa::balltree::content_hash;
+use bsa::backend::NativeBackend;
+use bsa::config::{ModelConfig, ServeConfig, ShardConfig};
+use bsa::coordinator::Router;
+use bsa::data::generator_for;
+use bsa::server::{Client, ServeLimits, ShedError};
+use bsa::shard::{affine_worker, worker::run_prober, Candidate, FaultPlan, Fleet, FrontDoor};
+use bsa::trace::{parse_json, Json};
+
+/// Native twin of the tiny core artifact (same dims as integration.rs).
+fn tiny_native_config() -> ModelConfig {
+    ModelConfig {
+        dim: 32,
+        num_heads: 2,
+        num_blocks: 2,
+        ball_size: 64,
+        seq_len: 256,
+        ..Default::default()
+    }
+}
+
+fn tiny_native_backend(seed: u64) -> NativeBackend {
+    NativeBackend::init(seed, &tiny_native_config(), 6, 1, 1).unwrap()
+}
+
+/// Start a native-backend router + poll-core server on `addr` — one
+/// shard worker, exactly as `bsa serve` would run it.
+fn spawn_worker(
+    seed: u64,
+    addr: &'static str,
+    limits: Option<ServeLimits>,
+) -> (Arc<Router>, Arc<AtomicBool>, JoinHandle<anyhow::Result<()>>) {
+    let backend = Arc::new(tiny_native_backend(seed));
+    let sc = ServeConfig { workers: 1, flush_us: 100, ..Default::default() };
+    let router = Arc::new(Router::start(backend, sc).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let srv = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let limits = limits.unwrap_or_default();
+        std::thread::spawn(move || bsa::server::serve_with(addr, router, stop, limits))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+    (router, stop, srv)
+}
+
+/// Shard config tuned for tests: fast probes when `probe_interval_ms`
+/// is small, effectively-disabled probing when it is huge (so an
+/// injected mark-down stays sticky for attached workers).
+fn shard_cfg(addr: &str, workers: usize, probe_interval_ms: u64) -> ShardConfig {
+    ShardConfig {
+        addr: addr.into(),
+        workers,
+        probe_interval_ms,
+        probe_timeout_ms: 200,
+        probe_misses: 2,
+        backoff_ms: 50,
+        max_backoff_ms: 200,
+        respawn_max: 5,
+        spill_inflight: 64,
+        retry_after_ms: 25,
+        drain_ms: 500,
+        ..Default::default()
+    }
+}
+
+fn two_live_candidates() -> Vec<Candidate> {
+    (0..2).map(|id| Candidate { id, live: true, inflight: 0 }).collect()
+}
+
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Live thread count of this process (linux: /proc/self/status
+/// `Threads:`; elsewhere 0, which makes churn assertions vacuous
+/// rather than flaky).
+fn live_threads() -> usize {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("Threads:") {
+                if let Ok(n) = rest.trim().parse() {
+                    return n;
+                }
+            }
+        }
+    }
+    0
+}
+
+#[test]
+fn shard_two_worker_affinity_and_mid_run_kill() {
+    // The PR's acceptance gate. Phase 1: 100 requests over 8 repeating
+    // geometries through a 2-worker fleet — rendezvous affinity must
+    // pin each geometry to one worker, so the fleet pays exactly one
+    // cold ball-tree build per geometry (>= 90% aggregate cache hits).
+    // Phase 2: a worker is killed mid-run; every remaining request must
+    // still complete or draw a typed shed. Zero silent drops.
+    let (ra, stop_a, srv_a) = spawn_worker(31, "127.0.0.1:17205", None);
+    let (rb, stop_b, srv_b) = spawn_worker(32, "127.0.0.1:17206", None);
+    let addrs = vec!["127.0.0.1:17205".to_string(), "127.0.0.1:17206".to_string()];
+    let faults = Arc::new(FaultPlan::default());
+    // probe interval >> test length: injected mark-downs stay sticky
+    let fleet = Fleet::attach(shard_cfg("127.0.0.1:17207", 2, 60_000), &addrs, faults.clone());
+    let fd = FrontDoor::start(fleet.clone()).unwrap();
+
+    let gen = generator_for("syn", 40).unwrap();
+    let n = 160usize;
+    let samples: Vec<_> = (0..8u64).map(|g| gen.generate(g, n)).collect();
+
+    // Expected placement is deterministic: compute it from the same
+    // rendezvous primitive the front door uses, so the per-worker
+    // cold-miss counts can be asserted exactly, not just bounded.
+    let cands = two_live_candidates();
+    let mut expected_misses = [0u64; 2];
+    for s in &samples {
+        let w = affine_worker(content_hash(&s.coords), &cands).unwrap();
+        expected_misses[w] += 1;
+    }
+
+    let mut client = Client::connect("127.0.0.1:17207").unwrap();
+    for i in 0..100usize {
+        let s = &samples[i % 8];
+        let pred = client
+            .predict(&s.coords, &s.features)
+            .unwrap_or_else(|e| panic!("phase-1 request {i} failed: {e}"));
+        assert_eq!(pred.shape(), &[n, 1]);
+        assert!(pred.all_finite());
+    }
+
+    let (sa, sb) = (ra.stats(), rb.stats());
+    let hits = sa.tree_hits + sb.tree_hits;
+    let misses = sa.tree_misses + sb.tree_misses;
+    assert_eq!(hits + misses, 100, "every request consulted a tree cache");
+    assert_eq!(misses, 8, "exactly one cold build per geometry — affinity held");
+    assert!(hits >= 90, "acceptance: >= 90% tree-cache hits on repeat traffic ({hits}/100)");
+    assert_eq!(
+        (sa.tree_misses, sb.tree_misses),
+        (expected_misses[0], expected_misses[1]),
+        "placement matched the rendezvous prediction"
+    );
+
+    // Phase 2: kill the worker that owns geometry 0 after 20 more
+    // forwards, mid-run. (Attached worker: the kill marks it down and
+    // severs its pooled connections; its keys re-place on the survivor.)
+    let victim = affine_worker(content_hash(&samples[0].coords), &cands).unwrap();
+    faults.kill_worker_after(victim, fleet.forwarded() + 20);
+
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for i in 0..40usize {
+        let s = &samples[i % 8];
+        match client.predict(&s.coords, &s.features) {
+            Ok(pred) => {
+                assert_eq!(pred.shape(), &[n, 1]);
+                ok += 1;
+            }
+            Err(e) => {
+                let se = e
+                    .downcast_ref::<ShedError>()
+                    .unwrap_or_else(|| panic!("request {i}: untyped failure: {e}"));
+                assert!(se.retry_after_ms > 0);
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(ok + shed, 40, "zero silent drops across the kill");
+    assert!(ok >= 20, "requests re-placed on the survivor must complete (ok={ok})");
+    assert!(!fleet.slots()[victim].is_up(), "kill engaged and stayed sticky");
+
+    drop(client);
+    fd.shutdown();
+    for (stop, srv) in [(stop_a, srv_a), (stop_b, srv_b)] {
+        stop.store(true, Ordering::SeqCst);
+        srv.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn shard_pipelined_replies_survive_worker_death_in_order() {
+    // Four BSRQ frames written back-to-back before any reply is read,
+    // each with a distinct point count (the reply's row count is the
+    // request's fingerprint). Frame 3 is constructed to be affine to a
+    // worker whose real server is already dead — the fleet doesn't know
+    // yet (probing disabled), so the forward hits a refused connect,
+    // marks the worker down, and retries on the survivor. All four
+    // replies must come back strictly in request order.
+    let (_ra, stop_a, srv_a) = spawn_worker(33, "127.0.0.1:17209", None);
+    let (_rb, stop_b, srv_b) = spawn_worker(34, "127.0.0.1:17210", None);
+    let addrs = vec!["127.0.0.1:17209".to_string(), "127.0.0.1:17210".to_string()];
+    let faults = Arc::new(FaultPlan::default());
+    let fleet = Fleet::attach(shard_cfg("127.0.0.1:17211", 2, 60_000), &addrs, faults);
+    let fd = FrontDoor::start(fleet.clone()).unwrap();
+
+    let gen = generator_for("syn", 41).unwrap();
+    let cands = two_live_candidates();
+    let sizes = [128usize, 144, 160, 176];
+    let wants = [0usize, 0, 1, 0]; // frame 3 targets the doomed worker
+    let samples: Vec<_> = sizes
+        .iter()
+        .zip(wants)
+        .map(|(&nn, want)| {
+            (0..64u64)
+                .map(|g| gen.generate(1000 + g, nn))
+                .find(|s| affine_worker(content_hash(&s.coords), &cands) == Some(want))
+                .expect("a geometry affine to the wanted worker exists within 64 draws")
+        })
+        .collect();
+
+    // Worker 1 dies for real; the fleet still believes it is up.
+    stop_b.store(true, Ordering::SeqCst);
+    srv_b.join().unwrap().unwrap();
+    assert!(fleet.slots()[1].is_up(), "fleet is unaware of the death");
+
+    let mut client = Client::connect("127.0.0.1:17211").unwrap();
+    for s in &samples {
+        client.send(&s.coords, &s.features).unwrap();
+    }
+    for (i, &nn) in sizes.iter().enumerate() {
+        let pred = client
+            .recv_predict()
+            .unwrap_or_else(|e| panic!("reply {i} lost across worker death: {e}"));
+        assert_eq!(pred.shape(), &[nn, 1], "reply {i} out of order");
+        assert!(pred.all_finite());
+    }
+    assert!(
+        !fleet.slots()[1].is_up(),
+        "the failed forward marked the dead worker down"
+    );
+
+    drop(client);
+    fd.shutdown();
+    stop_a.store(true, Ordering::SeqCst);
+    srv_a.join().unwrap().unwrap();
+}
+
+#[test]
+fn shard_probe_delay_defers_down_detection() {
+    // FaultPlan::delay_probes_ms stalls the prober past the miss
+    // deadline: a worker death during the stall goes undetected (the
+    // slot stays optimistically up), and detection resumes promptly
+    // once the stall is lifted. This pins the failure mode the probe
+    // cadence exists to bound — and that the chaos hook really starves
+    // it.
+    let (_r, stop_w, srv) = spawn_worker(35, "127.0.0.1:17213", None);
+    let addrs = vec!["127.0.0.1:17213".to_string()];
+    let faults = Arc::new(FaultPlan::default());
+    let mut cfg = shard_cfg("127.0.0.1:17214", 1, 40);
+    cfg.probe_timeout_ms = 150;
+    let fleet = Fleet::attach(cfg, &addrs, faults.clone());
+    let stop = Arc::new(AtomicBool::new(false));
+    let prober = run_prober(fleet.clone(), stop.clone());
+
+    wait_until("first successful probe", Duration::from_secs(2), || {
+        fleet.slots()[0].epoch() > 0
+    });
+    assert!(fleet.slots()[0].is_up());
+
+    // Stall probes, then kill the real server. probe_misses=2 at a
+    // 40ms cadence would detect this within ~100ms — the stall must
+    // starve that deadline (at most one in-flight probe can miss).
+    faults.delay_probes_ms(60_000);
+    std::thread::sleep(Duration::from_millis(120));
+    stop_w.store(true, Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    assert!(
+        fleet.slots()[0].is_up(),
+        "probes starved past the deadline: the death must be undetected"
+    );
+
+    // Lift the stall: two consecutive misses mark it down quickly.
+    faults.delay_probes_ms(0);
+    wait_until("down detection after stall lifted", Duration::from_secs(3), || {
+        !fleet.slots()[0].is_up()
+    });
+
+    stop.store(true, Ordering::SeqCst);
+    prober.join().unwrap();
+}
+
+#[test]
+fn shard_worker_shed_hint_propagates_end_to_end() {
+    // A worker drowning in admitted bytes sheds with its own
+    // retry-after hint; the front door must relay that status-3 frame
+    // verbatim — hint included — and keep the client connection open.
+    let limits =
+        ServeLimits { max_inflight_bytes: 1, retry_after_ms: 777, ..Default::default() };
+    let (_r, stop_w, srv) = spawn_worker(36, "127.0.0.1:17216", Some(limits));
+    let addrs = vec!["127.0.0.1:17216".to_string()];
+    let faults = Arc::new(FaultPlan::default());
+    let fleet = Fleet::attach(shard_cfg("127.0.0.1:17217", 1, 60_000), &addrs, faults);
+    let fd = FrontDoor::start(fleet).unwrap();
+
+    let gen = generator_for("syn", 42).unwrap();
+    let s = gen.generate(0, 160);
+    let mut client = Client::connect("127.0.0.1:17217").unwrap();
+    for round in 0..2 {
+        let err = client.predict(&s.coords, &s.features).unwrap_err();
+        let se = err
+            .downcast_ref::<ShedError>()
+            .unwrap_or_else(|| panic!("round {round}: untyped failure: {err}"));
+        assert_eq!(
+            se.retry_after_ms, 777,
+            "worker's retry hint must be relayed verbatim, not rewritten"
+        );
+        // round 2 reuses the same connection: a relayed shed keeps it open
+    }
+
+    drop(client);
+    fd.shutdown();
+    stop_w.store(true, Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+}
+
+#[test]
+fn shard_frontdoor_shed_storm_keeps_connection_usable() {
+    // FaultPlan::shed_storm makes the front door shed the next N
+    // requests at admission (before any forward). Each shed carries the
+    // *front door's* retry hint, the connection survives all of them,
+    // and the first post-storm request is served normally.
+    let (_r, stop_w, srv) = spawn_worker(37, "127.0.0.1:17219", None);
+    let addrs = vec!["127.0.0.1:17219".to_string()];
+    let faults = Arc::new(FaultPlan::default());
+    let fleet = Fleet::attach(shard_cfg("127.0.0.1:17220", 1, 60_000), &addrs, faults.clone());
+    let fd = FrontDoor::start(fleet).unwrap();
+
+    let gen = generator_for("syn", 43).unwrap();
+    let s = gen.generate(0, 160);
+    let mut client = Client::connect("127.0.0.1:17220").unwrap();
+    let pred = client.predict(&s.coords, &s.features).unwrap();
+    assert_eq!(pred.shape(), &[160, 1]);
+
+    faults.shed_storm(3);
+    for i in 0..3 {
+        let err = client.predict(&s.coords, &s.features).unwrap_err();
+        let se = err
+            .downcast_ref::<ShedError>()
+            .unwrap_or_else(|| panic!("storm shed {i}: untyped failure: {err}"));
+        assert_eq!(se.retry_after_ms, 25, "front-door-originated hint (cfg.retry_after_ms)");
+    }
+    // storm exhausted: same connection, request served
+    let pred = client.predict(&s.coords, &s.features).unwrap();
+    assert_eq!(pred.shape(), &[160, 1]);
+
+    drop(client);
+    fd.shutdown();
+    stop_w.store(true, Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+}
+
+#[test]
+fn shard_connection_churn_with_kills_keeps_threads_flat() {
+    // 200 short-lived client connections through the front door while a
+    // FaultPlan kills the (sole) worker every 20 cycles and a fast
+    // prober revives it. Discipline of
+    // `native_tcp_connection_churn_reaps_handlers`: every request is
+    // answered (prediction or typed shed — never a dropped socket), and
+    // the process thread count ends flat, proving handler threads are
+    // reaped and kill/revive churn leaks nothing.
+    let (_r, stop_w, srv) = spawn_worker(38, "127.0.0.1:17221", None);
+    let addrs = vec!["127.0.0.1:17221".to_string()];
+    let faults = Arc::new(FaultPlan::default());
+    let fleet = Fleet::attach(shard_cfg("127.0.0.1:17222", 1, 25), &addrs, faults.clone());
+    let fd = FrontDoor::start(fleet.clone()).unwrap();
+
+    let gen = generator_for("syn", 44).unwrap();
+    let s = gen.generate(0, 160);
+
+    // warm all lazily-created machinery before measuring
+    {
+        let mut c = Client::connect("127.0.0.1:17222").unwrap();
+        c.predict(&s.coords, &s.features).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    let before = live_threads();
+
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for cycle in 0..200usize {
+        if cycle % 20 == 10 {
+            faults.kill_worker_after(0, fleet.forwarded() + 1);
+        }
+        let mut c = Client::connect("127.0.0.1:17222").unwrap();
+        match c.predict(&s.coords, &s.features) {
+            Ok(pred) => {
+                assert_eq!(pred.shape(), &[160, 1]);
+                ok += 1;
+            }
+            Err(e) => {
+                e.downcast_ref::<ShedError>()
+                    .unwrap_or_else(|| panic!("cycle {cycle}: untyped failure: {e}"));
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(ok + shed, 200, "every churn request answered across kill/revive churn");
+    assert!(ok > 0, "the prober revived the worker between kills");
+
+    std::thread::sleep(Duration::from_millis(500));
+    let after = live_threads();
+    assert!(
+        after <= before + 3,
+        "thread population must stay flat over churn: {before} -> {after}"
+    );
+
+    fd.shutdown();
+    stop_w.store(true, Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+}
+
+#[test]
+fn shard_probe_detects_worker_restart_via_epoch() {
+    // Satellite 4's contract end-to-end: a worker that dies and comes
+    // back on the same address is *not* the same worker — its BSST
+    // epoch changed — and the fleet must count the restart and sever
+    // any pooled state. The front door's own BSST frame surfaces the
+    // per-worker epoch and restart count for operators.
+    let (_r1, stop1, srv1) = spawn_worker(39, "127.0.0.1:17224", None);
+    let addrs = vec!["127.0.0.1:17224".to_string()];
+    let faults = Arc::new(FaultPlan::default());
+    let fleet = Fleet::attach(shard_cfg("127.0.0.1:17225", 1, 30), &addrs, faults);
+    let fd = FrontDoor::start(fleet.clone()).unwrap();
+
+    wait_until("first successful probe", Duration::from_secs(2), || {
+        fleet.slots()[0].epoch() > 0
+    });
+    let first_epoch = fleet.slots()[0].epoch();
+    assert_eq!(fleet.slots()[0].restarts(), 0);
+
+    // Clean restart on the same port: stop, join, rebind.
+    stop1.store(true, Ordering::SeqCst);
+    srv1.join().unwrap().unwrap();
+    let (_r2, stop2, srv2) = spawn_worker(40, "127.0.0.1:17224", None);
+
+    wait_until("restart detected via epoch change", Duration::from_secs(5), || {
+        fleet.slots()[0].restarts() >= 1 && fleet.slots()[0].is_up()
+    });
+    assert_ne!(
+        fleet.slots()[0].epoch(),
+        first_epoch,
+        "the replacement worker's epoch is visible through the probe"
+    );
+
+    // The operator-facing view: front-door BSST reports the restart.
+    let mut c = Client::connect("127.0.0.1:17225").unwrap();
+    let stats = c.stats().unwrap();
+    let doc = parse_json(&stats).unwrap();
+    assert_eq!(doc.get("role").and_then(|j| j.as_str()), Some("frontdoor"));
+    let workers = match doc.get("workers") {
+        Some(Json::Arr(v)) => v,
+        other => panic!("missing workers array in front-door stats: {other:?}"),
+    };
+    assert_eq!(workers.len(), 1);
+    assert_eq!(workers[0].get("restarts").and_then(|j| j.as_f64()), Some(1.0));
+    assert!(matches!(workers[0].get("up"), Some(Json::Bool(true))));
+
+    drop(c);
+    fd.shutdown();
+    stop2.store(true, Ordering::SeqCst);
+    srv2.join().unwrap().unwrap();
+}

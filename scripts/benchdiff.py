@@ -41,8 +41,8 @@ SKIP_KEYS = {
     "blocks", "ball", "available", "count",
 }
 
-HIGHER_SUFFIXES = ("per_s", "speedup", "speedup_vs_1t", "hits", "saved_us")
-LOWER_SUFFIXES = ("_us", "_ms", "_mb", "misses", "overhead_pct")
+HIGHER_SUFFIXES = ("per_s", "speedup", "speedup_vs_1t", "hits", "saved_us", "hit_ratio")
+LOWER_SUFFIXES = ("_us", "_ms", "_mb", "misses", "overhead_pct", "shed_rate")
 
 
 def direction(path: str) -> str | None:

@@ -10,7 +10,8 @@
 #
 #   scripts/check.sh                # full gate
 #   scripts/check.sh --quick        # fmt + build + conformance + poll-core
-#                                   # server tests (native_tcp_*) only
+#                                   # server tests (native_tcp_*) + shard
+#                                   # chaos suite + 2-worker loadgen smoke
 #   BENCH_REPS=5 scripts/check.sh   # heavier perf sampling
 #
 # After the benches refresh the artifacts, scripts/benchdiff.py prints a
@@ -51,8 +52,36 @@ if [[ "$QUICK" == 1 ]]; then
     cargo test -q --release --test simd_off
     echo "== cargo test -q --release --test integration native_tcp (poll-core server gate: pipelining, shedding, 256 idle conns)"
     cargo test -q --release --test integration native_tcp
+    echo "== cargo test -q --release --test shard_chaos (shard tier gate: affinity, kills, shed storms, restart detection)"
+    cargo test -q --release --test shard_chaos
   )
-  echo "check.sh --quick: fmt + build + kernel conformance + poll-core server gate passed"
+
+  # Shard-tier smoke: a real front door spawning 2 worker processes,
+  # hit by a 2-second open-loop loadgen run. Runs from a temp dir so
+  # the quick tier never rewrites the committed BENCH_serve.json.
+  echo "== shard smoke (bsa shard, 2 spawned workers + bsa loadgen --quick)"
+  REPO_ROOT="$(pwd)"
+  SHARD_ADDR="127.0.0.1:17897"
+  "$REPO_ROOT/rust/target/release/bsa" shard --backend native --task syn --n 256 \
+    --addr "$SHARD_ADDR" --workers 2 --worker-base-port 17898 &
+  SHARD_PID=$!
+  sleep 2
+  LOADGEN_OUT="$(cd "$(mktemp -d)" && "$REPO_ROOT/rust/target/release/bsa" loadgen "$SHARD_ADDR" \
+    --quick --task syn --points 200)" || {
+    echo "check.sh: loadgen failed against the shard front door" >&2
+    kill "$SHARD_PID" 2>/dev/null || true
+    exit 1
+  }
+  if ! grep -q "shed_rate" <<<"$LOADGEN_OUT"; then
+    echo "check.sh: loadgen output is missing its report:" >&2
+    echo "$LOADGEN_OUT" >&2
+    kill "$SHARD_PID" 2>/dev/null || true
+    exit 1
+  fi
+  kill -INT "$SHARD_PID"
+  wait "$SHARD_PID" || true
+
+  echo "check.sh --quick: fmt + build + kernel conformance + poll-core + shard tier gates passed"
   exit 0
 fi
 
