@@ -107,12 +107,13 @@ pub struct RouterStats {
     /// *decreased* between two probes of the same address means the
     /// process (or in-process router) restarted in between.
     pub uptime_ms: u64,
-    /// Process-global monotonic router incarnation. Every
-    /// [`Router::start`] draws the next value, so a respawned worker is
-    /// distinguishable from a healthy one even when both probes land in
-    /// the same low-uptime window — without it, the shard front door's
-    /// affinity bookkeeping would keep crediting a restarted worker with
-    /// a tree cache it no longer holds.
+    /// Monotonic router incarnation: every [`Router::start`] draws the
+    /// next value from a per-process entropy-seeded counter (see
+    /// [`next_epoch`]), so a respawned worker — same process or a fresh
+    /// one — is distinguishable from a healthy one even when both
+    /// probes land in the same low-uptime window. Without it, the shard
+    /// front door's affinity bookkeeping would keep crediting a
+    /// restarted worker with a tree cache it no longer holds.
     pub epoch: u64,
 }
 
@@ -157,8 +158,40 @@ struct Shared {
 }
 
 /// Source of [`RouterStats::epoch`]: strictly increasing across every
-/// [`Router::start`] in the process, starting at 1.
-static ROUTER_EPOCH: AtomicU64 = AtomicU64::new(1);
+/// [`Router::start`] in the process. Seeded lazily (0 = unseeded) from
+/// per-process entropy rather than starting at a fixed 1: the shard
+/// front door detects worker restarts by the epoch *changing* between
+/// probes, and a counter that restarts at the same value in every
+/// process would make a respawned child invisible whenever the backup
+/// uptime-regression check also misses (previous process died younger
+/// than the new process's first-probe uptime).
+static ROUTER_EPOCH: AtomicU64 = AtomicU64::new(0);
+
+/// Draw the next router epoch, seeding [`ROUTER_EPOCH`] on first use
+/// with a splitmix64 mix of the PID and the wall clock. The seed is
+/// masked to 48 bits (epochs stay readable in stats output, with
+/// headroom for per-process increments) and forced nonzero — the shard
+/// prober uses epoch 0 as its "never probed" sentinel.
+fn next_epoch() -> u64 {
+    if ROUTER_EPOCH.load(Ordering::Relaxed) == 0 {
+        let pid = std::process::id() as u64;
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let mut h = pid ^ nanos.rotate_left(17);
+        h ^= h >> 30;
+        h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+        h ^= h >> 27;
+        h = h.wrapping_mul(0x94d049bb133111eb);
+        h ^= h >> 31;
+        let seed = (h & 0xffff_ffff_ffff).max(1);
+        // A concurrent seeder winning the race is fine — both values
+        // are valid nonzero seeds and fetch_add keeps monotonicity.
+        let _ = ROUTER_EPOCH.compare_exchange(0, seed, Ordering::Relaxed, Ordering::Relaxed);
+    }
+    ROUTER_EPOCH.fetch_add(1, Ordering::Relaxed)
+}
 
 /// The serving front: spawn with [`Router::start`], submit with
 /// [`Router::submit`], stop with [`Router::shutdown`].
@@ -188,7 +221,7 @@ impl Router {
             batch_sum: AtomicU64::new(0),
             stop: AtomicBool::new(false),
             started: Instant::now(),
-            epoch: ROUTER_EPOCH.fetch_add(1, Ordering::Relaxed),
+            epoch: next_epoch(),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers.max(1));

@@ -659,6 +659,11 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     );
     let report = loadgen::run(&opts)?;
     report.print();
+    // Machine-readable line: the same JSON object that lands in the
+    // `shard` section of BENCH_serve.json, always on stdout — scripts
+    // (e.g. the check.sh shard smoke) parse this even when no
+    // ROADMAP.md is nearby and the artifact itself is not written.
+    println!("report {}", report.to_json());
     match loadgen::write_bench_section(&report)? {
         Some(path) => println!("merged `shard` section into {path}"),
         None => println!("(no ROADMAP.md nearby; BENCH_serve.json not written)"),

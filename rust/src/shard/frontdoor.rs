@@ -182,7 +182,7 @@ fn handle_conn(mut client: TcpStream, fleet: Arc<Fleet>, stop: Arc<AtomicBool>) 
     let mut resp: Vec<u8> = Vec::new();
     loop {
         let mut magic = [0u8; 4];
-        match read_client(&mut client, &mut magic, &stop) {
+        match read_client(&mut client, &mut magic, &stop, fleet.cfg.drain_ms) {
             Ok(true) => {}
             // Clean close, or drain while idle between frames.
             Ok(false) | Err(_) => return,
@@ -199,7 +199,7 @@ fn handle_conn(mut client: TcpStream, fleet: Arc<Fleet>, stop: Arc<AtomicBool>) 
             return;
         }
         let mut hdr = [0u8; 12];
-        if read_started(&mut client, &mut hdr).is_err() {
+        if read_started(&mut client, &mut hdr, &stop, fleet.cfg.drain_ms).is_err() {
             return;
         }
         let n = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
@@ -225,7 +225,7 @@ fn handle_conn(mut client: TcpStream, fleet: Arc<Fleet>, stop: Arc<AtomicBool>) 
         req.extend_from_slice(&hdr);
         let body_at = req.len();
         req.resize(body_at + body_bytes, 0);
-        if read_started(&mut client, &mut req[body_at..]).is_err() {
+        if read_started(&mut client, &mut req[body_at..], &stop, fleet.cfg.drain_ms).is_err() {
             return;
         }
         if fleet.faults.take_shed() {
@@ -437,7 +437,7 @@ fn fleet_stats_frame(fleet: &Arc<Fleet>) -> Vec<u8> {
             "{{\"id\": {}, \"addr\": \"{}\", \"up\": {}, \"epoch\": {}, \"restarts\": {}, \
              \"inflight\": {}, \"tree_hits\": {}, \"tree_misses\": {}}}",
             s.id,
-            s.addr,
+            trace::json_escape(&s.addr),
             s.is_up(),
             s.epoch(),
             s.restarts(),
@@ -467,10 +467,19 @@ fn fleet_stats_frame(fleet: &Arc<Fleet>) -> Vec<u8> {
 /// `Ok(false)` = no frame started and the connection closed cleanly (or
 /// the drain began) — the handler should exit without an error. Once
 /// the first byte arrives, the frame must complete within
-/// [`CLIENT_FRAME_TIMEOUT_MS`].
-fn read_client(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> anyhow::Result<bool> {
+/// [`CLIENT_FRAME_TIMEOUT_MS`] — or within `drain_ms` of the drain
+/// beginning, whichever is sooner, so a client stalling mid-frame can
+/// never hold shutdown past the documented drain bound
+/// (docs/FORMATS.md §3.4).
+fn read_client(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    drain_ms: u64,
+) -> anyhow::Result<bool> {
     let mut pos = 0;
     let mut deadline: Option<Instant> = None;
+    let mut drain_deadline: Option<Instant> = None;
     while pos < buf.len() {
         match stream.read(&mut buf[pos..]) {
             Ok(0) => {
@@ -488,11 +497,19 @@ fn read_client(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> any
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if pos == 0 && stop.load(Ordering::Relaxed) {
-                    return Ok(false);
+                let now = Instant::now();
+                if stop.load(Ordering::Relaxed) {
+                    if pos == 0 {
+                        return Ok(false);
+                    }
+                    let d = *drain_deadline
+                        .get_or_insert(now + Duration::from_millis(drain_ms.max(1)));
+                    if now >= d {
+                        bail!("drain deadline reached mid-frame");
+                    }
                 }
                 if let Some(d) = deadline {
-                    if Instant::now() >= d {
+                    if now >= d {
                         bail!("client frame stalled");
                     }
                 }
@@ -504,9 +521,17 @@ fn read_client(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> any
 }
 
 /// [`read_client`] for a frame already in progress: completion is
-/// mandatory, bounded by [`CLIENT_FRAME_TIMEOUT_MS`].
-fn read_started(stream: &mut TcpStream, buf: &mut [u8]) -> anyhow::Result<()> {
+/// mandatory, bounded by [`CLIENT_FRAME_TIMEOUT_MS`] — and, once the
+/// drain begins, additionally by `drain_ms` (same contract as the
+/// mid-frame path of [`read_client`]).
+fn read_started(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    drain_ms: u64,
+) -> anyhow::Result<()> {
     let deadline = Instant::now() + Duration::from_millis(CLIENT_FRAME_TIMEOUT_MS);
+    let mut drain_deadline: Option<Instant> = None;
     let mut pos = 0;
     while pos < buf.len() {
         match stream.read(&mut buf[pos..]) {
@@ -516,8 +541,16 @@ fn read_started(stream: &mut TcpStream, buf: &mut [u8]) -> anyhow::Result<()> {
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     bail!("client frame stalled");
+                }
+                if stop.load(Ordering::Relaxed) {
+                    let d = *drain_deadline
+                        .get_or_insert(now + Duration::from_millis(drain_ms.max(1)));
+                    if now >= d {
+                        bail!("drain deadline reached mid-frame");
+                    }
                 }
             }
             Err(e) => return Err(e.into()),

@@ -41,12 +41,14 @@ const POOL_CAP: usize = 8;
 /// What one successful BSST probe told us about a worker.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ProbeReport {
-    /// Router incarnation (process-global counter in the worker, so it
-    /// only distinguishes routers *within* one process lifetime).
+    /// Router incarnation: an entropy-seeded per-process counter in the
+    /// worker, so a fresh process (almost surely) never repeats its
+    /// predecessor's epochs and any change means a restart.
     pub epoch: u64,
     /// Milliseconds since the worker's router started. A respawned
-    /// process reports a smaller value than before — the cross-process
-    /// restart signal `epoch` alone cannot provide.
+    /// process reports a smaller value than before — the backup restart
+    /// signal for the astronomically unlikely cross-process epoch
+    /// collision.
     pub uptime_ms: u64,
     /// Requests the worker has served.
     pub served: u64,
@@ -367,12 +369,19 @@ impl Fleet {
     }
 
     /// Revival attempt for a down worker, rate-limited by the backoff
-    /// schedule and capped at `respawn_max` attempts per outage.
+    /// schedule. Spawned workers are additionally capped at
+    /// `respawn_max` attempts per outage; attached workers have no
+    /// process to respawn — a "revival" is just a probe — so they keep
+    /// being probed at the `max_backoff_ms` cadence forever (a
+    /// transient stall must never permanently route around a worker the
+    /// fleet cannot restart).
     fn try_revive(&self, slot: &Arc<WorkerSlot>) {
         let now = self.since_start_ms();
-        if now < slot.next_attempt_ms.load(Ordering::Relaxed)
-            || slot.retries.load(Ordering::Relaxed) >= self.cfg.respawn_max
-        {
+        if now < slot.next_attempt_ms.load(Ordering::Relaxed) {
+            return;
+        }
+        let spawned = matches!(&*slot.kind.lock().unwrap(), Kind::Spawned { .. });
+        if spawned && slot.retries.load(Ordering::Relaxed) >= self.cfg.respawn_max {
             return;
         }
         // Spawned workers whose process is gone get a fresh process;

@@ -591,6 +591,30 @@ pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<()> {
     std::fs::write(path, chrome_trace_json())
 }
 
+/// Escape a string for embedding between quotes in hand-written JSON:
+/// backslash, double quote, and control characters. Every emitter that
+/// interpolates externally supplied text (worker addresses from config,
+/// error messages) must pass it through here, or a single `"` in the
+/// input produces a payload [`parse_json`] — and every other JSON
+/// parser — rejects.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // Mini JSON parser (for `bsa stats` — the client must read back the BSST
 // payload the server hand-writes; still zero-dependency)
@@ -875,6 +899,16 @@ mod tests {
 
     fn lock() -> std::sync::MutexGuard<'static, ()> {
         TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn json_escape_round_trips_through_parse_json() {
+        assert_eq!(json_escape("127.0.0.1:9000"), "127.0.0.1:9000");
+        for hostile in ["a\"b", "back\\slash", "nl\nline", "tab\there", "bell\u{7}"] {
+            let doc = format!("{{\"addr\": \"{}\"}}", json_escape(hostile));
+            let json = parse_json(&doc).expect("escaped string must parse");
+            assert_eq!(json.get("addr").and_then(|v| v.as_str()), Some(hostile));
+        }
     }
 
     #[test]
