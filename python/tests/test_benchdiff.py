@@ -182,6 +182,71 @@ def test_shard_section_filter_isolates_serving_tier():
     assert by_path["shard.p99_us"][4] == "worse"
 
 
+# the `train_step` section paper.rs level 10 writes into BENCH_native.json
+TRAIN_OLD = {
+    "bench": "bsa_native",
+    "reps": 3,
+    "train_step": {
+        "arch": {"dim": 32, "heads": 2, "blocks": 2, "ball": 64, "n": 256, "batch": 1},
+        "steps": 12,
+        "steps_per_s": 4.0,
+        "grad_peak_rss_mb": 120.0,
+        "rss_reset": True,
+        "loss_first": 1.2,
+        "loss_last": 0.8,
+    },
+}
+
+
+def train_doc(sps=4.0, rss=120.0):
+    doc = json.loads(json.dumps(TRAIN_OLD))
+    doc["train_step"]["steps_per_s"] = sps
+    doc["train_step"]["grad_peak_rss_mb"] = rss
+    return doc
+
+
+def test_train_step_directions():
+    assert benchdiff.direction("train_step.steps_per_s") == "higher"
+    assert benchdiff.direction("train_step.grad_peak_rss_mb") == "lower"
+
+
+def test_train_step_flattens_with_descriptors_skipped():
+    flat = benchdiff.flatten(TRAIN_OLD)
+    assert flat["train_step.steps_per_s"] == 4.0
+    assert flat["train_step.grad_peak_rss_mb"] == 120.0
+    # arch fields, step count, and the rss_reset bool are descriptors
+    assert "train_step.steps" not in flat
+    assert "train_step.arch.dim" not in flat
+    assert "train_step.rss_reset" not in flat
+
+
+def test_train_step_regressions_are_direction_aware():
+    # throughput drop trips the gate
+    rows, _ = benchdiff.diff(TRAIN_OLD, train_doc(sps=3.0))
+    regs = benchdiff.regressions(rows, 10.0)
+    assert [r[0] for r in regs] == ["train_step.steps_per_s"]
+    # gradient-memory growth trips the gate
+    rows, _ = benchdiff.diff(TRAIN_OLD, train_doc(rss=200.0))
+    regs = benchdiff.regressions(rows, 10.0)
+    assert [r[0] for r in regs] == ["train_step.grad_peak_rss_mb"]
+    # faster + leaner never trips it
+    rows, _ = benchdiff.diff(TRAIN_OLD, train_doc(sps=8.0, rss=60.0))
+    assert benchdiff.regressions(rows, 10.0) == []
+
+
+def test_train_step_null_placeholder_is_skipped():
+    # the committed pre-toolchain BENCH_native.json carries null
+    # steps_per_s / grad_peak_rss_mb until the first measured run
+    placeholder = json.loads(json.dumps(TRAIN_OLD))
+    placeholder["train_step"]["steps_per_s"] = None
+    placeholder["train_step"]["grad_peak_rss_mb"] = None
+    placeholder["train_step"]["loss_first"] = None
+    placeholder["train_step"]["loss_last"] = None
+    rows, skipped = benchdiff.diff(placeholder, TRAIN_OLD)
+    assert skipped >= 2
+    assert all(not r[0].startswith("train_step") for r in rows)
+
+
 def test_cli_exit_codes(tmp_path):
     old_p = tmp_path / "old.json"
     new_p = tmp_path / "new.json"

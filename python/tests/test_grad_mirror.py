@@ -1,0 +1,644 @@
+"""Numpy mirror of the native gradient kernels (rust/src/backend/grad/).
+
+The Rust backward pass cannot be run in CI without a toolchain, but its
+math can: every gradient kernel in ``rust/src/backend/grad/`` is a
+transcription of a formula in this file, and this file checks each
+formula two ways:
+
+* against **finite differences** of the matching forward, in float64
+  (central differences, eps 1e-6 — truncation ~1e-12, roundoff ~1e-10,
+  so the 1e-5 relative tolerance here is tight, not hopeful);
+* where jax is importable, the composite three-branch attention
+  backward is additionally checked against ``jax.grad`` of the repo's
+  own reference oracle (``python/compile/kernels/ref.py`` —
+  ``ref_bsa_attention`` with sigmoid gates and its
+  ``stop_gradient``-wrapped top-k index set). CI installs only numpy,
+  so the jax cross-check self-skips there; it runs wherever the AOT
+  toolchain is present.
+
+Load-bearing claims mirrored from the Rust side:
+
+* **Flash-style backward** (``grad::attention::attend_backward``): the
+  backward recomputes the per-query online softmax stats ``(m_i, l_i)``
+  by streaming keys in the same fixed 64-wide tiles as the forward
+  (``kernels::STREAM_TILE``), then forms ``p_ij = exp(s_ij - m_i)/l_i``
+  tile by tile — the ``nq x nk`` probability matrix is never
+  materialized, in either direction. With ``D_i = <dO_i, O_i>``:
+  ``dS_ij = p_ij (<dO_i, V_j> - D_i)``, ``dQ_i = scale * sum_j dS_ij K_j``,
+  ``dK_j = scale * sum_i dS_ij Q_i``, ``dV_j = sum_i p_ij dO_i``.
+* **Straight-through top-k**: the selection branch's block indices are
+  a stop-gradient index set (matching ``ref_topk_indices`` +
+  ``jax.lax.stop_gradient`` in ref.py). No gradient flows through the
+  group scores, the group-mean queries, or the own-ball mask; the
+  selected K/V blocks still receive gradient through the gathered
+  attention itself. Finite differences agree because argmax indices
+  are locally constant in the inputs (ties are measure-zero).
+* **RMSNorm backward** (eps shared with ``linalg::RMS_EPS``):
+  ``y_i = x_i * inv * s_i`` with ``inv = (mean(x^2) + eps)^(-1/2)`` gives
+  ``dx_j = dy_j inv s_j - x_j inv^3 / C * sum_i dy_i s_i x_i`` and
+  ``dscale_i = sum_rows dy_i x_i inv``.
+* **SwiGLU backward**: ``g = silu(h1) * h3`` with
+  ``silu'(x) = sig(x) (1 + x (1 - sig(x)))``.
+* **Gated merge backward**: ``merge = sum_b sig(t_b) o_b`` over the
+  three branches gives ``dt_b = sig(t_b)(1 - sig(t_b)) <dmerge, o_b>``
+  and ``do_b = sig(t_b) dmerge`` per token per head.
+* **Mean-pool compression backward**: transpose of the block mean —
+  every token row of a block receives ``dOut_block / block``.
+* **Adam**: bias-corrected moments with decoupled (AdamW-style) weight
+  decay; the first step moves each weight by ``~ -lr * sign(g)``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+NEG_INF = -1e30
+STREAM_TILE = 64
+RMS_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# forward mirrors (float64 oracles of the rust forward kernels)
+# ---------------------------------------------------------------------------
+
+
+def softmax_attend(q, k, v, scale):
+    """Dense scaled-dot-product attention, (nq,d)x(nk,d) -> (nq,d)."""
+    s = (q @ k.T) * scale
+    s = s - s.max(axis=1, keepdims=True)
+    p = np.exp(s)
+    p = p / p.sum(axis=1, keepdims=True)
+    return p @ v
+
+
+def stream_stats(q, k, scale):
+    """Per-query online (max, exp-sum) in fixed 64-wide key tiles.
+
+    Transcribes the forward's running-max/rescale recurrence
+    (kernels::stream_row); the backward recomputes exactly these stats
+    instead of saving an nq x nk score matrix.
+    """
+    nq = q.shape[0]
+    nk = k.shape[0]
+    m = np.full(nq, -np.inf)
+    l = np.zeros(nq)
+    for i in range(nq):
+        mi, li = -np.inf, 0.0
+        for t0 in range(0, nk, STREAM_TILE):
+            s = (k[t0 : t0 + STREAM_TILE] @ q[i]) * scale
+            tmax = s.max()
+            if tmax == -np.inf:
+                continue
+            if tmax > mi:
+                if li > 0.0:
+                    li *= np.exp(mi - tmax)
+                mi = tmax
+            li += np.exp(s - mi).sum()
+        m[i], l[i] = mi, li
+    return m, l
+
+
+def rms_norm(x, scale):
+    inv = 1.0 / np.sqrt((x * x).mean(axis=1) + RMS_EPS)
+    return x * inv[:, None] * scale[None, :]
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def silu(x):
+    return x * sigmoid(x)
+
+
+def compress_mean(x, block):
+    n, d = x.shape
+    return x.reshape(n // block, block, d).mean(axis=1)
+
+
+def topk_rows(scores, k):
+    """Argmax-and-suppress top-k, ascending-sorted (kernels::topk_row)."""
+    out = []
+    for row in scores.copy():
+        picks = []
+        for _ in range(k):
+            best = int(np.argmax(row))  # first index on ties
+            picks.append(best)
+            row[best] -= 2e30
+        out.append(sorted(picks))
+    return np.array(out, dtype=np.int64)
+
+
+def mask_own_ball(scores, group, cmp_block, ball):
+    g_cnt, nb = scores.shape
+    out = scores.copy()
+    for gi in range(g_cnt):
+        for bi in range(nb):
+            if (gi * group) // ball == (bi * cmp_block) // ball:
+                out[gi, bi] = NEG_INF
+    return out
+
+
+# ---------------------------------------------------------------------------
+# backward mirrors (the formulas rust/src/backend/grad/ implements)
+# ---------------------------------------------------------------------------
+
+
+def attend_backward(q, k, v, o, dout, scale):
+    """Flash-style attention backward; never materializes p as (nq,nk).
+
+    The rust kernel runs pass B query-parallel and pass C key-parallel
+    (each output row owned by one thread, ascending inner order) so the
+    result is bitwise reproducible across thread counts; the math per
+    element is exactly this.
+    """
+    nq, _ = q.shape
+    nk = k.shape[0]
+    m, l = stream_stats(q, k, scale)
+    d_coef = np.einsum("id,id->i", dout, o)  # D_i = <dO_i, O_i>
+    dq = np.zeros_like(q)
+    dk = np.zeros_like(k)
+    dv = np.zeros_like(v)
+    for i in range(nq):
+        if l[i] <= 0.0:
+            # forward fell back to the uniform value mean (defensive
+            # path: unreachable without masks since the running max
+            # keeps exp(0)=1 in the sum) -> o = mean(v), dS = 0
+            dv += dout[i][None, :] / nk
+            continue
+        for t0 in range(0, nk, STREAM_TILE):
+            kt = k[t0 : t0 + STREAM_TILE]
+            vt = v[t0 : t0 + STREAM_TILE]
+            s = (kt @ q[i]) * scale
+            p = np.exp(s - m[i]) / l[i]
+            dp = vt @ dout[i]
+            ds = p * (dp - d_coef[i])
+            dq[i] += scale * (ds @ kt)
+            dk[t0 : t0 + STREAM_TILE] += scale * np.outer(ds, q[i])
+            dv[t0 : t0 + STREAM_TILE] += np.outer(p, dout[i])
+    return dq, dk, dv
+
+
+def rms_norm_backward(x, scale, dy):
+    rows, c = x.shape
+    inv = 1.0 / np.sqrt((x * x).mean(axis=1) + RMS_EPS)
+    dscale = (dy * x * inv[:, None]).sum(axis=0)
+    proj = (dy * scale[None, :] * x).sum(axis=1)
+    dx = dy * scale[None, :] * inv[:, None] - x * (inv**3 / c * proj)[:, None]
+    return dx, dscale
+
+
+def swiglu_backward(h1, h3, dg):
+    sg = sigmoid(h1)
+    dh1 = dg * h3 * (sg * (1.0 + h1 * (1.0 - sg)))
+    dh3 = dg * (h1 * sg)
+    return dh1, dh3
+
+
+def merge_backward(logits, branches, dmerge):
+    """logits (n,3), branches 3x(n,d), dmerge (n,d) -> (dlogits, dbranches)."""
+    sg = sigmoid(logits)
+    dlogits = np.stack(
+        [
+            sg[:, b] * (1.0 - sg[:, b]) * np.einsum("nd,nd->n", dmerge, branches[b])
+            for b in range(3)
+        ],
+        axis=1,
+    )
+    dbranches = [sg[:, b : b + 1] * dmerge for b in range(3)]
+    return dlogits, dbranches
+
+
+def compress_mean_backward(dout, block, n):
+    nb, d = dout.shape
+    assert nb * block == n
+    return np.repeat(dout, block, axis=0) / block
+
+
+# ---------------------------------------------------------------------------
+# composite: one attention unit (one batch sample x one head), mirroring
+# NativeBackend::attention's per-unit body and grad::tape's per-unit
+# backward
+# ---------------------------------------------------------------------------
+
+
+def unit_forward(qs, ks, vs, logits, ball, cmp_block, group, top_k):
+    n, dh = qs.shape
+    scale = 1.0 / np.sqrt(dh)
+    nb = n // cmp_block
+    g_cnt = n // group
+
+    o_ball = np.zeros_like(qs)
+    for b0 in range(0, n, ball):
+        o_ball[b0 : b0 + ball] = softmax_attend(
+            qs[b0 : b0 + ball], ks[b0 : b0 + ball], vs[b0 : b0 + ball], scale
+        )
+
+    kc = compress_mean(ks, cmp_block)
+    vc = compress_mean(vs, cmp_block)
+    o_cmp = softmax_attend(qs, kc, vc, scale)
+
+    qg = qs.reshape(g_cnt, group, dh).mean(axis=1)
+    gscores = qg @ kc.T  # unscaled, like kernels::group_scores
+    gscores = mask_own_ball(gscores, group, cmp_block, ball)
+    idx = topk_rows(gscores, top_k)
+
+    o_slc = np.zeros_like(qs)
+    for p in range(g_cnt):
+        ksel = np.concatenate([ks[j * cmp_block : (j + 1) * cmp_block] for j in idx[p]])
+        vsel = np.concatenate([vs[j * cmp_block : (j + 1) * cmp_block] for j in idx[p]])
+        o_slc[p * group : (p + 1) * group] = softmax_attend(
+            qs[p * group : (p + 1) * group], ksel, vsel, scale
+        )
+
+    sg = sigmoid(logits)
+    merge = sg[:, 0:1] * o_ball + sg[:, 1:2] * o_cmp + sg[:, 2:3] * o_slc
+    return merge, (o_ball, o_cmp, o_slc, kc, vc, idx)
+
+
+def unit_backward(qs, ks, vs, logits, dmerge, ball, cmp_block, group, top_k):
+    n, dh = qs.shape
+    scale = 1.0 / np.sqrt(dh)
+    _, (o_ball, o_cmp, o_slc, kc, vc, idx) = unit_forward(
+        qs, ks, vs, logits, ball, cmp_block, group, top_k
+    )
+    dlogits, (d_ball, d_cmp, d_slc) = merge_backward(
+        logits, [o_ball, o_cmp, o_slc], dmerge
+    )
+
+    dq = np.zeros_like(qs)
+    dk = np.zeros_like(ks)
+    dv = np.zeros_like(vs)
+
+    # ball branch: disjoint balls, q and k rows both ball-local
+    for b0 in range(0, n, ball):
+        sl = slice(b0, b0 + ball)
+        dqb, dkb, dvb = attend_backward(
+            qs[sl], ks[sl], vs[sl], o_ball[sl], d_ball[sl], scale
+        )
+        dq[sl] += dqb
+        dk[sl] += dkb
+        dv[sl] += dvb
+
+    # compression branch: attend over pooled KV, then the pool transpose
+    dqc, dkc, dvc = attend_backward(qs, kc, vc, o_cmp, d_cmp, scale)
+    dq += dqc
+    dk += compress_mean_backward(dkc, cmp_block, n)
+    dv += compress_mean_backward(dvc, cmp_block, n)
+    # straight-through: kc also feeds the group scores, but the top-k
+    # index set is stop-gradient — nothing flows back through gscores
+
+    # selection branch: per group, gather -> attend -> scatter-add
+    g_cnt = n // group
+    for p in range(g_cnt):
+        gsl = slice(p * group, (p + 1) * group)
+        ksel = np.concatenate([ks[j * cmp_block : (j + 1) * cmp_block] for j in idx[p]])
+        vsel = np.concatenate([vs[j * cmp_block : (j + 1) * cmp_block] for j in idx[p]])
+        dqg, dksel, dvsel = attend_backward(
+            qs[gsl], ksel, vsel, o_slc[gsl], d_slc[gsl], scale
+        )
+        dq[gsl] += dqg
+        for t, j in enumerate(idx[p]):
+            jsl = slice(j * cmp_block, (j + 1) * cmp_block)
+            tsl = slice(t * cmp_block, (t + 1) * cmp_block)
+            dk[jsl] += dksel[tsl]
+            dv[jsl] += dvsel[tsl]
+
+    return dq, dk, dv, dlogits
+
+
+# ---------------------------------------------------------------------------
+# finite-difference harness
+# ---------------------------------------------------------------------------
+
+EPS = 1e-6
+
+
+def fd_grad(f, x, eps=EPS):
+    """Elementwise central-difference gradient of scalar f at x (f64)."""
+    g = np.zeros_like(x)
+    flat = x.reshape(-1)
+    gflat = g.reshape(-1)
+    for i in range(flat.size):
+        orig = flat[i]
+        flat[i] = orig + eps
+        fp = f()
+        flat[i] = orig - eps
+        fm = f()
+        flat[i] = orig
+        gflat[i] = (fp - fm) / (2.0 * eps)
+    return g
+
+
+def assert_grads_close(analytic, numeric, label):
+    np.testing.assert_allclose(
+        analytic, numeric, rtol=1e-5, atol=1e-8, err_msg=f"{label} gradient mismatch"
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel-level tests
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "nq,nk,d",
+    [
+        (1, 1, 1),  # degenerate
+        (4, 7, 3),  # sub-tile
+        (8, 64, 4),  # exactly one tile
+        (5, 65, 4),  # tile tail of 1
+        (6, 130, 3),  # two tiles + tail
+    ],
+)
+def test_attend_backward_matches_fd(nq, nk, d):
+    rng = np.random.default_rng(nq * 1000 + nk * 10 + d)
+    q = rng.standard_normal((nq, d))
+    k = rng.standard_normal((nk, d))
+    v = rng.standard_normal((nk, d))
+    w = rng.standard_normal((nq, d))  # loss = sum(w * attend(q,k,v))
+    scale = 1.0 / np.sqrt(d)
+
+    def loss():
+        return float((w * softmax_attend(q, k, v, scale)).sum())
+
+    o = softmax_attend(q, k, v, scale)
+    dq, dk, dv = attend_backward(q, k, v, o, w, scale)
+    assert_grads_close(dq, fd_grad(loss, q), "attend dq")
+    assert_grads_close(dk, fd_grad(loss, k), "attend dk")
+    assert_grads_close(dv, fd_grad(loss, v), "attend dv")
+
+
+def test_attend_backward_adversarial_rescale_chain():
+    """Scores ramp upward across tiles so the online max rescales often —
+    the regime where a wrong (m, l) recomputation diverges fastest."""
+    rng = np.random.default_rng(7)
+    nq, nk, d = 3, 150, 4
+    q = rng.standard_normal((nq, d))
+    k = rng.standard_normal((nk, d)) + np.linspace(0, 6, nk)[:, None]
+    v = rng.standard_normal((nk, d))
+    w = rng.standard_normal((nq, d))
+    scale = 1.0 / np.sqrt(d)
+
+    def loss():
+        return float((w * softmax_attend(q, k, v, scale)).sum())
+
+    o = softmax_attend(q, k, v, scale)
+    dq, dk, dv = attend_backward(q, k, v, o, w, scale)
+    assert_grads_close(dq, fd_grad(loss, q), "ramp dq")
+    assert_grads_close(dk, fd_grad(loss, k), "ramp dk")
+    assert_grads_close(dv, fd_grad(loss, v), "ramp dv")
+
+
+def test_stream_stats_match_dense_softmax():
+    rng = np.random.default_rng(11)
+    q = rng.standard_normal((5, 4))
+    k = rng.standard_normal((130, 4)) * 3.0
+    scale = 0.5
+    m, l = stream_stats(q, k, scale)
+    s = (q @ k.T) * scale
+    # rtol: matrix-matrix vs matrix-vector BLAS paths differ by ~1 ulp
+    np.testing.assert_allclose(m, s.max(axis=1), rtol=1e-14)
+    np.testing.assert_allclose(
+        l, np.exp(s - s.max(axis=1, keepdims=True)).sum(axis=1), rtol=1e-12
+    )
+
+
+def test_rms_norm_backward_matches_fd():
+    rng = np.random.default_rng(3)
+    rows, c = 6, 9
+    x = rng.standard_normal((rows, c))
+    scale = rng.standard_normal(c) + 1.0
+    w = rng.standard_normal((rows, c))
+
+    def loss():
+        return float((w * rms_norm(x, scale)).sum())
+
+    dx, dscale = rms_norm_backward(x, scale, w)
+    assert_grads_close(dx, fd_grad(loss, x), "rms dx")
+    assert_grads_close(dscale, fd_grad(loss, scale), "rms dscale")
+
+
+def test_rms_norm_backward_near_zero_rows():
+    """The eps term keeps inv finite on an all-zeros row; the gradient
+    there must still match FD (inv = eps^-1/2, large but finite)."""
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((3, 5)) * 1e-4
+    x[1] = 0.0
+    scale = rng.standard_normal(5)
+    w = rng.standard_normal((3, 5))
+
+    def loss():
+        return float((w * rms_norm(x, scale)).sum())
+
+    dx, dscale = rms_norm_backward(x, scale, w)
+    assert_grads_close(dx, fd_grad(loss, x, eps=1e-8), "rms0 dx")
+    assert_grads_close(dscale, fd_grad(loss, scale, eps=1e-8), "rms0 dscale")
+
+
+def test_swiglu_backward_matches_fd():
+    rng = np.random.default_rng(5)
+    h1 = rng.standard_normal((4, 6)) * 2.0
+    h3 = rng.standard_normal((4, 6))
+    w = rng.standard_normal((4, 6))
+
+    def loss():
+        return float((w * (silu(h1) * h3)).sum())
+
+    dh1, dh3 = swiglu_backward(h1, h3, w)
+    assert_grads_close(dh1, fd_grad(loss, h1), "swiglu dh1")
+    assert_grads_close(dh3, fd_grad(loss, h3), "swiglu dh3")
+
+
+def test_gated_merge_backward_matches_fd():
+    rng = np.random.default_rng(6)
+    n, d = 5, 4
+    logits = rng.standard_normal((n, 3)) * 2.0
+    branches = [rng.standard_normal((n, d)) for _ in range(3)]
+    w = rng.standard_normal((n, d))
+
+    def loss():
+        sg = sigmoid(logits)
+        out = sum(sg[:, b : b + 1] * branches[b] for b in range(3))
+        return float((w * out).sum())
+
+    dlogits, dbranches = merge_backward(logits, branches, w)
+    assert_grads_close(dlogits, fd_grad(loss, logits), "merge dlogits")
+    for b in range(3):
+        assert_grads_close(dbranches[b], fd_grad(loss, branches[b]), f"merge do{b}")
+
+
+def test_compress_mean_backward_matches_fd():
+    rng = np.random.default_rng(8)
+    n, d, block = 12, 3, 4
+    x = rng.standard_normal((n, d))
+    w = rng.standard_normal((n // block, d))
+
+    def loss():
+        return float((w * compress_mean(x, block)).sum())
+
+    dx = compress_mean_backward(w, block, n)
+    assert_grads_close(dx, fd_grad(loss, x), "compress dx")
+
+
+# ---------------------------------------------------------------------------
+# composite unit test: the full three-branch attention backward
+# ---------------------------------------------------------------------------
+
+UNIT = dict(n=32, dh=4, ball=8, cmp_block=4, group=4, top_k=3)
+
+
+def _unit_inputs(seed):
+    rng = np.random.default_rng(seed)
+    n, dh = UNIT["n"], UNIT["dh"]
+    qs = rng.standard_normal((n, dh))
+    ks = rng.standard_normal((n, dh))
+    vs = rng.standard_normal((n, dh))
+    logits = rng.standard_normal((n, 3))
+    w = rng.standard_normal((n, dh))
+    return qs, ks, vs, logits, w
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_unit_backward_matches_fd(seed):
+    qs, ks, vs, logits, w = _unit_inputs(seed)
+    ball, cmp_block, group, top_k = (
+        UNIT["ball"],
+        UNIT["cmp_block"],
+        UNIT["group"],
+        UNIT["top_k"],
+    )
+
+    def loss():
+        merge, _ = unit_forward(qs, ks, vs, logits, ball, cmp_block, group, top_k)
+        return float((w * merge).sum())
+
+    dq, dk, dv, dlogits = unit_backward(
+        qs, ks, vs, logits, w, ball, cmp_block, group, top_k
+    )
+    # FD sees the same zero gradient through the top-k path because the
+    # argmax index set is locally constant (straight-through semantics)
+    assert_grads_close(dq, fd_grad(loss, qs), "unit dq")
+    assert_grads_close(dk, fd_grad(loss, ks), "unit dk")
+    assert_grads_close(dv, fd_grad(loss, vs), "unit dv")
+    assert_grads_close(dlogits, fd_grad(loss, logits), "unit dlogits")
+
+
+def test_unit_backward_matches_jax_reference():
+    """Cross-check the composite backward against jax.grad of the repo's
+    reference oracle (ref_bsa_attention, sigmoid gates, stop-gradient
+    top-k). Skips when jax is not installed (CI runs numpy only)."""
+    jax = pytest.importorskip("jax")
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from compile.kernels import ref
+
+    jax.config.update("jax_enable_x64", True)
+    jnp = jax.numpy
+
+    qs, ks, vs, logits, w = _unit_inputs(42)
+    ball, cmp_block, group, top_k = (
+        UNIT["ball"],
+        UNIT["cmp_block"],
+        UNIT["group"],
+        UNIT["top_k"],
+    )
+
+    def jloss(q, k, v, lg):
+        gates = tuple(
+            jax.nn.sigmoid(lg[:, b])[None, :, None] for b in range(3)
+        )  # 3 x (S=1, N, 1)
+        out = ref.ref_bsa_attention(
+            q[None],
+            k[None],
+            v[None],
+            ball_size=ball,
+            cmp_block=cmp_block,
+            group_size=group,
+            top_k=top_k,
+            gates=gates,
+        )
+        return (jnp.asarray(w)[None] * out).sum()
+
+    jq, jk, jv, jlg = jax.grad(jloss, argnums=(0, 1, 2, 3))(qs, ks, vs, logits)
+    dq, dk, dv, dlogits = unit_backward(
+        qs, ks, vs, logits, w, ball, cmp_block, group, top_k
+    )
+    assert_grads_close(dq, np.asarray(jq), "jax dq")
+    assert_grads_close(dk, np.asarray(jk), "jax dk")
+    assert_grads_close(dv, np.asarray(jv), "jax dv")
+    assert_grads_close(dlogits, np.asarray(jlg), "jax dlogits")
+
+
+# ---------------------------------------------------------------------------
+# Adam (grad::adam) — bias-corrected moments, decoupled weight decay
+# ---------------------------------------------------------------------------
+
+
+def adam_step(p, g, m, v, t, lr, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.0):
+    """One AdamW step, t is the 1-based step count (rust grad::adam)."""
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m / (1.0 - beta1**t)
+    vhat = v / (1.0 - beta2**t)
+    p = p - lr * (mhat / (np.sqrt(vhat) + eps) + wd * p)
+    return p, m, v
+
+
+def test_adam_first_step_is_sign_descent():
+    rng = np.random.default_rng(9)
+    p = rng.standard_normal(16)
+    g = rng.standard_normal(16)
+    p1, m, v = adam_step(p.copy(), g, np.zeros(16), np.zeros(16), t=1, lr=1e-3)
+    # bias correction makes mhat = g, vhat = g^2 on step one, so the
+    # update is lr * g / (|g| + eps) ~ lr * sign(g)
+    np.testing.assert_allclose(p - p1, 1e-3 * np.sign(g), rtol=1e-5, atol=1e-9)
+    np.testing.assert_allclose(m, 0.1 * g, rtol=1e-12)
+    np.testing.assert_allclose(v, 0.001 * g * g, rtol=1e-12)
+
+
+def test_adam_decoupled_weight_decay():
+    p = np.array([2.0, -4.0])
+    g = np.zeros(2)
+    m = np.zeros(2)
+    v = np.zeros(2)
+    # zero gradient: only the decoupled decay moves the weights,
+    # multiplicatively, independent of the moment state
+    p1, _, _ = adam_step(p.copy(), g, m, v, t=1, lr=0.1, wd=0.01)
+    np.testing.assert_allclose(p1, p * (1.0 - 0.1 * 0.01), rtol=1e-12)
+
+
+def test_adam_converges_on_quadratic():
+    """End-to-end sanity: Adam minimizes a simple quadratic, and the
+    moment state round-trips through a save/restore split (the .bsackpt
+    v3 resume contract: moments + step restore => identical trajectory)."""
+    target = np.array([1.0, -2.0, 3.0])
+    p = np.zeros(3)
+    m = np.zeros(3)
+    v = np.zeros(3)
+    losses = []
+    for t in range(1, 201):
+        g = 2.0 * (p - target)
+        losses.append(float(((p - target) ** 2).sum()))
+        p, m, v = adam_step(p, g, m, v, t=t, lr=0.05)
+    assert losses[-1] < 1e-2 * losses[0]
+
+    # split run: 100 steps, "checkpoint" (p, m, v, t), 100 more — must
+    # equal the unbroken 200-step run bit for bit
+    p2 = np.zeros(3)
+    m2 = np.zeros(3)
+    v2 = np.zeros(3)
+    for t in range(1, 101):
+        g = 2.0 * (p2 - target)
+        p2, m2, v2 = adam_step(p2, g, m2, v2, t=t, lr=0.05)
+    saved = (p2.copy(), m2.copy(), v2.copy())
+    p3, m3, v3 = saved
+    for t in range(101, 201):
+        g = 2.0 * (p3 - target)
+        p3, m3, v3 = adam_step(p3, g, m3, v3, t=t, lr=0.05)
+    np.testing.assert_array_equal(p3, p)
+    np.testing.assert_array_equal(m3, m)
+    np.testing.assert_array_equal(v3, v)

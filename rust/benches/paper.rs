@@ -1056,7 +1056,7 @@ fn peak_rss_mb() -> f64 {
 
 /// Measure the native BSA forward pass the way `serve_hot_path` measures
 /// preprocessing: machine-readable p50/p95 so the next PR can regress
-/// against it, on *any* host. Nine levels:
+/// against it, on *any* host. Ten levels:
 ///
 /// 1. forward p50/p95 vs N for the demo-scale architecture (dim 32,
 ///    2 blocks — the native twin of the tiny core artifact);
@@ -1098,7 +1098,13 @@ fn peak_rss_mb() -> f64 {
 ///    with `trace` spans off vs on — the `trace_overhead` record of
 ///    `BENCH_native.json` that `scripts/check.sh` gates (<3% when
 ///    spans are *on*; the off arm is the production default and its
-///    per-site cost is one relaxed atomic load).
+///    per-site cost is one relaxed atomic load);
+/// 10. native train step: `NativeTrainer` (tape forward + backward +
+///    AdamW, `backend::grad`) on the demo architecture at N=256 —
+///    steps/s and the backward pass's peak RSS (`train_step` in the
+///    JSON; `grad_peak_rss_mb` reads VmHWM after resetting it via
+///    `/proc/self/clear_refs`, so it is the training loop's own
+///    high-water mark, not the earlier n_sweep's).
 fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
     use bsa::backend::{Backend, NativeBackend};
     use bsa::config::ServeConfig;
@@ -1685,6 +1691,57 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         );
     }
 
+    // --- level 10: native train step (tape forward + backward + AdamW) ---
+    let train_step_json;
+    {
+        // VmHWM is cumulative; clear_refs "5" resets it so the reading
+        // below is the training loop's own peak (Linux lets a process
+        // write its own clear_refs; elsewhere the reading degrades to
+        // the cumulative watermark and rss_reset records which it was).
+        let rss_reset = std::fs::write("/proc/self/clear_refs", "5").is_ok();
+        let mc = ModelConfig {
+            dim: 32,
+            num_heads: 2,
+            num_blocks: 2,
+            ball_size: 64,
+            seq_len: 256,
+            ..Default::default()
+        };
+        let tc = TrainConfig {
+            task: "syn".into(),
+            batch: 1,
+            lr: 1e-3,
+            warmup: 2,
+            train_samples: 4,
+            test_samples: 2,
+            log_every: 1,
+            ..Default::default()
+        };
+        let steps = (4 * reps).max(4);
+        let mut trainer = bsa::coordinator::NativeTrainer::new(&mc, tc, 0)?;
+        let first = trainer.step_once()?; // warmup + first loss
+        let t0 = Instant::now();
+        let mut last = first;
+        for _ in 0..steps {
+            last = trainer.step_once()?;
+        }
+        let steps_per_s = steps as f64 / t0.elapsed().as_secs_f64();
+        let grad_peak_rss_mb = peak_rss_mb();
+        train_step_json = format!(
+            "{{\"arch\": {{\"dim\": {}, \"heads\": {}, \"blocks\": {}, \"ball\": {}, \
+             \"n\": {}, \"batch\": 1}}, \"steps\": {steps}, \
+             \"steps_per_s\": {steps_per_s:.3}, \"grad_peak_rss_mb\": {grad_peak_rss_mb:.1}, \
+             \"rss_reset\": {rss_reset}, \
+             \"loss_first\": {first:.6}, \"loss_last\": {last:.6}}}",
+            mc.dim, mc.num_heads, mc.num_blocks, mc.ball_size, mc.seq_len
+        );
+        println!(
+            "  native train step (dim {}, {} blocks, N={}): {steps_per_s:.2} steps/s, \
+             loss {first:.4} -> {last:.4}, grad peak RSS {grad_peak_rss_mb:.0} MB",
+            mc.dim, mc.num_blocks, mc.seq_len
+        );
+    }
+
     // --- artifact assembly ------------------------------------------------
     let json = format!(
         "{{\n  \"bench\": \"bsa_native\",\n  \"reps\": {reps},\n  \
@@ -1703,6 +1760,7 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
          \"blocks\": 1, \"ball\": 256}}, \"arms\": [{}], \
          \"kernel_ab\": {ns_kernel_ab_json}}},\n  \
          \"trace_overhead\": {trace_overhead_json},\n  \
+         \"train_step\": {train_step_json},\n  \
          \"pjrt\": {pjrt_json},\n  \"router\": {router_json}\n}}\n",
         fwd_json.join(", "),
         sweep_json.join(", "),
@@ -1765,6 +1823,11 @@ fn bsa_native(engine: Option<&Arc<Engine>>, o: &Opts) -> anyhow::Result<()> {
         total as f64 / wall,
         st.tree_hits,
         st.tree_misses
+    ));
+    content.push_str(&format!(
+        "native train step (backend::grad, dim 32, 2 blocks, N=256): see the \
+         `train_step` record of {}\n",
+        dest.display()
     ));
     content.push_str(&format!(
         "machine-readable trajectory written to {}\n",

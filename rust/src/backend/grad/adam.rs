@@ -1,0 +1,97 @@
+//! Bias-corrected Adam with decoupled weight decay (AdamW) over a
+//! [`NativeParams`] tree — the same update rule the fused pjrt train
+//! graph bakes in (aot.py), so a run is resumable across backends in
+//! principle and its checkpoints are shape-compatible in practice.
+//!
+//! Per parameter `p` with gradient `g`, step count `t` (1-based):
+//!
+//! ```text
+//! m     = b1 * m + (1 - b1) * g
+//! v     = b2 * v + (1 - b2) * g^2
+//! mhat  = m / (1 - b1^t)
+//! vhat  = v / (1 - b2^t)
+//! p    -= lr * (mhat / (sqrt(vhat) + eps) + wd * p)
+//! ```
+//!
+//! The decay term is **decoupled** (applied to `p` directly, not mixed
+//! into the moments) and — matching the reference training setup —
+//! applied uniformly to every array, norms and biases included.
+//! Defaults: `b1 = 0.9`, `b2 = 0.999`, `eps = 1e-8`; `wd` comes from
+//! `TrainConfig::weight_decay` (0.01 by default, the paper's value).
+//!
+//! The update is a serial elementwise sweep in parameter order
+//! ([`NativeParams::named_arrays`]) — deterministic at any thread or
+//! SIMD setting, and cheap next to the backward GEMMs it follows. The
+//! moment tensors live here as two [`NativeParams`] trees so they
+//! serialize through the same named-array machinery as the model
+//! (`m.<name>` / `v.<name>` in a v3 checkpoint; see `docs/TRAINING.md`).
+
+use crate::backend::params::NativeParams;
+
+/// Adam/AdamW optimizer state: per-array first/second moments plus the
+/// completed-step count that drives bias correction.
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Decoupled weight-decay coefficient (0 disables decay).
+    pub weight_decay: f32,
+    /// First-moment estimates, same shapes as the parameters.
+    pub m: NativeParams,
+    /// Second-moment estimates, same shapes as the parameters.
+    pub v: NativeParams,
+    /// Completed optimization steps (bias correction uses `t + 1`
+    /// during the step, i.e. the step being applied is 1-based).
+    pub t: u64,
+}
+
+impl Adam {
+    /// Fresh optimizer state (zeroed moments, step 0) shaped like
+    /// `params`, with the paper's hyperparameters.
+    pub fn new(params: &NativeParams, weight_decay: f32) -> Adam {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            m: params.zeros_like(),
+            v: params.zeros_like(),
+            t: 0,
+        }
+    }
+
+    /// Apply one update in place. `grads` must be shaped like `params`
+    /// (it is the output of [`super::tape::backward`], which guarantees
+    /// that). Advances the step count.
+    pub fn step(&mut self, lr: f32, params: &mut NativeParams, grads: &NativeParams) {
+        self.t += 1;
+        // Bias corrections in f64: b2^t underflows f32 visibly past a
+        // few thousand steps.
+        let bc1 = (1.0 - (self.beta1 as f64).powi(self.t as i32)) as f32;
+        let bc2 = (1.0 - (self.beta2 as f64).powi(self.t as i32)) as f32;
+        let (b1, b2) = (self.beta1, self.beta2);
+        let (eps, wd) = (self.eps, self.weight_decay);
+
+        let pv = params.named_arrays_mut();
+        let gv = grads.named_arrays();
+        let mv = self.m.named_arrays_mut();
+        let vv = self.v.named_arrays_mut();
+        debug_assert_eq!(pv.len(), gv.len(), "adam: grads arity");
+        for (((p, g), m), v) in pv.into_iter().zip(gv).zip(mv).zip(vv) {
+            debug_assert_eq!(p.0, g.0, "adam: array order drift");
+            let pd = p.1.data_mut();
+            let gd = g.1.data();
+            let md = m.1.data_mut();
+            let vd = v.1.data_mut();
+            debug_assert_eq!(pd.len(), gd.len(), "adam: {} shape drift", p.0);
+            for i in 0..pd.len() {
+                let gi = gd[i];
+                md[i] = b1 * md[i] + (1.0 - b1) * gi;
+                vd[i] = b2 * vd[i] + (1.0 - b2) * gi * gi;
+                let mhat = md[i] / bc1;
+                let vhat = vd[i] / bc2;
+                pd[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * pd[i]);
+            }
+        }
+    }
+}

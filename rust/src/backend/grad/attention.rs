@@ -1,0 +1,524 @@
+//! Gradients of the three sparse attention branches in
+//! [`super::super::kernels`].
+//!
+//! The core is [`attend_backward`], a flash-style backward: instead of
+//! stashing the `nq * nk` probability matrix from the forward, it
+//! **recomputes** each query row's online-softmax statistics `(m, l)`
+//! with the *exact* [`super::super::kernels`] streaming recurrence
+//! (same [`STREAM_TILE`] tiling, same [`simd`] panels, same rescale
+//! branch), then reconstitutes probabilities one tile at a time. Peak
+//! memory in the backward is `O(nq)` stats plus one stack tile — the
+//! same contract the forward's streaming kernel keeps.
+//!
+//! With `O = P V`, `P = softmax(S)`, `S = scale * Q K^T`, the standard
+//! flash backward identities apply per query row `i`:
+//!
+//! ```text
+//! D_i    = dot(dO_i, O_i)
+//! dS_ij  = P_ij * (dot(dO_i, V_j) - D_i)
+//! dQ_i  += scale * sum_j dS_ij K_j      (query-major pass)
+//! dK_j  += scale * sum_i dS_ij Q_i      (key-major pass, ascending i)
+//! dV_j  += sum_i P_ij dO_i              (key-major pass, ascending i)
+//! ```
+//!
+//! Both passes have a fixed reduction order, so results are identical
+//! at every thread count; the exps and dots ride the [`simd`] `*_at`
+//! panels, making each kernel a 1e-5 twin of its `*_reference`
+//! (bitwise under `BSA_NATIVE_SIMD=off`), mirroring the forward tiers.
+//!
+//! All-masked rows mirror the forward's uniform-instead-of-NaN
+//! contract: a row whose sweep ends with `l <= 0` produced the uniform
+//! value mean in the forward, so its backward is `dV_j += dO_i / nk`
+//! with no `dQ`/`dK` contribution (the uniform weights are constant in
+//! `q` and `k`).
+//!
+//! Selection's top-k is **straight-through**: [`select_attention_backward`]
+//! replays the forward's index set and routes no gradient into the
+//! ranking scores — the Rust analogue of `ref.py`'s
+//! `jax.lax.stop_gradient(idx)`. The argmax is locally constant, so
+//! finite differences agree with this convention everywhere off the
+//! (measure-zero) ranking ties.
+
+use crate::backend::kernels::STREAM_TILE;
+use crate::backend::linalg::sigmoid;
+use crate::backend::simd;
+
+/// One query row's online-softmax stats `(m, l)` — the exact
+/// [`super::super::kernels`] `stream_row` recurrence minus the value
+/// accumulation, at an explicit SIMD level. Must never drift from the
+/// forward: the reconstituted probabilities divide by this `l`.
+fn row_stats_at(
+    lvl: simd::Level,
+    qrow: &[f32],
+    k: &[f32],
+    nk: usize,
+    d: usize,
+    scale: f32,
+    tile: &mut [f32; STREAM_TILE],
+) -> (f32, f32) {
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut j0 = 0usize;
+    while j0 < nk {
+        let tl = STREAM_TILE.min(nk - j0);
+        let t = &mut tile[..tl];
+        simd::tile_scores_at(lvl, qrow, &k[j0 * d..(j0 + tl) * d], d, scale, t);
+        let tmax = simd::row_max_at(lvl, t);
+        if tmax == f32::NEG_INFINITY {
+            j0 += tl;
+            continue;
+        }
+        if tmax > m {
+            if l > 0.0 {
+                l *= simd::exp_one_at(lvl, m - tmax);
+            }
+            m = tmax;
+        }
+        l += simd::exp_sum_at(lvl, t, m);
+        j0 += tl;
+    }
+    (m, l)
+}
+
+/// Shared body of the streaming attention backward at an explicit SIMD
+/// level. See the module docs for the identities; serial by contract
+/// (parallelism lives a layer up, at the (batch, head) unit grain, like
+/// the forward's `attend_unit`). **Accumulates** into `dq`/`dk`/`dv`.
+#[allow(clippy::too_many_arguments)]
+fn attend_backward_at(
+    lvl: simd::Level,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), nq * d, "attend_backward q len");
+    debug_assert_eq!(k.len(), nk * d, "attend_backward k len");
+    debug_assert_eq!(v.len(), nk * d, "attend_backward v len");
+    debug_assert_eq!(o.len(), nq * d, "attend_backward o len");
+    debug_assert_eq!(dout.len(), nq * d, "attend_backward dout len");
+    let mut tile = [0.0f32; STREAM_TILE];
+
+    // Pass A: per-row stats (m, l) and D = dot(dO, O).
+    let mut stats = vec![(0.0f32, 0.0f32); nq];
+    let mut dcoef = vec![0.0f32; nq];
+    for i in 0..nq {
+        stats[i] = row_stats_at(lvl, &q[i * d..(i + 1) * d], k, nk, d, scale, &mut tile);
+        dcoef[i] = simd::dot_at(lvl, &dout[i * d..(i + 1) * d], &o[i * d..(i + 1) * d]);
+    }
+
+    // Pass B: dQ, query-major (each query row touched once; tiles
+    // reconstitute the probabilities the forward never stored).
+    for i in 0..nq {
+        let (m, l) = stats[i];
+        if l <= 0.0 {
+            continue; // uniform fallback row: constant in q
+        }
+        let qrow = &q[i * d..(i + 1) * d];
+        let dorow = &dout[i * d..(i + 1) * d];
+        let dqrow = &mut dq[i * d..(i + 1) * d];
+        let mut j0 = 0usize;
+        while j0 < nk {
+            let tl = STREAM_TILE.min(nk - j0);
+            let t = &mut tile[..tl];
+            simd::tile_scores_at(lvl, qrow, &k[j0 * d..(j0 + tl) * d], d, scale, t);
+            for (jj, &s) in t.iter().enumerate() {
+                let j = j0 + jj;
+                if s == f32::NEG_INFINITY {
+                    continue;
+                }
+                let p = simd::exp_one_at(lvl, s - m) / l;
+                let dp = simd::dot_at(lvl, dorow, &v[j * d..(j + 1) * d]);
+                let ds = p * (dp - dcoef[i]);
+                simd::axpy_at(lvl, ds * scale, &k[j * d..(j + 1) * d], dqrow);
+            }
+            j0 += tl;
+        }
+    }
+
+    // Pass C: dK/dV, key-major with an ascending-i inner loop — every
+    // (key, query) pair lands in a fixed order, so the accumulation is
+    // thread-count-invariant wherever a caller parallelizes over keys.
+    for j in 0..nk {
+        let krow = &k[j * d..(j + 1) * d];
+        let vrow = &v[j * d..(j + 1) * d];
+        for i in 0..nq {
+            let (m, l) = stats[i];
+            let dorow = &dout[i * d..(i + 1) * d];
+            if l <= 0.0 {
+                // uniform fallback: o = mean(v), so dv += dO / nk
+                simd::axpy_at(lvl, 1.0 / nk as f32, dorow, &mut dv[j * d..(j + 1) * d]);
+                continue;
+            }
+            let s = scale * simd::dot_at(lvl, &q[i * d..(i + 1) * d], krow);
+            if s == f32::NEG_INFINITY {
+                continue;
+            }
+            let p = simd::exp_one_at(lvl, s - m) / l;
+            let dp = simd::dot_at(lvl, dorow, vrow);
+            let ds = p * (dp - dcoef[i]);
+            simd::axpy_at(lvl, ds * scale, &q[i * d..(i + 1) * d], &mut dk[j * d..(j + 1) * d]);
+            simd::axpy_at(lvl, p, dorow, &mut dv[j * d..(j + 1) * d]);
+        }
+    }
+}
+
+/// Flash-style backward of [`super::super::kernels::attend`]:
+/// recomputed online stats, no `nq * nk` materialization. `o` is the
+/// forward output; **accumulates** into `dq (nq, d)` / `dk (nk, d)` /
+/// `dv (nk, d)`. Serial per call (the parallel grain is the
+/// (batch, head) unit, as in the forward); 1e-5 twin of
+/// [`attend_backward_reference`] at SIMD levels, bitwise under
+/// `BSA_NATIVE_SIMD=off`.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    attend_backward_at(simd::active(), q, k, v, o, dout, nq, nk, d, scale, dq, dk, dv);
+}
+
+/// Scalar twin of [`attend_backward`]: the same three passes pinned at
+/// [`simd::Level::Scalar`].
+#[allow(clippy::too_many_arguments)]
+pub fn attend_backward_reference(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    attend_backward_at(simd::Level::Scalar, q, k, v, o, dout, nq, nk, d, scale, dq, dk, dv);
+}
+
+/// Backward of [`super::super::kernels::ball_attention`]: the flash
+/// backward per disjoint ball. `o` is the forward's ball output;
+/// **accumulates** into `dq`/`dk`/`dv` (`(n, d)` each). Serial — called
+/// from inside the per-unit parallel sweep, like the forward's per-ball
+/// body. 1e-5 twin of [`ball_attention_backward_reference`] at SIMD
+/// levels, bitwise under `BSA_NATIVE_SIMD=off`.
+#[allow(clippy::too_many_arguments)]
+pub fn ball_attention_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    n: usize,
+    d: usize,
+    ball_size: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    ball_attention_backward_at(simd::active(), q, k, v, o, dout, n, d, ball_size, dq, dk, dv);
+}
+
+/// Scalar twin of [`ball_attention_backward`].
+#[allow(clippy::too_many_arguments)]
+pub fn ball_attention_backward_reference(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    n: usize,
+    d: usize,
+    ball_size: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    ball_attention_backward_at(simd::Level::Scalar, q, k, v, o, dout, n, d, ball_size, dq, dk, dv);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ball_attention_backward_at(
+    lvl: simd::Level,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    n: usize,
+    d: usize,
+    ball_size: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    assert_eq!(n % ball_size, 0, "n must be divisible by ball size");
+    let scale = 1.0 / (d as f32).sqrt();
+    let chunk = ball_size * d;
+    for b in 0..n / ball_size {
+        let r = b * chunk..(b + 1) * chunk;
+        attend_backward_at(
+            lvl,
+            &q[r.clone()],
+            &k[r.clone()],
+            &v[r.clone()],
+            &o[r.clone()],
+            &dout[r.clone()],
+            ball_size,
+            ball_size,
+            d,
+            scale,
+            &mut dq[r.clone()],
+            &mut dk[r.clone()],
+            &mut dv[r],
+        );
+    }
+}
+
+/// Backward of [`super::super::kernels::select_attention`] with
+/// **straight-through top-k**: the forward's `idx` (`groups * top_k`
+/// flat, ascending per group) is replayed verbatim, gradients flow into
+/// the selected key/value blocks, and the ranking scores receive
+/// nothing (`stop_gradient(idx)` semantics). A block selected by
+/// several groups accumulates each group's contribution in ascending
+/// group order — fixed, so thread counts a layer up never reorder it.
+/// `o` is the forward's selection output; **accumulates** into
+/// `dq`/`dk`/`dv`. Serial per call; 1e-5 twin of
+/// [`select_attention_backward_reference`] at SIMD levels, bitwise
+/// under `BSA_NATIVE_SIMD=off`.
+#[allow(clippy::too_many_arguments)]
+pub fn select_attention_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    idx: &[usize],
+    n: usize,
+    d: usize,
+    sel_block: usize,
+    group: usize,
+    top_k: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    select_attention_backward_at(
+        simd::active(),
+        q,
+        k,
+        v,
+        o,
+        dout,
+        idx,
+        n,
+        d,
+        sel_block,
+        group,
+        top_k,
+        dq,
+        dk,
+        dv,
+    );
+}
+
+/// Scalar twin of [`select_attention_backward`].
+#[allow(clippy::too_many_arguments)]
+pub fn select_attention_backward_reference(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    idx: &[usize],
+    n: usize,
+    d: usize,
+    sel_block: usize,
+    group: usize,
+    top_k: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    select_attention_backward_at(
+        simd::Level::Scalar,
+        q,
+        k,
+        v,
+        o,
+        dout,
+        idx,
+        n,
+        d,
+        sel_block,
+        group,
+        top_k,
+        dq,
+        dk,
+        dv,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn select_attention_backward_at(
+    lvl: simd::Level,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    idx: &[usize],
+    n: usize,
+    d: usize,
+    sel_block: usize,
+    group: usize,
+    top_k: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    assert_eq!(n % group, 0, "n must be divisible by group");
+    let groups = n / group;
+    assert_eq!(idx.len(), groups * top_k, "idx len");
+    let scale = 1.0 / (d as f32).sqrt();
+    let blk = sel_block * d;
+    let gd = group * d;
+    let mut ksel = vec![0.0f32; top_k * blk];
+    let mut vsel = vec![0.0f32; top_k * blk];
+    let mut dksel = vec![0.0f32; top_k * blk];
+    let mut dvsel = vec![0.0f32; top_k * blk];
+    for p in 0..groups {
+        for (j, &bi) in idx[p * top_k..(p + 1) * top_k].iter().enumerate() {
+            debug_assert!((bi + 1) * blk <= k.len(), "block index {bi} out of range");
+            ksel[j * blk..(j + 1) * blk].copy_from_slice(&k[bi * blk..(bi + 1) * blk]);
+            vsel[j * blk..(j + 1) * blk].copy_from_slice(&v[bi * blk..(bi + 1) * blk]);
+        }
+        dksel.fill(0.0);
+        dvsel.fill(0.0);
+        let qr = p * gd..(p + 1) * gd;
+        attend_backward_at(
+            lvl,
+            &q[qr.clone()],
+            &ksel,
+            &vsel,
+            &o[qr.clone()],
+            &dout[qr.clone()],
+            group,
+            top_k * sel_block,
+            d,
+            scale,
+            &mut dq[qr],
+            &mut dksel,
+            &mut dvsel,
+        );
+        // scatter-add the gathered blocks back (ascending slot order)
+        for (j, &bi) in idx[p * top_k..(p + 1) * top_k].iter().enumerate() {
+            simd::add_assign_at(lvl, &mut dk[bi * blk..(bi + 1) * blk], &dksel[j * blk..(j + 1) * blk]);
+            simd::add_assign_at(lvl, &mut dv[bi * blk..(bi + 1) * blk], &dvsel[j * blk..(j + 1) * blk]);
+        }
+    }
+}
+
+/// Backward of [`super::super::kernels::compress_mean`]: the mean-pool
+/// adjoint spreads each compressed row's gradient uniformly over its
+/// `block` source tokens, `dx[t] += dc[t / block] / block`. Pure serial
+/// scalar broadcast — self-referential (no twin), deterministic at any
+/// setting. **Accumulates** into `dx (n, d)` from `dc (n/block, d)`.
+pub fn compress_mean_backward(dc: &[f32], n: usize, d: usize, block: usize, dx: &mut [f32]) {
+    assert_eq!(n % block, 0, "n must be divisible by block");
+    let nb = n / block;
+    assert_eq!(dc.len(), nb * d, "compress_mean_backward dc len");
+    assert_eq!(dx.len(), n * d, "compress_mean_backward dx len");
+    let inv = 1.0 / block as f32;
+    for b in 0..nb {
+        let crow = &dc[b * d..(b + 1) * d];
+        for t in 0..block {
+            let xrow = &mut dx[(b * block + t) * d..(b * block + t + 1) * d];
+            for (o, &g) in xrow.iter_mut().zip(crow) {
+                *o += g * inv;
+            }
+        }
+    }
+}
+
+/// Backward of the gated merge (paper eq. 9) for one (batch, head)
+/// unit: `merge = sig(gb) o_ball + sig(gc) o_cmp + sig(gs) o_slc`
+/// per token, with `logits (n, 3)` row-major `[gb, gc, gs]` and the
+/// branch outputs `(n, d)`. Writes
+///
+/// ```text
+/// dlogits[t, b] = sig_b (1 - sig_b) * dot(dmerge_t, branch_b[t])
+/// dbranch_b[t]  = sig_b * dmerge_t
+/// ```
+///
+/// Serial scalar chains (the dot is an ascending loop) —
+/// self-referential, deterministic at any setting. Overwrites all four
+/// outputs.
+#[allow(clippy::too_many_arguments)]
+pub fn merge_backward(
+    logits: &[f32],
+    o_ball: &[f32],
+    o_cmp: &[f32],
+    o_slc: &[f32],
+    dmerge: &[f32],
+    n: usize,
+    d: usize,
+    dlogits: &mut [f32],
+    d_ball: &mut [f32],
+    d_cmp: &mut [f32],
+    d_slc: &mut [f32],
+) {
+    assert_eq!(logits.len(), n * 3, "merge_backward logits len");
+    assert_eq!(dlogits.len(), n * 3, "merge_backward dlogits len");
+    for (buf, name) in [
+        (o_ball.len(), "o_ball"),
+        (o_cmp.len(), "o_cmp"),
+        (o_slc.len(), "o_slc"),
+        (dmerge.len(), "dmerge"),
+        (d_ball.len(), "d_ball"),
+        (d_cmp.len(), "d_cmp"),
+        (d_slc.len(), "d_slc"),
+    ] {
+        assert_eq!(buf, n * d, "merge_backward {name} len");
+    }
+    for t in 0..n {
+        let r = t * d..(t + 1) * d;
+        let dm = &dmerge[r.clone()];
+        for (b, (branch, dbranch)) in [
+            (&o_ball[r.clone()], &mut d_ball[r.clone()]),
+            (&o_cmp[r.clone()], &mut d_cmp[r.clone()]),
+            (&o_slc[r.clone()], &mut d_slc[r.clone()]),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let sig = sigmoid(logits[t * 3 + b]);
+            let mut dot = 0.0f32;
+            for (o, (&dmj, &bj)) in dbranch.iter_mut().zip(dm.iter().zip(branch.iter())) {
+                dot += dmj * bj;
+                *o = sig * dmj;
+            }
+            dlogits[t * 3 + b] = sig * (1.0 - sig) * dot;
+        }
+    }
+}

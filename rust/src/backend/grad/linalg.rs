@@ -1,0 +1,253 @@
+//! Gradients of the dense trunk ops in [`super::super::linalg`].
+//!
+//! The star is [`matmul_tn`] (`out = a^T b`), the shape every weight
+//! gradient takes: for a forward `y = x w` with `x (m, k)`, `w (k, n)`,
+//! the chain rule gives `dw = x^T dy` and `dx = dy w^T` — the latter is
+//! the existing forward kernel [`super::super::linalg::matmul_nt`], so
+//! only the transposed-A product is new here.
+//!
+//! Tiers (see the table in [`super`]): `matmul_tn`, [`bias_grad`] and
+//! [`swiglu_backward`] are built purely from element-parallel panels /
+//! scalar chains with a fixed reduction order, so they are **bitwise**
+//! twins of their references at every SIMD level and thread count.
+//! [`rms_norm_backward`] recomputes the forward's `1/rms` with
+//! [`super::super::simd::sum_sq_at`], whose lane tree depends on the
+//! SIMD level — a 1e-5 twin (bitwise under `BSA_NATIVE_SIMD=off`).
+
+use crate::backend::linalg::{sigmoid, silu, RMS_EPS};
+use crate::backend::{pool, simd};
+
+/// `out = a^T @ b` where `a` is `(m, k)`, `b` is `(m, n)`, `out` is
+/// `(k, n)` — the weight-gradient GEMM (`dw = x^T dy`). Parallel over
+/// the `k` output rows; output row `r` is the ascending-`i` sum
+/// `sum_i a[i, r] * b[i, :]`, accumulated with the element-parallel
+/// [`simd::axpy_at`] panel, so the reduction order is fixed by the loop
+/// (not the lane count) and the kernel is **bitwise** equal to
+/// [`matmul_tn_reference`] at every SIMD level and thread count.
+/// Overwrites `out`.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_tn a len");
+    assert_eq!(b.len(), m * n, "matmul_tn b len");
+    assert_eq!(out.len(), k * n, "matmul_tn out len");
+    let lvl = simd::active();
+    pool::par_rows(out, n, threads, |r0, ochunk| {
+        for (ri, orow) in ochunk.chunks_exact_mut(n).enumerate() {
+            let r = r0 + ri;
+            orow.fill(0.0);
+            for i in 0..m {
+                simd::axpy_at(lvl, a[i * k + r], &b[i * n..(i + 1) * n], orow);
+            }
+        }
+    });
+}
+
+/// Scalar twin of [`matmul_tn`]: the same ascending-`i` axpy chain
+/// pinned at [`simd::Level::Scalar`], serial.
+pub fn matmul_tn_reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_tn a len");
+    assert_eq!(b.len(), m * n, "matmul_tn b len");
+    assert_eq!(out.len(), k * n, "matmul_tn out len");
+    for r in 0..k {
+        let orow = &mut out[r * n..(r + 1) * n];
+        orow.fill(0.0);
+        for i in 0..m {
+            simd::axpy_at(simd::Level::Scalar, a[i * k + r], &b[i * n..(i + 1) * n], orow);
+        }
+    }
+}
+
+/// Bias gradient: column sums of `dy (rows, n)` into `out (n,)` — the
+/// backward of [`super::super::linalg::add_bias`]. Parallel over
+/// columns; each column is one ascending scalar chain, so the kernel is
+/// **bitwise** at every SIMD level and thread count. Overwrites `out`.
+pub fn bias_grad(dy: &[f32], rows: usize, n: usize, threads: usize, out: &mut [f32]) {
+    assert_eq!(dy.len(), rows * n, "bias_grad dy len");
+    assert_eq!(out.len(), n, "bias_grad out len");
+    pool::par_rows(out, 1, threads, |c0, chunk| {
+        for (ci, o) in chunk.iter_mut().enumerate() {
+            let c = c0 + ci;
+            let mut acc = 0.0f32;
+            for r in 0..rows {
+                acc += dy[r * n + c];
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// Scalar twin of [`bias_grad`]: the same per-column chains, serial.
+pub fn bias_grad_reference(dy: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(dy.len(), rows * n, "bias_grad dy len");
+    assert_eq!(out.len(), n, "bias_grad out len");
+    for (c, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for r in 0..rows {
+            acc += dy[r * n + c];
+        }
+        *o = acc;
+    }
+}
+
+/// Shared body of the RMSNorm backward at an explicit SIMD level.
+///
+/// Forward (`y = x * s / rms`, `rms = sqrt(mean(x^2) + eps)`); with
+/// `inv = 1/rms` the backward per row is
+///
+/// ```text
+/// dx_j     = dy_j * s_j * inv  -  x_j * inv^3 / C * sum_i(dy_i s_i x_i)
+/// dscale_j = sum_rows dy_j * x_j * inv
+/// ```
+///
+/// `inv` is recomputed per row with the same [`simd::sum_sq_at`]
+/// reduction the forward uses (flash-style recompute: no stash of the
+/// normalizer), then shared by the `dx` rows and the `dscale` columns.
+fn rms_norm_backward_at(
+    lvl: simd::Level,
+    x: &[f32],
+    scale: &[f32],
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    dx: &mut [f32],
+    dscale: &mut [f32],
+) {
+    assert_eq!(x.len(), rows * cols, "rms_norm_backward x len");
+    assert_eq!(dy.len(), rows * cols, "rms_norm_backward dy len");
+    assert_eq!(scale.len(), cols, "rms_norm_backward scale len");
+    assert_eq!(dx.len(), rows * cols, "rms_norm_backward dx len");
+    assert_eq!(dscale.len(), cols, "rms_norm_backward dscale len");
+    let mut inv = vec![0.0f32; rows];
+    pool::par_rows(&mut inv, 1, threads, |r0, chunk| {
+        for (ri, o) in chunk.iter_mut().enumerate() {
+            let r = r0 + ri;
+            let ms = simd::sum_sq_at(lvl, &x[r * cols..(r + 1) * cols]) / cols as f32;
+            *o = 1.0 / (ms + RMS_EPS).sqrt();
+        }
+    });
+    pool::par_rows(dx, cols, threads, |r0, chunk| {
+        for (ri, drow) in chunk.chunks_exact_mut(cols).enumerate() {
+            let r = r0 + ri;
+            let xrow = &x[r * cols..(r + 1) * cols];
+            let dyrow = &dy[r * cols..(r + 1) * cols];
+            let iv = inv[r];
+            let mut proj = 0.0f32;
+            for j in 0..cols {
+                proj += dyrow[j] * scale[j] * xrow[j];
+            }
+            let coef = iv * iv * iv / cols as f32 * proj;
+            for j in 0..cols {
+                drow[j] = dyrow[j] * scale[j] * iv - xrow[j] * coef;
+            }
+        }
+    });
+    pool::par_rows(dscale, 1, threads, |c0, chunk| {
+        for (ci, o) in chunk.iter_mut().enumerate() {
+            let c = c0 + ci;
+            let mut acc = 0.0f32;
+            for r in 0..rows {
+                acc += dy[r * cols + c] * x[r * cols + c] * inv[r];
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// Backward of [`super::super::linalg::rms_norm`]: writes `dx (rows,
+/// cols)` and `dscale (cols,)`. 1e-5 twin of
+/// [`rms_norm_backward_reference`] at SIMD levels (the recomputed
+/// `1/rms` reduction), **bitwise** under `BSA_NATIVE_SIMD=off` and at
+/// every thread count (all cross-element reductions are fixed-order
+/// scalar chains). Overwrites both outputs.
+#[allow(clippy::too_many_arguments)]
+pub fn rms_norm_backward(
+    x: &[f32],
+    scale: &[f32],
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    dx: &mut [f32],
+    dscale: &mut [f32],
+) {
+    rms_norm_backward_at(simd::active(), x, scale, dy, rows, cols, threads, dx, dscale);
+}
+
+/// Scalar twin of [`rms_norm_backward`]: the same body pinned at
+/// [`simd::Level::Scalar`], single thread.
+pub fn rms_norm_backward_reference(
+    x: &[f32],
+    scale: &[f32],
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    dx: &mut [f32],
+    dscale: &mut [f32],
+) {
+    rms_norm_backward_at(simd::Level::Scalar, x, scale, dy, rows, cols, 1, dx, dscale);
+}
+
+/// Backward of the SwiGLU gate `g = silu(h1) * h3` (elementwise):
+///
+/// ```text
+/// dh1 = dg * h3 * silu'(h1),   silu'(x) = sig(x) * (1 + x * (1 - sig(x)))
+/// dh3 = dg * silu(h1)
+/// ```
+///
+/// Pure elementwise scalar math — **bitwise** equal to
+/// [`swiglu_backward_reference`] at every SIMD level and thread count.
+/// Overwrites `dh1`/`dh3`.
+pub fn swiglu_backward(
+    h1: &[f32],
+    h3: &[f32],
+    dg: &[f32],
+    threads: usize,
+    dh1: &mut [f32],
+    dh3: &mut [f32],
+) {
+    assert_eq!(h1.len(), dg.len(), "swiglu_backward h1 len");
+    assert_eq!(h3.len(), dg.len(), "swiglu_backward h3 len");
+    assert_eq!(dh1.len(), dg.len(), "swiglu_backward dh1 len");
+    assert_eq!(dh3.len(), dg.len(), "swiglu_backward dh3 len");
+    pool::par_rows(dh1, 1, threads, |i0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let x = h1[i0 + i];
+            let s = sigmoid(x);
+            *o = dg[i0 + i] * h3[i0 + i] * (s * (1.0 + x * (1.0 - s)));
+        }
+    });
+    pool::par_rows(dh3, 1, threads, |i0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = dg[i0 + i] * silu(h1[i0 + i]);
+        }
+    });
+}
+
+/// Scalar twin of [`swiglu_backward`], serial.
+pub fn swiglu_backward_reference(
+    h1: &[f32],
+    h3: &[f32],
+    dg: &[f32],
+    dh1: &mut [f32],
+    dh3: &mut [f32],
+) {
+    swiglu_backward(h1, h3, dg, 1, dh1, dh3);
+}
+
+/// MSE loss and its gradient: `L = mean((pred - y)^2)` over every
+/// element, `dpred = 2 (pred - y) / len`. Returns the loss. Serial
+/// scalar chain (f64 accumulator for the loss sum) — self-referential,
+/// deterministic at any thread/SIMD setting.
+pub fn mse_loss_grad(pred: &[f32], y: &[f32], dpred: &mut [f32]) -> f32 {
+    assert_eq!(pred.len(), y.len(), "mse_loss_grad y len");
+    assert_eq!(pred.len(), dpred.len(), "mse_loss_grad dpred len");
+    assert!(!pred.is_empty(), "mse_loss_grad on empty prediction");
+    let inv = 2.0 / pred.len() as f32;
+    let mut acc = 0.0f64;
+    for i in 0..pred.len() {
+        let e = pred[i] - y[i];
+        acc += (e as f64) * (e as f64);
+        dpred[i] = inv * e;
+    }
+    (acc / pred.len() as f64) as f32
+}

@@ -1,0 +1,92 @@
+//! Backward passes for the native BSA forward — the layer that makes
+//! `bsa train --backend native` possible with no Python/XLA artifacts
+//! (ROADMAP item 2; the Rust analogue of "Natively Trainable Sparse
+//! Attention for Hierarchical Point Cloud Datasets", arXiv 2508.10758).
+//!
+//! The module splits the same way the forward does:
+//!
+//! * [`linalg`] — gradients of the dense trunk ops: the transposed
+//!   GEMM [`linalg::matmul_tn`] (weight gradients), bias/column sums,
+//!   RMSNorm, SwiGLU, and the MSE loss.
+//! * [`attention`] — gradients of the three sparse branches: the
+//!   flash-style streaming attention backward (no `nq * nk` score
+//!   matrix in the backward either — per-row online `(max, exp-sum)`
+//!   stats are *recomputed* with the exact forward recurrence), ball
+//!   and selection wrappers, mean-pool compression, and the gated
+//!   merge. Top-k selection is a **straight-through** index set: the
+//!   forward's argmax indices are replayed verbatim and no gradient
+//!   flows through the ranking scores, matching the jax reference's
+//!   `stop_gradient(idx)`.
+//! * [`tape`] — the whole-model composition: a forward pass that
+//!   stashes the per-block activations a reverse sweep needs, the
+//!   reverse sweep itself, and [`tape::loss_and_grads`] which is the
+//!   one call [`crate::coordinator::train::NativeTrainer`] makes per
+//!   step.
+//! * [`adam`] — a bias-corrected, decoupled-weight-decay Adam (AdamW)
+//!   with per-array first/second moments, the same update the fused
+//!   pjrt train graph applies.
+//!
+//! # Gradient-kernel conformance
+//!
+//! Backward kernels obey the same twin contract as the forward (see
+//! "Kernel conformance" in [`super`]), with the same tiers:
+//!
+//! | kernel | vs its scalar twin | across thread counts |
+//! |---|---|---|
+//! | [`linalg::matmul_tn`] | **bitwise** at every SIMD level | **bitwise** |
+//! | [`linalg::bias_grad`], [`linalg::swiglu_backward`] | **bitwise** at every SIMD level | **bitwise** |
+//! | [`linalg::rms_norm_backward`] | 1e-5 (bitwise when SIMD off) | **bitwise** |
+//! | [`attention::attend_backward`] | 1e-5 (bitwise when SIMD off) | **bitwise** (serial per unit) |
+//! | [`attention::ball_attention_backward`], [`attention::select_attention_backward`] | 1e-5 (bitwise when SIMD off) | **bitwise** (serial per unit) |
+//! | [`attention::compress_mean_backward`], [`attention::merge_backward`], [`linalg::mse_loss_grad`] | serial scalar — self-referential | **bitwise** |
+//!
+//! On top of the twin checks, every kernel has a **finite-difference
+//! oracle** (`rust/tests/grad_conformance.rs`, directional derivatives
+//! at 1e-3 relative tolerance) and a **numpy mirror**
+//! (`python/tests/test_grad_mirror.py`) whose composite unit backward
+//! is validated against `jax.grad` of the repo's `ref_bsa_attention`.
+//!
+//! # How to add a gradient kernel
+//!
+//! The recipe, in order — each step catches a different failure mode:
+//!
+//! 1. **Write the math in the numpy mirror first**
+//!    (`python/tests/test_grad_mirror.py`): a forward mirror, the
+//!    hand-derived backward, and a central-difference check in f64.
+//!    If the task has a jax reference, `jax.grad` it and compare.
+//!    Only transcribe to Rust once the mirror passes — debugging
+//!    calculus in numpy is an order of magnitude faster than in a
+//!    parallel f32 kernel.
+//! 2. **Write the fast kernel** against the [`super::simd`] `*_at`
+//!    panels with an explicit [`super::simd::Level`] parameter, and
+//!    dispatch rows with [`super::pool::par_rows`] so chunk boundaries
+//!    can never change the arithmetic (reductions stay within a row,
+//!    in a fixed order).
+//! 3. **Write the scalar twin** (`*_reference`): the *same* loop
+//!    pinned at [`super::simd::Level::Scalar`], serial. Do not
+//!    re-derive the math — share helpers with the fast path so the
+//!    twin can only differ by SIMD level and dispatch.
+//! 4. **Add the conformance tests** (`rust/tests/grad_conformance.rs`):
+//!    fast-vs-twin at the tier from the table above, bitwise across
+//!    thread counts, and a directional finite-difference oracle
+//!    (`dot(grad, u)` vs `(f(x + eps*u) - f(x - eps*u)) / 2eps`).
+//! 5. **Document the tier** in the table above and in
+//!    `docs/TRAINING.md` — the tiers are normative, not descriptive.
+//!
+//! # Buffer conventions
+//!
+//! Weight-gradient kernels (`matmul_tn`, `bias_grad`,
+//! `rms_norm_backward`, `swiglu_backward`) **overwrite** their outputs
+//! — every parameter's gradient has exactly one producing expression.
+//! Attention backward kernels (`attend_backward` and its ball/select
+//! wrappers, `compress_mean_backward`) **accumulate** (`+=`) into
+//! `dq`/`dk`/`dv`, because the three branches all contribute to the
+//! same projection gradients; callers zero the buffers once per unit.
+
+pub mod adam;
+pub mod attention;
+pub mod linalg;
+pub mod tape;
+
+pub use adam::Adam;
+pub use tape::{loss_and_grads, Tape};

@@ -1,0 +1,528 @@
+//! Whole-model forward-with-stash and reverse sweep — the composition
+//! layer that turns the per-op gradients in [`super::linalg`] and
+//! [`super::attention`] into `dL/dtheta` for a full
+//! [`NativeParams`] trunk.
+//!
+//! [`forward`] replays the exact computation of
+//! [`crate::backend::NativeBackend::forward`] (f32 path) while
+//! stashing the activations the reverse sweep needs: residual-stream
+//! inputs, RMS-normed rows, Q/K/V/gate projections, the three branch
+//! outputs per (batch, head) unit, the gated merge, and the SwiGLU
+//! intermediates. What it deliberately does **not** stash:
+//!
+//! * attention probabilities — the flash backward recomputes the
+//!   online `(max, exp-sum)` stats per row ([`super::attention`]);
+//! * compressed keys/values and the top-k index sets — both are cheap,
+//!   deterministic functions of the stashed K/Q, recomputed per unit
+//!   in the backward (the replayed argmax is what makes top-k
+//!   straight-through: identical indices, no score gradient).
+//!
+//! [`backward`] walks the blocks in reverse. The per-(batch, head)
+//! unit gradients are dispatched over the worker pool exactly like the
+//! forward's attention units: each unit writes its `dQ`/`dK`/`dV`/
+//! `dgate` slices into a disjoint chunk of a unit-major staging
+//! buffer, and a serial fold scatters them back to token-major rows —
+//! every element written exactly once, so gradients are **bitwise
+//! identical at every thread count**, like the forward.
+//!
+//! [`loss_and_grads`] glues in the MSE loss and is the one call
+//! [`crate::coordinator::train::NativeTrainer`] makes per step.
+
+use crate::backend::native::AttnHyper;
+use crate::backend::params::NativeParams;
+use crate::backend::{kernels, linalg, pool, simd};
+
+use super::attention as gatt;
+use super::linalg as glin;
+
+/// Per-block activation stash (all row-major flat, `rows = batch * n`).
+struct BlockStash {
+    /// Residual-stream input to the block (`(rows, C)`).
+    x_attn_in: Vec<f32>,
+    /// `rms_norm(x_attn_in, norm1)` — input to the Q/K/V/gate projections.
+    nrm1: Vec<f32>,
+    /// Q/K/V projections (`(rows, C)` each).
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Gate logits (`(rows, 3H)`).
+    gates: Vec<f32>,
+    /// Branch outputs, unit-major: for unit `u = bi * H + hd` the
+    /// chunk `u * 3*n*dh ..` holds `[o_ball | o_cmp | o_slc]`,
+    /// `(n, dh)` each.
+    branches_hm: Vec<f32>,
+    /// Token-major gated merge (`(rows, C)`) — input to `wo`.
+    merged: Vec<f32>,
+    /// Residual-stream input to the MLP half (`(rows, C)`).
+    x_mlp_in: Vec<f32>,
+    /// `rms_norm(x_mlp_in, norm2)`.
+    nrm2: Vec<f32>,
+    /// SwiGLU pre-activation `nrm2 @ w1` (`(rows, hid)`).
+    h1: Vec<f32>,
+    /// Value branch `nrm2 @ w3` (`(rows, hid)`).
+    h3: Vec<f32>,
+    /// Gated hidden `silu(h1) * h3` — input to `w2`.
+    g: Vec<f32>,
+}
+
+/// Activation record of one [`forward`] call; feed to [`backward`].
+pub struct Tape {
+    blocks: Vec<BlockStash>,
+    /// Residual-stream input to the final norm (`(rows, C)`).
+    x_final: Vec<f32>,
+    /// `rms_norm(x_final, norm_out)` — input to the head projection.
+    nrmf: Vec<f32>,
+    /// Model output (`(rows, out_features)` flat) — predictions.
+    pub pred: Vec<f32>,
+}
+
+/// Forward pass with activation stashing. `x` is `(batch, n,
+/// in_features)` flat; numerically identical to the backend's f32
+/// forward (same kernels, same order), bitwise stable across thread
+/// counts.
+pub fn forward(
+    params: &NativeParams,
+    hyper: &AttnHyper,
+    x: &[f32],
+    batch: usize,
+    n: usize,
+    threads: usize,
+) -> Tape {
+    let c = params.dim();
+    let h_cnt = params.num_heads();
+    let dh = c / h_cnt;
+    let f = params.in_features();
+    let of = params.out_features();
+    let rows = batch * n;
+    assert_eq!(x.len(), rows * f, "tape::forward input len");
+    let th = pool::resolve_threads(threads);
+    let hid = params.blocks[0].mlp.w1.cols();
+
+    // embed
+    let mut h = vec![0.0f32; rows * c];
+    linalg::matmul(x, params.embed_w.data(), rows, f, c, th, &mut h);
+    linalg::add_bias(&mut h, params.embed_b.data(), rows, c);
+
+    let mut blocks = Vec::with_capacity(params.blocks.len());
+    let mut branch = vec![0.0f32; rows * c];
+    for blk in &params.blocks {
+        let x_attn_in = h.clone();
+        let mut nrm1 = vec![0.0f32; rows * c];
+        linalg::rms_norm(&h, blk.norm1.data(), rows, c, th, &mut nrm1);
+
+        // projections
+        let mut q = vec![0.0f32; rows * c];
+        let mut k = vec![0.0f32; rows * c];
+        let mut v = vec![0.0f32; rows * c];
+        let mut gates = vec![0.0f32; rows * 3 * h_cnt];
+        linalg::matmul(&nrm1, blk.attn.wq.data(), rows, c, c, th, &mut q);
+        linalg::matmul(&nrm1, blk.attn.wk.data(), rows, c, c, th, &mut k);
+        linalg::matmul(&nrm1, blk.attn.wv.data(), rows, c, c, th, &mut v);
+        linalg::matmul(&nrm1, blk.attn.wg.data(), rows, c, 3 * h_cnt, th, &mut gates);
+
+        // three branches per (batch, head) unit, unit-major staging
+        let mut branches_hm = vec![0.0f32; batch * h_cnt * 3 * n * dh];
+        run_units_forward(hyper, &q, &k, &v, &mut branches_hm, batch, n, h_cnt, dh, th);
+
+        // gated merge (eq. 9), folded straight to token-major
+        let mut merged = vec![0.0f32; rows * c];
+        let units = batch * h_cnt;
+        for u in 0..units {
+            let (bi, hd) = (u / h_cnt, u % h_cnt);
+            let base = u * 3 * n * dh;
+            let (o_ball, o_cmp, o_slc) = branch_slices(&branches_hm, base, n * dh);
+            for t in 0..n {
+                let grow = (bi * n + t) * 3 * h_cnt;
+                let gb = linalg::sigmoid(gates[grow + hd]);
+                let gc = linalg::sigmoid(gates[grow + h_cnt + hd]);
+                let gs = linalg::sigmoid(gates[grow + 2 * h_cnt + hd]);
+                let src = t * dh;
+                let dst = (bi * n + t) * c + hd * dh;
+                for j in 0..dh {
+                    merged[dst + j] = gb * o_ball[src + j]
+                        + gc * o_cmp[src + j]
+                        + gs * o_slc[src + j];
+                }
+            }
+        }
+        linalg::matmul(&merged, blk.attn.wo.data(), rows, c, c, th, &mut branch);
+        simd::add_assign(&mut h, &branch);
+
+        let x_mlp_in = h.clone();
+        let mut nrm2 = vec![0.0f32; rows * c];
+        linalg::rms_norm(&h, blk.norm2.data(), rows, c, th, &mut nrm2);
+        let mut h1 = vec![0.0f32; rows * hid];
+        let mut h3 = vec![0.0f32; rows * hid];
+        linalg::matmul(&nrm2, blk.mlp.w1.data(), rows, c, hid, th, &mut h1);
+        linalg::matmul(&nrm2, blk.mlp.w3.data(), rows, c, hid, th, &mut h3);
+        let mut g = vec![0.0f32; rows * hid];
+        for i in 0..rows * hid {
+            g[i] = linalg::silu(h1[i]) * h3[i];
+        }
+        linalg::matmul(&g, blk.mlp.w2.data(), rows, hid, c, th, &mut branch);
+        simd::add_assign(&mut h, &branch);
+
+        blocks.push(BlockStash {
+            x_attn_in,
+            nrm1,
+            q,
+            k,
+            v,
+            gates,
+            branches_hm,
+            merged,
+            x_mlp_in,
+            nrm2,
+            h1,
+            h3,
+            g,
+        });
+    }
+
+    // head
+    let x_final = h;
+    let mut nrmf = vec![0.0f32; rows * c];
+    linalg::rms_norm(&x_final, params.norm_out.data(), rows, c, th, &mut nrmf);
+    let mut pred = vec![0.0f32; rows * of];
+    linalg::matmul(&nrmf, params.head_w.data(), rows, c, of, th, &mut pred);
+    linalg::add_bias(&mut pred, params.head_b.data(), rows, of);
+
+    Tape { blocks, x_final, nrmf, pred }
+}
+
+/// Split a unit's `[o_ball | o_cmp | o_slc]` staging chunk.
+fn branch_slices(buf: &[f32], base: usize, nd: usize) -> (&[f32], &[f32], &[f32]) {
+    (
+        &buf[base..base + nd],
+        &buf[base + nd..base + 2 * nd],
+        &buf[base + 2 * nd..base + 3 * nd],
+    )
+}
+
+/// Forward attention branches for every (batch, head) unit, parallel
+/// over units (disjoint staging chunks; kernels inside a unit run
+/// serial — determinism does not depend on the split).
+#[allow(clippy::too_many_arguments)]
+fn run_units_forward(
+    hyper: &AttnHyper,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    branches_hm: &mut [f32],
+    batch: usize,
+    n: usize,
+    h_cnt: usize,
+    dh: usize,
+    threads: usize,
+) {
+    let c = h_cnt * dh;
+    let m = hyper.ball_size;
+    let l = hyper.cmp_block;
+    let g = hyper.group_size;
+    let top_k = hyper.top_k;
+    let nb = n / l;
+    let groups = n / g;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nd = n * dh;
+    pool::par_rows(branches_hm, 3 * nd, threads, |u0, chunk| {
+        let mut qs = vec![0.0f32; nd];
+        let mut ks = vec![0.0f32; nd];
+        let mut vs = vec![0.0f32; nd];
+        let mut kc = vec![0.0f32; nb * dh];
+        let mut vc = vec![0.0f32; nb * dh];
+        let mut qg: Vec<f32> = Vec::new();
+        let mut gsc = vec![0.0f32; groups * nb];
+        let mut idx: Vec<usize> = Vec::new();
+        let mut scores: Vec<f32> = Vec::new();
+        for (ui, ublock) in chunk.chunks_exact_mut(3 * nd).enumerate() {
+            let u = u0 + ui;
+            let (bi, hd) = (u / h_cnt, u % h_cnt);
+            let col0 = hd * dh;
+            for t in 0..n {
+                let src = (bi * n + t) * c + col0;
+                qs[t * dh..(t + 1) * dh].copy_from_slice(&q[src..src + dh]);
+                ks[t * dh..(t + 1) * dh].copy_from_slice(&k[src..src + dh]);
+                vs[t * dh..(t + 1) * dh].copy_from_slice(&v[src..src + dh]);
+            }
+            let (o_ball, rest) = ublock.split_at_mut(nd);
+            let (o_cmp, o_slc) = rest.split_at_mut(nd);
+            kernels::ball_attention(&qs, &ks, &vs, n, dh, m, 1, o_ball);
+            kernels::compress_mean(&ks, n, dh, l, 1, &mut kc);
+            kernels::compress_mean(&vs, n, dh, l, 1, &mut vc);
+            kernels::attend(&qs, &kc, &vc, n, nb, dh, scale, 1, o_cmp, &mut scores);
+            kernels::group_scores(&qs, &kc, n, dh, g, nb, 1, &mut qg, &mut gsc);
+            kernels::mask_own_ball(&mut gsc, groups, nb, g, l, m);
+            kernels::topk_indices(&gsc, groups, nb, top_k, 1, &mut idx);
+            kernels::select_attention(&qs, &ks, &vs, &idx, n, dh, l, g, top_k, 1, o_slc);
+        }
+    });
+}
+
+/// Reverse sweep: given the upstream gradient `dpred` (`(rows,
+/// out_features)` flat, e.g. from [`glin::mse_loss_grad`]), produce
+/// `dL/dtheta` as a [`NativeParams`] of the same shapes. `x` must be
+/// the input [`forward`] saw. Bitwise identical at every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    params: &NativeParams,
+    hyper: &AttnHyper,
+    x: &[f32],
+    batch: usize,
+    n: usize,
+    threads: usize,
+    tape: &Tape,
+    dpred: &[f32],
+) -> NativeParams {
+    let c = params.dim();
+    let h_cnt = params.num_heads();
+    let f = params.in_features();
+    let of = params.out_features();
+    let rows = batch * n;
+    assert_eq!(x.len(), rows * f, "tape::backward input len");
+    assert_eq!(dpred.len(), rows * of, "tape::backward dpred len");
+    assert_eq!(tape.blocks.len(), params.blocks.len(), "tape/params block count");
+    let th = pool::resolve_threads(threads);
+    let hid = params.blocks[0].mlp.w1.cols();
+    let mut grads = params.zeros_like();
+
+    // head: pred = nrmf @ head_w + head_b
+    glin::matmul_tn(&tape.nrmf, dpred, rows, c, of, th, grads.head_w.data_mut());
+    glin::bias_grad(dpred, rows, of, th, grads.head_b.data_mut());
+    let mut dnrm = vec![0.0f32; rows * c];
+    linalg::matmul_nt(dpred, params.head_w.data(), rows, of, c, th, &mut dnrm);
+    let mut dh = vec![0.0f32; rows * c];
+    glin::rms_norm_backward(
+        &tape.x_final,
+        params.norm_out.data(),
+        &dnrm,
+        rows,
+        c,
+        th,
+        &mut dh,
+        grads.norm_out.data_mut(),
+    );
+
+    let mut dx = vec![0.0f32; rows * c];
+    let mut tmp = vec![0.0f32; rows * c];
+    let mut dhid = vec![0.0f32; rows * hid];
+    let mut dh1 = vec![0.0f32; rows * hid];
+    let mut dh3 = vec![0.0f32; rows * hid];
+    for (blk, gblk, stash) in itertools_rev(params, &mut grads, &tape.blocks) {
+        // MLP half: dh is d(block output) = d(x_mlp_in + mlp_out)
+        linalg::matmul_nt(&dh, blk.mlp.w2.data(), rows, c, hid, th, &mut dhid);
+        glin::matmul_tn(&stash.g, &dh, rows, hid, c, th, gblk.mlp.w2.data_mut());
+        glin::swiglu_backward(&stash.h1, &stash.h3, &dhid, th, &mut dh1, &mut dh3);
+        glin::matmul_tn(&stash.nrm2, &dh1, rows, c, hid, th, gblk.mlp.w1.data_mut());
+        glin::matmul_tn(&stash.nrm2, &dh3, rows, c, hid, th, gblk.mlp.w3.data_mut());
+        linalg::matmul_nt(&dh1, blk.mlp.w1.data(), rows, hid, c, th, &mut dnrm);
+        linalg::matmul_nt(&dh3, blk.mlp.w3.data(), rows, hid, c, th, &mut tmp);
+        simd::add_assign(&mut dnrm, &tmp);
+        glin::rms_norm_backward(
+            &stash.x_mlp_in,
+            blk.norm2.data(),
+            &dnrm,
+            rows,
+            c,
+            th,
+            &mut dx,
+            gblk.norm2.data_mut(),
+        );
+        simd::add_assign(&mut dh, &dx); // dh is now d(x_mlp_in)
+
+        // attention half: dattn = dh
+        glin::matmul_tn(&stash.merged, &dh, rows, c, c, th, gblk.attn.wo.data_mut());
+        let mut dmerged = vec![0.0f32; rows * c];
+        linalg::matmul_nt(&dh, blk.attn.wo.data(), rows, c, c, th, &mut dmerged);
+
+        let (dq, dk, dv, dgates) =
+            run_units_backward(hyper, stash, &dmerged, batch, n, h_cnt, c / h_cnt, th);
+
+        glin::matmul_tn(&stash.nrm1, &dq, rows, c, c, th, gblk.attn.wq.data_mut());
+        glin::matmul_tn(&stash.nrm1, &dk, rows, c, c, th, gblk.attn.wk.data_mut());
+        glin::matmul_tn(&stash.nrm1, &dv, rows, c, c, th, gblk.attn.wv.data_mut());
+        glin::matmul_tn(&stash.nrm1, &dgates, rows, c, 3 * h_cnt, th, gblk.attn.wg.data_mut());
+        linalg::matmul_nt(&dq, blk.attn.wq.data(), rows, c, c, th, &mut dnrm);
+        linalg::matmul_nt(&dk, blk.attn.wk.data(), rows, c, c, th, &mut tmp);
+        simd::add_assign(&mut dnrm, &tmp);
+        linalg::matmul_nt(&dv, blk.attn.wv.data(), rows, c, c, th, &mut tmp);
+        simd::add_assign(&mut dnrm, &tmp);
+        linalg::matmul_nt(&dgates, blk.attn.wg.data(), rows, 3 * h_cnt, c, th, &mut tmp);
+        simd::add_assign(&mut dnrm, &tmp);
+        glin::rms_norm_backward(
+            &stash.x_attn_in,
+            blk.norm1.data(),
+            &dnrm,
+            rows,
+            c,
+            th,
+            &mut dx,
+            gblk.norm1.data_mut(),
+        );
+        simd::add_assign(&mut dh, &dx); // dh is now d(x_attn_in)
+    }
+
+    // embed: h0 = x @ embed_w + embed_b
+    glin::matmul_tn(x, &dh, rows, f, c, th, grads.embed_w.data_mut());
+    glin::bias_grad(&dh, rows, c, th, grads.embed_b.data_mut());
+    grads
+}
+
+/// Zip blocks/grad-blocks/stashes in reverse order. Written as a free
+/// function so the borrow of `grads` stays disjoint from the loop body.
+fn itertools_rev<'a>(
+    params: &'a NativeParams,
+    grads: &'a mut NativeParams,
+    stashes: &'a [BlockStash],
+) -> impl Iterator<Item = (&'a crate::backend::params::BlockParams, &'a mut crate::backend::params::BlockParams, &'a BlockStash)>
+{
+    params
+        .blocks
+        .iter()
+        .zip(grads.blocks.iter_mut())
+        .zip(stashes.iter())
+        .map(|((b, g), s)| (b, g, s))
+        .rev()
+}
+
+/// Backward through the three branches and the gated merge for every
+/// (batch, head) unit. Parallel over units: each unit writes
+/// `[dqs | dks | dvs | dlogits]` into its disjoint chunk of a
+/// unit-major staging buffer (the compressed K/V and the top-k index
+/// set are recomputed from the stash — deterministic, so the replayed
+/// indices match the forward exactly); a serial fold then scatters the
+/// chunks to token-major `dq`/`dk`/`dv`/`dgates`, each element written
+/// once. Bitwise identical at every thread count.
+#[allow(clippy::too_many_arguments)]
+fn run_units_backward(
+    hyper: &AttnHyper,
+    stash: &BlockStash,
+    dmerged: &[f32],
+    batch: usize,
+    n: usize,
+    h_cnt: usize,
+    dh: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let c = h_cnt * dh;
+    let m = hyper.ball_size;
+    let l = hyper.cmp_block;
+    let g = hyper.group_size;
+    let top_k = hyper.top_k;
+    let nb = n / l;
+    let groups = n / g;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nd = n * dh;
+    let units = batch * h_cnt;
+    let w = 3 * nd + 3 * n; // [dqs | dks | dvs | dlogits]
+
+    let mut unit_grads = vec![0.0f32; units * w];
+    let branches = &stash.branches_hm[..];
+    let (qf, kf, vf, gatesf) = (&stash.q[..], &stash.k[..], &stash.v[..], &stash.gates[..]);
+    pool::par_rows(&mut unit_grads, w, threads, |u0, chunk| {
+        let mut qs = vec![0.0f32; nd];
+        let mut ks = vec![0.0f32; nd];
+        let mut vs = vec![0.0f32; nd];
+        let mut dmerge_u = vec![0.0f32; nd];
+        let mut logits = vec![0.0f32; n * 3];
+        let mut d_ball = vec![0.0f32; nd];
+        let mut d_cmp = vec![0.0f32; nd];
+        let mut d_slc = vec![0.0f32; nd];
+        let mut kc = vec![0.0f32; nb * dh];
+        let mut vc = vec![0.0f32; nb * dh];
+        let mut dkc = vec![0.0f32; nb * dh];
+        let mut dvc = vec![0.0f32; nb * dh];
+        let mut qg: Vec<f32> = Vec::new();
+        let mut gsc = vec![0.0f32; groups * nb];
+        let mut idx: Vec<usize> = Vec::new();
+        for (ui, ublock) in chunk.chunks_exact_mut(w).enumerate() {
+            let u = u0 + ui;
+            let (bi, hd) = (u / h_cnt, u % h_cnt);
+            let col0 = hd * dh;
+            for t in 0..n {
+                let src = (bi * n + t) * c + col0;
+                qs[t * dh..(t + 1) * dh].copy_from_slice(&qf[src..src + dh]);
+                ks[t * dh..(t + 1) * dh].copy_from_slice(&kf[src..src + dh]);
+                vs[t * dh..(t + 1) * dh].copy_from_slice(&vf[src..src + dh]);
+                dmerge_u[t * dh..(t + 1) * dh].copy_from_slice(&dmerged[src..src + dh]);
+                let grow = (bi * n + t) * 3 * h_cnt;
+                logits[t * 3] = gatesf[grow + hd];
+                logits[t * 3 + 1] = gatesf[grow + h_cnt + hd];
+                logits[t * 3 + 2] = gatesf[grow + 2 * h_cnt + hd];
+            }
+            let base = u * 3 * nd;
+            let (o_ball, o_cmp, o_slc) = branch_slices(branches, base, nd);
+            let (dqkv, dlogits) = ublock.split_at_mut(3 * nd);
+            let (dqs, rest) = dqkv.split_at_mut(nd);
+            let (dks, dvs) = rest.split_at_mut(nd);
+            // chunks arrive zeroed (fresh buffer); kernels accumulate.
+            gatt::merge_backward(
+                &logits, o_ball, o_cmp, o_slc, &dmerge_u, n, dh, dlogits, &mut d_ball,
+                &mut d_cmp, &mut d_slc,
+            );
+            gatt::ball_attention_backward(&qs, &ks, &vs, o_ball, &d_ball, n, dh, m, dqs, dks, dvs);
+            kernels::compress_mean(&ks, n, dh, l, 1, &mut kc);
+            kernels::compress_mean(&vs, n, dh, l, 1, &mut vc);
+            dkc.fill(0.0);
+            dvc.fill(0.0);
+            gatt::attend_backward(
+                &qs, &kc, &vc, o_cmp, &d_cmp, n, nb, dh, scale, dqs, &mut dkc, &mut dvc,
+            );
+            gatt::compress_mean_backward(&dkc, n, dh, l, dks);
+            gatt::compress_mean_backward(&dvc, n, dh, l, dvs);
+            kernels::group_scores(&qs, &kc, n, dh, g, nb, 1, &mut qg, &mut gsc);
+            kernels::mask_own_ball(&mut gsc, groups, nb, g, l, m);
+            kernels::topk_indices(&gsc, groups, nb, top_k, 1, &mut idx);
+            gatt::select_attention_backward(
+                &qs, &ks, &vs, o_slc, &d_slc, &idx, n, dh, l, g, top_k, dqs, dks, dvs,
+            );
+        }
+    });
+
+    // serial fold: unit-major chunks -> token-major rows (pure copy,
+    // each destination element written exactly once)
+    let rows = batch * n;
+    let mut dq = vec![0.0f32; rows * c];
+    let mut dk = vec![0.0f32; rows * c];
+    let mut dv = vec![0.0f32; rows * c];
+    let mut dgates = vec![0.0f32; rows * 3 * h_cnt];
+    for u in 0..units {
+        let (bi, hd) = (u / h_cnt, u % h_cnt);
+        let col0 = hd * dh;
+        let ublock = &unit_grads[u * w..(u + 1) * w];
+        let (dqs, rest) = ublock.split_at(nd);
+        let (dks, rest) = rest.split_at(nd);
+        let (dvs, dlogits) = rest.split_at(nd);
+        for t in 0..n {
+            let dst = (bi * n + t) * c + col0;
+            dq[dst..dst + dh].copy_from_slice(&dqs[t * dh..(t + 1) * dh]);
+            dk[dst..dst + dh].copy_from_slice(&dks[t * dh..(t + 1) * dh]);
+            dv[dst..dst + dh].copy_from_slice(&dvs[t * dh..(t + 1) * dh]);
+            let grow = (bi * n + t) * 3 * h_cnt;
+            dgates[grow + hd] = dlogits[t * 3];
+            dgates[grow + h_cnt + hd] = dlogits[t * 3 + 1];
+            dgates[grow + 2 * h_cnt + hd] = dlogits[t * 3 + 2];
+        }
+    }
+    (dq, dk, dv, dgates)
+}
+
+/// One training step's math: forward with stash, MSE loss against `y`
+/// (`(rows, out_features)` flat), reverse sweep. Returns `(loss, tape,
+/// grads)` — the tape carries the predictions for callers that also
+/// want them (eval reuses the same forward).
+pub fn loss_and_grads(
+    params: &NativeParams,
+    hyper: &AttnHyper,
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    n: usize,
+    threads: usize,
+) -> (f32, Tape, NativeParams) {
+    let tape = forward(params, hyper, x, batch, n, threads);
+    assert_eq!(y.len(), tape.pred.len(), "loss_and_grads target len");
+    let mut dpred = vec![0.0f32; tape.pred.len()];
+    let loss = glin::mse_loss_grad(&tape.pred, y, &mut dpred);
+    let grads = backward(params, hyper, x, batch, n, threads, &tape, &dpred);
+    (loss, tape, grads)
+}

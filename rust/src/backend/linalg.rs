@@ -44,9 +44,9 @@ const NC: usize = 128;
 /// the transposed GEMM.
 const MR: usize = 4;
 /// RMSNorm epsilon, matching the jax reference (`model.rms_norm`,
-/// eps 1e-6) — shared by the SIMD path and the scalar twin so the two
-/// can never drift apart.
-const RMS_EPS: f32 = 1e-6;
+/// eps 1e-6) — shared by the SIMD path, the scalar twin, and the
+/// backward pass ([`super::grad`]) so the three can never drift apart.
+pub const RMS_EPS: f32 = 1e-6;
 
 /// `out = a @ b` where `a` is `(m, k)`, `b` is `(k, n)`, `out` is
 /// `(m, n)`. Panel-blocked and parallel over output-row chunks;

@@ -132,7 +132,23 @@
 //! that randomizes shapes *and* thread counts, including the degenerate
 //! edges (unit dims, lane tails, one chunk per thread, more threads
 //! than rows).
+//!
+//! # Gradient kernels
+//!
+//! Since the native trainer landed, every forward kernel above has a
+//! backward companion in [`grad`], held to the **same tiers**: fast
+//! gradient kernels get scalar `*_reference` twins (1e-5 with SIMD on,
+//! bitwise with `BSA_NATIVE_SIMD=off`, bitwise across thread counts
+//! always), purely element-parallel ones ([`grad::linalg::matmul_tn`],
+//! [`grad::linalg::bias_grad`], [`grad::linalg::swiglu_backward`]) are
+//! bitwise at every level, and each is additionally checked against a
+//! directional finite-difference oracle (1e-3 relative) plus a numpy
+//! mirror validated against `jax.grad` of the `ref.py` oracle. The
+//! per-tier table and the how-to-add-a-gradient-kernel recipe live in
+//! the [`grad`] module docs; the normative training spec is
+//! `docs/TRAINING.md`.
 
+pub mod grad;
 pub mod kernels;
 pub mod linalg;
 pub mod native;

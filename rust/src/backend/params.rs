@@ -283,6 +283,66 @@ impl NativeParams {
         out.push(("norm_out".into(), &self.norm_out));
         out
     }
+
+    /// Mutable `(name, tensor)` view — **same order as
+    /// [`Self::named_arrays`]** (the Adam update and checkpoint
+    /// restore zip the two, so order drift would silently mispair
+    /// moments with parameters; `params::tests` pins the pairing).
+    pub fn named_arrays_mut(&mut self) -> Vec<(String, &mut Tensor)> {
+        let mut out: Vec<(String, &mut Tensor)> = Vec::new();
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            out.push((format!("blocks.{i}.attn.wg"), &mut b.attn.wg));
+            out.push((format!("blocks.{i}.attn.wk"), &mut b.attn.wk));
+            out.push((format!("blocks.{i}.attn.wo"), &mut b.attn.wo));
+            out.push((format!("blocks.{i}.attn.wq"), &mut b.attn.wq));
+            out.push((format!("blocks.{i}.attn.wv"), &mut b.attn.wv));
+            out.push((format!("blocks.{i}.mlp.w1"), &mut b.mlp.w1));
+            out.push((format!("blocks.{i}.mlp.w2"), &mut b.mlp.w2));
+            out.push((format!("blocks.{i}.mlp.w3"), &mut b.mlp.w3));
+            out.push((format!("blocks.{i}.norm1"), &mut b.norm1));
+            out.push((format!("blocks.{i}.norm2"), &mut b.norm2));
+        }
+        out.push(("embed_b".into(), &mut self.embed_b));
+        out.push(("embed_w".into(), &mut self.embed_w));
+        out.push(("head_b".into(), &mut self.head_b));
+        out.push(("head_w".into(), &mut self.head_w));
+        out.push(("norm_out".into(), &mut self.norm_out));
+        out
+    }
+
+    /// Zero-filled copy of this parameter tree — gradient and
+    /// optimizer-moment buffers (`super::grad`) are shaped by cloning
+    /// the model so they can never drift from it.
+    pub fn zeros_like(&self) -> NativeParams {
+        let zt = |t: &Tensor| Tensor::zeros(t.shape().to_vec());
+        NativeParams {
+            embed_w: zt(&self.embed_w),
+            embed_b: zt(&self.embed_b),
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| BlockParams {
+                    attn: AttnParams {
+                        wq: zt(&b.attn.wq),
+                        wk: zt(&b.attn.wk),
+                        wv: zt(&b.attn.wv),
+                        wo: zt(&b.attn.wo),
+                        wg: zt(&b.attn.wg),
+                    },
+                    mlp: MlpParams {
+                        w1: zt(&b.mlp.w1),
+                        w2: zt(&b.mlp.w2),
+                        w3: zt(&b.mlp.w3),
+                    },
+                    norm1: zt(&b.norm1),
+                    norm2: zt(&b.norm2),
+                })
+                .collect(),
+            norm_out: zt(&self.norm_out),
+            head_w: zt(&self.head_w),
+            head_b: zt(&self.head_b),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -13,6 +13,16 @@
 //! have no dtype byte** (every array is f32); the loader still accepts
 //! them, so checkpoints written before the dtype axis keep loading
 //! forever. See `docs/FORMATS.md` §1 for the normative spec.
+//!
+//! **Version 3** changes no field layout — it marks the *content*
+//! convention the native trainer writes: the model arrays followed by
+//! Adam first/second moments as `m.<name>` / `v.<name>` pairs, with
+//! `step` counting completed optimizer steps (see `docs/TRAINING.md`
+//! §4). Readers that only want the model (`NativeParams::from_named`,
+//! `bsa serve`) skip the `m.*`/`v.*` arrays, so every v3 training
+//! checkpoint doubles as an inference param file; v1/v2 files (no
+//! moments) resume training with freshly zeroed moments. The loader
+//! accepts versions 1..=3 and rejects anything newer.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -21,7 +31,7 @@ use crate::half;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"BSAC";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// On-disk element encoding of one checkpoint array (the v2 dtype byte).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -113,7 +123,7 @@ impl Checkpoint {
         anyhow::ensure!(&magic == MAGIC, "not a .bsackpt file: {}", path.display());
         let version = read_u32(&mut r)?;
         anyhow::ensure!(
-            version == 1 || version == VERSION,
+            (1..=VERSION).contains(&version),
             "unsupported checkpoint version {version}"
         );
         let mut step_b = [0u8; 8];
@@ -243,6 +253,47 @@ mod tests {
         assert_eq!(loaded.step, 77);
         assert_eq!(loaded.arrays[0].0, "w");
         assert_eq!(loaded.arrays[0].1.data(), &[1.5, -2.5]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loads_legacy_v2_files_with_dtype_byte() {
+        // Hand-write a v2 file (dtype byte present, no optimizer
+        // arrays) — pre-v3 checkpoints must keep loading forever.
+        let path = std::env::temp_dir().join("bsa_ckpt_v2_test.bsackpt");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"BSAC");
+        buf.extend_from_slice(&2u32.to_le_bytes()); // version 2
+        buf.extend_from_slice(&55u64.to_le_bytes()); // step
+        buf.extend_from_slice(&1u32.to_le_bytes()); // count
+        buf.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        buf.push(b'w');
+        buf.extend_from_slice(&1u32.to_le_bytes()); // ndims
+        buf.extend_from_slice(&2u32.to_le_bytes()); // dims = [2]
+        buf.push(0); // dtype byte: f32
+        buf.extend_from_slice(&0.25f32.to_le_bytes());
+        buf.extend_from_slice(&(-4.0f32).to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 55);
+        assert_eq!(loaded.arrays[0].0, "w");
+        assert_eq!(loaded.arrays[0].1.data(), &[0.25, -4.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let ck = Checkpoint {
+            step: 0,
+            arrays: vec![("w".into(), Tensor::new(vec![1], vec![1.0]))],
+        };
+        let path = std::env::temp_dir().join("bsa_ckpt_future.bsackpt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "unexpected error: {err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -17,4 +17,4 @@ pub mod serve;
 pub mod train;
 
 pub use serve::{Router, ServeRequest, ServeResponse, SubmitError};
-pub use train::Trainer;
+pub use train::{NativeTrainer, Trainer};

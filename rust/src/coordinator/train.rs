@@ -1,15 +1,28 @@
-//! Training orchestrator: drives the fused `train_<tag>` HLO graph.
+//! Training orchestrators: the pjrt [`Trainer`] drives the fused
+//! `train_<tag>` HLO graph; the artifact-free [`NativeTrainer`] runs the
+//! same loop on the pure-Rust backward pass
+//! ([`crate::backend::grad`]) — select with `bsa train --backend native`.
 //!
 //! The compiled step is `(params…, m…, v…, step, lr, x, y) -> (params…,
-//! m…, v…, loss)` (AdamW fused in by aot.py). Host responsibilities:
+//! m…, v…, loss)` (AdamW fused in by aot.py); the native step is
+//! [`grad::loss_and_grads`](crate::backend::grad::loss_and_grads)
+//! followed by a host-side [`Adam`](crate::backend::grad::Adam) update
+//! with the same rule. Shared host responsibilities:
 //!
 //! * materialize the synthetic dataset and build one **ball tree per
 //!   sample** (cached) — the geometric regularization BSA requires;
 //! * assemble shuffled mini-batches of permuted features/targets;
 //! * compute the cosine-with-warmup LR schedule (paper Appendix A) and
 //!   feed it as a scalar, keeping the compiled graph schedule-free;
-//! * run eval over the held-out split with the matching `fwd_<tag>` graph;
-//! * persist checkpoints.
+//! * run eval over the held-out split (the `fwd_<tag>` graph, or the
+//!   tape forward for native);
+//! * persist checkpoints — both write the same `.bsackpt` layout
+//!   (model arrays + `m.*`/`v.*` moments + step; `docs/TRAINING.md`),
+//!   so either trainer's checkpoint serves on either backend.
+//!
+//! Both trainers draw batches from the same seeded streams
+//! (`tc.seed ^ i` per-sample trees, `tc.seed ^ 0x7221` batch sampling),
+//! so the data order is identical across backends for a given config.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -282,9 +295,308 @@ impl Trainer {
     }
 }
 
+/// Artifact-free training driver: the same loop as [`Trainer`], but the
+/// step runs [`grad::loss_and_grads`](crate::backend::grad::loss_and_grads)
+/// (pure-Rust tape forward + reverse sweep) and a host-side
+/// [`Adam`](crate::backend::grad::Adam) update — no HLO artifacts, no
+/// PJRT, no Python toolchain. The top-k branch selection trains
+/// straight-through (indices replayed from the forward, no score
+/// gradient), matching the jax reference's `stop_gradient` (see
+/// `docs/TRAINING.md`).
+///
+/// Checkpoints are `.bsackpt` v3: model arrays plus `m.<name>` /
+/// `v.<name>` optimizer moments and the completed-step count, so
+/// train → save → resume round-trips exactly and the same file loads
+/// for inference (readers skip `m.*`/`v.*`). Loading a v1/v2 or
+/// params-only file resumes with zeroed moments.
+pub struct NativeTrainer {
+    tc: TrainConfig,
+    hyper: crate::backend::native::AttnHyper,
+    params: crate::backend::NativeParams,
+    opt: crate::backend::grad::Adam,
+    pub step: usize,
+    dataset: Dataset,
+    split: SplitSpec,
+    trees: Vec<BallTree>,
+    rng: Rng,
+    pub history: Vec<LogEntry>,
+    n: usize,
+    batch: usize,
+    feat_dim: usize,
+    threads: usize,
+}
+
+impl NativeTrainer {
+    /// Build a native trainer from the typed configs: synthesizes the
+    /// dataset (same seeded streams as the pjrt [`Trainer`]), builds one
+    /// ball tree per sample, and initializes parameters with
+    /// [`NativeParams::init`](crate::backend::NativeParams::init) from
+    /// `tc.seed`. `threads` is the per-step kernel thread budget
+    /// (0 = auto, like serving; a pure latency knob — the trajectory is
+    /// bitwise identical at any setting).
+    pub fn new(
+        mc: &crate::config::ModelConfig,
+        tc: TrainConfig,
+        threads: usize,
+    ) -> anyhow::Result<NativeTrainer> {
+        anyhow::ensure!(
+            mc.variant == "bsa",
+            "native training implements the paper's bsa variant (got {:?})",
+            mc.variant
+        );
+        let mut mc = mc.clone();
+        mc.ball_size = mc.ball_size.min(mc.seq_len);
+        mc.validate()?;
+        let n = mc.seq_len;
+        let batch = tc.batch.max(1);
+
+        // dataset + ball trees (same streams as Trainer::new so the
+        // data order matches the pjrt path for a given config)
+        let gen = crate::data::generator_for(&tc.task, tc.seed)?;
+        let feat_dim = gen.feature_dim();
+        let total = tc.train_samples + tc.test_samples;
+        let split = SplitSpec { train: tc.train_samples, test: tc.test_samples };
+        let n_points = n - n / 8;
+        let dataset = Dataset::materialize(gen.as_ref(), total, n_points, split);
+        let trees: Vec<BallTree> = dataset
+            .samples
+            .iter()
+            .enumerate()
+            .map(|(i, s)| BallTree::build(&s.coords, n, tc.seed ^ i as u64))
+            .collect();
+
+        let params = crate::backend::NativeParams::init(
+            tc.seed,
+            feat_dim,
+            1, // scalar pressure/deformation target, like the artifacts
+            mc.dim,
+            mc.num_heads,
+            mc.num_blocks,
+            4, // mlp_ratio, fixed across the repo (aot.py, NativeBackend)
+        );
+        let opt = crate::backend::grad::Adam::new(&params, tc.weight_decay as f32);
+        let rng = Rng::new(tc.seed ^ 0x7221);
+        let hyper = crate::backend::native::AttnHyper::from_model(&mc);
+        Ok(NativeTrainer {
+            tc,
+            hyper,
+            params,
+            opt,
+            step: 0,
+            dataset,
+            split,
+            trees,
+            rng,
+            history: vec![],
+            n,
+            batch,
+            feat_dim,
+            threads,
+        })
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// Borrow the current model parameters.
+    pub fn params(&self) -> &crate::backend::NativeParams {
+        &self.params
+    }
+
+    /// Assemble a batch (x, y) from sample indices (ball-order permuted,
+    /// targets normalized by the train-split stats).
+    fn assemble(&self, idxs: &[usize]) -> (Tensor, Tensor) {
+        let b = idxs.len();
+        let mut x = Vec::with_capacity(b * self.n * self.feat_dim);
+        let mut y = Vec::with_capacity(b * self.n);
+        for &i in idxs {
+            let s = &self.dataset.samples[i];
+            let t = &self.trees[i];
+            let feats = t.permute_features(&s.features);
+            let targ = t.permute_features(&self.dataset.norm.normalize(&s.target));
+            x.extend_from_slice(feats.data());
+            y.extend_from_slice(targ.data());
+        }
+        (
+            Tensor::new(vec![b, self.n, self.feat_dim], x),
+            Tensor::new(vec![b, self.n, 1], y),
+        )
+    }
+
+    /// Run one optimization step on a random train batch; returns the loss.
+    pub fn step_once(&mut self) -> anyhow::Result<f32> {
+        let idxs: Vec<usize> = (0..self.batch)
+            .map(|_| self.rng.below(self.split.train))
+            .collect();
+        let (x, y) = self.assemble(&idxs);
+        let started = Instant::now();
+
+        let lr = self.tc.lr_at(self.step) as f32;
+        let (loss, _tape, grads) = crate::backend::grad::loss_and_grads(
+            &self.params,
+            &self.hyper,
+            x.data(),
+            y.data(),
+            self.batch,
+            self.n,
+            self.threads,
+        );
+        self.opt.step(lr, &mut self.params, &grads);
+        self.step += 1;
+
+        let ms = started.elapsed().as_secs_f64() * 1e3;
+        if self.step % self.tc.log_every == 0 || self.step == 1 {
+            self.history.push(LogEntry { step: self.step, loss, lr: lr as f64, ms_per_step: ms });
+        }
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {}: {loss}", self.step);
+        Ok(loss)
+    }
+
+    /// Train for `tc.steps` steps with periodic logging callbacks.
+    pub fn run<F: FnMut(&LogEntry)>(&mut self, mut on_log: F) -> anyhow::Result<f32> {
+        let mut last = f32::NAN;
+        for _ in self.step..self.tc.steps {
+            last = self.step_once()?;
+            if let Some(entry) = self.history.last() {
+                if entry.step == self.step {
+                    on_log(entry);
+                }
+            }
+        }
+        Ok(last)
+    }
+
+    /// Mean test MSE (normalized target units) over the held-out split,
+    /// using the tape forward (numerically identical to the serving
+    /// forward).
+    pub fn evaluate(&self) -> anyhow::Result<f64> {
+        let mut err = ErrorStats::default();
+        let test_range: Vec<usize> =
+            (self.split.train..self.split.train + self.split.test).collect();
+        for chunk in test_range.chunks(self.batch) {
+            // pad the final chunk by repeating its last sample
+            let mut idxs = chunk.to_vec();
+            while idxs.len() < self.batch {
+                idxs.push(*chunk.last().unwrap());
+            }
+            let (x, y) = self.assemble(&idxs);
+            let tape = crate::backend::grad::tape::forward(
+                &self.params,
+                &self.hyper,
+                x.data(),
+                self.batch,
+                self.n,
+                self.threads,
+            );
+            // only score the non-padded chunk entries and real points
+            for (bi, &si) in chunk.iter().enumerate() {
+                let tree = &self.trees[si];
+                let stride = self.n;
+                for p in 0..self.n {
+                    if tree.real[p] {
+                        let off = bi * stride + p;
+                        err.push_pair(tape.pred[off], y.data()[off]);
+                    }
+                }
+            }
+        }
+        Ok(err.mse())
+    }
+
+    /// Per-step wall-clock statistics from the log history.
+    pub fn step_time_stats(&self) -> Accumulator {
+        let mut acc = Accumulator::new();
+        for e in &self.history {
+            acc.push(e.ms_per_step);
+        }
+        acc
+    }
+
+    /// Save a full training checkpoint (`.bsackpt` v3): model arrays,
+    /// `m.<name>`/`v.<name>` optimizer moments, completed-step count.
+    /// The file doubles as an inference param file — loaders skip the
+    /// moment arrays.
+    pub fn save_checkpoint(&self, path: &Path) -> anyhow::Result<()> {
+        let mut arrays: Vec<(String, Tensor)> = self
+            .params
+            .named_arrays()
+            .into_iter()
+            .map(|(n, t)| (n, t.clone()))
+            .collect();
+        for (n, t) in self.opt.m.named_arrays() {
+            arrays.push((format!("m.{n}"), t.clone()));
+        }
+        for (n, t) in self.opt.v.named_arrays() {
+            arrays.push((format!("v.{n}"), t.clone()));
+        }
+        Checkpoint { step: self.step as u64, arrays }.save(path)
+    }
+
+    /// Restore params/optimizer state/step from a checkpoint. A v3 file
+    /// written by [`save_checkpoint`](Self::save_checkpoint) round-trips
+    /// exactly; a v1/v2 or params-only file (no `m.*`/`v.*` arrays)
+    /// resumes with freshly zeroed moments — the documented
+    /// up-conversion (`docs/TRAINING.md`). Shape or architecture drift
+    /// is a hard error.
+    pub fn load_checkpoint(&mut self, path: &Path) -> anyhow::Result<()> {
+        let ck = Checkpoint::load(path)?;
+        let params = crate::backend::NativeParams::from_named(ck.arrays.clone())
+            .map_err(|e| anyhow::anyhow!("resuming from {}: {e}", path.display()))?;
+        for ((name, old), (_, new)) in
+            self.params.named_arrays().iter().zip(params.named_arrays())
+        {
+            anyhow::ensure!(
+                old.shape() == new.shape(),
+                "checkpoint array {name} shape {:?} != model {:?}",
+                new.shape(),
+                old.shape()
+            );
+        }
+        let mut moments: std::collections::BTreeMap<String, Tensor> = ck
+            .arrays
+            .into_iter()
+            .filter(|(n, _)| n.starts_with("m.") || n.starts_with("v."))
+            .collect();
+        let mut opt = crate::backend::grad::Adam::new(&params, self.tc.weight_decay as f32);
+        if !moments.is_empty() {
+            // full v3 checkpoint: every moment must be present and shaped
+            // like its parameter (partial state would silently corrupt
+            // the bias correction)
+            for (prefix, tree) in [("m", &mut opt.m), ("v", &mut opt.v)] {
+                for (name, t) in tree.named_arrays_mut() {
+                    let key = format!("{prefix}.{name}");
+                    let src = moments.remove(&key).ok_or_else(|| {
+                        anyhow::anyhow!("checkpoint missing optimizer array {key:?}")
+                    })?;
+                    anyhow::ensure!(
+                        src.shape() == t.shape(),
+                        "optimizer array {key} shape {:?} != param {:?}",
+                        src.shape(),
+                        t.shape()
+                    );
+                    *t = src;
+                }
+            }
+            anyhow::ensure!(
+                moments.is_empty(),
+                "checkpoint has unexpected optimizer arrays: {:?}",
+                moments.keys().take(6).collect::<Vec<_>>()
+            );
+        }
+        opt.t = ck.step;
+        self.params = params;
+        self.opt = opt;
+        self.step = ck.step as usize;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    // Trainer integration tests live in rust/tests/integration.rs — they
-    // need compiled artifacts. Unit-testable pieces (schedule, batching
-    // math) are covered in config::tests and data::tests.
+    // Trainer integration tests live in rust/tests/integration.rs — the
+    // pjrt ones need compiled artifacts; the NativeTrainer end-to-end
+    // loop (loss decreases, v3 checkpoint round-trip) lives there too.
+    // Unit-testable pieces (schedule, batching math) are covered in
+    // config::tests and data::tests.
 }

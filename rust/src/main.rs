@@ -2,7 +2,13 @@
 //!
 //! Subcommands:
 //!   train     train a model variant on a synthetic task
+//!             (`--backend pjrt` runs the fused compiled train graph;
+//!              `--backend native` runs the pure-Rust backward pass +
+//!              AdamW — no artifacts or Python toolchain; checkpoints
+//!              are `.bsackpt` v3 with optimizer moments, resumable and
+//!              directly servable — see docs/TRAINING.md)
 //!   eval      evaluate a checkpoint on the held-out split
+//!             (same `--backend` switch as train)
 //!   serve     start the TCP inference server
 //!             (`--backend pjrt` runs compiled HLO artifacts;
 //!              `--backend native` runs the pure-Rust BSA forward pass —
@@ -46,7 +52,7 @@ fn flag_specs() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
         FlagSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
-        FlagSpec { name: "backend", help: "inference backend: pjrt (compiled HLO artifacts) | native (pure-Rust BSA forward; needs no artifacts or Python toolchain)", takes_value: true, default: Some("pjrt") },
+        FlagSpec { name: "backend", help: "execution backend for serve/train/eval: pjrt (compiled HLO artifacts) | native (pure-Rust BSA forward + backward; needs no artifacts or Python toolchain)", takes_value: true, default: Some("pjrt") },
         FlagSpec { name: "params", help: "native-backend weights: a .bsackpt param file (flat binary of named f32 arrays — params_<tag>.bsackpt from aot.py or any training checkpoint); random init if omitted", takes_value: true, default: None },
         FlagSpec { name: "variant", help: "model variant for `bsa flops`: erwin|full|bsa|bsa_nogs|bsa_gc|pointnet (all when omitted)", takes_value: true, default: None },
         FlagSpec { name: "tag", help: "artifact tag (model_task_nN_bB)", takes_value: true, default: Some("bsa_air_n1024_b2") },
@@ -230,8 +236,47 @@ fn train_config(args: &Args, doc: &Document) -> anyhow::Result<TrainConfig> {
     Ok(tc)
 }
 
+/// Build the artifact-free trainer: architecture from `[model]` config
+/// (+ `--n` sequence-length override), gradients and AdamW from
+/// `bsa::backend::grad` — no HLO artifacts or Python toolchain needed.
+fn native_trainer(args: &Args, doc: &Document) -> anyhow::Result<bsa::coordinator::NativeTrainer> {
+    let tc = train_config(args, doc)?;
+    let mut mc = ModelConfig::from_doc(doc);
+    mc.seq_len = args.usize_flag("n", mc.seq_len)?;
+    let threads = args.usize_flag("threads", 0)?;
+    println!(
+        "native bsa: dim {} x {} blocks, {} heads, n {}, task {}",
+        mc.dim, mc.num_blocks, mc.num_heads, mc.seq_len, tc.task
+    );
+    bsa::coordinator::NativeTrainer::new(&mc, tc, threads)
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    use bsa::backend::BackendKind;
     let doc = load_doc(args)?;
+    if args.str_flag("backend", "pjrt").parse::<BackendKind>()? == BackendKind::Native {
+        let ckpt: Option<PathBuf> = args.flag("checkpoint").map(PathBuf::from);
+        let mut trainer = native_trainer(args, &doc)?;
+        if let Some(p) = &ckpt {
+            if p.exists() {
+                trainer.load_checkpoint(p)?;
+                println!("resumed from {} at step {}", p.display(), trainer.step);
+            }
+        }
+        trainer.run(|e| {
+            println!(
+                "step {:>6}  loss {:.6}  lr {:.2e}  {:.1} ms/step",
+                e.step, e.loss, e.lr, e.ms_per_step
+            );
+        })?;
+        let mse = trainer.evaluate()?;
+        println!("test MSE (normalized): {mse:.6}  (x100 = {:.3})", mse * 100.0);
+        if let Some(p) = &ckpt {
+            trainer.save_checkpoint(p)?;
+            println!("checkpoint saved to {}", p.display());
+        }
+        return Ok(());
+    }
     let tc = train_config(args, &doc)?;
     let tag = args.str_flag("tag", "");
     let engine = Arc::new(Engine::new(Path::new(&args.str_flag("artifacts", "artifacts")))?);
@@ -262,7 +307,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    use bsa::backend::BackendKind;
     let doc = load_doc(args)?;
+    if args.str_flag("backend", "pjrt").parse::<BackendKind>()? == BackendKind::Native {
+        let mut trainer = native_trainer(args, &doc)?;
+        if let Some(p) = args.flag("checkpoint") {
+            trainer.load_checkpoint(Path::new(p))?;
+        }
+        let mse = trainer.evaluate()?;
+        println!("test MSE (normalized): {mse:.6}  (x100 = {:.3})", mse * 100.0);
+        return Ok(());
+    }
     let mut tc = train_config(args, &doc)?;
     tc.steps = 0;
     let tag = args.str_flag("tag", "");

@@ -1,0 +1,810 @@
+//! Differential + finite-difference conformance for the gradient
+//! kernels (`bsa::backend::grad`) — the backward-pass mirror of
+//! `rust/tests/conformance.rs`.
+//!
+//! Three gates per kernel, per the tier table in the `grad` module
+//! docs:
+//!
+//! 1. **Twin** — fast vs `*_reference` scalar twin: bitwise for the
+//!    element-parallel kernels (`matmul_tn`, `bias_grad`,
+//!    `swiglu_backward`), 1e-5 for the reduction users
+//!    (`rms_norm_backward`, the `attend_backward` family). Bitwise
+//!    across *thread counts* always — the same contract as the forward.
+//! 2. **FD oracle** — directional derivative `dot(grad, u)` against the
+//!    central difference `(L(θ+εu) − L(θ−εu)) / 2ε` of the *forward*
+//!    kernel, `ε = 1e-2`, within `1e-3 · (1 + |analytic|)` (the bound
+//!    was calibrated against an f32 numpy prototype; see also the numpy
+//!    mirror `python/tests/test_grad_mirror.py`, which checks the same
+//!    formulas against `jax.grad` of the `ref.py` oracle).
+//! 3. **Whole-model** — `loss_and_grads` is bitwise across thread
+//!    counts, its tape forward is bitwise identical to the serving
+//!    forward (`NativeBackend::forward`), and the full loss gradient
+//!    passes a (coarser) directional FD check — coarser because the
+//!    straight-through top-k means a large perturbation can flip block
+//!    selection, a documented non-differentiability (docs/TRAINING.md).
+//!
+//! Checkpoint version-skew tests for `.bsackpt` v3 (optimizer moments)
+//! live at the bottom: v3 serves inference with moments skipped, and a
+//! truncated moment array is a typed load error, not a panic.
+
+use bsa::backend::grad::{self, Adam};
+use bsa::backend::native::AttnHyper;
+use bsa::backend::{kernels, linalg, Backend, NativeBackend, NativeParams};
+use bsa::config::ModelConfig;
+use bsa::proptest_lite::{forall, Gen};
+use bsa::tensor::Tensor;
+
+const TOL: f32 = 1e-5;
+/// FD step: large enough that the f32 forward's rounding noise stays
+/// two decades under the bound, small enough that curvature does too.
+const FD_EPS: f32 = 1e-2;
+
+fn assert_close(fast: &[f32], reference: &[f32], what: &str) {
+    assert_eq!(fast.len(), reference.len(), "{what}: length mismatch");
+    for (i, (a, b)) in fast.iter().zip(reference).enumerate() {
+        assert!(
+            (a - b).abs() <= TOL,
+            "{what}[{i}]: fast {a} vs reference {b}"
+        );
+    }
+}
+
+fn assert_bitwise(fast: &[f32], reference: &[f32], what: &str) {
+    assert_eq!(fast.len(), reference.len(), "{what}: length mismatch");
+    for (i, (a, b)) in fast.iter().zip(reference).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{what}[{i}]: {a} vs {b} differ in bits"
+        );
+    }
+}
+
+/// The FD acceptance bound: |fd − analytic| ≤ 1e-3 · (1 + |analytic|).
+fn assert_fd(analytic: f64, fd: f64, what: &str) {
+    let tol = 1e-3 * (1.0 + analytic.abs());
+    assert!(
+        (fd - analytic).abs() <= tol,
+        "{what}: analytic {analytic} vs central-difference {fd} (tol {tol})"
+    );
+}
+
+/// dot in f64 so the check itself adds no f32 noise.
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+fn pick_threads(g: &mut Gen) -> usize {
+    *g.choose(&[1usize, 2, 3, 4, 8])
+}
+
+// ---------------------------------------------------------------------------
+// Twin gates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grad_matmul_tn_bitwise_twin() {
+    // matmul_tn is built from ascending axpy chains over whole output
+    // rows — the element-parallel panel recipe — so fast == reference
+    // bit for bit at every SIMD level and thread count.
+    forall(40, |g| {
+        let m = g.usize_in(1..40);
+        let k = g.usize_in(1..33);
+        let n = g.usize_in(1..24);
+        let threads = pick_threads(g);
+        let a = g.normals(m * k);
+        let b = g.normals(m * n);
+        let mut fast = vec![0.0f32; k * n];
+        grad::linalg::matmul_tn(&a, &b, m, k, n, threads, &mut fast);
+        let mut refr = vec![0.0f32; k * n];
+        grad::linalg::matmul_tn_reference(&a, &b, m, k, n, &mut refr);
+        assert_bitwise(&fast, &refr, "matmul_tn");
+    });
+}
+
+#[test]
+fn grad_bias_grad_bitwise_twin() {
+    forall(40, |g| {
+        let rows = g.usize_in(1..50);
+        let n = g.usize_in(1..40);
+        let threads = pick_threads(g);
+        let dy = g.normals(rows * n);
+        let mut fast = vec![0.0f32; n];
+        grad::linalg::bias_grad(&dy, rows, n, threads, &mut fast);
+        let mut refr = vec![0.0f32; n];
+        grad::linalg::bias_grad_reference(&dy, rows, n, &mut refr);
+        assert_bitwise(&fast, &refr, "bias_grad");
+    });
+}
+
+#[test]
+fn grad_swiglu_backward_bitwise_twin() {
+    forall(40, |g| {
+        let len = g.usize_in(1..200);
+        let threads = pick_threads(g);
+        let h1 = g.normals(len);
+        let h3 = g.normals(len);
+        let dg = g.normals(len);
+        let (mut f1, mut f3) = (vec![0.0f32; len], vec![0.0f32; len]);
+        grad::linalg::swiglu_backward(&h1, &h3, &dg, threads, &mut f1, &mut f3);
+        let (mut r1, mut r3) = (vec![0.0f32; len], vec![0.0f32; len]);
+        grad::linalg::swiglu_backward_reference(&h1, &h3, &dg, &mut r1, &mut r3);
+        assert_bitwise(&f1, &r1, "swiglu dh1");
+        assert_bitwise(&f3, &r3, "swiglu dh3");
+    });
+}
+
+#[test]
+fn grad_rms_norm_backward_matches_reference() {
+    forall(40, |g| {
+        let rows = g.usize_in(1..30);
+        let cols = g.usize_in(1..48);
+        let threads = pick_threads(g);
+        let x = g.normals(rows * cols);
+        let scale = g.normals(cols);
+        let dy = g.normals(rows * cols);
+        let (mut dx, mut ds) = (vec![0.0f32; rows * cols], vec![0.0f32; cols]);
+        grad::linalg::rms_norm_backward(&x, &scale, &dy, rows, cols, threads, &mut dx, &mut ds);
+        let (mut rdx, mut rds) = (vec![0.0f32; rows * cols], vec![0.0f32; cols]);
+        grad::linalg::rms_norm_backward_reference(&x, &scale, &dy, rows, cols, &mut rdx, &mut rds);
+        assert_close(&dx, &rdx, "rms_norm_backward dx");
+        assert_close(&ds, &rds, "rms_norm_backward dscale");
+
+        // bitwise across thread counts at the active SIMD level
+        let (mut dx1, mut ds1) = (vec![0.0f32; rows * cols], vec![0.0f32; cols]);
+        grad::linalg::rms_norm_backward(&x, &scale, &dy, rows, cols, 1, &mut dx1, &mut ds1);
+        assert_bitwise(&dx, &dx1, "rms_norm_backward dx across threads");
+        assert_bitwise(&ds, &ds1, "rms_norm_backward dscale across threads");
+    });
+}
+
+#[test]
+fn grad_attend_backward_matches_reference() {
+    forall(30, |g| {
+        let nq = g.usize_in(1..24);
+        let nk = g.usize_in(1..80); // crosses STREAM_TILE=64 with tails
+        let d = g.usize_in(1..12);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = g.normals(nq * d);
+        let k = g.normals(nk * d);
+        let v = g.normals(nk * d);
+        let dout = g.normals(nq * d);
+        let mut o = vec![0.0f32; nq * d];
+        let mut scratch = Vec::new();
+        kernels::attend(&q, &k, &v, nq, nk, d, scale, 1, &mut o, &mut scratch);
+
+        let mk = |len| vec![0.0f32; len];
+        let (mut dq, mut dk, mut dv) = (mk(nq * d), mk(nk * d), mk(nk * d));
+        grad::attention::attend_backward(
+            &q, &k, &v, &o, &dout, nq, nk, d, scale, &mut dq, &mut dk, &mut dv,
+        );
+        let (mut rq, mut rk, mut rv) = (mk(nq * d), mk(nk * d), mk(nk * d));
+        grad::attention::attend_backward_reference(
+            &q, &k, &v, &o, &dout, nq, nk, d, scale, &mut rq, &mut rk, &mut rv,
+        );
+        assert_close(&dq, &rq, "attend_backward dq");
+        assert_close(&dk, &rk, "attend_backward dk");
+        assert_close(&dv, &rv, "attend_backward dv");
+    });
+}
+
+#[test]
+fn grad_ball_attention_backward_matches_reference() {
+    forall(25, |g| {
+        let ball = *g.choose(&[1usize, 2, 4, 8, 16]);
+        let balls = g.usize_in(1..5);
+        let n = ball * balls;
+        let d = g.usize_in(1..10);
+        let q = g.normals(n * d);
+        let k = g.normals(n * d);
+        let v = g.normals(n * d);
+        let dout = g.normals(n * d);
+        let mut o = vec![0.0f32; n * d];
+        kernels::ball_attention(&q, &k, &v, n, d, ball, 1, &mut o);
+
+        let mk = || vec![0.0f32; n * d];
+        let (mut dq, mut dk, mut dv) = (mk(), mk(), mk());
+        grad::attention::ball_attention_backward(
+            &q, &k, &v, &o, &dout, n, d, ball, &mut dq, &mut dk, &mut dv,
+        );
+        let (mut rq, mut rk, mut rv) = (mk(), mk(), mk());
+        grad::attention::ball_attention_backward_reference(
+            &q, &k, &v, &o, &dout, n, d, ball, &mut rq, &mut rk, &mut rv,
+        );
+        assert_close(&dq, &rq, "ball_attention_backward dq");
+        assert_close(&dk, &rk, "ball_attention_backward dk");
+        assert_close(&dv, &rv, "ball_attention_backward dv");
+    });
+}
+
+/// Real selection indices from the forward's own ranking pipeline, so
+/// the backward replays exactly what a training step would.
+#[allow(clippy::too_many_arguments)]
+fn selection_indices(
+    q: &[f32],
+    k: &[f32],
+    n: usize,
+    d: usize,
+    cmp_block: usize,
+    group: usize,
+    ball: usize,
+    top_k: usize,
+) -> (Vec<f32>, Vec<usize>) {
+    let nb = n / cmp_block;
+    let mut kc = vec![0.0f32; nb * d];
+    kernels::compress_mean(k, n, d, cmp_block, 1, &mut kc);
+    let groups = n / group;
+    let mut qg = Vec::new();
+    let mut scores = vec![0.0f32; groups * nb];
+    kernels::group_scores(q, &kc, n, d, group, nb, 1, &mut qg, &mut scores);
+    kernels::mask_own_ball(&mut scores, groups, nb, group, cmp_block, ball);
+    let mut idx = Vec::new();
+    kernels::topk_indices(&scores, groups, nb, top_k, 1, &mut idx);
+    (kc, idx)
+}
+
+#[test]
+fn grad_select_attention_backward_matches_reference() {
+    forall(20, |g| {
+        let cmp_block = *g.choose(&[2usize, 4]);
+        let group = *g.choose(&[2usize, 4]);
+        let ball = 8usize; // divisible by both choices
+        let n = ball * g.usize_in(2..5);
+        let d = g.usize_in(2..9);
+        let top_k = g.usize_in(1..(n / cmp_block).min(4));
+        let q = g.normals(n * d);
+        let k = g.normals(n * d);
+        let v = g.normals(n * d);
+        let dout = g.normals(n * d);
+        let (_, idx) = selection_indices(&q, &k, n, d, cmp_block, group, ball, top_k);
+        let mut o = vec![0.0f32; n * d];
+        kernels::select_attention(&q, &k, &v, &idx, n, d, cmp_block, group, top_k, 1, &mut o);
+
+        let mk = || vec![0.0f32; n * d];
+        let (mut dq, mut dk, mut dv) = (mk(), mk(), mk());
+        grad::attention::select_attention_backward(
+            &q, &k, &v, &o, &dout, &idx, n, d, cmp_block, group, top_k, &mut dq, &mut dk, &mut dv,
+        );
+        let (mut rq, mut rk, mut rv) = (mk(), mk(), mk());
+        grad::attention::select_attention_backward_reference(
+            &q, &k, &v, &o, &dout, &idx, n, d, cmp_block, group, top_k, &mut rq, &mut rk, &mut rv,
+        );
+        assert_close(&dq, &rq, "select_attention_backward dq");
+        assert_close(&dk, &rk, "select_attention_backward dk");
+        assert_close(&dv, &rv, "select_attention_backward dv");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// FD oracles: dot(grad, u) vs central difference of the forward kernel
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fd_matmul_tn_is_gradient_of_matmul() {
+    // L(b) = dot(w, a @ b)  =>  dL/db = aᵀ w = matmul_tn(a, w).
+    let mut rng = bsa::prng::Rng::new(31);
+    let (m, k, n) = (9usize, 14usize, 11usize);
+    let a = rng.normals(m * k);
+    let b = rng.normals(k * n);
+    let w = rng.normals(m * n);
+    let u = rng.normals(k * n);
+    let mut db = vec![0.0f32; k * n];
+    grad::linalg::matmul_tn(&a, &w, m, k, n, 1, &mut db);
+    let loss = |bb: &[f32]| -> f64 {
+        let mut y = vec![0.0f32; m * n];
+        linalg::matmul(&a, bb, m, k, n, 1, &mut y);
+        dot64(&y, &w)
+    };
+    let mut plus = b.clone();
+    let mut minus = b.clone();
+    for i in 0..b.len() {
+        plus[i] += FD_EPS * u[i];
+        minus[i] -= FD_EPS * u[i];
+    }
+    let fd = (loss(&plus) - loss(&minus)) / (2.0 * FD_EPS as f64);
+    assert_fd(dot64(&db, &u), fd, "matmul_tn FD");
+}
+
+#[test]
+fn fd_rms_norm_backward() {
+    let mut rng = bsa::prng::Rng::new(32);
+    let (rows, cols) = (12usize, 20usize);
+    let x = rng.normals(rows * cols);
+    let scale = rng.normals(cols);
+    let w = rng.normals(rows * cols);
+    let (mut dx, mut ds) = (vec![0.0f32; rows * cols], vec![0.0f32; cols]);
+    grad::linalg::rms_norm_backward(&x, &scale, &w, rows, cols, 1, &mut dx, &mut ds);
+    let loss = |xx: &[f32], ss: &[f32]| -> f64 {
+        let mut y = vec![0.0f32; rows * cols];
+        linalg::rms_norm(xx, ss, rows, cols, 1, &mut y);
+        dot64(&y, &w)
+    };
+    // direction in x
+    let u = rng.normals(rows * cols);
+    let mut plus = x.clone();
+    let mut minus = x.clone();
+    for i in 0..x.len() {
+        plus[i] += FD_EPS * u[i];
+        minus[i] -= FD_EPS * u[i];
+    }
+    let fd = (loss(&plus, &scale) - loss(&minus, &scale)) / (2.0 * FD_EPS as f64);
+    assert_fd(dot64(&dx, &u), fd, "rms_norm_backward dx FD");
+    // direction in scale
+    let us = rng.normals(cols);
+    let mut splus = scale.clone();
+    let mut sminus = scale.clone();
+    for i in 0..cols {
+        splus[i] += FD_EPS * us[i];
+        sminus[i] -= FD_EPS * us[i];
+    }
+    let fd = (loss(&x, &splus) - loss(&x, &sminus)) / (2.0 * FD_EPS as f64);
+    assert_fd(dot64(&ds, &us), fd, "rms_norm_backward dscale FD");
+}
+
+#[test]
+fn fd_swiglu_backward() {
+    let mut rng = bsa::prng::Rng::new(33);
+    let len = 150usize;
+    let h1 = rng.normals(len);
+    let h3 = rng.normals(len);
+    let w = rng.normals(len);
+    let (mut d1, mut d3) = (vec![0.0f32; len], vec![0.0f32; len]);
+    grad::linalg::swiglu_backward(&h1, &h3, &w, 1, &mut d1, &mut d3);
+    let silu = |x: f32| x * linalg::sigmoid(x);
+    let loss = |a: &[f32], b: &[f32]| -> f64 {
+        (0..len).map(|i| (silu(a[i]) * b[i]) as f64 * w[i] as f64).sum()
+    };
+    for (name, theta, grad) in [("dh1", &h1, &d1), ("dh3", &h3, &d3)] {
+        let u = rng.normals(len);
+        let mut plus = theta.to_vec();
+        let mut minus = theta.to_vec();
+        for i in 0..len {
+            plus[i] += FD_EPS * u[i];
+            minus[i] -= FD_EPS * u[i];
+        }
+        let (lp, lm) = if name == "dh1" {
+            (loss(&plus, &h3), loss(&minus, &h3))
+        } else {
+            (loss(&h1, &plus), loss(&h1, &minus))
+        };
+        let fd = (lp - lm) / (2.0 * FD_EPS as f64);
+        assert_fd(dot64(grad, &u), fd, "swiglu_backward FD");
+    }
+}
+
+#[test]
+fn fd_attend_backward() {
+    let mut rng = bsa::prng::Rng::new(34);
+    let (nq, nk, d) = (10usize, 70usize, 8usize); // nk crosses STREAM_TILE
+    let scale = 1.0 / (d as f32).sqrt();
+    let q = rng.normals(nq * d);
+    let k = rng.normals(nk * d);
+    let v = rng.normals(nk * d);
+    let w = rng.normals(nq * d);
+    let mut o = vec![0.0f32; nq * d];
+    let mut scratch = Vec::new();
+    kernels::attend(&q, &k, &v, nq, nk, d, scale, 1, &mut o, &mut scratch);
+    let (mut dq, mut dk, mut dv) =
+        (vec![0.0f32; nq * d], vec![0.0f32; nk * d], vec![0.0f32; nk * d]);
+    grad::attention::attend_backward(
+        &q, &k, &v, &o, &w, nq, nk, d, scale, &mut dq, &mut dk, &mut dv,
+    );
+    let loss = |qq: &[f32], kk: &[f32], vv: &[f32]| -> f64 {
+        let mut out = vec![0.0f32; nq * d];
+        let mut s = Vec::new();
+        kernels::attend(qq, kk, vv, nq, nk, d, scale, 1, &mut out, &mut s);
+        dot64(&out, &w)
+    };
+    for (name, theta, grad) in [("dq", &q, &dq), ("dk", &k, &dk), ("dv", &v, &dv)] {
+        let u = rng.normals(theta.len());
+        let mut plus = theta.to_vec();
+        let mut minus = theta.to_vec();
+        for i in 0..theta.len() {
+            plus[i] += FD_EPS * u[i];
+            minus[i] -= FD_EPS * u[i];
+        }
+        let (lp, lm) = match name {
+            "dq" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+            "dk" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+            _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+        };
+        let fd = (lp - lm) / (2.0 * FD_EPS as f64);
+        assert_fd(dot64(grad, &u), fd, "attend_backward FD");
+    }
+}
+
+#[test]
+fn fd_ball_attention_backward() {
+    let mut rng = bsa::prng::Rng::new(35);
+    let (ball, n, d) = (8usize, 32usize, 6usize);
+    let q = rng.normals(n * d);
+    let k = rng.normals(n * d);
+    let v = rng.normals(n * d);
+    let w = rng.normals(n * d);
+    let mut o = vec![0.0f32; n * d];
+    kernels::ball_attention(&q, &k, &v, n, d, ball, 1, &mut o);
+    let mk = || vec![0.0f32; n * d];
+    let (mut dq, mut dk, mut dv) = (mk(), mk(), mk());
+    grad::attention::ball_attention_backward(
+        &q, &k, &v, &o, &w, n, d, ball, &mut dq, &mut dk, &mut dv,
+    );
+    let loss = |qq: &[f32], kk: &[f32], vv: &[f32]| -> f64 {
+        let mut out = vec![0.0f32; n * d];
+        kernels::ball_attention(qq, kk, vv, n, d, ball, 1, &mut out);
+        dot64(&out, &w)
+    };
+    for (name, theta, grad) in [("dq", &q, &dq), ("dk", &k, &dk), ("dv", &v, &dv)] {
+        let u = rng.normals(n * d);
+        let mut plus = theta.to_vec();
+        let mut minus = theta.to_vec();
+        for i in 0..n * d {
+            plus[i] += FD_EPS * u[i];
+            minus[i] -= FD_EPS * u[i];
+        }
+        let (lp, lm) = match name {
+            "dq" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+            "dk" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+            _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+        };
+        let fd = (lp - lm) / (2.0 * FD_EPS as f64);
+        assert_fd(dot64(grad, &u), fd, "ball_attention_backward FD");
+    }
+}
+
+#[test]
+fn fd_select_attention_backward() {
+    // idx is held fixed across the perturbation (straight-through
+    // semantics: the FD probes the kernel at frozen selection, exactly
+    // what the analytic backward computes).
+    let mut rng = bsa::prng::Rng::new(36);
+    let (n, d, cmp_block, group, ball, top_k) = (32usize, 6usize, 4usize, 4usize, 8usize, 3usize);
+    let q = rng.normals(n * d);
+    let k = rng.normals(n * d);
+    let v = rng.normals(n * d);
+    let w = rng.normals(n * d);
+    let (_, idx) = selection_indices(&q, &k, n, d, cmp_block, group, ball, top_k);
+    let mut o = vec![0.0f32; n * d];
+    kernels::select_attention(&q, &k, &v, &idx, n, d, cmp_block, group, top_k, 1, &mut o);
+    let mk = || vec![0.0f32; n * d];
+    let (mut dq, mut dk, mut dv) = (mk(), mk(), mk());
+    grad::attention::select_attention_backward(
+        &q, &k, &v, &o, &w, &idx, n, d, cmp_block, group, top_k, &mut dq, &mut dk, &mut dv,
+    );
+    let loss = |qq: &[f32], kk: &[f32], vv: &[f32]| -> f64 {
+        let mut out = vec![0.0f32; n * d];
+        kernels::select_attention(qq, kk, vv, &idx, n, d, cmp_block, group, top_k, 1, &mut out);
+        dot64(&out, &w)
+    };
+    for (name, theta, grad) in [("dq", &q, &dq), ("dk", &k, &dk), ("dv", &v, &dv)] {
+        let u = rng.normals(n * d);
+        let mut plus = theta.to_vec();
+        let mut minus = theta.to_vec();
+        for i in 0..n * d {
+            plus[i] += FD_EPS * u[i];
+            minus[i] -= FD_EPS * u[i];
+        }
+        let (lp, lm) = match name {
+            "dq" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+            "dk" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+            _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+        };
+        let fd = (lp - lm) / (2.0 * FD_EPS as f64);
+        assert_fd(dot64(grad, &u), fd, "select_attention_backward FD");
+    }
+}
+
+#[test]
+fn fd_compress_mean_backward() {
+    let mut rng = bsa::prng::Rng::new(37);
+    let (n, d, block) = (24usize, 7usize, 4usize);
+    let x = rng.normals(n * d);
+    let w = rng.normals((n / block) * d);
+    let mut dx = vec![0.0f32; n * d];
+    grad::attention::compress_mean_backward(&w, n, d, block, &mut dx);
+    let loss = |xx: &[f32]| -> f64 {
+        let mut c = vec![0.0f32; (n / block) * d];
+        kernels::compress_mean(xx, n, d, block, 1, &mut c);
+        dot64(&c, &w)
+    };
+    let u = rng.normals(n * d);
+    let mut plus = x.clone();
+    let mut minus = x.clone();
+    for i in 0..n * d {
+        plus[i] += FD_EPS * u[i];
+        minus[i] -= FD_EPS * u[i];
+    }
+    let fd = (loss(&plus) - loss(&minus)) / (2.0 * FD_EPS as f64);
+    assert_fd(dot64(&dx, &u), fd, "compress_mean_backward FD");
+}
+
+#[test]
+fn fd_merge_backward() {
+    let mut rng = bsa::prng::Rng::new(38);
+    let (n, d) = (16usize, 9usize);
+    let logits = rng.normals(n * 3);
+    let ob = rng.normals(n * d);
+    let oc = rng.normals(n * d);
+    let os = rng.normals(n * d);
+    let w = rng.normals(n * d);
+    let mut dl = vec![0.0f32; n * 3];
+    let mk = || vec![0.0f32; n * d];
+    let (mut db, mut dc, mut ds) = (mk(), mk(), mk());
+    grad::attention::merge_backward(
+        &logits, &ob, &oc, &os, &w, n, d, &mut dl, &mut db, &mut dc, &mut ds,
+    );
+    let merge = |lg: &[f32], b: &[f32], c: &[f32], s: &[f32]| -> f64 {
+        let mut acc = 0.0f64;
+        for t in 0..n {
+            for j in 0..d {
+                let m = linalg::sigmoid(lg[t * 3]) * b[t * d + j]
+                    + linalg::sigmoid(lg[t * 3 + 1]) * c[t * d + j]
+                    + linalg::sigmoid(lg[t * 3 + 2]) * s[t * d + j];
+                acc += m as f64 * w[t * d + j] as f64;
+            }
+        }
+        acc
+    };
+    // logits direction
+    let u = rng.normals(n * 3);
+    let mut plus = logits.clone();
+    let mut minus = logits.clone();
+    for i in 0..n * 3 {
+        plus[i] += FD_EPS * u[i];
+        minus[i] -= FD_EPS * u[i];
+    }
+    let fd = (merge(&plus, &ob, &oc, &os) - merge(&minus, &ob, &oc, &os)) / (2.0 * FD_EPS as f64);
+    assert_fd(dot64(&dl, &u), fd, "merge_backward dlogits FD");
+    // branch directions
+    for (name, theta, grad) in [("ball", &ob, &db), ("cmp", &oc, &dc), ("slc", &os, &ds)] {
+        let u = rng.normals(n * d);
+        let mut plus = theta.to_vec();
+        let mut minus = theta.to_vec();
+        for i in 0..n * d {
+            plus[i] += FD_EPS * u[i];
+            minus[i] -= FD_EPS * u[i];
+        }
+        let (lp, lm) = match name {
+            "ball" => (merge(&logits, &plus, &oc, &os), merge(&logits, &minus, &oc, &os)),
+            "cmp" => (merge(&logits, &ob, &plus, &os), merge(&logits, &ob, &minus, &os)),
+            _ => (merge(&logits, &ob, &oc, &plus), merge(&logits, &ob, &oc, &minus)),
+        };
+        let fd = (lp - lm) / (2.0 * FD_EPS as f64);
+        assert_fd(dot64(grad, &u), fd, "merge_backward dbranch FD");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-model gates
+// ---------------------------------------------------------------------------
+
+fn tiny_hyper() -> (ModelConfig, AttnHyper) {
+    let mc = ModelConfig {
+        dim: 16,
+        num_heads: 2,
+        num_blocks: 2,
+        ball_size: 16,
+        cmp_block: 4,
+        sel_block: 4,
+        top_k: 2,
+        group_size: 4,
+        seq_len: 64,
+        ..Default::default()
+    };
+    let hyper = AttnHyper::from_model(&mc);
+    (mc, hyper)
+}
+
+#[test]
+fn grad_tape_forward_matches_serving_forward_bitwise() {
+    // The tape forward must be the *same* forward the serving path
+    // runs — same kernels, same order — or training would optimize a
+    // different function than serving evaluates.
+    let (mc, hyper) = tiny_hyper();
+    let params = NativeParams::init(5, 6, 1, mc.dim, mc.num_heads, mc.num_blocks, 4);
+    let n = mc.seq_len;
+    let mut rng = bsa::prng::Rng::new(77);
+    let x = Tensor::new(vec![1, n, 6], rng.normals(n * 6));
+    let backend = NativeBackend::new(params.clone(), hyper.clone(), n, 1)
+        .unwrap()
+        .with_threads(2);
+    let served = backend.forward(&x).unwrap();
+    let tape = grad::tape::forward(&params, &hyper, x.data(), 1, n, 2);
+    assert_bitwise(&tape.pred, served.data(), "tape forward vs NativeBackend");
+}
+
+#[test]
+fn grad_loss_and_grads_bitwise_across_threads() {
+    let (mc, hyper) = tiny_hyper();
+    let params = NativeParams::init(6, 6, 1, mc.dim, mc.num_heads, mc.num_blocks, 4);
+    let n = mc.seq_len;
+    let mut rng = bsa::prng::Rng::new(78);
+    let x = rng.normals(n * 6);
+    let y = rng.normals(n);
+    let (l1, _, g1) = grad::loss_and_grads(&params, &hyper, &x, &y, 1, n, 1);
+    for t in [2usize, 3, 8] {
+        let (lt, _, gt) = grad::loss_and_grads(&params, &hyper, &x, &y, 1, n, t);
+        assert!(l1.to_bits() == lt.to_bits(), "loss differs at threads={t}");
+        for ((name, a), (_, b)) in g1.named_arrays().iter().zip(gt.named_arrays()) {
+            assert_bitwise(a.data(), b.data(), &format!("grad {name} at threads={t}"));
+        }
+    }
+}
+
+#[test]
+fn fd_full_model_loss_and_grads() {
+    // Directional FD through the whole model: MSE loss, all parameters
+    // perturbed along one random direction. The bound is coarser than
+    // the per-kernel oracles (4e-3 vs 1e-3): six chained nonlinear
+    // layers accumulate curvature, and the straight-through top-k is
+    // only piecewise smooth — FD_EPS is small enough that the fixed
+    // seeds here do not flip any block selection.
+    let (mc, hyper) = tiny_hyper();
+    let params = NativeParams::init(7, 6, 1, mc.dim, mc.num_heads, mc.num_blocks, 4);
+    let n = mc.seq_len;
+    let mut rng = bsa::prng::Rng::new(79);
+    let x = rng.normals(n * 6);
+    let y = rng.normals(n);
+    let (_, _, grads) = grad::loss_and_grads(&params, &hyper, &x, &y, 1, n, 2);
+
+    let mut dirs: Vec<Vec<f32>> = Vec::new();
+    for (_, t) in params.named_arrays() {
+        dirs.push(rng.normals(t.data().len()));
+    }
+    let mut analytic = 0.0f64;
+    for ((_, g), u) in grads.named_arrays().iter().zip(&dirs) {
+        analytic += dot64(g.data(), u);
+    }
+    let shifted = |sign: f32| -> f32 {
+        let mut p = params.clone();
+        for ((_, t), u) in p.named_arrays_mut().into_iter().zip(&dirs) {
+            for (w, &du) in t.data_mut().iter_mut().zip(u) {
+                *w += sign * FD_EPS * du;
+            }
+        }
+        let tape = grad::tape::forward(&p, &hyper, &x, 1, n, 2);
+        let mut dpred = vec![0.0f32; tape.pred.len()];
+        grad::linalg::mse_loss_grad(&tape.pred, &y, &mut dpred)
+    };
+    let fd = (shifted(1.0) as f64 - shifted(-1.0) as f64) / (2.0 * FD_EPS as f64);
+    let tol = 4e-3 * (1.0 + analytic.abs());
+    assert!(
+        (fd - analytic).abs() <= tol,
+        "full-model FD: analytic {analytic} vs central-difference {fd} (tol {tol})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Adam
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adam_first_step_matches_closed_form() {
+    // With zeroed moments, step 1 reduces to
+    //   p -= lr * (g / (|g| * sqrt(1) + eps') + wd * p)
+    // i.e. approximately lr * sign(g) plus the decay term — check the
+    // exact closed form element-wise.
+    let mut params = NativeParams::init(1, 3, 1, 8, 2, 1, 4);
+    let before = params.clone();
+    let mut grads = params.zeros_like();
+    for (_, t) in grads.named_arrays_mut() {
+        for (i, g) in t.data_mut().iter_mut().enumerate() {
+            *g = 0.5 - (i % 3) as f32 * 0.5; // mix of +0.5, 0, -0.5
+        }
+    }
+    let (lr, wd) = (1e-3f32, 0.01f32);
+    let mut opt = Adam::new(&params, wd);
+    opt.step(lr, &mut params, &grads);
+    assert_eq!(opt.t, 1);
+    for (((_, p), (_, p0)), (_, g)) in params
+        .named_arrays()
+        .iter()
+        .zip(before.named_arrays())
+        .zip(grads.named_arrays())
+    {
+        for i in 0..p.data().len() {
+            let gi = g.data()[i];
+            // mirror the kernel's exact float expressions (f64 bias
+            // corrections, f32 everything else)
+            let m = (1.0 - 0.9f32) * gi;
+            let v = (1.0 - 0.999f32) * gi * gi;
+            let mhat = m / (1.0 - 0.9f64.powi(1)) as f32;
+            let vhat = v / (1.0 - 0.999f64.powi(1)) as f32;
+            let want = p0.data()[i] - lr * (mhat / (vhat.sqrt() + 1e-8) + wd * p0.data()[i]);
+            let got = p.data()[i];
+            assert!(
+                (want - got).abs() <= 1e-6 * (1.0 + want.abs()),
+                "adam step: got {got}, want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adam_descends_a_quadratic() {
+    // min ||p||²/2: gradient is p itself; a few hundred Adam steps
+    // must shrink the parameters toward zero.
+    let mut params = NativeParams::init(2, 3, 1, 8, 2, 1, 4);
+    let norm0: f64 = params
+        .named_arrays()
+        .iter()
+        .map(|(_, t)| dot64(t.data(), t.data()))
+        .sum();
+    let mut opt = Adam::new(&params, 0.0);
+    for _ in 0..300 {
+        let grads = params.clone();
+        opt.step(0.01, &mut params, &grads);
+    }
+    let norm1: f64 = params
+        .named_arrays()
+        .iter()
+        .map(|(_, t)| dot64(t.data(), t.data()))
+        .sum();
+    assert!(
+        norm1 < norm0 * 0.05,
+        "adam failed to descend: ||p||² {norm0} -> {norm1}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint v3 version skew (see also coordinator::checkpoint tests
+// and the conformance.rs params error-path suite)
+// ---------------------------------------------------------------------------
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// A v3 training checkpoint: model arrays + m.* / v.* moments + step.
+fn v3_fixture() -> (NativeParams, Vec<(String, Tensor)>) {
+    let params = NativeParams::init(3, 6, 1, 16, 2, 1, 4);
+    let opt = Adam::new(&params, 0.01);
+    let mut arrays: Vec<(String, Tensor)> = params
+        .named_arrays()
+        .into_iter()
+        .map(|(n, t)| (n, t.clone()))
+        .collect();
+    for (n, t) in opt.m.named_arrays() {
+        arrays.push((format!("m.{n}"), t.clone()));
+    }
+    for (n, t) in opt.v.named_arrays() {
+        arrays.push((format!("v.{n}"), t.clone()));
+    }
+    (params, arrays)
+}
+
+#[test]
+fn v3_checkpoint_with_moments_serves_inference() {
+    // Inference loaders skip m.*/v.*: a full training checkpoint is a
+    // valid param file, and the model arrays round-trip exactly.
+    let (params, arrays) = v3_fixture();
+    let path = tmp("bsa_grad_v3_serves.bsackpt");
+    bsa::coordinator::checkpoint::Checkpoint { step: 41, arrays }
+        .save(&path)
+        .unwrap();
+    let loaded = NativeParams::load(&path).unwrap();
+    for ((name, a), (_, b)) in params.named_arrays().iter().zip(loaded.named_arrays()) {
+        assert_bitwise(a.data(), b.data(), &format!("served param {name}"));
+    }
+    // and it backs a full serving construction
+    let hyper = AttnHyper { ball_size: 16, cmp_block: 4, group_size: 4, top_k: 2 };
+    NativeBackend::load(&path, hyper, 64, 1).unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn v3_truncated_moment_array_is_typed_error() {
+    let (_, arrays) = v3_fixture();
+    let path = tmp("bsa_grad_v3_truncated.bsackpt");
+    bsa::coordinator::checkpoint::Checkpoint { step: 7, arrays }
+        .save(&path)
+        .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // cut inside the moment tail (the second half holds m.*/v.*)
+    for cut in [bytes.len() - 5, bytes.len() * 3 / 4] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(
+            bsa::coordinator::checkpoint::Checkpoint::load(&path).is_err(),
+            "truncation at {cut} must be a load error"
+        );
+    }
+    std::fs::remove_file(path).ok();
+}

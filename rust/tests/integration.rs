@@ -1196,3 +1196,161 @@ fn native_backend_matches_pjrt_forward() {
         "pjrt and native forward disagree: max |diff| = {max_abs}"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Native training: the artifact-free train → checkpoint → resume → serve
+// loop (bsa train --backend native; see docs/TRAINING.md)
+// ---------------------------------------------------------------------------
+
+/// Tiny native training fixture: one block, n=64 — a full step is a few
+/// milliseconds, so the loop tests stay cheap on any host.
+fn tiny_train_model() -> ModelConfig {
+    ModelConfig {
+        dim: 16,
+        num_heads: 2,
+        num_blocks: 1,
+        ball_size: 32,
+        cmp_block: 8,
+        sel_block: 8,
+        top_k: 2,
+        group_size: 8,
+        seq_len: 64,
+        ..Default::default()
+    }
+}
+
+fn tiny_native_train_config() -> TrainConfig {
+    TrainConfig {
+        task: "syn".into(),
+        steps: 12,
+        batch: 1,
+        lr: 3e-3,
+        warmup: 1,
+        train_samples: 4,
+        test_samples: 2,
+        log_every: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn native_trainer_reduces_loss() {
+    let mut trainer =
+        bsa::coordinator::NativeTrainer::new(&tiny_train_model(), tiny_native_train_config(), 2)
+            .unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        losses.push(trainer.step_once().unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let min_late = losses[4..].iter().cloned().fold(f32::INFINITY, f32::min);
+    assert!(
+        min_late < losses[0],
+        "loss did not decrease: first {} vs best-after-warmup {min_late} ({losses:?})",
+        losses[0]
+    );
+}
+
+#[test]
+fn native_trainer_v3_checkpoint_roundtrips_exactly() {
+    // save → load → save must reproduce the file byte for byte: the v3
+    // layout (model arrays + m.*/v.* moments + step) carries the whole
+    // trainer state, and load_checkpoint restores all of it.
+    let mc = tiny_train_model();
+    let mut trainer =
+        bsa::coordinator::NativeTrainer::new(&mc, tiny_native_train_config(), 1).unwrap();
+    for _ in 0..3 {
+        trainer.step_once().unwrap();
+    }
+    let p1 = std::env::temp_dir().join("bsa_it_native_v3_a.bsackpt");
+    let p2 = std::env::temp_dir().join("bsa_it_native_v3_b.bsackpt");
+    trainer.save_checkpoint(&p1).unwrap();
+
+    // the file is format version 3
+    let bytes = std::fs::read(&p1).unwrap();
+    assert_eq!(&bytes[..4], b"BSAC");
+    assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 3);
+
+    let mut restored =
+        bsa::coordinator::NativeTrainer::new(&mc, tiny_native_train_config(), 1).unwrap();
+    restored.load_checkpoint(&p1).unwrap();
+    assert_eq!(restored.step, trainer.step);
+    restored.save_checkpoint(&p2).unwrap();
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "v3 save → load → save must be byte-identical (params, moments, step)"
+    );
+
+    // the restored trainer evaluates identically (same params, same
+    // deterministic dataset streams)
+    let a = trainer.evaluate().unwrap();
+    let b = restored.evaluate().unwrap();
+    assert_eq!(a.to_bits(), b.to_bits(), "eval after resume: {a} vs {b}");
+    std::fs::remove_file(p1).ok();
+    std::fs::remove_file(p2).ok();
+}
+
+#[test]
+fn native_trainer_checkpoint_serves_inference() {
+    // train → checkpoint → serve with no Python/XLA anywhere: the v3
+    // file (moments included) loads straight into the serving backend,
+    // and the served forward matches the trainer's own eval forward.
+    let mc = tiny_train_model();
+    let mut trainer =
+        bsa::coordinator::NativeTrainer::new(&mc, tiny_native_train_config(), 1).unwrap();
+    for _ in 0..2 {
+        trainer.step_once().unwrap();
+    }
+    let path = std::env::temp_dir().join("bsa_it_native_train_serve.bsackpt");
+    trainer.save_checkpoint(&path).unwrap();
+    let backend =
+        NativeBackend::load(&path, AttnHyper::from_model(&mc), mc.seq_len, 1).unwrap();
+    let gen = generator_for("syn", 7).unwrap();
+    let s = gen.generate(0, mc.seq_len);
+    let x = Tensor::new(vec![1, mc.seq_len, 6], s.features.data().to_vec());
+    let served = backend.forward(&x).unwrap();
+    let tape = bsa::backend::grad::tape::forward(
+        trainer.params(),
+        &AttnHyper::from_model(&mc),
+        x.data(),
+        1,
+        mc.seq_len,
+        1,
+    );
+    assert_eq!(served.data(), &tape.pred[..], "served forward != trained forward");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn native_trainer_resumes_params_only_file_with_zeroed_moments() {
+    // A params-only .bsackpt (what aot.py emits, and what v1/v2 files
+    // up-convert to) resumes training: moments zeroed, step taken from
+    // the file, loop still runs.
+    let mc = tiny_train_model();
+    let params = bsa::backend::NativeParams::init(9, 6, 1, mc.dim, mc.num_heads, mc.num_blocks, 4);
+    let path = std::env::temp_dir().join("bsa_it_native_params_only.bsackpt");
+    params.save(&path).unwrap();
+    let mut trainer =
+        bsa::coordinator::NativeTrainer::new(&mc, tiny_native_train_config(), 1).unwrap();
+    trainer.load_checkpoint(&path).unwrap();
+    assert_eq!(trainer.step, 0, "params-only file carries step 0");
+    let loss = trainer.step_once().unwrap();
+    assert!(loss.is_finite());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn native_trainer_rejects_architecture_drift() {
+    // A checkpoint from a different architecture must fail loudly, not
+    // silently reshape.
+    let mc = tiny_train_model();
+    let other = bsa::backend::NativeParams::init(9, 6, 1, 32, 2, 1, 4); // dim 32 != 16
+    let path = std::env::temp_dir().join("bsa_it_native_drift.bsackpt");
+    other.save(&path).unwrap();
+    let mut trainer =
+        bsa::coordinator::NativeTrainer::new(&mc, tiny_native_train_config(), 1).unwrap();
+    let err = trainer.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("shape"), "error names the shape drift: {err}");
+    std::fs::remove_file(path).ok();
+}

@@ -13,9 +13,11 @@ entries are keyed by their "name"/"threads"/"n" field when present, by
 index otherwise), matched across the two documents, and reported with
 its percent delta and a direction-aware verdict:
 
-    lower-is-better   keys ending in _us / _ms / _mb (peak RSS), p50/p95
-                      latencies, misses, overhead_pct (tracing overhead)
-    higher-is-better  keys ending in per_s / speedup / hits, saved_us
+    lower-is-better   keys ending in _us / _ms / _mb (peak RSS,
+                      train_step.grad_peak_rss_mb), p50/p95 latencies,
+                      misses, overhead_pct (tracing overhead)
+    higher-is-better  keys ending in per_s (fwd_per_s,
+                      train_step.steps_per_s), speedup, hits, saved_us
 
 Keys that are run descriptors rather than measurements (reps, threads,
 n, calls, requests, ...) are ignored. A leaf that is null on either
@@ -38,7 +40,7 @@ import sys
 SKIP_KEYS = {
     "reps", "threads", "n", "calls", "requests", "geometries", "n_points",
     "target_len", "units", "rows", "width", "batch", "dim", "heads",
-    "blocks", "ball", "available", "count",
+    "blocks", "ball", "available", "count", "steps",
 }
 
 HIGHER_SUFFIXES = ("per_s", "speedup", "speedup_vs_1t", "hits", "saved_us", "hit_ratio")

@@ -50,6 +50,8 @@ if [[ "$QUICK" == 1 ]]; then
     cargo test -q --release --test conformance
     echo "== cargo test -q --release --test simd_off (BSA_NATIVE_SIMD=off bitwise gate)"
     cargo test -q --release --test simd_off
+    echo "== cargo test -q --release --test grad_conformance (backward kernels: FD oracles + bitwise twins)"
+    cargo test -q --release --test grad_conformance
     echo "== cargo test -q --release --test integration native_tcp (poll-core server gate: pipelining, shedding, 256 idle conns)"
     cargo test -q --release --test integration native_tcp
     echo "== cargo test -q --release --test shard_chaos (shard tier gate: affinity, kills, shed storms, restart detection)"
@@ -81,7 +83,17 @@ if [[ "$QUICK" == 1 ]]; then
   kill -INT "$SHARD_PID"
   wait "$SHARD_PID" || true
 
-  echo "check.sh --quick: fmt + build + kernel conformance + poll-core + shard tier gates passed"
+  # Numpy gradient mirror: the same flash-backward / RMSNorm / SwiGLU /
+  # Adam identities the Rust kernels implement, checked against
+  # finite differences (and jax.grad when jax is importable) in float64.
+  if command -v python3 >/dev/null 2>&1 && python3 -c 'import numpy, pytest' 2>/dev/null; then
+    echo "== python grad mirror (python/tests/test_grad_mirror.py)"
+    python3 -m pytest -q python/tests/test_grad_mirror.py
+  else
+    echo "check.sh: python3+numpy+pytest unavailable; grad mirror skipped"
+  fi
+
+  echo "check.sh --quick: fmt + build + kernel conformance + grad gates + poll-core + shard tier gates passed"
   exit 0
 fi
 
@@ -156,6 +168,35 @@ names = {e.get("name") for e in events}
 assert any(n and n.startswith("forward") for n in names), f"no forward spans in {sorted(names)[:10]}"
 print(f"check.sh: chrome trace ok ({len(events)} events, {len(names)} distinct spans)")
 PYEOF
+
+# Native-training smoke: 2 optimizer steps end to end through the CLI
+# (`bsa train --backend native` — no artifacts, no Python toolchain),
+# writing a v3 checkpoint that `bsa eval --backend native` must then
+# resume. Guards the train -> checkpoint -> eval round-trip documented
+# in docs/TRAINING.md.
+echo "== native train smoke (bsa train --backend native, 2 steps -> v3 checkpoint -> bsa eval)"
+TRAIN_DIR="$(mktemp -d)"
+TRAIN_OUT="$(rust/target/release/bsa train --backend native --task syn --n 256 \
+  --steps 2 --checkpoint "$TRAIN_DIR/smoke.bsackpt")" || {
+  echo "check.sh: bsa train --backend native failed:" >&2
+  echo "$TRAIN_OUT" >&2
+  rm -rf "$TRAIN_DIR"
+  exit 1
+}
+if ! grep -q "checkpoint saved" <<<"$TRAIN_OUT" || [[ ! -s "$TRAIN_DIR/smoke.bsackpt" ]]; then
+  echo "check.sh: native train smoke did not write its checkpoint:" >&2
+  echo "$TRAIN_OUT" >&2
+  rm -rf "$TRAIN_DIR"
+  exit 1
+fi
+rust/target/release/bsa eval --backend native --task syn --n 256 \
+  --checkpoint "$TRAIN_DIR/smoke.bsackpt" >/dev/null || {
+  echo "check.sh: bsa eval --backend native could not resume the v3 checkpoint" >&2
+  rm -rf "$TRAIN_DIR"
+  exit 1
+}
+rm -rf "$TRAIN_DIR"
+echo "check.sh: native train -> v3 checkpoint -> eval round-trip ok"
 
 # rebar-style per-metric deltas vs the committed baselines
 # (informational here; CI can add --fail-over for a hard threshold)
